@@ -1,0 +1,66 @@
+//! Figure 1 — the headline trade-off chart: accuracy vs bandwidth and
+//! accuracy vs client compute on Mixed-NonIID, AdaSplit operating points
+//! (kappa x eta grid / mu sweep) against every baseline as fixed points.
+
+use adasplit::config::{ExperimentConfig, ProtocolKind};
+use adasplit::data::DatasetKind;
+use adasplit::protocols::run_protocol;
+use adasplit::report::series::ascii_chart;
+use adasplit::report::Series;
+use adasplit::runtime::Runtime;
+use adasplit::util::bench::bench_scale;
+
+fn main() -> anyhow::Result<()> {
+    let (rounds, samples, test, _) = bench_scale();
+    let rt = Runtime::load("artifacts")?;
+    let base = ExperimentConfig::paper_default(DatasetKind::MixedNonIid)
+        .with_scale(rounds, samples, test);
+
+    // bandwidth axis: kappa controls traffic at fixed client compute
+    let mut ada_bw = Series::new("AdaSplit", "bandwidth_gb");
+    for kappa in [0.3, 0.5, 0.7, 0.9] {
+        let r = run_protocol(&rt, &base.clone().with_kappa(kappa))?;
+        eprintln!("kappa={kappa}: acc={:.2}% bw={:.4}GB", r.best_accuracy, r.bandwidth_gb);
+        ada_bw.push(r.bandwidth_gb, r.best_accuracy);
+    }
+    // compute axis: eta at fixed kappa scales server work per iteration;
+    // mu scales client compute
+    let mut ada_c = Series::new("AdaSplit", "client_tflops");
+    for eta in [0.2, 0.6, 1.0] {
+        let r = run_protocol(&rt, &base.clone().with_eta(eta))?;
+        eprintln!("eta={eta}: acc={:.2}% cC={:.4}T", r.best_accuracy, r.client_tflops);
+        ada_c.push(r.client_tflops, r.best_accuracy);
+    }
+
+    let mut base_bw = Series::new("baselines", "bandwidth_gb");
+    let mut base_c = Series::new("baselines", "client_tflops");
+    for p in [
+        ProtocolKind::SlBasic,
+        ProtocolKind::SplitFed,
+        ProtocolKind::FedAvg,
+        ProtocolKind::FedProx,
+        ProtocolKind::Scaffold,
+        ProtocolKind::FedNova,
+    ] {
+        let r = run_protocol(&rt, &base.clone().with_protocol(p))?;
+        eprintln!(
+            "{:<9}: acc={:.2}% bw={:.4}GB cC={:.4}T",
+            r.protocol, r.best_accuracy, r.bandwidth_gb, r.client_tflops
+        );
+        base_bw.push(r.bandwidth_gb, r.best_accuracy);
+        base_c.push(r.client_tflops, r.best_accuracy);
+    }
+
+    println!("\n=== Figure 1 (left): accuracy vs bandwidth ===");
+    print!("{}", ascii_chart(&[ada_bw.clone(), base_bw.clone()], 64, 16));
+    println!("\n=== Figure 1 (right): accuracy vs client compute ===");
+    print!("{}", ascii_chart(&[ada_c.clone(), base_c.clone()], 64, 16));
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig1_adasplit_bandwidth.csv", ada_bw.to_csv())?;
+    std::fs::write("results/fig1_adasplit_compute.csv", ada_c.to_csv())?;
+    std::fs::write("results/fig1_baselines_bandwidth.csv", base_bw.to_csv())?;
+    std::fs::write("results/fig1_baselines_compute.csv", base_c.to_csv())?;
+    println!("-> results/fig1_*.csv");
+    Ok(())
+}

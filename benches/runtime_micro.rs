@@ -1,0 +1,130 @@
+//! Runtime micro-benchmarks — the perf-pass instrument (EXPERIMENTS.md
+//! §Perf). Times each hot-path artifact execution (client step, server
+//! step, FL step, evals), host<->literal marshalling, data synthesis, and
+//! the pure-Rust coordinator machinery (UCB, aggregation), so coordinator
+//! overhead can be read off directly against the XLA step time.
+
+use adasplit::config::ExperimentConfig;
+use adasplit::data::{build_partition, DatasetKind, Rng, SyntheticDataset};
+use adasplit::orchestrator::UcbOrchestrator;
+use adasplit::protocols::Env;
+use adasplit::runtime::{Runtime, Tensor};
+use adasplit::util::bench::{bench, quick_mode};
+
+fn main() -> anyhow::Result<()> {
+    let iters = if quick_mode() { 5 } else { 20 };
+    let rt = Runtime::load("artifacts")?;
+    let cfg = ExperimentConfig::quick_test();
+    let clients = build_partition(DatasetKind::MixedCifar, 5, 64, 32, 1.0, 0)?;
+    let env = Env::new(&rt, &cfg, clients);
+
+    let mut stats = Vec::new();
+
+    // ---- artifact executions (the intended hot path) ----------------------
+    let client_step = env.art_split("client_step")?;
+    let server_step = env.art_split("server_step")?;
+    let client_fwd = env.art_split("client_fwd")?;
+    let server_eval = env.art_split("server_eval")?;
+    let fl_step = env.art_ds("fl_step")?;
+
+    let cstate = env.init_state("c10_mu1_init_client", 1.0)?;
+    let sstate = env.init_state("c10_mu1_init_server", 2.0)?;
+    let fstate = env.init_state("c10_init_fl", 3.0)?;
+    let b = &env.train_batches(0, 0)[0];
+    let zero_ga = Tensor::zeros(&rt.manifest.config("c10_mu1")?.act_shape);
+    let beta = Tensor::scalar(0.0);
+    let zero = Tensor::scalar(0.0);
+    let lam = Tensor::scalar(1e-5);
+
+    let acts = client_step
+        .call(
+            &[&cstate],
+            &[("x", &b.x), ("y", &b.y), ("beta", &beta), ("grad_a", &zero_ga),
+              ("use_grad", &zero)],
+        )?
+        .take("acts")?;
+
+    stats.push(bench("artifact: client_step (B=32)", 2, iters, || {
+        client_step
+            .call(
+                &[&cstate],
+                &[("x", &b.x), ("y", &b.y), ("beta", &beta), ("grad_a", &zero_ga),
+                  ("use_grad", &zero)],
+            )
+            .unwrap();
+    }));
+    stats.push(bench("artifact: server_step (masked)", 2, iters, || {
+        server_step
+            .call(&[&sstate], &[("a", &acts), ("y", &b.y), ("lam", &lam)])
+            .unwrap();
+    }));
+    stats.push(bench("artifact: fl_step (full model)", 2, iters, || {
+        let mut pg = adasplit::runtime::TensorStore::new();
+        adasplit::protocols::copy_prefixed(&fstate, "state.p", &mut pg, "pg");
+        let c = adasplit::protocols::zeros_prefixed(&fstate, "state.p", "c");
+        let ci = adasplit::protocols::zeros_prefixed(&fstate, "state.p", "ci");
+        fl_step
+            .call(&[&fstate, &pg, &c, &ci], &[("prox_mu", &zero), ("x", &b.x), ("y", &b.y)])
+            .unwrap();
+    }));
+    let croot = cstate.sub("state");
+    stats.push(bench("artifact: client_fwd (eval)", 2, iters, || {
+        client_fwd.call(&[&croot], &[("x", &b.x)]).unwrap();
+    }));
+    let sroot = sstate.sub("state");
+    stats.push(bench("artifact: server_eval", 2, iters, || {
+        server_eval
+            .call(&[&sroot], &[("a", &acts), ("y", &b.y), ("valid", &b.valid)])
+            .unwrap();
+    }));
+
+    // ---- coordinator-side machinery ---------------------------------------
+    stats.push(bench("coord: batch synthesis (64 imgs)", 1, iters, || {
+        let ds = SyntheticDataset::new(adasplit::data::Family::Cifar10Like, 10, 7);
+        ds.generate(&[0, 1], 64, 0, 0);
+    }));
+    stats.push(bench("coord: epoch batching (512)", 1, iters, || {
+        let c = build_partition(DatasetKind::MixedCifar, 1, 512, 32, 1.0, 0).unwrap();
+        let mut rng = Rng::new(0);
+        let _: Vec<_> =
+            adasplit::data::BatchIter::train(&c[0].train_x, &c[0].train_y, 32, &mut rng)
+                .collect();
+    }));
+    stats.push(bench("coord: UCB select+update x1000", 1, iters, || {
+        let mut ucb = UcbOrchestrator::new(5, 0.87);
+        for t in 0..1000u64 {
+            let sel = ucb.select(3);
+            let obs: Vec<(usize, f64)> =
+                sel.iter().map(|&i| (i, (t % 7) as f64)).collect();
+            ucb.update(&obs);
+        }
+    }));
+    stats.push(bench("coord: fedavg aggregation (160k params x5)", 1, iters, || {
+        let stores: Vec<_> = (0..5)
+            .map(|i| {
+                let mut s = adasplit::runtime::TensorStore::new();
+                s.insert("state.p.w", Tensor::full(&[160_000], i as f32));
+                s
+            })
+            .collect();
+        let refs: Vec<&adasplit::runtime::TensorStore> = stores.iter().collect();
+        let mut dst = stores[0].clone();
+        dst.set_weighted_sum(&refs, &[0.2; 5], |k| k.starts_with("state.p")).unwrap();
+    }));
+
+    println!("\n== runtime_micro ==");
+    for s in &stats {
+        println!("{}", s.report());
+    }
+
+    // coordinator overhead summary: pure-Rust work per training iteration
+    // vs the artifact execution it wraps
+    let art = stats[0].mean_s;
+    let coord = stats[7].mean_s / 1000.0; // UCB per iteration
+    println!(
+        "\ncoordinator overhead per iteration (UCB) = {:.2}us = {:.4}% of client_step",
+        coord * 1e6,
+        100.0 * coord / art
+    );
+    Ok(())
+}

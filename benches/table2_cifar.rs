@@ -1,0 +1,49 @@
+//! Table 2 — Mixed-CIFAR main results: all 7 protocols + the second
+//! AdaSplit operating point (kappa=0.3).
+//!
+//! `cargo bench --bench table2_cifar` (add `-- --quick` for a smoke run).
+
+use adasplit::config::{ExperimentConfig, ProtocolKind};
+use adasplit::data::DatasetKind;
+use adasplit::protocols::run_seeds;
+use adasplit::report::ResultTable;
+use adasplit::runtime::Runtime;
+use adasplit::util::bench::bench_scale;
+
+fn main() -> anyhow::Result<()> {
+    let (rounds, samples, test, n_seeds) = bench_scale();
+    let seeds: Vec<u64> = (0..n_seeds as u64).collect();
+    let rt = Runtime::load("artifacts")?;
+
+    let base = ExperimentConfig::paper_default(DatasetKind::MixedCifar)
+        .with_scale(rounds, samples, test);
+    let mut table = ResultTable::new(format!(
+        "Table 2 — Mixed-CIFAR (R={rounds}, {samples} samples/client)"
+    ));
+
+    for p in ProtocolKind::ALL {
+        let cfg = base.clone().with_protocol(p);
+        let t0 = std::time::Instant::now();
+        let (r, std) = run_seeds(&rt, &cfg, &seeds)?;
+        eprintln!("{:<22} {:>6.2}%  [{:.0}s]", p.name(), r.best_accuracy,
+                  t0.elapsed().as_secs_f64());
+        let label = if p == ProtocolKind::AdaSplit {
+            "AdaSplit (k=.6, e=.6)".to_string()
+        } else {
+            p.name().to_string()
+        };
+        table.add(label, &r, std);
+    }
+    let cfg = base.clone().with_kappa(0.3);
+    let (r, std) = run_seeds(&rt, &cfg, &seeds)?;
+    table.add("AdaSplit (k=.3, e=.6)", &r, std);
+
+    table.recompute_c3_measured(8.0);
+    println!("\n{}", table.render());
+    println!("(C3 uses measured budgets: B_max/C_max = worst baseline, paper §4.4)");
+    println!("best by C3-Score: {}", table.best_by_c3().unwrap_or("-"));
+    std::fs::create_dir_all("results")?;
+    table.write_csv("results/table2_cifar.csv")?;
+    println!("-> results/table2_cifar.csv");
+    Ok(())
+}

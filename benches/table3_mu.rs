@@ -1,0 +1,48 @@
+//! Table 3 — varying the client model size mu on Mixed-CIFAR.
+//!
+//! Expected shape (paper §6.1): client compute rises monotonically with
+//! mu; bandwidth falls (deeper split activations are smaller); accuracy is
+//! roughly flat with mild degradation at large mu (smaller server to
+//! collaborate in).
+
+use adasplit::config::ExperimentConfig;
+use adasplit::data::DatasetKind;
+use adasplit::protocols::run_seeds;
+use adasplit::report::ResultTable;
+use adasplit::runtime::Runtime;
+use adasplit::util::bench::bench_scale;
+
+fn main() -> anyhow::Result<()> {
+    let (rounds, samples, test, n_seeds) = bench_scale();
+    let seeds: Vec<u64> = (0..n_seeds as u64).collect();
+    let rt = Runtime::load("artifacts")?;
+
+    let base = ExperimentConfig::paper_default(DatasetKind::MixedCifar)
+        .with_scale(rounds, samples, test);
+    let mut table = ResultTable::new(format!("Table 3 — client size mu (R={rounds})"));
+
+    let mut prev_compute = 0.0;
+    let mut prev_bw = f64::INFINITY;
+    for mu in [0.2, 0.4, 0.6, 0.8] {
+        let cfg = base.clone().with_mu(mu);
+        let (r, std) = run_seeds(&rt, &cfg, &seeds)?;
+        eprintln!(
+            "mu={mu}: acc={:.2}% bw={:.4}GB cC={:.4}T",
+            r.best_accuracy, r.bandwidth_gb, r.client_tflops
+        );
+        assert!(
+            r.client_tflops > prev_compute,
+            "client compute must rise with mu"
+        );
+        assert!(r.bandwidth_gb < prev_bw, "bandwidth must fall with mu");
+        prev_compute = r.client_tflops;
+        prev_bw = r.bandwidth_gb;
+        table.add(format!("mu={mu}"), &r, std);
+    }
+
+    println!("\n{}", table.render());
+    std::fs::create_dir_all("results")?;
+    table.write_csv("results/table3_mu.csv")?;
+    println!("-> results/table3_mu.csv");
+    Ok(())
+}

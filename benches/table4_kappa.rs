@@ -1,0 +1,47 @@
+//! Table 4 — varying the local-phase duration kappa on Mixed-CIFAR.
+//!
+//! Expected shape (paper §6.2): bandwidth and server compute fall sharply
+//! as kappa grows (fewer global-phase rounds); client compute is flat;
+//! accuracy degrades mildly.
+
+use adasplit::config::ExperimentConfig;
+use adasplit::data::DatasetKind;
+use adasplit::protocols::run_seeds;
+use adasplit::report::ResultTable;
+use adasplit::runtime::Runtime;
+use adasplit::util::bench::bench_scale;
+
+fn main() -> anyhow::Result<()> {
+    let (rounds, samples, test, n_seeds) = bench_scale();
+    let seeds: Vec<u64> = (0..n_seeds as u64).collect();
+    let rt = Runtime::load("artifacts")?;
+
+    let base = ExperimentConfig::paper_default(DatasetKind::MixedCifar)
+        .with_scale(rounds, samples, test);
+    let mut table = ResultTable::new(format!("Table 4 — local phase kappa (R={rounds})"));
+
+    let mut prev_bw = f64::INFINITY;
+    let mut prev_total = f64::INFINITY;
+    for kappa in [0.3, 0.45, 0.6, 0.75, 0.9] {
+        let cfg = base.clone().with_kappa(kappa);
+        let (r, std) = run_seeds(&rt, &cfg, &seeds)?;
+        eprintln!(
+            "kappa={kappa}: acc={:.2}% bw={:.4}GB total={:.4}T",
+            r.best_accuracy, r.bandwidth_gb, r.total_tflops
+        );
+        assert!(r.bandwidth_gb <= prev_bw, "bandwidth must fall with kappa");
+        assert!(
+            r.total_tflops <= prev_total,
+            "total (server) compute must fall with kappa"
+        );
+        prev_bw = r.bandwidth_gb;
+        prev_total = r.total_tflops;
+        table.add(format!("kappa={kappa}"), &r, std);
+    }
+
+    println!("\n{}", table.render());
+    std::fs::create_dir_all("results")?;
+    table.write_csv("results/table4_kappa.csv")?;
+    println!("-> results/table4_kappa.csv");
+    Ok(())
+}

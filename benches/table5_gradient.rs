@@ -1,0 +1,58 @@
+//! Table 5 — kappa sweep on Mixed-NonIID with the server-gradient
+//! ablation: row 1 trains the client with L_client only, row 2 with
+//! L_client + the downloaded server gradient.
+//!
+//! Expected shape (paper §6.3): accuracy is largely insensitive to the
+//! server gradient across every kappa, while its bandwidth column is ~2x
+//! (activation-sized gradient flows back down).
+
+use adasplit::config::ExperimentConfig;
+use adasplit::data::DatasetKind;
+use adasplit::protocols::run_seeds;
+use adasplit::report::ResultTable;
+use adasplit::runtime::Runtime;
+use adasplit::util::bench::bench_scale;
+
+fn main() -> anyhow::Result<()> {
+    let (rounds, samples, test, n_seeds) = bench_scale();
+    let seeds: Vec<u64> = (0..n_seeds as u64).collect();
+    let rt = Runtime::load("artifacts")?;
+
+    let base = ExperimentConfig::paper_default(DatasetKind::MixedNonIid)
+        .with_scale(rounds, samples, test);
+    let mut table =
+        ResultTable::new(format!("Table 5 — server-gradient ablation (R={rounds})"));
+
+    for kappa in [0.3, 0.6, 0.9] {
+        let cfg = base.clone().with_kappa(kappa);
+        let (no_grad, std0) = run_seeds(&rt, &cfg, &seeds)?;
+
+        let mut cfg_grad = base.clone().with_kappa(kappa);
+        cfg_grad.server_grad_to_client = true;
+        let (with_grad, std1) = run_seeds(&rt, &cfg_grad, &seeds)?;
+
+        eprintln!(
+            "kappa={kappa}: L_client {:.2}% @ {:.4}GB | +server-grad {:.2}% @ {:.4}GB",
+            no_grad.best_accuracy,
+            no_grad.bandwidth_gb,
+            with_grad.best_accuracy,
+            with_grad.bandwidth_gb
+        );
+        // (at --quick scale kappa=0.9 can leave zero global rounds: no
+        // traffic either way, nothing to compare)
+        if no_grad.bandwidth_gb > 0.0 {
+            assert!(
+                with_grad.bandwidth_gb > no_grad.bandwidth_gb * 1.5,
+                "server gradient must roughly double the bandwidth"
+            );
+        }
+        table.add(format!("k={kappa} L_client"), &no_grad, std0);
+        table.add(format!("k={kappa} +serv-grad"), &with_grad, std1);
+    }
+
+    println!("\n{}", table.render());
+    std::fs::create_dir_all("results")?;
+    table.write_csv("results/table5_gradient.csv")?;
+    println!("-> results/table5_gradient.csv");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Table 6 — sparsifying the split activations with an L1 penalty (beta)
+//! to shrink the upload payload on Mixed-CIFAR.
+//!
+//! Expected shape (paper §6.4): bandwidth falls monotonically (and
+//! eventually collapses) as beta grows; accuracy degrades gracefully then
+//! sharply at extreme beta. Compute is unchanged.
+
+use adasplit::config::ExperimentConfig;
+use adasplit::data::DatasetKind;
+use adasplit::protocols::run_seeds;
+use adasplit::report::ResultTable;
+use adasplit::runtime::Runtime;
+use adasplit::util::bench::bench_scale;
+
+fn main() -> anyhow::Result<()> {
+    let (rounds, samples, test, n_seeds) = bench_scale();
+    let seeds: Vec<u64> = (0..n_seeds as u64).collect();
+    let rt = Runtime::load("artifacts")?;
+
+    let base = ExperimentConfig::paper_default(DatasetKind::MixedCifar)
+        .with_scale(rounds, samples, test);
+    let mut table =
+        ResultTable::new(format!("Table 6 — activation L1 sweep (R={rounds})"));
+
+    // the paper's Table-6 grid
+    let betas: [f32; 7] = [0.0, 1e-7, 1e-6, 5e-6, 1e-5, 1e-4, 1e-1];
+    let mut bws = Vec::new();
+    let mut compute = Vec::new();
+    for beta in betas {
+        let cfg = base.clone().with_beta(beta);
+        let (r, std) = run_seeds(&rt, &cfg, &seeds)?;
+        eprintln!(
+            "beta={beta:<7}: acc={:.2}% bw={:.5}GB cC={:.4}T",
+            r.best_accuracy, r.bandwidth_gb, r.client_tflops
+        );
+        bws.push(r.bandwidth_gb);
+        compute.push(r.client_tflops);
+        table.add(format!("beta={beta}"), &r, std);
+    }
+
+    // shape checks: bandwidth falls with beta (collapse needs full-scale
+    // runs — see EXPERIMENTS.md); compute is untouched by the codec
+    assert!(
+        bws.last().unwrap() < bws.first().unwrap(),
+        "strong beta must reduce the payload: {bws:?}"
+    );
+    for c in &compute {
+        assert!((c - compute[0]).abs() / compute[0] < 1e-6, "compute must not change");
+    }
+
+    println!("\n{}", table.render());
+    std::fs::create_dir_all("results")?;
+    table.write_csv("results/table6_act_sparsity.csv")?;
+    println!("-> results/table6_act_sparsity.csv");
+    Ok(())
+}

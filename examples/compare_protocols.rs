@@ -1,0 +1,67 @@
+//! Compare all seven protocols on one dataset — the shape of the paper's
+//! Tables 1 and 2 at configurable scale.
+//!
+//! ```bash
+//! cargo run --release --example compare_protocols -- --dataset mixed-noniid
+//! cargo run --release --example compare_protocols -- --rounds 20 --samples 512 --seeds 3
+//! ```
+
+use adasplit::config::{ExperimentConfig, ProtocolKind};
+use adasplit::data::DatasetKind;
+use adasplit::protocols::run_seeds;
+use adasplit::report::ResultTable;
+use adasplit::runtime::Runtime;
+
+fn arg(name: &str) -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == name).and_then(|i| argv.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    let dataset: DatasetKind = arg("--dataset")
+        .unwrap_or_else(|| "mixed-cifar".into())
+        .parse()?;
+    let rounds: usize = arg("--rounds").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let samples: usize = arg("--samples").and_then(|v| v.parse().ok()).unwrap_or(192);
+    let test: usize = arg("--test-samples").and_then(|v| v.parse().ok()).unwrap_or(128);
+    let n_seeds: usize = arg("--seeds").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let seeds: Vec<u64> = (0..n_seeds as u64).collect();
+
+    let rt = Runtime::load("artifacts")?;
+    let mut table = ResultTable::new(format!(
+        "{} — {} rounds, {} samples/client, {} seed(s)",
+        dataset.name(),
+        rounds,
+        samples,
+        n_seeds
+    ));
+
+    for p in ProtocolKind::ALL {
+        let cfg = ExperimentConfig::paper_default(dataset)
+            .with_protocol(p)
+            .with_scale(rounds, samples, test);
+        let t0 = std::time::Instant::now();
+        let (result, std) = run_seeds(&rt, &cfg, &seeds)?;
+        println!(
+            "{:<9} acc {:>6.2}±{:<5.2} bw {:>7.3}GB cC {:>6.3}T c3 {:.3}  [{:.0}s]",
+            p.name(),
+            result.best_accuracy,
+            std,
+            result.bandwidth_gb,
+            result.client_tflops,
+            result.c3_score,
+            t0.elapsed().as_secs_f64()
+        );
+        table.add(p.name(), &result, std);
+    }
+
+    table.recompute_c3_measured(8.0);
+    println!("\n{}", table.render());
+    println!("(C3 uses measured budgets: B_max/C_max = worst baseline, paper §4.4)");
+    println!("best by C3-Score: {}", table.best_by_c3().unwrap_or("-"));
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/compare_{}_r{rounds}.csv", dataset.tag());
+    table.write_csv(&path)?;
+    println!("table -> {path}");
+    Ok(())
+}

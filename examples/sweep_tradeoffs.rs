@@ -1,0 +1,81 @@
+//! Figure-1 trade-off sweeps: accuracy vs bandwidth (varying kappa at
+//! fixed compute) and accuracy vs client compute (varying mu at fixed
+//! bandwidth budget), with the FL/SL baselines as reference points.
+//!
+//! ```bash
+//! cargo run --release --example sweep_tradeoffs -- --rounds 10 --samples 256
+//! ```
+
+use adasplit::config::{ExperimentConfig, ProtocolKind};
+use adasplit::data::DatasetKind;
+use adasplit::protocols::run_protocol;
+use adasplit::report::series::ascii_chart;
+use adasplit::report::Series;
+use adasplit::runtime::Runtime;
+
+fn arg_usize(name: &str, default: usize) -> usize {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == name)
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rounds = arg_usize("--rounds", 8);
+    let samples = arg_usize("--samples", 192);
+    let test = arg_usize("--test-samples", 128);
+
+    let rt = Runtime::load("artifacts")?;
+    let base = ExperimentConfig::paper_default(DatasetKind::MixedCifar)
+        .with_scale(rounds, samples, test);
+
+    // accuracy vs bandwidth: sweep kappa (less local phase => more traffic)
+    let mut bw_curve = Series::new("AdaSplit (kappa sweep)", "bandwidth_gb");
+    for kappa in [0.3, 0.45, 0.6, 0.75, 0.9] {
+        let r = run_protocol(&rt, &base.clone().with_kappa(kappa))?;
+        println!(
+            "kappa={kappa:<4} acc={:.2}% bw={:.4}GB cC={:.4}T",
+            r.best_accuracy, r.bandwidth_gb, r.client_tflops
+        );
+        bw_curve.push(r.bandwidth_gb, r.best_accuracy);
+    }
+
+    // accuracy vs client compute: sweep mu (client model size)
+    let mut c_curve = Series::new("AdaSplit (mu sweep)", "client_tflops");
+    for mu in [0.2, 0.4, 0.6, 0.8] {
+        let r = run_protocol(&rt, &base.clone().with_mu(mu))?;
+        println!(
+            "mu={mu:<4}    acc={:.2}% bw={:.4}GB cC={:.4}T",
+            r.best_accuracy, r.bandwidth_gb, r.client_tflops
+        );
+        c_curve.push(r.client_tflops, r.best_accuracy);
+    }
+
+    // baseline reference points
+    let mut base_bw = Series::new("baselines", "bandwidth_gb");
+    let mut base_c = Series::new("baselines", "client_tflops");
+    for p in [ProtocolKind::FedAvg, ProtocolKind::SlBasic, ProtocolKind::SplitFed] {
+        let r = run_protocol(&rt, &base.clone().with_protocol(p))?;
+        println!(
+            "{:<9} acc={:.2}% bw={:.4}GB cC={:.4}T",
+            r.protocol, r.best_accuracy, r.bandwidth_gb, r.client_tflops
+        );
+        base_bw.push(r.bandwidth_gb, r.best_accuracy);
+        base_c.push(r.client_tflops, r.best_accuracy);
+    }
+
+    println!("\n=== accuracy vs bandwidth (Fig. 1 left) ===");
+    print!("{}", ascii_chart(&[bw_curve.clone(), base_bw.clone()], 60, 14));
+    println!("\n=== accuracy vs client compute (Fig. 1 right) ===");
+    print!("{}", ascii_chart(&[c_curve.clone(), base_c.clone()], 60, 14));
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig1_bandwidth_curve.csv", bw_curve.to_csv())?;
+    std::fs::write("results/fig1_compute_curve.csv", c_curve.to_csv())?;
+    std::fs::write("results/fig1_baseline_bw.csv", base_bw.to_csv())?;
+    std::fs::write("results/fig1_baseline_compute.csv", base_c.to_csv())?;
+    println!("\ncurves -> results/fig1_*.csv");
+    Ok(())
+}

@@ -1,0 +1,241 @@
+"""AOT lowering driver: JAX -> HLO text + manifest.json.
+
+Runs ONCE at build time (`make artifacts`). Lowers every train/eval/init
+step in model.py to HLO *text* (NOT a serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+parser reassigns ids — see /opt/xla-example/README.md) and records, per
+artifact, the exact flattened argument/output order in a JSON manifest the
+Rust runtime uses to marshal its flat f32 buffers.
+
+Every artifact function takes a single dict argument and returns a dict, so
+tensor names are the pytree paths — deterministic (sorted dict keys) and
+identical between jax's flattening and the manifest.
+
+Usage: python -m compile.aot --out ../artifacts [--only REGEX]
+"""
+
+import argparse
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+F32 = jnp.float32
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+def path_str(path):
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def flatten_named(tree):
+    """[(dotted_name, shape, dtype_str)] in jax flattening order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        out.append({"name": path_str(path),
+                    "shape": list(leaf.shape),
+                    "dtype": str(leaf.dtype)})
+    return out
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def state_spec(init_fn):
+    """Shape-only evaluation of an init function."""
+    return jax.eval_shape(init_fn, spec(()))
+
+
+# --------------------------------------------------------------------------
+# Artifact registry
+# --------------------------------------------------------------------------
+
+def build_registry():
+    """name -> (fn(args_dict) -> dict, example_args_dict)."""
+    B = M.BATCH
+    x_spec = spec((B, M.IMG, M.IMG, 3))
+    y_spec = spec((B,))
+    v_spec = spec((B,))
+    s_spec = spec(())
+
+    reg = {}
+
+    def add(name, fn, args):
+        assert name not in reg, name
+        reg[name] = (fn, args)
+
+    # (tag, num_classes, k, full): full => also SL + FL + grad-ablation
+    configs = [("c10", 10, 1, True), ("c50", 50, 1, True),
+               ("c10", 10, 2, False), ("c10", 10, 3, False),
+               ("c10", 10, 4, False)]
+
+    for tag, nc, k, full in configs:
+        pre = f"{tag}_mu{k}"
+        a_spec = spec(M.act_shape(k))
+
+        cst = state_spec(lambda s, k=k: M.init_client_state(s, k))
+        sst = state_spec(lambda s, k=k, nc=nc: M.init_server_state(s, k, nc))
+
+        add(f"{pre}_init_client",
+            lambda a, k=k: {"state": M.init_client_state(a["seed"], k)},
+            {"seed": s_spec})
+        add(f"{pre}_init_server",
+            lambda a, k=k, nc=nc: {"state": M.init_server_state(a["seed"], k, nc)},
+            {"seed": s_spec})
+
+        add(f"{pre}_client_step",
+            lambda a, k=k: M.client_step(a["state"], a["x"], a["y"],
+                                         a["beta"], a["grad_a"],
+                                         a["use_grad"], k),
+            {"state": cst, "x": x_spec, "y": y_spec, "beta": s_spec,
+             "grad_a": a_spec, "use_grad": s_spec})
+        add(f"{pre}_client_fwd",
+            lambda a, k=k: M.client_fwd(a["pc"], a["x"], k),
+            {"pc": cst["pc"], "x": x_spec})
+        add(f"{pre}_server_step",
+            lambda a, k=k: M.server_step(a["state"], a["a"], a["y"],
+                                         a["lam"], k),
+            {"state": sst, "a": a_spec, "y": y_spec, "lam": s_spec})
+        add(f"{pre}_server_eval",
+            lambda a, k=k: M.server_eval(a["ps"], a["mask"], a["a"], a["y"],
+                                         a["valid"], k),
+            {"ps": sst["ps"], "mask": sst["mask"], "a": a_spec,
+             "y": y_spec, "valid": v_spec})
+
+        if full:
+            scst = state_spec(lambda s, k=k: M.init_sl_client_state(s, k))
+            ssst = state_spec(
+                lambda s, k=k, nc=nc: M.init_sl_server_state(s, k, nc))
+            add(f"{pre}_init_sl_client",
+                lambda a, k=k: {"state": M.init_sl_client_state(a["seed"], k)},
+                {"seed": s_spec})
+            add(f"{pre}_init_sl_server",
+                lambda a, k=k, nc=nc:
+                    {"state": M.init_sl_server_state(a["seed"], k, nc)},
+                {"seed": s_spec})
+            add(f"{pre}_sl_server_step",
+                lambda a, k=k: M.sl_server_step(a["state"], a["a"], a["y"], k),
+                {"state": ssst, "a": a_spec, "y": y_spec})
+            add(f"{pre}_sl_server_eval",
+                lambda a, k=k: M.sl_server_eval(a["ps"], a["a"], a["y"],
+                                                a["valid"], k),
+                {"ps": ssst["ps"], "a": a_spec, "y": y_spec, "valid": v_spec})
+            add(f"{pre}_client_bwd",
+                lambda a, k=k: M.client_bwd(a["state"], a["x"], a["grad_a"], k),
+                {"state": scst, "x": x_spec, "grad_a": a_spec})
+
+    for tag, nc in [("c10", 10), ("c50", 50)]:
+        fst = state_spec(lambda s, nc=nc: M.init_fl_state(s, nc))
+        add(f"{tag}_init_fl",
+            lambda a, nc=nc: {"state": M.init_fl_state(a["seed"], nc)},
+            {"seed": s_spec})
+        add(f"{tag}_fl_step",
+            lambda a: M.fl_step(a["state"], a["pg"], a["c"], a["ci"],
+                                a["prox_mu"], a["x"], a["y"]),
+            {"state": fst, "pg": fst["p"], "c": fst["p"], "ci": fst["p"],
+             "prox_mu": s_spec, "x": x_spec, "y": y_spec})
+        add(f"{tag}_fl_eval",
+            lambda a: M.fl_eval(a["p"], a["x"], a["y"], a["valid"]),
+            {"p": fst["p"], "x": x_spec, "y": y_spec, "valid": v_spec})
+
+    return reg
+
+
+def config_meta():
+    """Shape/count metadata mirrored into the manifest for L3 accounting."""
+    def count(tree):
+        return int(sum(x.size for x in jax.tree_util.tree_leaves(tree)))
+
+    meta = {}
+    for nc, tag in [(10, "c10"), (50, "c50")]:
+        full = jax.eval_shape(lambda s, nc=nc: M.init_fl_state(s, nc),
+                              spec(()))["p"]
+        for k in range(1, 5):
+            if tag == "c50" and k > 1:
+                continue
+            pc = {n: v for n, v in full.items() if n in M.BLOCKS[:k]}
+            ps = {n: v for n, v in full.items() if n in M.BLOCKS[k:]}
+            proj = jax.eval_shape(lambda s, k=k: M.init_proj(s, k),
+                                  jax.ShapeDtypeStruct((2,), jnp.uint32))
+            meta[f"{tag}_mu{k}"] = {
+                "num_classes": nc,
+                "k": k,
+                "act_shape": list(M.act_shape(k)),
+                "client_params": count(pc),
+                "server_params": count(ps),
+                "proj_params": count(proj),
+                "full_params": count(full),
+            }
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex filter on artifact names (dev aid)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    reg = build_registry()
+    manifest = {
+        "batch": M.BATCH,
+        "img": M.IMG,
+        "proj_dim": M.PROJ_DIM,
+        "lr": M.LR,
+        "tau": M.TAU,
+        "mask_thresh": M.MASK_THRESH,
+        "conv_channels": M.CONV_CHANNELS,
+        "fc1": M.FC1,
+        "configs": config_meta(),
+        "artifacts": {},
+    }
+
+    only = re.compile(args.only) if args.only else None
+    for name, (fn, ex_args) in sorted(reg.items()):
+        if only and not only.search(name):
+            continue
+        lowered = jax.jit(fn).lower(ex_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, ex_args)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": flatten_named(ex_args),
+            "outputs": flatten_named(out_shapes),
+        }
+        print(f"  {name}: {len(text)//1024} KiB, "
+              f"{len(manifest['artifacts'][name]['inputs'])} in / "
+              f"{len(manifest['artifacts'][name]['outputs'])} out")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: gated (masked) Adam parameter update (AdaSplit eq. 7).
+
+AdaSplit's collaboration mechanism constrains each client to update only a
+sparse partition of the server model:
+
+    M^s <- M^s - alpha * m_hat_i * adam(grad)
+
+where ``m_hat_i`` is the client's binarized mask. The same kernel with
+``gate = 1`` is the plain Adam update used for every other parameter tree in
+the system (client models, projection heads, masks themselves, FL models) —
+so this single kernel is the parameter-update hot path of the entire stack.
+
+The kernel is purely element-wise (VPU work, no MXU): each parameter tensor
+is raveled, zero-padded to a multiple of ``CHUNK`` and processed over a 1-D
+grid with one VMEM-resident block per program. Bias-corrected step size is
+precomputed on the host graph and fed through a (1, 1) block so the kernel
+itself has no transcendental ops.
+
+Interpret mode only — see DESIGN.md §Hardware-Adaptation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size along the flattened parameter axis. Perf note (EXPERIMENTS.md
+# §Perf): interpret-mode lowering turns each grid step into an XLA loop
+# iteration, so small chunks dominate runtime on CPU: CHUNK=1024 made the
+# masked server step ~116 ms; 16384 cut it to 31.5 ms; 65536 to 29.6 ms
+# (<6% further — practical roofline). On a real TPU the VMEM footprint at
+# 65536 is 6 buffers x 256 KiB = 1.5 MiB — comfortably inside the ~16 MiB
+# VMEM budget, and the kernel stays purely element-wise VPU work.
+CHUNK = 65536
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def _adam_kernel(lr_ref, p_ref, g_ref, m_ref, v_ref, gate_ref,
+                 po_ref, mo_ref, vo_ref):
+    lr_t = lr_ref[0, 0]
+    g = g_ref[...]
+    m = BETA1 * m_ref[...] + (1.0 - BETA1) * g
+    v = BETA2 * v_ref[...] + (1.0 - BETA2) * g * g
+    step = lr_t * m / (jnp.sqrt(v) + EPS)
+    po_ref[...] = p_ref[...] - gate_ref[...] * step
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+def _update_flat(p, g, m, v, gate, lr_t):
+    """Run the kernel over one raveled, padded [NB, CHUNK] tensor set."""
+    nb = p.shape[0]
+    blk = pl.BlockSpec((1, CHUNK), lambda i: (i, 0))
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out = jax.ShapeDtypeStruct(p.shape, p.dtype)
+    return pl.pallas_call(
+        _adam_kernel,
+        grid=(nb,),
+        in_specs=[scalar, blk, blk, blk, blk, blk],
+        out_specs=[blk, blk, blk],
+        out_shape=(out, out, out),
+        interpret=True,
+    )(lr_t.reshape(1, 1), p, g, m, v, gate)
+
+
+def _pad_ravel(x):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    nb = -(-n // CHUNK)
+    flat = jnp.pad(flat, (0, nb * CHUNK - n))
+    return flat.reshape(nb, CHUNK), n
+
+
+def adam_leaf(p, g, m, v, gate, lr_t):
+    """Gated Adam update of a single tensor. ``gate`` is None or same-shape."""
+    shape = p.shape
+    pf, n = _pad_ravel(p)
+    gf, _ = _pad_ravel(g)
+    mf, _ = _pad_ravel(m)
+    vf, _ = _pad_ravel(v)
+    if gate is None:
+        gatef = jnp.ones_like(pf)
+    else:
+        gatef, _ = _pad_ravel(gate)
+    po, mo, vo = _update_flat(pf, gf, mf, vf, gatef, lr_t)
+    unravel = lambda a: a.reshape(-1)[:n].reshape(shape)
+    return unravel(po), unravel(mo), unravel(vo)
+
+
+def bias_corrected_lr(t, lr):
+    """lr * sqrt(1 - b2^t) / (1 - b1^t), computed on the host graph."""
+    t = jnp.maximum(t, 1.0)
+    return lr * jnp.sqrt(1.0 - BETA2 ** t) / (1.0 - BETA1 ** t)
+
+
+def adam_tree(params, grads, m, v, t, lr, gates=None):
+    """Gated Adam over a pytree. ``t`` is the (already incremented) step.
+
+    Returns (new_params, new_m, new_v). ``gates`` is None (ungated) or a
+    pytree of same structure whose leaves multiply the update (eq. 7).
+    """
+    lr_t = bias_corrected_lr(t, lr)
+    leaves_p, treedef = jax.tree_util.tree_flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(m)
+    leaves_v = treedef.flatten_up_to(v)
+    if gates is None:
+        leaves_gate = [None] * len(leaves_p)
+    else:
+        leaves_gate = treedef.flatten_up_to(gates)
+    new_p, new_m, new_v = [], [], []
+    for p, g, mm, vv, gg in zip(leaves_p, leaves_g, leaves_m, leaves_v, leaves_gate):
+        a, b, c = adam_leaf(p, g, mm, vv, gg, lr_t)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    unflatten = jax.tree_util.tree_unflatten
+    return unflatten(treedef, new_p), unflatten(treedef, new_m), unflatten(treedef, new_v)

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: supervised NT-Xent contrastive loss (AdaSplit eq. 5).
+
+This is the client-side gradient source that lets AdaSplit eliminate the
+dependence on server gradients. Given L2-normalized embeddings ``q`` of a
+batch and integer labels ``y`` (carried as f32), the loss is
+
+    L = (1/|P|) * sum_i sum_{p in P_i} [ logsumexp_{j != i} (q_i.q_j / tau)
+                                         - q_i.q_p / tau ]
+
+where ``P_i`` is the set of in-batch indices sharing ``y_i`` (excluding i)
+and |P| the total number of positive pairs (the paper sums; we normalize by
+the pair count so the learning rate is batch-composition independent).
+
+Both the forward loss and the analytic backward (dL/dq) are Pallas kernels
+wired together with ``jax.custom_vjp`` — interpret mode only (CPU PJRT
+cannot execute Mosaic custom-calls; see DESIGN.md §Hardware-Adaptation).
+
+TPU mapping (estimated in DESIGN.md §Perf): the B x B similarity matrix is
+a single MXU matmul per tile; with B = 32 and D = 64 the whole problem fits
+one VMEM block (q: 8 KiB, S: 4 KiB), so BlockSpec is the identity map and
+the kernel is memory-trivial — the win is fusing sim-matrix + masked
+log-softmax + pair reduction into one kernel launch instead of five HLO ops.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _fwd_kernel(q_ref, y_ref, tau_ref, loss_ref):
+    """loss_ref[0, 0] <- pair-normalized supervised NT-Xent loss."""
+    q = q_ref[...]  # [B, D]
+    y = y_ref[...]  # [B, 1]
+    tau = tau_ref[0, 0]
+    b = q.shape[0]
+
+    sim = jnp.dot(q, q.T) / tau  # [B, B]
+    eye = jnp.eye(b, dtype=sim.dtype)
+    sim = sim + eye * NEG_INF  # exclude self-similarity everywhere
+
+    # Row-wise logsumexp over j != i (self already masked to -inf).
+    row_max = jnp.max(sim, axis=1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(sim - row_max), axis=1, keepdims=True)) + row_max
+
+    pos = (y == y.T).astype(sim.dtype) * (1.0 - eye)  # [B, B] positive-pair mask
+    npairs = jnp.sum(pos)
+    per_pair = pos * (lse - sim)  # (lse_i - S_ip) on positive entries
+    loss_ref[0, 0] = jnp.sum(per_pair) / jnp.maximum(npairs, 1.0)
+
+
+def _bwd_kernel(q_ref, y_ref, tau_ref, dq_ref):
+    """dq_ref <- dL/dq, analytically.
+
+    With S = q q^T / tau, n_i = |P_i|, softmax p_ij over j != i:
+        dL/dS_ij = (n_i * p_ij - [j in P_i]) / |P|      (j != i)
+        dL/dq    = (G + G^T) q / tau                    (G = dL/dS)
+    """
+    q = q_ref[...]
+    y = y_ref[...]
+    tau = tau_ref[0, 0]
+    b = q.shape[0]
+
+    sim = jnp.dot(q, q.T) / tau
+    eye = jnp.eye(b, dtype=sim.dtype)
+    sim = sim + eye * NEG_INF
+
+    row_max = jnp.max(sim, axis=1, keepdims=True)
+    ex = jnp.exp(sim - row_max)
+    p = ex / jnp.sum(ex, axis=1, keepdims=True)  # softmax rows, 0 on diag
+
+    pos = (y == y.T).astype(sim.dtype) * (1.0 - eye)
+    n_i = jnp.sum(pos, axis=1, keepdims=True)  # [B, 1]
+    npairs = jnp.maximum(jnp.sum(pos), 1.0)
+
+    g = (n_i * p - pos) / npairs  # [B, B]
+    dq_ref[...] = jnp.dot(g + g.T, q) / tau
+
+
+def _pallas_fwd(q, y, tau):
+    loss = pl.pallas_call(
+        _fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1), q.dtype),
+        interpret=True,
+    )(q, y.reshape(-1, 1), jnp.full((1, 1), tau, q.dtype))
+    return loss[0, 0]
+
+
+def _pallas_bwd(q, y, tau):
+    return pl.pallas_call(
+        _bwd_kernel,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(q, y.reshape(-1, 1), jnp.full((1, 1), tau, q.dtype))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def ntxent_loss(q, y, tau=0.07):
+    """Supervised NT-Xent loss over a batch of L2-normalized embeddings.
+
+    Args:
+      q:   [B, D] f32, assumed L2-normalized rows.
+      y:   [B] f32 integer-valued class labels.
+      tau: temperature (paper: 0.07). Static.
+
+    Returns: scalar loss, 0.0 when the batch contains no positive pair.
+    """
+    return _pallas_fwd(q, y, tau)
+
+
+def _vjp_fwd(q, y, tau):
+    return _pallas_fwd(q, y, tau), (q, y)
+
+
+def _vjp_bwd(tau, res, ct):
+    q, y = res
+    return (ct * _pallas_bwd(q, y, tau), jnp.zeros_like(y))
+
+
+ntxent_loss.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is written with the most naive jnp formulation possible —
+no shared subexpressions with the kernels beyond the math itself — so a
+bug in a kernel cannot be mirrored by the oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def ntxent_loss_ref(q, y, tau=0.07):
+    """Naive supervised NT-Xent (AdaSplit eq. 5), normalized by the number
+    of positive pairs."""
+    b = q.shape[0]
+    sim = (q @ q.T) / tau
+    mask_self = jnp.eye(b, dtype=bool)
+    sim = jnp.where(mask_self, NEG_INF, sim)
+    # logsumexp over j != i
+    lse = jax.nn.logsumexp(sim, axis=1)
+    pos = (y[:, None] == y[None, :]) & (~mask_self)
+    per_pair = jnp.where(pos, lse[:, None] - sim, 0.0)
+    npairs = jnp.sum(pos.astype(q.dtype))
+    return jnp.sum(per_pair) / jnp.maximum(npairs, 1.0)
+
+
+def ntxent_grad_ref(q, y, tau=0.07):
+    """Autodiff gradient of the oracle loss."""
+    return jax.grad(lambda qq: ntxent_loss_ref(qq, y, tau))(q)
+
+
+def adam_ref(p, g, m, v, t, lr, gate=None,
+             beta1=0.9, beta2=0.999, eps=1e-8):
+    """Textbook (gated) Adam on a single tensor."""
+    t = jnp.maximum(t, 1.0)
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1 ** t)
+    v_hat = v_new / (1.0 - beta2 ** t)
+    step = lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    if gate is not None:
+        step = step * gate
+    return p - step, m_new, v_new

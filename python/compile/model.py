@@ -1,0 +1,374 @@
+"""L2: AdaSplit compute graphs in JAX.
+
+Defines the shared conv backbone (LeNet-style, adapted for 32x32x3 inputs),
+its client/server split at every client fraction mu, and one complete
+train/eval step per protocol variant. Every step is a pure function
+``(state, batch, hyper) -> (state', metrics)`` with fwd + bwd + Adam inside,
+so the Rust coordinator (L3) only moves flat f32 buffers.
+
+Parameter updates route through the masked-Adam Pallas kernel
+(kernels/masked_adam.py); the client objective routes through the NT-Xent
+Pallas kernel (kernels/ntxent.py). This module is lowered once by aot.py and
+never imported at runtime.
+
+Naming discipline matters: states are plain nested dicts with stable keys,
+because aot.py derives the Rust-side tensor names from the pytree paths.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.masked_adam import adam_tree
+from compile.kernels.ntxent import ntxent_loss
+
+# --------------------------------------------------------------------------
+# Architecture spec (mirrored by rust/src/model/spec.rs — keep in sync)
+# --------------------------------------------------------------------------
+
+IMG = 32                     # input images are IMG x IMG x 3
+CONV_CHANNELS = [16, 32, 64]  # conv1..conv3 output channels
+FC1 = 128                    # fc1 width
+PROJ_DIM = 64                # NT-Xent projection head output dim
+BATCH = 32                   # static training/eval batch size
+TAU = 0.07                   # NT-Xent temperature (paper §3.1)
+LR = 1e-3                    # Adam lr, client and server (paper §4.4)
+# The mask optimizer runs hotter than the model optimizer: with Adam the
+# L1 pull on a CE-irrelevant mask entry is ~lr per step regardless of
+# lambda's magnitude, so mask sparsity develops on a timescale of 1/lr
+# steps. 0.02 puts that within this repo's (reduced-scale) runs; lambda
+# still controls the CE-vs-sparsity competition per eq. 8.
+MASK_LR = 2e-2
+MASK_THRESH = 0.01           # |m| > thresh ==> parameter active (binarized)
+
+BLOCKS = ["conv1", "conv2", "conv3", "fc1", "fc2"]
+N_SPLITS = 4  # client may own blocks[:k] for k in 1..4 (mu = 0.2..0.8)
+
+
+def act_shape(k):
+    """Split-activation shape for a client owning the first k blocks."""
+    if k <= 3:
+        side = IMG // (2 ** k)
+        return (BATCH, side, side, CONV_CHANNELS[k - 1])
+    return (BATCH, FC1)
+
+
+def act_feature_dim(k):
+    """Feature dimension seen by the projection head (GAP over space)."""
+    return CONV_CHANNELS[k - 1] if k <= 3 else FC1
+
+
+# --------------------------------------------------------------------------
+# Initialization
+# --------------------------------------------------------------------------
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def init_backbone(key, num_classes):
+    """He-init of all five blocks. Returns {block: {w, b}}."""
+    ks = jax.random.split(key, 5)
+    p = {}
+    cin = 3
+    for i, cout in enumerate(CONV_CHANNELS):
+        p[f"conv{i+1}"] = {
+            "w": _he(ks[i], (3, 3, cin, cout), 3 * 3 * cin),
+            "b": jnp.zeros((cout,), jnp.float32),
+        }
+        cin = cout
+    flat = (IMG // 8) ** 2 * CONV_CHANNELS[-1]
+    p["fc1"] = {"w": _he(ks[3], (flat, FC1), flat),
+                "b": jnp.zeros((FC1,), jnp.float32)}
+    p["fc2"] = {"w": _he(ks[4], (FC1, num_classes), FC1),
+                "b": jnp.zeros((num_classes,), jnp.float32)}
+    return p
+
+
+def init_proj(key, k):
+    d = act_feature_dim(k)
+    return {"w": _he(key, (d, PROJ_DIM), d),
+            "b": jnp.zeros((PROJ_DIM,), jnp.float32)}
+
+
+def zeros_like_tree(t):
+    return jax.tree_util.tree_map(jnp.zeros_like, t)
+
+
+def ones_like_tree(t):
+    return jax.tree_util.tree_map(jnp.ones_like, t)
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+def _conv_block(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + p["b"])
+    return jax.lax.reduce_window(
+        y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply_blocks(params, names, x):
+    """Run ``x`` through the listed blocks; handles the conv->fc flatten."""
+    for name in names:
+        if name.startswith("conv"):
+            x = _conv_block(params[name], x)
+        elif name == "fc1":
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            x = jax.nn.relu(x @ params[name]["w"] + params[name]["b"])
+        else:  # fc2: logits, no activation
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            x = x @ params[name]["w"] + params[name]["b"]
+    return x
+
+
+def client_apply(pc, k, x):
+    return apply_blocks(pc, BLOCKS[:k], x)
+
+
+def server_apply(ps, k, a):
+    return apply_blocks(ps, BLOCKS[k:], a)
+
+
+def proj_apply(pp, a):
+    """GAP (conv acts) or identity (fc acts) -> dense -> L2-normalize."""
+    feat = a.mean(axis=(1, 2)) if a.ndim == 4 else a
+    q = feat @ pp["w"] + pp["b"]
+    return q / (jnp.linalg.norm(q, axis=1, keepdims=True) + 1e-8)
+
+
+def _ce(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(y.astype(jnp.int32), logits.shape[-1],
+                            dtype=logits.dtype)
+    return -jnp.sum(onehot * logp, axis=-1)
+
+
+def _correct(logits, y):
+    return (jnp.argmax(logits, axis=-1) == y.astype(jnp.int32)).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# State constructors (layouts consumed by aot.py + Rust via the manifest)
+# --------------------------------------------------------------------------
+
+def init_client_state(seed, k):
+    """AdaSplit client: split blocks + projection head + Adam + step."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    kb, kp = jax.random.split(key)
+    pc = {n: v for n, v in init_backbone(kb, 1).items() if n in BLOCKS[:k]}
+    proj = init_proj(kp, k)
+    return {"pc": pc, "proj": proj,
+            "mc": zeros_like_tree(pc), "vc": zeros_like_tree(pc),
+            "mp": zeros_like_tree(proj), "vp": zeros_like_tree(proj),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def init_server_state(seed, k, num_classes):
+    """AdaSplit server: server blocks + per-client mask + Adam for both."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    ps = {n: v for n, v in init_backbone(key, num_classes).items()
+          if n in BLOCKS[k:]}
+    mask = ones_like_tree(ps)
+    return {"ps": ps, "mask": mask,
+            "ms": zeros_like_tree(ps), "vs": zeros_like_tree(ps),
+            "mm": zeros_like_tree(mask), "vm": zeros_like_tree(mask),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def init_sl_client_state(seed, k):
+    """Classic SL client: split blocks + Adam (no projection head)."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    pc = {n: v for n, v in init_backbone(key, 1).items() if n in BLOCKS[:k]}
+    return {"pc": pc, "m": zeros_like_tree(pc), "v": zeros_like_tree(pc),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def init_sl_server_state(seed, k, num_classes):
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    ps = {n: v for n, v in init_backbone(key, num_classes).items()
+          if n in BLOCKS[k:]}
+    return {"ps": ps, "m": zeros_like_tree(ps), "v": zeros_like_tree(ps),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def init_fl_state(seed, num_classes):
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    p = init_backbone(key, num_classes)
+    return {"p": p, "m": zeros_like_tree(p), "v": zeros_like_tree(p),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# AdaSplit steps
+# --------------------------------------------------------------------------
+
+def client_step(state, x, y, beta, grad_a, use_grad, k):
+    """One client-local iteration (both phases).
+
+    Objective (paper §3.1 + §6.4):
+      L = L_client(NT-Xent on H(a)) + beta * ||a||_1
+          + use_grad * <a, grad_a>           (Table-5 row-2 ablation only)
+
+    The linear <a, stop_grad(grad_a)> term injects the server gradient via
+    the chain rule without a separate bwd artifact. Returns the split
+    activations (stop-gradient) for the global-phase transmission.
+    """
+    def loss_fn(pc, proj):
+        a = client_apply(pc, k, x)
+        q = proj_apply(proj, a)
+        l_ntx = ntxent_loss(q, y, TAU)
+        # raw L1 per sample (paper §6.4): per-activation gradient = beta/B,
+        # so the published beta range (1e-7 .. 1e-1) spans "no effect" to
+        # "payload collapse"
+        l_act = beta * jnp.sum(jnp.abs(a)) / a.shape[0]
+        l_inj = use_grad * jnp.sum(a * jax.lax.stop_gradient(grad_a))
+        return l_ntx + l_act + l_inj, (a, l_ntx)
+
+    (grads_pc, grads_pp), (a, l_ntx) = jax.grad(
+        loss_fn, argnums=(0, 1), has_aux=True)(state["pc"], state["proj"])
+    t = state["t"] + 1.0
+    pc, mc, vc = adam_tree(state["pc"], grads_pc, state["mc"], state["vc"],
+                           t, LR)
+    proj, mp, vp = adam_tree(state["proj"], grads_pp, state["mp"],
+                             state["vp"], t, LR)
+    new_state = {"pc": pc, "proj": proj, "mc": mc, "vc": vc,
+                 "mp": mp, "vp": vp, "t": t}
+    return {"state": new_state, "loss": l_ntx,
+            "acts": jax.lax.stop_gradient(a)}
+
+
+def client_fwd(pc, x, k):
+    """Inference/eval forward through the client blocks."""
+    return {"acts": client_apply(pc, k, x)}
+
+
+def server_step(state, a, y, lam, k):
+    """One AdaSplit server iteration for one client (eq. 7 + eq. 8).
+
+    Forward uses the soft mask (p_eff = ps * mask); the parameter update is
+    gated by the binarized mask |m| > MASK_THRESH via the masked-Adam
+    kernel; the mask itself receives grad(CE) + lam * d||m||_1.
+    Also emits grad_a for the Table-5 server-gradient ablation (ignored by
+    the default protocol) and the mean active-mask density for logging.
+    """
+    def loss_fn(ps, mask, acts):
+        p_eff = jax.tree_util.tree_map(lambda p, m: p * m, ps, mask)
+        logits = server_apply(p_eff, k, acts)
+        ce = jnp.mean(_ce(logits, y))
+        # raw L1 (paper eq. 8: omega is the unnormalized L1 norm)
+        reg = lam * sum(jnp.sum(jnp.abs(m))
+                        for m in jax.tree_util.tree_leaves(mask))
+        return ce + reg, (logits, ce)
+
+    (gps, gmask, ga), (logits, ce) = jax.grad(
+        loss_fn, argnums=(0, 1, 2), has_aux=True)(
+        state["ps"], state["mask"], a)
+    gate = jax.tree_util.tree_map(
+        lambda m: (jnp.abs(m) > MASK_THRESH).astype(jnp.float32),
+        state["mask"])
+    t = state["t"] + 1.0
+    ps, ms, vs = adam_tree(state["ps"], gps, state["ms"], state["vs"], t, LR,
+                           gates=gate)
+    mask, mm, vm = adam_tree(state["mask"], gmask, state["mm"], state["vm"],
+                             t, MASK_LR)
+    # ISTA-style projection: masks live in [0, 1]. Without it Adam + L1
+    # oscillates dead entries around 0 (the binarized gate flickers); with
+    # it they park at exactly 0 until a CE gradient resurrects them.
+    mask = jax.tree_util.tree_map(lambda m: jnp.clip(m, 0.0, 1.0), mask)
+    new_state = {"ps": ps, "mask": mask, "ms": ms, "vs": vs,
+                 "mm": mm, "vm": vm, "t": t}
+    nparam = sum(x.size for x in jax.tree_util.tree_leaves(gate))
+    density = sum(jnp.sum(g)
+                  for g in jax.tree_util.tree_leaves(gate)) / nparam
+    return {"state": new_state, "loss": ce,
+            "correct": jnp.sum(_correct(logits, y)),
+            "grad_a": ga, "mask_density": density}
+
+
+def server_eval(ps, mask, a, y, valid, k):
+    """Per-client inference with the *binarized* mask (M^s * m_i)."""
+    m_bin = jax.tree_util.tree_map(
+        lambda m: (jnp.abs(m) > MASK_THRESH).astype(jnp.float32), mask)
+    p_eff = jax.tree_util.tree_map(lambda p, m: p * m, ps, m_bin)
+    logits = server_apply(p_eff, k, a)
+    return {"correct": jnp.sum(_correct(logits, y) * valid),
+            "loss_sum": jnp.sum(_ce(logits, y) * valid)}
+
+
+# --------------------------------------------------------------------------
+# Classic split learning (SL-basic / SplitFed) steps
+# --------------------------------------------------------------------------
+
+def sl_server_step(state, a, y, k):
+    """Server half of one SL iteration: train server, emit grad_a."""
+    def loss_fn(ps, acts):
+        logits = server_apply(ps, k, acts)
+        ce = jnp.mean(_ce(logits, y))
+        return ce, (logits, ce)
+
+    (gps, ga), (logits, ce) = jax.grad(
+        loss_fn, argnums=(0, 1), has_aux=True)(state["ps"], a)
+    t = state["t"] + 1.0
+    ps, m, v = adam_tree(state["ps"], gps, state["m"], state["v"], t, LR)
+    return {"state": {"ps": ps, "m": m, "v": v, "t": t},
+            "loss": ce,
+            "correct": jnp.sum(_correct(logits, y)),
+            "grad_a": ga}
+
+
+def sl_server_eval(ps, a, y, valid, k):
+    logits = server_apply(ps, k, a)
+    return {"correct": jnp.sum(_correct(logits, y) * valid),
+            "loss_sum": jnp.sum(_ce(logits, y) * valid)}
+
+
+def client_bwd(state, x, grad_a, k):
+    """Client half of one SL iteration: pull grad_a through the client."""
+    def loss_fn(pc):
+        a = client_apply(pc, k, x)
+        return jnp.sum(a * jax.lax.stop_gradient(grad_a))
+
+    grads = jax.grad(loss_fn)(state["pc"])
+    t = state["t"] + 1.0
+    pc, m, v = adam_tree(state["pc"], grads, state["m"], state["v"], t, LR)
+    return {"state": {"pc": pc, "m": m, "v": v, "t": t}}
+
+
+# --------------------------------------------------------------------------
+# Federated learning step (FedAvg / FedProx / Scaffold share one artifact)
+# --------------------------------------------------------------------------
+
+def fl_step(state, pg, c, ci, prox_mu, x, y):
+    """One local FL iteration on the full model.
+
+    grad' = grad(CE) + prox_mu * (p - pg) + (c - ci)
+    FedAvg: prox_mu = 0, c = ci = 0.  FedProx: prox_mu > 0.
+    Scaffold: c/ci control variates (maintained by the Rust coordinator).
+    FedNova reuses the FedAvg step; normalization happens at aggregation.
+    """
+    def loss_fn(p):
+        logits = apply_blocks(p, BLOCKS, x)
+        ce = jnp.mean(_ce(logits, y))
+        return ce, (logits, ce)
+
+    grads, (logits, ce) = jax.grad(loss_fn, has_aux=True)(state["p"])
+    grads = jax.tree_util.tree_map(
+        lambda g, pp, pgg, cc, cii: g + prox_mu * (pp - pgg) + (cc - cii),
+        grads, state["p"], pg, c, ci)
+    t = state["t"] + 1.0
+    p, m, v = adam_tree(state["p"], grads, state["m"], state["v"], t, LR)
+    return {"state": {"p": p, "m": m, "v": v, "t": t},
+            "loss": ce,
+            "correct": jnp.sum(_correct(logits, y))}
+
+
+def fl_eval(p, x, y, valid):
+    logits = apply_blocks(p, BLOCKS, x)
+    return {"correct": jnp.sum(_correct(logits, y) * valid),
+            "loss_sum": jnp.sum(_ce(logits, y) * valid)}

@@ -1,0 +1,121 @@
+"""AOT manifest / artifact contract tests.
+
+These guard the Python<->Rust interface: every artifact referenced by the
+manifest exists, input/output names are unique and ordered, state outputs
+mirror state inputs (so Rust can write outputs back over the same buffers),
+and the HLO text parses as an entry computation.
+"""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile.aot import build_registry, config_meta
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_registry_covers_manifest(manifest):
+    reg = build_registry()
+    assert set(manifest["artifacts"].keys()) == set(reg.keys())
+
+
+def test_all_artifact_files_exist(manifest):
+    for name, art in manifest["artifacts"].items():
+        path = os.path.join(ART, art["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 100, name
+
+
+def test_hlo_text_has_entry(manifest):
+    for name, art in manifest["artifacts"].items():
+        with open(os.path.join(ART, art["file"])) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, name
+        assert "ENTRY" in head or "ENTRY" in open(
+            os.path.join(ART, art["file"])).read(), name
+
+
+def test_input_output_names_unique(manifest):
+    for name, art in manifest["artifacts"].items():
+        in_names = [i["name"] for i in art["inputs"]]
+        out_names = [o["name"] for o in art["outputs"]]
+        assert len(set(in_names)) == len(in_names), name
+        assert len(set(out_names)) == len(out_names), name
+
+
+def test_state_round_trip_layout(manifest):
+    """Every step artifact's `state.*` outputs exactly mirror its
+    `state.*` inputs (same names, shapes, order) — Rust relies on this to
+    write outputs back over its TensorStore."""
+    for name, art in manifest["artifacts"].items():
+        if "_step" not in name and "client_bwd" not in name:
+            continue
+        sin = [(i["name"], tuple(i["shape"])) for i in art["inputs"]
+               if i["name"].startswith("state.")]
+        sout = [(o["name"], tuple(o["shape"])) for o in art["outputs"]
+                if o["name"].startswith("state.")]
+        assert sin == sout, name
+
+
+def test_parameter_count_in_hlo(manifest):
+    """The number of `parameter(i)` declarations in the entry computation
+    matches the manifest input count."""
+    for name, art in list(manifest["artifacts"].items()):
+        text = open(os.path.join(ART, art["file"])).read()
+        entry = text[text.index("ENTRY"):]
+        params = set(re.findall(r"parameter\((\d+)\)", entry))
+        assert len(params) == len(art["inputs"]), name
+
+
+def test_f32_only(manifest):
+    for name, art in manifest["artifacts"].items():
+        for t in art["inputs"] + art["outputs"]:
+            assert t["dtype"] == "float32", (name, t)
+
+
+def test_config_meta_counts(manifest):
+    meta = config_meta()
+    assert manifest["configs"] == json.loads(json.dumps(meta))
+    for cfg, m in meta.items():
+        assert m["client_params"] + m["server_params"] == m["full_params"], cfg
+
+
+def test_act_shape_consistency(manifest):
+    for cfg, m in manifest["configs"].items():
+        k = m["k"]
+        art = manifest["artifacts"].get(f"{cfg}_client_step")
+        if art is None:
+            continue
+        acts = [o for o in art["outputs"] if o["name"] == "acts"]
+        assert len(acts) == 1
+        assert acts[0]["shape"] == m["act_shape"], cfg
+
+
+def test_init_outputs_match_step_state_inputs(manifest):
+    """init_* artifact outputs align exactly with the step's state inputs."""
+    pairs = [("c10_mu1_init_client", "c10_mu1_client_step"),
+             ("c10_mu1_init_server", "c10_mu1_server_step"),
+             ("c50_mu1_init_sl_server", "c50_mu1_sl_server_step"),
+             ("c10_init_fl", "c10_fl_step")]
+    for init_name, step_name in pairs:
+        init = manifest["artifacts"][init_name]
+        step = manifest["artifacts"][step_name]
+        init_out = [(o["name"], tuple(o["shape"])) for o in init["outputs"]]
+        step_state_in = [(i["name"], tuple(i["shape"]))
+                         for i in step["inputs"]
+                         if i["name"].startswith("state.")]
+        assert init_out == step_state_in, init_name

@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+hypothesis sweeps shapes/label structures; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.masked_adam import (CHUNK, adam_leaf, adam_tree,
+                                         bias_corrected_lr)
+from compile.kernels.ntxent import ntxent_loss
+from compile.kernels.ref import adam_ref, ntxent_grad_ref, ntxent_loss_ref
+
+# ----------------------------------------------------------------------
+# NT-Xent forward
+# ----------------------------------------------------------------------
+
+
+def _embed(seed, b, d):
+    q = jax.random.normal(jax.random.PRNGKey(seed), (b, d), jnp.float32)
+    return q / jnp.linalg.norm(q, axis=1, keepdims=True)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.sampled_from([4, 8, 16, 32]),
+       d=st.sampled_from([8, 16, 64, 128]),
+       nclass=st.integers(1, 10),
+       seed=st.integers(0, 2**16))
+def test_ntxent_fwd_matches_ref(b, d, nclass, seed):
+    q = _embed(seed, b, d)
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (b,), 0,
+                           nclass).astype(jnp.float32)
+    assert_allclose(np.asarray(ntxent_loss(q, y)),
+                    np.asarray(ntxent_loss_ref(q, y)), rtol=2e-5, atol=2e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.sampled_from([8, 32]), d=st.sampled_from([16, 64]),
+       nclass=st.integers(1, 8), seed=st.integers(0, 2**16))
+def test_ntxent_grad_matches_ref(b, d, nclass, seed):
+    q = _embed(seed, b, d)
+    y = jax.random.randint(jax.random.PRNGKey(seed + 7), (b,), 0,
+                           nclass).astype(jnp.float32)
+    g = jax.grad(lambda qq: ntxent_loss(qq, y))(q)
+    assert_allclose(np.asarray(g), np.asarray(ntxent_grad_ref(q, y)),
+                    rtol=1e-4, atol=1e-6)
+
+
+def test_ntxent_no_positive_pairs_is_zero():
+    """All-distinct labels => no positive pairs => loss 0, grad 0."""
+    q = _embed(3, 8, 16)
+    y = jnp.arange(8, dtype=jnp.float32)
+    assert float(ntxent_loss(q, y)) == pytest.approx(0.0, abs=1e-6)
+    g = jax.grad(lambda qq: ntxent_loss(qq, y))(q)
+    assert float(jnp.abs(g).max()) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_ntxent_all_same_label():
+    """One class => every off-diagonal pair is positive; finite loss."""
+    q = _embed(4, 16, 32)
+    y = jnp.zeros(16, jnp.float32)
+    l = float(ntxent_loss(q, y))
+    assert np.isfinite(l)
+    assert_allclose(l, float(ntxent_loss_ref(q, y)), rtol=2e-5)
+
+
+def test_ntxent_pulls_positives_together():
+    """A gradient step on the loss must increase positive-pair similarity."""
+    q = _embed(11, 16, 32)
+    y = (jnp.arange(16) % 2).astype(jnp.float32)
+    g = jax.grad(lambda qq: ntxent_loss(qq, y))(q)
+    q2 = q - 0.1 * g
+    q2 = q2 / jnp.linalg.norm(q2, axis=1, keepdims=True)
+    assert float(ntxent_loss(q2, y)) < float(ntxent_loss(q, y))
+
+
+def test_ntxent_permutation_invariant():
+    q = _embed(5, 32, 64)
+    y = jax.random.randint(jax.random.PRNGKey(9), (32,), 0, 4).astype(
+        jnp.float32)
+    perm = jax.random.permutation(jax.random.PRNGKey(10), 32)
+    assert_allclose(float(ntxent_loss(q, y)),
+                    float(ntxent_loss(q[perm], y[perm])), rtol=1e-5)
+
+
+@pytest.mark.parametrize("tau", [0.05, 0.07, 0.2, 1.0])
+def test_ntxent_tau_sweep(tau):
+    q = _embed(6, 32, 64)
+    y = jax.random.randint(jax.random.PRNGKey(6), (32,), 0, 5).astype(
+        jnp.float32)
+    assert_allclose(float(ntxent_loss(q, y, tau)),
+                    float(ntxent_loss_ref(q, y, tau)), rtol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# Masked Adam
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=st.sampled_from([(7,), (16,), (CHUNK,), (CHUNK + 3,),
+                              (3, 3, 3, 16), (33, 129), (2, CHUNK)]),
+       t=st.integers(1, 1000), gated=st.booleans(),
+       seed=st.integers(0, 2**16))
+def test_adam_leaf_matches_ref(shape, t, gated, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    p = jax.random.normal(ks[0], shape, jnp.float32)
+    g = jax.random.normal(ks[1], shape, jnp.float32)
+    m = jax.random.normal(ks[2], shape, jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(ks[3], shape, jnp.float32)) * 0.01
+    gate = (jax.random.uniform(ks[4], shape) > 0.5).astype(
+        jnp.float32) if gated else None
+    tt = jnp.float32(t)
+    lr_t = bias_corrected_lr(tt, 1e-3)
+    pn, mn, vn = adam_leaf(p, g, m, v, gate, lr_t)
+    pr, mr, vr = adam_ref(p, g, m, v, tt, 1e-3, gate)
+    assert_allclose(np.asarray(pn), np.asarray(pr), rtol=1e-5, atol=1e-7)
+    assert_allclose(np.asarray(mn), np.asarray(mr), rtol=1e-6, atol=1e-8)
+    assert_allclose(np.asarray(vn), np.asarray(vr), rtol=1e-6, atol=1e-8)
+
+
+def test_adam_gate_zero_freezes_params():
+    """gate == 0 must leave parameters exactly untouched (eq. 7)."""
+    p = jnp.ones((100,))
+    g = jnp.full((100,), 3.0)
+    zeros = jnp.zeros((100,))
+    lr_t = bias_corrected_lr(jnp.float32(1), 1e-3)
+    pn, mn, vn = adam_leaf(p, g, zeros, zeros, zeros, lr_t)
+    assert_allclose(np.asarray(pn), np.asarray(p))
+    # moments still accumulate (the mask gates the *update*, not the stats)
+    assert float(jnp.abs(mn).max()) > 0
+
+
+def test_adam_tree_structure_and_gating():
+    tree = {"a": {"w": jnp.ones((5, 5)), "b": jnp.ones((5,))},
+            "c": jnp.ones((CHUNK * 2 + 1,))}
+    grads = jax.tree_util.tree_map(lambda x: jnp.ones_like(x) * 2.0, tree)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    gates = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    gates["a"]["w"] = jnp.ones((5, 5))
+    p2, m2, v2 = adam_tree(tree, grads, zeros, zeros, jnp.float32(1), 1e-3,
+                           gates=gates)
+    assert float(jnp.abs(p2["a"]["w"] - tree["a"]["w"]).max()) > 0
+    assert_allclose(np.asarray(p2["a"]["b"]), np.asarray(tree["a"]["b"]))
+    assert_allclose(np.asarray(p2["c"]), np.asarray(tree["c"]))
+    assert jax.tree_util.tree_structure(p2) == jax.tree_util.tree_structure(tree)
+
+
+def test_adam_descends_quadratic():
+    """300 Adam steps on f(p) = ||p||^2 must reach near-zero."""
+    p = jnp.full((64,), 5.0)
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    for t in range(1, 301):
+        g = 2.0 * p
+        lr_t = bias_corrected_lr(jnp.float32(t), 5e-2)
+        p, m, v = adam_leaf(p, g, m, v, None, lr_t)
+    assert float(jnp.abs(p).max()) < 1.0

@@ -1,0 +1,255 @@
+"""L2 model graph tests: shapes, state layouts, learning signals, and the
+semantic invariants the protocols rely on (mask gating, gradient injection,
+split equivalence)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+S0 = jnp.float32(0.0)
+
+
+def _batch(seed=0, nclass=10):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (M.BATCH, M.IMG, M.IMG, 3))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (M.BATCH,), 0,
+                           nclass).astype(jnp.float32)
+    return x, y
+
+
+# ----------------------------------------------------------------------
+# Shapes / split consistency
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 4])
+def test_act_shapes(k):
+    x, _ = _batch()
+    cs = M.init_client_state(S0, k)
+    a = M.client_apply(cs["pc"], k, x)
+    assert a.shape == M.act_shape(k)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 4])
+def test_split_composes_to_full_model(k):
+    """client_apply o server_apply == apply_blocks on the full backbone."""
+    x, _ = _batch(2)
+    p = M.init_backbone(jax.random.PRNGKey(5), 10)
+    pc = {n: v for n, v in p.items() if n in M.BLOCKS[:k]}
+    ps = {n: v for n, v in p.items() if n in M.BLOCKS[k:]}
+    full = M.apply_blocks(p, M.BLOCKS, x)
+    split = M.server_apply(ps, k, M.client_apply(pc, k, x))
+    assert_allclose(np.asarray(full), np.asarray(split), rtol=1e-5, atol=1e-5)
+
+
+def test_logit_shapes():
+    x, _ = _batch()
+    for nc in (10, 50):
+        p = M.init_backbone(jax.random.PRNGKey(0), nc)
+        assert M.apply_blocks(p, M.BLOCKS, x).shape == (M.BATCH, nc)
+
+
+def test_proj_normalized():
+    x, _ = _batch(3)
+    cs = M.init_client_state(S0, 1)
+    a = M.client_apply(cs["pc"], 1, x)
+    q = M.proj_apply(cs["proj"], a)
+    assert_allclose(np.asarray(jnp.linalg.norm(q, axis=1)),
+                    np.ones(M.BATCH), rtol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# AdaSplit client step
+# ----------------------------------------------------------------------
+
+
+def test_client_step_trains():
+    """Repeated NT-Xent steps on a fixed batch decrease the loss."""
+    x, y = _batch(7, nclass=2)
+    st = M.init_client_state(S0, 1)
+    ga = jnp.zeros(M.act_shape(1))
+    step = jax.jit(lambda s: M.client_step(s, x, y, jnp.float32(0.0), ga,
+                                           jnp.float32(0.0), 1))
+    first = None
+    for i in range(20):
+        out = step(st)
+        st = out["state"]
+        if first is None:
+            first = float(out["loss"])
+    assert float(out["loss"]) < first
+    assert float(st["t"]) == 20.0
+
+
+def test_client_step_grad_injection_changes_update():
+    """use_grad=1 with nonzero grad_a must alter the parameter update."""
+    x, y = _batch(8)
+    st = M.init_client_state(S0, 1)
+    ga = jnp.ones(M.act_shape(1)) * 0.1
+    o0 = M.client_step(st, x, y, jnp.float32(0.0), ga, jnp.float32(0.0), 1)
+    o1 = M.client_step(st, x, y, jnp.float32(0.0), ga, jnp.float32(1.0), 1)
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()),
+        o0["state"]["pc"], o1["state"]["pc"])
+    assert max(jax.tree_util.tree_leaves(d)) > 0
+    # loss metric reports the NT-Xent part only, identical in both
+    assert float(o0["loss"]) == pytest.approx(float(o1["loss"]), rel=1e-6)
+
+
+def test_client_step_act_l1_shrinks_activations():
+    x, y = _batch(9)
+    ga = jnp.zeros(M.act_shape(1))
+
+    def run(beta, n=30):
+        st = M.init_client_state(S0, 1)
+        step = jax.jit(lambda s: M.client_step(
+            s, x, y, jnp.float32(beta), ga, jnp.float32(0.0), 1))
+        for _ in range(n):
+            out = step(st)
+            st = out["state"]
+        return float(jnp.mean(jnp.abs(out["acts"])))
+
+    assert run(1.0) < run(0.0)
+
+
+# ----------------------------------------------------------------------
+# AdaSplit server step / masks
+# ----------------------------------------------------------------------
+
+
+def test_server_step_trains_and_masks_sparsify():
+    x, y = _batch(11)
+    cs = M.init_client_state(S0, 1)
+    a = M.client_apply(cs["pc"], 1, x)
+    st = M.init_server_state(S0, 1, 10)
+    step = jax.jit(lambda s: M.server_step(s, a, y, jnp.float32(1e-2), 1))
+    losses, densities = [], []
+    for _ in range(30):
+        out = step(st)
+        st = out["state"]
+        losses.append(float(out["loss"]))
+        densities.append(float(out["mask_density"]))
+    assert losses[-1] < losses[0]
+    assert densities[0] == 1.0  # masks start fully dense
+
+
+def test_server_gate_freezes_masked_params():
+    """Parameters whose mask is below threshold must not move (eq. 7)."""
+    x, y = _batch(12)
+    cs = M.init_client_state(S0, 1)
+    a = M.client_apply(cs["pc"], 1, x)
+    st = M.init_server_state(S0, 1, 10)
+    # kill the mask of fc2.w entirely
+    st["mask"]["fc2"]["w"] = jnp.zeros_like(st["mask"]["fc2"]["w"])
+    out = M.server_step(st, a, y, jnp.float32(0.0), 1)
+    assert_allclose(np.asarray(out["state"]["ps"]["fc2"]["w"]),
+                    np.asarray(st["ps"]["fc2"]["w"]))
+    # unmasked params still move
+    assert float(jnp.abs(out["state"]["ps"]["fc2"]["b"]
+                         - st["ps"]["fc2"]["b"]).max()) > 0
+
+
+def test_server_eval_binarized_mask():
+    x, y = _batch(13)
+    cs = M.init_client_state(S0, 1)
+    a = M.client_apply(cs["pc"], 1, x)
+    st = M.init_server_state(S0, 1, 10)
+    valid = jnp.ones((M.BATCH,))
+    out = M.server_eval(st["ps"], st["mask"], a, y, valid, 1)
+    assert 0.0 <= float(out["correct"]) <= M.BATCH
+    # zero valid mask => zero counts
+    out0 = M.server_eval(st["ps"], st["mask"], a, y, jnp.zeros((M.BATCH,)), 1)
+    assert float(out0["correct"]) == 0.0
+    assert float(out0["loss_sum"]) == 0.0
+
+
+# ----------------------------------------------------------------------
+# Classic SL steps
+# ----------------------------------------------------------------------
+
+
+def test_sl_roundtrip_trains_both_halves():
+    """SL-basic loop: fwd -> server step -> client bwd reduces CE."""
+    x, y = _batch(14, nclass=4)
+    cst = M.init_sl_client_state(S0, 1)
+    sst = M.init_sl_server_state(S0, 1, 10)
+    losses = []
+    for _ in range(25):
+        a = M.client_apply(cst["pc"], 1, x)
+        so = M.sl_server_step(sst, a, y, 1)
+        sst = so["state"]
+        co = M.client_bwd(cst, x, so["grad_a"], 1)
+        cst = co["state"]
+        losses.append(float(so["loss"]))
+    assert losses[-1] < losses[0]
+    assert float(cst["t"]) == 25.0
+
+
+def test_sl_grad_a_matches_autodiff():
+    """grad_a from sl_server_step == d CE / d a by direct autodiff."""
+    x, y = _batch(15)
+    cst = M.init_sl_client_state(S0, 1)
+    sst = M.init_sl_server_state(S0, 1, 10)
+    a = M.client_apply(cst["pc"], 1, x)
+    so = M.sl_server_step(sst, a, y, 1)
+    ref = jax.grad(lambda aa: jnp.mean(M._ce(
+        M.server_apply(sst["ps"], 1, aa), y)))(a)
+    assert_allclose(np.asarray(so["grad_a"]), np.asarray(ref),
+                    rtol=1e-4, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# FL step
+# ----------------------------------------------------------------------
+
+
+def test_fl_step_trains():
+    x, y = _batch(16, nclass=3)
+    st = M.init_fl_state(S0, 10)
+    zeros = M.zeros_like_tree(st["p"])
+    step = jax.jit(lambda s: M.fl_step(s, s["p"], zeros, zeros,
+                                       jnp.float32(0.0), x, y))
+    losses = []
+    for _ in range(25):
+        out = step(st)
+        st = out["state"]
+        losses.append(float(out["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_fl_prox_term_pulls_towards_global():
+    """With a huge prox coefficient the update direction must oppose
+    (p - pg), i.e. parameters move towards the global model."""
+    x, y = _batch(17)
+    st = M.init_fl_state(S0, 10)
+    pg = jax.tree_util.tree_map(lambda p: p - 1.0, st["p"])  # global below p
+    zeros = M.zeros_like_tree(st["p"])
+    out = M.fl_step(st, pg, zeros, zeros, jnp.float32(1e4), x, y)
+    # with mu=1e4 the prox gradient dominates: p must decrease towards pg
+    w0 = st["p"]["fc1"]["w"]
+    w1 = out["state"]["p"]["fc1"]["w"]
+    assert float(jnp.mean(w1 - w0)) < 0
+
+
+def test_fl_control_variates_shift_gradient():
+    x, y = _batch(18)
+    st = M.init_fl_state(S0, 10)
+    zeros = M.zeros_like_tree(st["p"])
+    ones = jax.tree_util.tree_map(lambda p: jnp.ones_like(p), st["p"])
+    o0 = M.fl_step(st, st["p"], zeros, zeros, jnp.float32(0.0), x, y)
+    o1 = M.fl_step(st, st["p"], ones, zeros, jnp.float32(0.0), x, y)
+    d = float(jnp.abs(o0["state"]["p"]["fc2"]["w"]
+                      - o1["state"]["p"]["fc2"]["w"]).max())
+    assert d > 0
+
+
+def test_init_determinism_and_seed_sensitivity():
+    a = M.init_fl_state(jnp.float32(3.0), 10)
+    b = M.init_fl_state(jnp.float32(3.0), 10)
+    c = M.init_fl_state(jnp.float32(4.0), 10)
+    assert_allclose(np.asarray(a["p"]["conv1"]["w"]),
+                    np.asarray(b["p"]["conv1"]["w"]))
+    assert float(jnp.abs(a["p"]["conv1"]["w"]
+                         - c["p"]["conv1"]["w"]).max()) > 0

@@ -1,0 +1,404 @@
+//! Typed experiment configuration with TOML-subset loading and validation.
+//!
+//! Every table/figure bench and every example drives the system through
+//! this one struct, so sweeps are plain `cfg.with_*` chains. Config files
+//! use the flat `key = value` / `[section]` format parsed by
+//! `util::kvconf` (a strict subset of TOML).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::DatasetKind;
+use crate::metrics::Budgets;
+use crate::util::kvconf::KvConf;
+
+/// Which training protocol to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtocolKind {
+    AdaSplit,
+    SlBasic,
+    SplitFed,
+    FedAvg,
+    FedProx,
+    Scaffold,
+    FedNova,
+}
+
+impl ProtocolKind {
+    pub const ALL: [ProtocolKind; 7] = [
+        ProtocolKind::AdaSplit,
+        ProtocolKind::SlBasic,
+        ProtocolKind::SplitFed,
+        ProtocolKind::FedAvg,
+        ProtocolKind::FedProx,
+        ProtocolKind::Scaffold,
+        ProtocolKind::FedNova,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProtocolKind::AdaSplit => "AdaSplit",
+            ProtocolKind::SlBasic => "SL-basic",
+            ProtocolKind::SplitFed => "SplitFed",
+            ProtocolKind::FedAvg => "FedAvg",
+            ProtocolKind::FedProx => "FedProx",
+            ProtocolKind::Scaffold => "Scaffold",
+            ProtocolKind::FedNova => "FedNova",
+        }
+    }
+
+    /// kebab-case id used on the CLI and in config files.
+    pub fn id(&self) -> &'static str {
+        match self {
+            ProtocolKind::AdaSplit => "ada-split",
+            ProtocolKind::SlBasic => "sl-basic",
+            ProtocolKind::SplitFed => "split-fed",
+            ProtocolKind::FedAvg => "fed-avg",
+            ProtocolKind::FedProx => "fed-prox",
+            ProtocolKind::Scaffold => "scaffold",
+            ProtocolKind::FedNova => "fed-nova",
+        }
+    }
+}
+
+impl std::str::FromStr for ProtocolKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        for p in Self::ALL {
+            if s == p.id() || s.eq_ignore_ascii_case(p.name()) {
+                return Ok(p);
+            }
+        }
+        bail!(
+            "unknown protocol `{s}` (expected one of: {})",
+            Self::ALL.map(|p| p.id()).join(", ")
+        )
+    }
+}
+
+/// Full experiment configuration (paper §4.4 defaults).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub protocol: ProtocolKind,
+    pub dataset: DatasetKind,
+    /// number of clients N
+    pub clients: usize,
+    /// training rounds R
+    pub rounds: usize,
+    /// training samples per client (1 epoch/round over these)
+    pub samples_per_client: usize,
+    /// held-out test samples per client
+    pub test_per_client: usize,
+    /// geometric dataset-size imbalance across clients (1.0 = equal)
+    pub imbalance: f64,
+    /// experiment seed
+    pub seed: u64,
+    /// AdaSplit: local-phase fraction kappa (server joins after kappa*R)
+    pub kappa: f64,
+    /// AdaSplit: fraction of clients selected per iteration eta
+    pub eta: f64,
+    /// client model fraction mu in {0.2, 0.4, 0.6, 0.8}
+    pub mu: f64,
+    /// UCB discount gamma
+    pub gamma: f64,
+    /// mask L1 coefficient lambda (paper: 1e-5 CIFAR, 1e-3 NonIID)
+    pub lambda: f32,
+    /// activation L1 coefficient beta (Table 6; 0 = off)
+    pub beta: f32,
+    /// Table-5 ablation: also send server gradient to the client
+    pub server_grad_to_client: bool,
+    /// FedProx proximal coefficient
+    pub prox_mu: f32,
+    /// local epochs per round for FL protocols
+    pub local_epochs: usize,
+    /// evaluate every this many rounds (last round always evaluated)
+    pub eval_every: usize,
+    /// sparse-codec drop threshold: activations with |a| <= eps are not
+    /// transmitted when beta > 0 (Table 6)
+    pub sparse_eps: f32,
+    /// resource budgets for the C3-Score
+    pub budgets: Budgets,
+    /// record per-iteration traces
+    pub trace: bool,
+    /// artifacts directory
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            protocol: ProtocolKind::AdaSplit,
+            dataset: DatasetKind::MixedCifar,
+            clients: 5,
+            rounds: 20,
+            samples_per_client: 512,
+            test_per_client: 256,
+            imbalance: 1.0,
+            seed: 0,
+            kappa: 0.6,
+            eta: 0.6,
+            mu: 0.2,
+            gamma: 0.87,
+            lambda: 1e-5,
+            beta: 0.0,
+            server_grad_to_client: false,
+            prox_mu: 0.01,
+            local_epochs: 1,
+            eval_every: 1,
+            sparse_eps: 1e-4,
+            budgets: Budgets::paper_mixed_cifar(),
+            trace: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// A configuration small enough for CI / integration tests.
+    pub fn quick_test() -> Self {
+        Self {
+            rounds: 3,
+            samples_per_client: 64,
+            test_per_client: 32,
+            ..Self::default()
+        }
+    }
+
+    /// Paper-default config for a dataset (budgets and lambda follow §4.4).
+    pub fn paper_default(dataset: DatasetKind) -> Self {
+        let (budgets, lambda) = match dataset {
+            DatasetKind::MixedCifar => (Budgets::paper_mixed_cifar(), 1e-5),
+            DatasetKind::MixedNonIid => (Budgets::paper_mixed_noniid(), 1e-3),
+        };
+        Self { dataset, budgets, lambda, ..Self::default() }
+    }
+
+    /// Parse from the TOML-subset text format. Unknown keys are rejected
+    /// (typo safety); absent keys keep their defaults.
+    pub fn from_kv_text(text: &str) -> Result<Self> {
+        let kv = KvConf::parse(text)?;
+        const KNOWN: &[&str] = &[
+            "protocol", "dataset", "clients", "rounds", "samples_per_client",
+            "test_per_client", "imbalance", "seed", "kappa", "eta", "mu",
+            "gamma", "lambda", "beta", "server_grad_to_client", "prox_mu",
+            "local_epochs", "eval_every", "sparse_eps", "trace",
+            "artifacts_dir", "budgets.bandwidth_gb", "budgets.client_tflops",
+            "budgets.temp",
+        ];
+        for k in kv.keys() {
+            ensure!(KNOWN.contains(&k.as_str()), "unknown config key `{k}`");
+        }
+        let d = Self::default();
+        let dataset: DatasetKind = kv.get_str("dataset", "mixed-cifar").parse()?;
+        let paper = Self::paper_default(dataset);
+        let cfg = Self {
+            protocol: kv.get_str("protocol", "ada-split").parse()?,
+            dataset,
+            clients: kv.get_usize("clients", d.clients)?,
+            rounds: kv.get_usize("rounds", d.rounds)?,
+            samples_per_client: kv.get_usize("samples_per_client", d.samples_per_client)?,
+            test_per_client: kv.get_usize("test_per_client", d.test_per_client)?,
+            imbalance: kv.get_f64("imbalance", d.imbalance)?,
+            seed: kv.get_u64("seed", d.seed)?,
+            kappa: kv.get_f64("kappa", d.kappa)?,
+            eta: kv.get_f64("eta", d.eta)?,
+            mu: kv.get_f64("mu", d.mu)?,
+            gamma: kv.get_f64("gamma", d.gamma)?,
+            lambda: kv.get_f32("lambda", paper.lambda)?,
+            beta: kv.get_f32("beta", d.beta)?,
+            server_grad_to_client: kv.get_bool("server_grad_to_client", false)?,
+            prox_mu: kv.get_f32("prox_mu", d.prox_mu)?,
+            local_epochs: kv.get_usize("local_epochs", d.local_epochs)?,
+            eval_every: kv.get_usize("eval_every", d.eval_every)?,
+            sparse_eps: kv.get_f32("sparse_eps", d.sparse_eps)?,
+            budgets: Budgets {
+                bandwidth_gb: kv.get_f64("budgets.bandwidth_gb", paper.budgets.bandwidth_gb)?,
+                client_tflops: kv
+                    .get_f64("budgets.client_tflops", paper.budgets.client_tflops)?,
+                temp: kv.get_f64("budgets.temp", paper.budgets.temp)?,
+            },
+            trace: kv.get_bool("trace", false)?,
+            artifacts_dir: kv.get_str("artifacts_dir", &d.artifacts_dir),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load_toml(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_kv_text(&text)
+    }
+
+    /// Number of client-side blocks k for the configured mu.
+    pub fn split_k(&self) -> usize {
+        // mu in {0.2, 0.4, 0.6, 0.8} -> k in {1, 2, 3, 4}
+        ((self.mu * 5.0).round() as usize).clamp(1, 4)
+    }
+
+    /// Artifact config tag, e.g. `c10_mu1`.
+    pub fn config_tag(&self) -> String {
+        format!("{}_mu{}", self.dataset.tag(), self.split_k())
+    }
+
+    /// Rounds spent in AdaSplit's local phase.
+    pub fn local_rounds(&self) -> usize {
+        ((self.kappa * self.rounds as f64).round() as usize).min(self.rounds)
+    }
+
+    /// Clients selected per global-phase iteration.
+    pub fn selected_per_iter(&self) -> usize {
+        ((self.eta * self.clients as f64).round() as usize).clamp(1, self.clients)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.clients > 0, "clients must be > 0");
+        ensure!(self.rounds > 0, "rounds must be > 0");
+        ensure!((0.0..=1.0).contains(&self.kappa), "kappa in [0,1]");
+        ensure!(self.eta > 0.0 && self.eta <= 1.0, "eta in (0,1]");
+        ensure!((0.0..=1.0).contains(&self.gamma), "gamma in [0,1]");
+        ensure!(
+            (0.05..=0.95).contains(&self.mu),
+            "mu must map to a lowered split (0.2/0.4/0.6/0.8)"
+        );
+        ensure!(self.imbalance > 0.0, "imbalance must be positive");
+        ensure!(
+            self.samples_per_client >= 32,
+            "need at least one batch of training data per client"
+        );
+        // SL/FL variants only lowered at mu=0.2 (k=1); AdaSplit has all
+        if self.protocol != ProtocolKind::AdaSplit {
+            ensure!(
+                self.split_k() == 1,
+                "{} artifacts are lowered for mu=0.2 only",
+                self.protocol.name()
+            );
+        }
+        Ok(())
+    }
+
+    // -- sweep helpers -----------------------------------------------------
+
+    pub fn with_protocol(mut self, p: ProtocolKind) -> Self {
+        self.protocol = p;
+        self
+    }
+
+    pub fn with_kappa(mut self, kappa: f64) -> Self {
+        self.kappa = kappa;
+        self
+    }
+
+    pub fn with_eta(mut self, eta: f64) -> Self {
+        self.eta = eta;
+        self
+    }
+
+    pub fn with_mu(mut self, mu: f64) -> Self {
+        self.mu = mu;
+        self
+    }
+
+    pub fn with_beta(mut self, beta: f32) -> Self {
+        self.beta = beta;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_scale(mut self, rounds: usize, samples: usize, test: usize) -> Self {
+        self.rounds = rounds;
+        self.samples_per_client = samples;
+        self.test_per_client = test;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_defaults() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.clients, 5);
+        assert_eq!(c.rounds, 20);
+        assert!((c.kappa - 0.6).abs() < 1e-9);
+        assert!((c.eta - 0.6).abs() < 1e-9);
+        assert!((c.gamma - 0.87).abs() < 1e-9);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn split_k_mapping() {
+        for (mu, k) in [(0.2, 1), (0.4, 2), (0.6, 3), (0.8, 4)] {
+            assert_eq!(ExperimentConfig { mu, ..Default::default() }.split_k(), k);
+        }
+    }
+
+    #[test]
+    fn config_tag_tracks_dataset() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.config_tag(), "c10_mu1");
+        c.dataset = DatasetKind::MixedNonIid;
+        assert_eq!(c.config_tag(), "c50_mu1");
+    }
+
+    #[test]
+    fn local_rounds_and_selection() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.local_rounds(), 12); // 0.6 * 20
+        assert_eq!(c.selected_per_iter(), 3); // 0.6 * 5
+    }
+
+    #[test]
+    fn validate_rejects_nonsense() {
+        let mut c = ExperimentConfig::default();
+        c.kappa = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.protocol = ProtocolKind::FedAvg;
+        c.mu = 0.4;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.samples_per_client = 8;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn kv_text_parsing() {
+        let c = ExperimentConfig::from_kv_text(
+            "protocol = \"fed-avg\"\nrounds = 7\ndataset = \"mixed-noniid\"\n\
+             [budgets]\ntemp = 4.0\n",
+        )
+        .unwrap();
+        assert_eq!(c.protocol, ProtocolKind::FedAvg);
+        assert_eq!(c.rounds, 7);
+        assert_eq!(c.clients, 5);
+        assert_eq!(c.dataset, DatasetKind::MixedNonIid);
+        // dataset-specific defaults applied
+        assert!((c.budgets.bandwidth_gb - 84.64).abs() < 1e-9);
+        assert!((c.budgets.temp - 4.0).abs() < 1e-9);
+        assert!((c.lambda - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_text_rejects_unknown_keys_and_bad_values() {
+        assert!(ExperimentConfig::from_kv_text("roundz = 3\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("protocol = \"sgd\"\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("kappa = 2.0\n").is_err());
+    }
+
+    #[test]
+    fn protocol_roundtrip_ids() {
+        for p in ProtocolKind::ALL {
+            let back: ProtocolKind = p.id().parse().unwrap();
+            assert_eq!(back, p);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Batch iteration over a client's materialized data.
+//!
+//! Training artifacts have a static batch dimension (baked into the HLO),
+//! so the train iterator drops the ragged tail; the eval iterator instead
+//! pads the final batch and carries a validity mask, which the eval
+//! artifacts multiply into their correct/loss sums.
+
+use crate::data::rng::Rng;
+use crate::data::synthetic::PIXELS;
+use crate::runtime::Tensor;
+
+/// One marshalled batch, ready to feed an artifact.
+pub struct Batch {
+    pub x: Tensor,
+    pub y: Tensor,
+    /// 1.0 for real samples, 0.0 for padding (eval only; all-ones in train)
+    pub valid: Tensor,
+    pub n_valid: usize,
+}
+
+/// Epoch iterator over (x, y) with reshuffling per epoch.
+pub struct BatchIter<'a> {
+    x: &'a [f32],
+    y: &'a [f32],
+    batch: usize,
+    img: usize,
+    order: Vec<usize>,
+    pos: usize,
+    pad_tail: bool,
+}
+
+impl<'a> BatchIter<'a> {
+    /// Training iterator: shuffled, tail dropped.
+    pub fn train(x: &'a [f32], y: &'a [f32], batch: usize, rng: &mut Rng) -> Self {
+        let mut order: Vec<usize> = (0..y.len()).collect();
+        rng.shuffle(&mut order);
+        Self { x, y, batch, img: 32, order, pos: 0, pad_tail: false }
+    }
+
+    /// Eval iterator: in order, tail padded with a validity mask.
+    pub fn eval(x: &'a [f32], y: &'a [f32], batch: usize) -> Self {
+        Self {
+            x,
+            y,
+            batch,
+            img: 32,
+            order: (0..y.len()).collect(),
+            pos: 0,
+            pad_tail: true,
+        }
+    }
+
+    /// Number of batches this iterator will yield.
+    pub fn n_batches(&self) -> usize {
+        if self.pad_tail {
+            self.order.len().div_ceil(self.batch)
+        } else {
+            self.order.len() / self.batch
+        }
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        let remaining = self.order.len().saturating_sub(self.pos);
+        let take = remaining.min(self.batch);
+        if take == 0 || (!self.pad_tail && take < self.batch) {
+            return None;
+        }
+        let b = self.batch;
+        let mut xb = vec![0.0f32; b * PIXELS];
+        let mut yb = vec![0.0f32; b];
+        let mut vb = vec![0.0f32; b];
+        for i in 0..take {
+            let src = self.order[self.pos + i];
+            xb[i * PIXELS..(i + 1) * PIXELS]
+                .copy_from_slice(&self.x[src * PIXELS..(src + 1) * PIXELS]);
+            yb[i] = self.y[src];
+            vb[i] = 1.0;
+        }
+        self.pos += take;
+        Some(Batch {
+            x: Tensor::new(vec![b, self.img, self.img, 3], xb).expect("batch x"),
+            y: Tensor::new(vec![b], yb).expect("batch y"),
+            valid: Tensor::new(vec![b], vb).expect("batch valid"),
+            n_valid: take,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(n: usize) -> (Vec<f32>, Vec<f32>) {
+        let x: Vec<f32> = (0..n * PIXELS).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn train_drops_tail_and_shuffles() {
+        let (x, y) = data(70);
+        let mut rng = Rng::new(1);
+        let it = BatchIter::train(&x, &y, 32, &mut rng);
+        assert_eq!(it.n_batches(), 2);
+        let batches: Vec<Batch> = it.collect();
+        assert_eq!(batches.len(), 2);
+        // shuffled: the first batch should not be exactly 0..32
+        let first: Vec<f32> = batches[0].y.data().to_vec();
+        assert_ne!(first, (0..32).map(|i| i as f32).collect::<Vec<_>>());
+        assert!(batches.iter().all(|b| b.n_valid == 32));
+    }
+
+    #[test]
+    fn eval_pads_tail_with_mask() {
+        let (x, y) = data(40);
+        let it = BatchIter::eval(&x, &y, 32);
+        assert_eq!(it.n_batches(), 2);
+        let batches: Vec<Batch> = it.collect();
+        assert_eq!(batches[1].n_valid, 8);
+        let v = batches[1].valid.data();
+        assert_eq!(v.iter().filter(|&&m| m == 1.0).count(), 8);
+        assert_eq!(v[8..].iter().filter(|&&m| m == 0.0).count(), 24);
+        // order preserved in eval
+        assert_eq!(batches[0].y.data()[0], 0.0);
+        assert_eq!(batches[1].y.data()[7], 39.0);
+    }
+
+    #[test]
+    fn epoch_covers_every_sample_once() {
+        let (x, y) = data(64);
+        let mut rng = Rng::new(2);
+        let mut seen: Vec<f32> = BatchIter::train(&x, &y, 32, &mut rng)
+            .flat_map(|b| b.y.data().to_vec())
+            .collect();
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(seen, (0..64).map(|i| i as f32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,19 @@
+//! Data substrate: deterministic RNG, procedural image families, the
+//! paper's two partition protocols (Mixed-CIFAR, Mixed-NonIID), and batch
+//! iteration.
+//!
+//! The paper evaluates on MNIST/FMNIST/Not-MNIST/CIFAR-10/CIFAR-100. Those
+//! are not available here, so `synthetic` builds five procedural 32x32x3
+//! image families with controlled class structure and *variable pairwise
+//! heterogeneity* — the property the experiments actually stress (see
+//! DESIGN.md §1 for the substitution argument).
+
+pub mod batcher;
+pub mod partition;
+pub mod rng;
+pub mod synthetic;
+
+pub use batcher::{BatchIter, Batch};
+pub use partition::{build_partition, ClientData, DatasetKind};
+pub use rng::Rng;
+pub use synthetic::{Family, SyntheticDataset};

@@ -1,0 +1,233 @@
+//! Client partition protocols from the paper (§4.1):
+//!
+//! * **Mixed-CIFAR** — one 10-class family; the classes are divided into 5
+//!   subsets of 2 distinct classes and every client gets one subset
+//!   (low, consistent inter-client heterogeneity). Global head: 10.
+//! * **Mixed-NonIID** — five families, one per client; labels live in a
+//!   disjoint global space of 5 x 10 = 50 classes (high, *variable*
+//!   pairwise heterogeneity: the mnist-like/fmnist-like pair is close,
+//!   cifar100-like is far from everything).
+//!
+//! Supports client dataset-size imbalance (`imbalance` skews sizes
+//! geometrically) so FedNova's normalized averaging has real work to do.
+
+use anyhow::{ensure, Result};
+
+use crate::data::rng::Rng;
+use crate::data::synthetic::{Family, SyntheticDataset, PIXELS};
+
+pub const CLASSES_PER_FAMILY: usize = 10;
+
+/// Which partition protocol to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    MixedCifar,
+    MixedNonIid,
+}
+
+impl std::str::FromStr for DatasetKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "mixed-cifar" => Ok(DatasetKind::MixedCifar),
+            "mixed-noniid" => Ok(DatasetKind::MixedNonIid),
+            other => anyhow::bail!("unknown dataset `{other}` (mixed-cifar | mixed-noniid)"),
+        }
+    }
+}
+
+impl DatasetKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::MixedCifar => "mixed-cifar",
+            DatasetKind::MixedNonIid => "mixed-noniid",
+        }
+    }
+
+    /// Size of the global label space (classifier head).
+    pub fn num_classes(&self) -> usize {
+        match self {
+            DatasetKind::MixedCifar => CLASSES_PER_FAMILY,
+            DatasetKind::MixedNonIid => CLASSES_PER_FAMILY * Family::ALL.len(),
+        }
+    }
+
+    /// Artifact tag prefix for this label-space size (`c10` / `c50`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            DatasetKind::MixedCifar => "c10",
+            DatasetKind::MixedNonIid => "c50",
+        }
+    }
+}
+
+/// Materialized train/test split for one client.
+pub struct ClientData {
+    pub id: usize,
+    pub family: Family,
+    /// global-space class labels this client can emit
+    pub classes: Vec<usize>,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<f32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<f32>,
+}
+
+impl ClientData {
+    pub fn train_len(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.test_y.len()
+    }
+}
+
+/// Per-client train-set sizes under a geometric imbalance factor.
+/// `imbalance = 1.0` gives equal sizes; `2.0` makes each client twice the
+/// previous one's size (normalized to keep the total close to n*base).
+pub fn imbalanced_sizes(n_clients: usize, base: usize, imbalance: f64) -> Vec<usize> {
+    if (imbalance - 1.0).abs() < 1e-9 {
+        return vec![base; n_clients];
+    }
+    let weights: Vec<f64> = (0..n_clients).map(|i| imbalance.powi(i as i32)).collect();
+    let total: f64 = weights.iter().sum();
+    weights
+        .iter()
+        .map(|w| ((w / total) * (base * n_clients) as f64).round().max(32.0) as usize)
+        .collect()
+}
+
+/// Build the full partition for an experiment.
+pub fn build_partition(
+    kind: DatasetKind,
+    n_clients: usize,
+    train_per_client: usize,
+    test_per_client: usize,
+    imbalance: f64,
+    seed: u64,
+) -> Result<Vec<ClientData>> {
+    ensure!(n_clients > 0, "need at least one client");
+    let sizes = imbalanced_sizes(n_clients, train_per_client, imbalance);
+    let mut clients = Vec::with_capacity(n_clients);
+
+    match kind {
+        DatasetKind::MixedCifar => {
+            // one family, 5 fixed 2-class shards assigned round-robin
+            let ds = SyntheticDataset::new(Family::Cifar10Like, CLASSES_PER_FAMILY, seed);
+            for id in 0..n_clients {
+                let shard = id % (CLASSES_PER_FAMILY / 2);
+                let classes = vec![2 * shard, 2 * shard + 1];
+                clients.push(materialize(
+                    &ds, id, Family::Cifar10Like, &classes, 0, sizes[id],
+                    test_per_client, seed,
+                ));
+            }
+        }
+        DatasetKind::MixedNonIid => {
+            for id in 0..n_clients {
+                let family = Family::ALL[id % Family::ALL.len()];
+                let ds = SyntheticDataset::new(family, CLASSES_PER_FAMILY, seed);
+                let classes: Vec<usize> = (0..CLASSES_PER_FAMILY).collect();
+                let offset = (id % Family::ALL.len()) * CLASSES_PER_FAMILY;
+                clients.push(materialize(
+                    &ds, id, family, &classes, offset, sizes[id],
+                    test_per_client, seed,
+                ));
+            }
+        }
+    }
+    Ok(clients)
+}
+
+fn materialize(
+    ds: &SyntheticDataset,
+    id: usize,
+    family: Family,
+    classes: &[usize],
+    label_offset: usize,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> ClientData {
+    // distinct index ranges per client and per split => no duplicated samples
+    let base = (id as u64) << 40;
+    let (train_x, train_y) = ds.generate(classes, n_train, label_offset, base);
+    let (test_x, test_y) = ds.generate(classes, n_test, label_offset, base + (1 << 30));
+    // shuffle train set deterministically so round-robin class order does
+    // not leak into batch composition
+    let mut rng = Rng::new(seed).derive("partition-shuffle", id as u64);
+    let perm = rng.permutation(n_train);
+    let mut sx = vec![0.0f32; train_x.len()];
+    let mut sy = vec![0.0f32; train_y.len()];
+    for (dst, &src) in perm.iter().enumerate() {
+        sx[dst * PIXELS..(dst + 1) * PIXELS]
+            .copy_from_slice(&train_x[src * PIXELS..(src + 1) * PIXELS]);
+        sy[dst] = train_y[src];
+    }
+    ClientData {
+        id,
+        family,
+        classes: classes.iter().map(|c| c + label_offset).collect(),
+        train_x: sx,
+        train_y: sy,
+        test_x,
+        test_y,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_cifar_shards_are_disjoint_pairs() {
+        let parts = build_partition(DatasetKind::MixedCifar, 5, 64, 32, 1.0, 3).unwrap();
+        let mut all: Vec<usize> = parts.iter().flat_map(|c| c.classes.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        for c in &parts {
+            assert_eq!(c.classes.len(), 2);
+            for &y in &c.train_y {
+                assert!(c.classes.contains(&(y as usize)));
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_noniid_label_spaces_disjoint() {
+        let parts = build_partition(DatasetKind::MixedNonIid, 5, 64, 32, 1.0, 3).unwrap();
+        for (i, c) in parts.iter().enumerate() {
+            assert_eq!(c.family, Family::ALL[i]);
+            for &y in &c.train_y {
+                let y = y as usize;
+                assert!(y >= i * 10 && y < (i + 1) * 10);
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_and_determinism() {
+        let a = build_partition(DatasetKind::MixedCifar, 3, 100, 40, 1.0, 9).unwrap();
+        let b = build_partition(DatasetKind::MixedCifar, 3, 100, 40, 1.0, 9).unwrap();
+        assert_eq!(a[0].train_len(), 100);
+        assert_eq!(a[0].test_len(), 40);
+        assert_eq!(a[1].train_x, b[1].train_x);
+        assert_eq!(a[2].train_y, b[2].train_y);
+    }
+
+    #[test]
+    fn imbalance_skews_sizes() {
+        let sizes = imbalanced_sizes(4, 100, 2.0);
+        assert!(sizes[3] > sizes[0] * 4);
+        assert_eq!(imbalanced_sizes(4, 100, 1.0), vec![100; 4]);
+    }
+
+    #[test]
+    fn train_test_disjoint() {
+        let parts = build_partition(DatasetKind::MixedCifar, 1, 16, 16, 1.0, 5).unwrap();
+        // same class list, but distinct sample index ranges => images differ
+        assert_ne!(&parts[0].train_x[..PIXELS], &parts[0].test_x[..PIXELS]);
+    }
+}

@@ -1,0 +1,310 @@
+//! Procedural image families standing in for the paper's five benchmark
+//! datasets (MNIST, FMNIST, Not-MNIST, CIFAR-10, CIFAR-100).
+//!
+//! Each family renders 32x32x3 images as a sum of low-frequency Gaussian
+//! blobs whose parameters are drawn per *class* (the prototype) plus
+//! per-*sample* jitter (translation, amplitude, additive noise). Family
+//! knobs control:
+//!
+//! * `grayscale` — MNIST/FMNIST/Not-MNIST replicate one channel;
+//! * `noise` / `jitter` — difficulty (CIFAR100-like is hardest);
+//! * `proto_scale`, `n_blobs` — how separated class prototypes are;
+//! * `base` — a family-wide background offset so *families* are mutually
+//!   far apart while MNIST-like/FMNIST-like stay relatively close,
+//!   reproducing the paper's "variable pairwise heterogeneity".
+//!
+//! Rendering is deterministic in (family, class, sample-index, seed).
+
+use crate::data::rng::Rng;
+
+pub const IMG: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const PIXELS: usize = IMG * IMG * CHANNELS;
+
+/// The five dataset families of the Mixed-NonIID protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    MnistLike,
+    FmnistLike,
+    NotMnistLike,
+    Cifar10Like,
+    Cifar100Like,
+}
+
+impl Family {
+    pub const ALL: [Family; 5] = [
+        Family::MnistLike,
+        Family::FmnistLike,
+        Family::NotMnistLike,
+        Family::Cifar10Like,
+        Family::Cifar100Like,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::MnistLike => "mnist-like",
+            Family::FmnistLike => "fmnist-like",
+            Family::NotMnistLike => "notmnist-like",
+            Family::Cifar10Like => "cifar10-like",
+            Family::Cifar100Like => "cifar100-like",
+        }
+    }
+
+    fn knobs(&self) -> FamilyKnobs {
+        match self {
+            // MNIST-like and FMNIST-like share a base offset (low pairwise
+            // heterogeneity between them), differ in texture. Noise levels
+            // are calibrated so a centrally-trained copy of the backbone
+            // lands in the high-80s/low-90s (headroom for protocol
+            // comparisons, like the paper's CIFAR numbers) rather than
+            // saturating at 100%.
+            Family::MnistLike => FamilyKnobs {
+                grayscale: true, n_blobs: 4, proto_scale: 1.2,
+                noise: 0.45, jitter: 3, base: [0.10, 0.10, 0.10],
+            },
+            Family::FmnistLike => FamilyKnobs {
+                grayscale: true, n_blobs: 7, proto_scale: 1.0,
+                noise: 0.60, jitter: 3, base: [0.12, 0.12, 0.12],
+            },
+            Family::NotMnistLike => FamilyKnobs {
+                grayscale: true, n_blobs: 3, proto_scale: 1.5,
+                noise: 0.55, jitter: 4, base: [-0.25, -0.25, -0.25],
+            },
+            Family::Cifar10Like => FamilyKnobs {
+                grayscale: false, n_blobs: 6, proto_scale: 0.8,
+                noise: 0.80, jitter: 4, base: [0.30, -0.10, -0.30],
+            },
+            // hardest: weak prototypes, strong noise, far from the rest
+            Family::Cifar100Like => FamilyKnobs {
+                grayscale: false, n_blobs: 8, proto_scale: 0.55,
+                noise: 1.0, jitter: 5, base: [-0.30, 0.25, 0.10],
+            },
+        }
+    }
+
+    fn seed_tag(&self) -> u64 {
+        match self {
+            Family::MnistLike => 1,
+            Family::FmnistLike => 2,
+            Family::NotMnistLike => 3,
+            Family::Cifar10Like => 4,
+            Family::Cifar100Like => 5,
+        }
+    }
+}
+
+struct FamilyKnobs {
+    grayscale: bool,
+    n_blobs: usize,
+    proto_scale: f32,
+    noise: f32,
+    jitter: i32,
+    base: [f32; 3],
+}
+
+/// One Gaussian blob of a class prototype.
+#[derive(Clone, Debug)]
+struct Blob {
+    cx: f32,
+    cy: f32,
+    sigma: f32,
+    amp: [f32; 3],
+}
+
+/// A renderable class prototype.
+#[derive(Clone, Debug)]
+struct Prototype {
+    blobs: Vec<Blob>,
+    base: [f32; 3],
+}
+
+impl Prototype {
+    /// Render with per-sample translation into `out` (NHWC layout).
+    fn render(&self, dx: f32, dy: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), PIXELS);
+        for (i, v) in out.iter_mut().enumerate() {
+            *v = self.base[i % CHANNELS];
+        }
+        for blob in &self.blobs {
+            let cx = blob.cx + dx;
+            let cy = blob.cy + dy;
+            let inv2s2 = 1.0 / (2.0 * blob.sigma * blob.sigma);
+            // bounding box: beyond 3 sigma the blob is negligible
+            let r = (3.0 * blob.sigma).ceil() as i64;
+            let x0 = ((cx as i64) - r).max(0) as usize;
+            let x1 = (((cx as i64) + r).min(IMG as i64 - 1)) as usize;
+            let y0 = ((cy as i64) - r).max(0) as usize;
+            let y1 = (((cy as i64) + r).min(IMG as i64 - 1)) as usize;
+            for y in y0..=y1 {
+                let fy = y as f32 - cy;
+                for x in x0..=x1 {
+                    let fx = x as f32 - cx;
+                    let g = (-(fx * fx + fy * fy) * inv2s2).exp();
+                    let px = (y * IMG + x) * CHANNELS;
+                    for c in 0..CHANNELS {
+                        out[px + c] += blob.amp[c] * g;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A generated dataset: one family, `n_classes` class prototypes, plus
+/// sampling machinery. Samples are materialized lazily (`sample`) or in
+/// bulk (`generate`).
+pub struct SyntheticDataset {
+    pub family: Family,
+    pub n_classes: usize,
+    protos: Vec<Prototype>,
+    knobs: FamilyKnobs,
+    seed: u64,
+}
+
+impl SyntheticDataset {
+    pub fn new(family: Family, n_classes: usize, seed: u64) -> Self {
+        let knobs = family.knobs();
+        let root = Rng::new(seed ^ (family.seed_tag() << 32));
+        let mut protos = Vec::with_capacity(n_classes);
+        for class in 0..n_classes {
+            let mut r = root.derive("proto", class as u64);
+            let mut blobs = Vec::with_capacity(knobs.n_blobs);
+            for _ in 0..knobs.n_blobs {
+                let amp0 = r.normal_f32(0.0, knobs.proto_scale);
+                let amp = if knobs.grayscale {
+                    [amp0, amp0, amp0]
+                } else {
+                    [
+                        amp0,
+                        r.normal_f32(0.0, knobs.proto_scale),
+                        r.normal_f32(0.0, knobs.proto_scale),
+                    ]
+                };
+                blobs.push(Blob {
+                    cx: r.uniform(6.0, IMG as f64 - 6.0) as f32,
+                    cy: r.uniform(6.0, IMG as f64 - 6.0) as f32,
+                    sigma: r.uniform(2.0, 6.0) as f32,
+                    amp,
+                });
+            }
+            protos.push(Prototype { blobs, base: knobs.base });
+        }
+        Self { family, n_classes, protos, knobs, seed }
+    }
+
+    /// Render sample `idx` of class `class` into `out` (NHWC f32).
+    pub fn sample_into(&self, class: usize, idx: u64, out: &mut [f32]) {
+        let mut r = Rng::new(self.seed ^ (self.family.seed_tag() << 32))
+            .derive("sample", (class as u64) << 32 | idx);
+        let j = self.knobs.jitter as f64;
+        let dx = r.uniform(-j, j) as f32;
+        let dy = r.uniform(-j, j) as f32;
+        self.protos[class].render(dx, dy, out);
+        let gain = 1.0 + r.normal_f32(0.0, 0.1);
+        for v in out.iter_mut() {
+            *v = (*v * gain + r.normal_f32(0.0, self.knobs.noise)).clamp(-3.0, 3.0);
+        }
+    }
+
+    pub fn sample(&self, class: usize, idx: u64) -> Vec<f32> {
+        let mut out = vec![0.0; PIXELS];
+        self.sample_into(class, idx, &mut out);
+        out
+    }
+
+    /// Generate `n` samples for the given classes (round-robin), returning
+    /// (images concatenated NHWC, labels). `label_offset` shifts labels
+    /// into a global label space (Mixed-NonIID).
+    pub fn generate(
+        &self,
+        classes: &[usize],
+        n: usize,
+        label_offset: usize,
+        index_offset: u64,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut xs = vec![0.0f32; n * PIXELS];
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = classes[i % classes.len()];
+            self.sample_into(class, index_offset + i as u64, &mut xs[i * PIXELS..(i + 1) * PIXELS]);
+            ys.push((label_offset + class) as f32);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_rendering() {
+        let d = SyntheticDataset::new(Family::MnistLike, 10, 7);
+        assert_eq!(d.sample(3, 11), d.sample(3, 11));
+    }
+
+    #[test]
+    fn samples_differ_across_index_and_class() {
+        let d = SyntheticDataset::new(Family::Cifar10Like, 10, 7);
+        assert_ne!(d.sample(0, 0), d.sample(0, 1));
+        assert_ne!(d.sample(0, 0), d.sample(1, 0));
+    }
+
+    #[test]
+    fn grayscale_families_replicate_channels_in_prototype() {
+        let d = SyntheticDataset::new(Family::MnistLike, 4, 3);
+        // render prototype directly (no noise): channels identical
+        let mut out = vec![0.0; PIXELS];
+        d.protos[0].render(0.0, 0.0, &mut out);
+        for px in out.chunks(3) {
+            assert!((px[0] - px[1]).abs() < 1e-6 && (px[1] - px[2]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn class_structure_is_learnable() {
+        // nearest-prototype classification on clean renders must beat
+        // chance by a wide margin => classes are separable
+        let d = SyntheticDataset::new(Family::Cifar10Like, 5, 9);
+        let mut protos = Vec::new();
+        for c in 0..5 {
+            let mut out = vec![0.0; PIXELS];
+            d.protos[c].render(0.0, 0.0, &mut out);
+            protos.push(out);
+        }
+        let mut correct = 0;
+        let total = 100;
+        for i in 0..total {
+            let c = i % 5;
+            let s = d.sample(c, i as u64);
+            let best = (0..5)
+                .min_by(|&a, &b| {
+                    let da: f32 = s.iter().zip(&protos[a]).map(|(x, p)| (x - p).powi(2)).sum();
+                    let db: f32 = s.iter().zip(&protos[b]).map(|(x, p)| (x - p).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == c {
+                correct += 1;
+            }
+        }
+        assert!(correct > 60, "nearest-proto acc {correct}/100");
+    }
+
+    #[test]
+    fn family_bases_separate_families() {
+        let a = SyntheticDataset::new(Family::MnistLike, 2, 1).sample(0, 0);
+        let b = SyntheticDataset::new(Family::Cifar100Like, 2, 1).sample(0, 0);
+        let mean_a: f32 = a.iter().sum::<f32>() / a.len() as f32;
+        let mean_b: f32 = b.iter().sum::<f32>() / b.len() as f32;
+        assert!((mean_a - mean_b).abs() > 0.05);
+    }
+
+    #[test]
+    fn generate_respects_label_offset() {
+        let d = SyntheticDataset::new(Family::FmnistLike, 10, 2);
+        let (xs, ys) = d.generate(&[0, 1], 6, 20, 0);
+        assert_eq!(xs.len(), 6 * PIXELS);
+        assert_eq!(ys, vec![20.0, 21.0, 20.0, 21.0, 20.0, 21.0]);
+    }
+}

@@ -1,0 +1,43 @@
+//! # AdaSplit — adaptive trade-offs for resource-constrained distributed deep learning
+//!
+//! A production-grade reproduction of *AdaSplit* (Chopra et al., 2021) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: protocol
+//!   state machines for AdaSplit and six baselines (SL-basic, SplitFed,
+//!   FedAvg, FedProx, Scaffold, FedNova), the UCB orchestrator, synthetic
+//!   non-IID data substrates, analytic FLOP/bandwidth accounting, and the
+//!   C3-Score metric.
+//! * **L2** — JAX compute graphs (`python/compile/model.py`), AOT-lowered to
+//!   HLO text once at build time (`make artifacts`).
+//! * **L1** — Pallas kernels (NT-Xent loss, masked Adam) called from L2.
+//!
+//! Python never runs on the training path: [`runtime`] loads the HLO text
+//! artifacts via the PJRT C API (`xla` crate) and executes them directly.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use adasplit::config::ExperimentConfig;
+//! use adasplit::protocols::run_protocol;
+//! use adasplit::runtime::Runtime;
+//!
+//! let rt = Runtime::load("artifacts").unwrap();
+//! let cfg = ExperimentConfig::quick_test();
+//! let result = run_protocol(&rt, &cfg).unwrap();
+//! println!("accuracy={:.2}% c3={:.3}", result.accuracy, result.c3_score);
+//! ```
+
+pub mod config;
+pub mod data;
+pub mod util;
+pub mod metrics;
+pub mod model;
+pub mod orchestrator;
+pub mod protocols;
+pub mod report;
+pub mod runtime;
+
+pub use config::ExperimentConfig;
+pub use protocols::{run_protocol, RunResult};
+pub use runtime::Runtime;

@@ -1,0 +1,249 @@
+//! AdaSplit launcher: run any protocol / dataset / sweep from the CLI or a
+//! TOML-subset config file.
+//!
+//! ```text
+//! adasplit run --protocol ada-split --dataset mixed-cifar --rounds 20
+//! adasplit run --config configs/table1_noniid.toml
+//! adasplit compare --dataset mixed-noniid --rounds 10
+//! adasplit info
+//! ```
+//!
+//! The argument parser is in-tree (no registry crates available offline —
+//! see Cargo.toml).
+
+use anyhow::{bail, Context, Result};
+
+use adasplit::config::{ExperimentConfig, ProtocolKind};
+use adasplit::data::DatasetKind;
+use adasplit::protocols::{run_protocol_recorded, run_seeds};
+use adasplit::report::ResultTable;
+use adasplit::runtime::Runtime;
+
+const USAGE: &str = "\
+adasplit — AdaSplit distributed-training coordinator
+
+USAGE:
+  adasplit [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  run       run one protocol end to end and print the result row
+  compare   run every protocol on one dataset, print the paper-style table
+  info      print manifest/artifact info
+
+RUN OPTIONS:
+  --config PATH          load a TOML config (other flags override it)
+  --protocol ID          ada-split | sl-basic | split-fed | fed-avg |
+                         fed-prox | scaffold | fed-nova   [ada-split]
+  --dataset ID           mixed-cifar | mixed-noniid       [mixed-cifar]
+  --rounds N             training rounds                  [20]
+  --samples N            train samples per client         [512]
+  --test-samples N       test samples per client          [256]
+  --seed N               experiment seed                  [0]
+  --kappa X --eta X --mu X --beta X --lambda X
+  --server-grad          Table-5 ablation: send server gradient to client
+  --imbalance X          geometric client-size skew       [1.0]
+  --curve-out PATH       write the per-round curve CSV
+  --trace                print per-iteration orchestrator traces
+
+COMPARE OPTIONS:
+  --dataset ID  --rounds N  --samples N  --test-samples N  --seeds N
+";
+
+/// Tiny flag parser: `--key value` pairs plus boolean switches.
+struct Args {
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String], switches: &[&str]) -> Result<Self> {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected argument `{a}`\n\n{USAGE}");
+            };
+            if switches.contains(&key) {
+                flags.push((key.to_string(), None));
+                i += 1;
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .with_context(|| format!("--{key} needs a value"))?;
+                flags.push((key.to_string(), Some(v.clone())));
+                i += 2;
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    fn parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+
+    // global --artifacts may precede the command
+    let mut rest = argv.as_slice();
+    let mut artifacts = "artifacts".to_string();
+    if rest[0] == "--artifacts" {
+        artifacts = rest.get(1).context("--artifacts needs a value")?.clone();
+        rest = &rest[2..];
+    }
+    let Some((cmd, tail)) = rest.split_first() else {
+        bail!("missing command\n\n{USAGE}");
+    };
+
+    let rt = Runtime::load(&artifacts)?;
+    match cmd.as_str() {
+        "run" => cmd_run(&rt, tail, &artifacts),
+        "compare" => cmd_compare(&rt, tail),
+        "info" => cmd_info(&rt),
+        other => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
+    let args = Args::parse(argv, &["trace", "server-grad"])?;
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load_toml(path)?,
+        None => {
+            let dataset: DatasetKind = args.get("dataset").unwrap_or("mixed-cifar").parse()?;
+            ExperimentConfig::paper_default(dataset)
+        }
+    };
+    if let Some(p) = args.parsed::<ProtocolKind>("protocol")? {
+        cfg.protocol = p;
+    }
+    if let Some(r) = args.parsed("rounds")? {
+        cfg.rounds = r;
+    }
+    if let Some(s) = args.parsed("samples")? {
+        cfg.samples_per_client = s;
+    }
+    if let Some(s) = args.parsed("test-samples")? {
+        cfg.test_per_client = s;
+    }
+    if let Some(s) = args.parsed("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(v) = args.parsed("kappa")? {
+        cfg.kappa = v;
+    }
+    if let Some(v) = args.parsed("eta")? {
+        cfg.eta = v;
+    }
+    if let Some(v) = args.parsed("mu")? {
+        cfg.mu = v;
+    }
+    if let Some(v) = args.parsed("beta")? {
+        cfg.beta = v;
+    }
+    if let Some(v) = args.parsed("lambda")? {
+        cfg.lambda = v;
+    }
+    if let Some(v) = args.parsed("imbalance")? {
+        cfg.imbalance = v;
+    }
+    cfg.server_grad_to_client |= args.has("server-grad");
+    cfg.trace |= args.has("trace");
+    cfg.artifacts_dir = artifacts.to_string();
+    cfg.validate()?;
+
+    let t0 = std::time::Instant::now();
+    let (result, recorder) = run_protocol_recorded(rt, &cfg)?;
+    if cfg.trace {
+        for line in &recorder.trace {
+            println!("  {line}");
+        }
+    }
+    for r in &recorder.rounds {
+        println!(
+            "round {:>3} [{:>6}] loss={:.4} acc={:.2}% bw={:.3}GB cC={:.3}T mask={:.3}",
+            r.round, r.phase, r.train_loss, r.accuracy_pct, r.bandwidth_gb,
+            r.client_tflops, r.mask_density
+        );
+    }
+    println!(
+        "{} on {}: acc={:.2}% (best {:.2}%) bw={:.3}GB compute={:.3} ({:.3}) TFLOPs c3={:.3} [{:.1}s]",
+        result.protocol,
+        result.dataset,
+        result.accuracy,
+        result.best_accuracy,
+        result.bandwidth_gb,
+        result.client_tflops,
+        result.total_tflops,
+        result.c3_score,
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(path) = args.get("curve-out") {
+        recorder.write_csv(path)?;
+        println!("curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let dataset: DatasetKind = args.get("dataset").unwrap_or("mixed-cifar").parse()?;
+    let rounds = args.parsed("rounds")?.unwrap_or(10);
+    let samples = args.parsed("samples")?.unwrap_or(256);
+    let test = args.parsed("test-samples")?.unwrap_or(128);
+    let n_seeds = args.parsed("seeds")?.unwrap_or(1usize);
+    let seed_list: Vec<u64> = (0..n_seeds as u64).collect();
+
+    let mut table = ResultTable::new(format!("{} (R={rounds})", dataset.name()));
+    for p in ProtocolKind::ALL {
+        let cfg = ExperimentConfig::paper_default(dataset)
+            .with_protocol(p)
+            .with_scale(rounds, samples, test);
+        let (result, std) = run_seeds(rt, &cfg, &seed_list)?;
+        println!("{:<10} done: {:.2}%", p.name(), result.best_accuracy);
+        table.add(p.name(), &result, std);
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}
+
+fn cmd_info(rt: &Runtime) -> Result<()> {
+    let m = &rt.manifest;
+    println!("platform: {}", rt.platform());
+    println!(
+        "backbone: conv{:?} fc1={} batch={} img={}",
+        m.conv_channels, m.fc1, m.batch, m.img
+    );
+    println!("artifacts: {}", m.artifacts.len());
+    for (tag, c) in &m.configs {
+        println!(
+            "  {tag}: k={} classes={} act={:?} client/server params {}/{}",
+            c.k, c.num_classes, c.act_shape, c.client_params, c.server_params
+        );
+    }
+    Ok(())
+}

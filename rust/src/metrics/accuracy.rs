@@ -1,0 +1,92 @@
+//! Accuracy aggregation: per-client correct/total accumulation and
+//! mean +/- std over independent runs (the paper reports both).
+
+/// Accumulates correct/total counts (optionally per client).
+#[derive(Clone, Debug, Default)]
+pub struct AccuracyAccum {
+    correct: f64,
+    total: f64,
+    per_client: Vec<(f64, f64)>,
+}
+
+impl AccuracyAccum {
+    pub fn new(n_clients: usize) -> Self {
+        Self { correct: 0.0, total: 0.0, per_client: vec![(0.0, 0.0); n_clients] }
+    }
+
+    pub fn add(&mut self, client: usize, correct: f64, total: f64) {
+        self.correct += correct;
+        self.total += total;
+        if client < self.per_client.len() {
+            self.per_client[client].0 += correct;
+            self.per_client[client].1 += total;
+        }
+    }
+
+    /// Overall accuracy in percent.
+    pub fn accuracy_pct(&self) -> f64 {
+        if self.total == 0.0 {
+            0.0
+        } else {
+            100.0 * self.correct / self.total
+        }
+    }
+
+    /// Per-client accuracies in percent.
+    pub fn per_client_pct(&self) -> Vec<f64> {
+        self.per_client
+            .iter()
+            .map(|(c, t)| if *t == 0.0 { 0.0 } else { 100.0 * c / t })
+            .collect()
+    }
+
+    /// Unweighted mean of per-client accuracies (the paper's convention
+    /// for heterogeneous client datasets).
+    pub fn mean_client_pct(&self) -> f64 {
+        let v = self.per_client_pct();
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    }
+}
+
+/// Mean and (population) standard deviation of a sample.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_overall_and_per_client() {
+        let mut a = AccuracyAccum::new(2);
+        a.add(0, 8.0, 10.0);
+        a.add(1, 5.0, 10.0);
+        assert!((a.accuracy_pct() - 65.0).abs() < 1e-9);
+        assert_eq!(a.per_client_pct(), vec![80.0, 50.0]);
+        assert!((a.mean_client_pct() - 65.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let a = AccuracyAccum::new(0);
+        assert_eq!(a.accuracy_pct(), 0.0);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-9);
+        assert!((s - 2.0).abs() < 1e-9);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,106 @@
+//! `CostMeter`: running totals of computation (eq. 1) and communication
+//! (eq. 2), split by side so the paper's "client compute (total compute)"
+//! column falls out directly.
+
+/// Accumulates FLOPs and payload bytes over a run.
+#[derive(Clone, Debug, Default)]
+pub struct CostMeter {
+    /// FLOPs executed on client devices (sum over clients).
+    pub client_flops: f64,
+    /// FLOPs executed on the server.
+    pub server_flops: f64,
+    /// Bytes transmitted client -> server (P_is).
+    pub up_bytes: f64,
+    /// Bytes transmitted server -> client (P_si).
+    pub down_bytes: f64,
+    /// Client-to-client bytes (SL-basic weight handoff).
+    pub peer_bytes: f64,
+}
+
+impl CostMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_client_flops(&mut self, f: f64) {
+        self.client_flops += f;
+    }
+
+    pub fn add_server_flops(&mut self, f: f64) {
+        self.server_flops += f;
+    }
+
+    pub fn add_up(&mut self, bytes: usize) {
+        self.up_bytes += bytes as f64;
+    }
+
+    pub fn add_down(&mut self, bytes: usize) {
+        self.down_bytes += bytes as f64;
+    }
+
+    pub fn add_peer(&mut self, bytes: usize) {
+        self.peer_bytes += bytes as f64;
+    }
+
+    /// Total bandwidth in GB (10^9 bytes, as the paper reports).
+    pub fn bandwidth_gb(&self) -> f64 {
+        (self.up_bytes + self.down_bytes + self.peer_bytes) / 1e9
+    }
+
+    /// Client compute in TFLOPs (the paper's headline "Compute" number).
+    pub fn client_tflops(&self) -> f64 {
+        self.client_flops / 1e12
+    }
+
+    /// Total (client + server) compute in TFLOPs — the parenthesized
+    /// column of Tables 1-4.
+    pub fn total_tflops(&self) -> f64 {
+        (self.client_flops + self.server_flops) / 1e12
+    }
+
+    /// Merge another meter (multi-seed aggregation).
+    pub fn merge(&mut self, other: &CostMeter) {
+        self.client_flops += other.client_flops;
+        self.server_flops += other.server_flops;
+        self.up_bytes += other.up_bytes;
+        self.down_bytes += other.down_bytes;
+        self.peer_bytes += other.peer_bytes;
+    }
+
+    /// Scale all counters (e.g. average over seeds).
+    pub fn scale(&mut self, s: f64) {
+        self.client_flops *= s;
+        self.server_flops *= s;
+        self.up_bytes *= s;
+        self.down_bytes *= s;
+        self.peer_bytes *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_and_units() {
+        let mut m = CostMeter::new();
+        m.add_client_flops(2e12);
+        m.add_server_flops(1e12);
+        m.add_up(500_000_000);
+        m.add_down(500_000_000);
+        assert!((m.bandwidth_gb() - 1.0).abs() < 1e-9);
+        assert!((m.client_tflops() - 2.0).abs() < 1e-9);
+        assert!((m.total_tflops() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_and_scale() {
+        let mut a = CostMeter::new();
+        a.add_up(1000);
+        let mut b = CostMeter::new();
+        b.add_up(3000);
+        a.merge(&b);
+        a.scale(0.5);
+        assert!((a.up_bytes - 2000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Cost accounting (paper eqs. 1-2), the C3-Score (eq. 9), accuracy
+//! aggregation, and run recording.
+
+pub mod accuracy;
+pub mod c3;
+pub mod cost;
+pub mod recorder;
+
+pub use accuracy::{mean_std, AccuracyAccum};
+pub use c3::{c3_score, Budgets};
+pub use cost::CostMeter;
+pub use recorder::{Recorder, RoundStat};

@@ -1,0 +1,175 @@
+//! Run recorder: per-round training curves + event traces, exportable as
+//! CSV/JSON into `results/` for EXPERIMENTS.md and the figure benches.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// One row of the training curve.
+#[derive(Clone, Debug)]
+pub struct RoundStat {
+    pub round: usize,
+    /// `local` or `global` (AdaSplit phases; other protocols: `train`)
+    pub phase: String,
+    pub train_loss: f64,
+    pub accuracy_pct: f64,
+    pub bandwidth_gb: f64,
+    pub client_tflops: f64,
+    pub total_tflops: f64,
+    /// mean active-mask density on the server (AdaSplit; 1.0 otherwise)
+    pub mask_density: f64,
+    /// clients selected this round (AdaSplit orchestrator; all otherwise)
+    pub selected: Vec<usize>,
+}
+
+/// Collects `RoundStat`s plus free-form trace lines.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub rounds: Vec<RoundStat>,
+    pub trace: Vec<String>,
+    pub trace_enabled: bool,
+}
+
+impl Recorder {
+    pub fn new(trace_enabled: bool) -> Self {
+        Self { rounds: Vec::new(), trace: Vec::new(), trace_enabled }
+    }
+
+    pub fn push(&mut self, stat: RoundStat) {
+        self.rounds.push(stat);
+    }
+
+    pub fn trace(&mut self, line: impl Into<String>) {
+        if self.trace_enabled {
+            self.trace.push(line.into());
+        }
+    }
+
+    pub fn last_accuracy(&self) -> f64 {
+        self.rounds.last().map(|r| r.accuracy_pct).unwrap_or(0.0)
+    }
+
+    /// Best accuracy seen at any eval point (converged accuracy proxy).
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.accuracy_pct)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path).context("creating csv")?;
+        writeln!(
+            f,
+            "round,phase,train_loss,accuracy_pct,bandwidth_gb,client_tflops,total_tflops,mask_density,n_selected"
+        )?;
+        for r in &self.rounds {
+            writeln!(
+                f,
+                "{},{},{:.6},{:.3},{:.6},{:.6},{:.6},{:.4},{}",
+                r.round,
+                r.phase,
+                r.train_loss,
+                r.accuracy_pct,
+                r.bandwidth_gb,
+                r.client_tflops,
+                r.total_tflops,
+                r.mask_density,
+                r.selected.len()
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rounds
+                .iter()
+                .map(|r| {
+                    let mut m = std::collections::BTreeMap::new();
+                    m.insert("round".into(), Json::Num(r.round as f64));
+                    m.insert("phase".into(), Json::Str(r.phase.clone()));
+                    m.insert("train_loss".into(), Json::Num(r.train_loss));
+                    m.insert("accuracy_pct".into(), Json::Num(r.accuracy_pct));
+                    m.insert("bandwidth_gb".into(), Json::Num(r.bandwidth_gb));
+                    m.insert("client_tflops".into(), Json::Num(r.client_tflops));
+                    m.insert("total_tflops".into(), Json::Num(r.total_tflops));
+                    m.insert("mask_density".into(), Json::Num(r.mask_density));
+                    m.insert(
+                        "selected".into(),
+                        Json::Arr(r.selected.iter().map(|&s| Json::Num(s as f64)).collect()),
+                    );
+                    Json::Obj(m)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty()).context("writing json")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(round: usize, acc: f64) -> RoundStat {
+        RoundStat {
+            round,
+            phase: "train".into(),
+            train_loss: 1.0,
+            accuracy_pct: acc,
+            bandwidth_gb: 0.1,
+            client_tflops: 0.2,
+            total_tflops: 0.3,
+            mask_density: 1.0,
+            selected: vec![0, 1],
+        }
+    }
+
+    #[test]
+    fn best_and_last() {
+        let mut r = Recorder::new(false);
+        r.push(stat(0, 50.0));
+        r.push(stat(1, 70.0));
+        r.push(stat(2, 65.0));
+        assert_eq!(r.last_accuracy(), 65.0);
+        assert_eq!(r.best_accuracy(), 70.0);
+    }
+
+    #[test]
+    fn trace_gating() {
+        let mut r = Recorder::new(false);
+        r.trace("hidden");
+        assert!(r.trace.is_empty());
+        let mut r = Recorder::new(true);
+        r.trace("shown");
+        assert_eq!(r.trace.len(), 1);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut r = Recorder::new(false);
+        r.push(stat(0, 10.0));
+        let dir = std::env::temp_dir().join("adasplit_test_csv");
+        let path = dir.join("curve.csv");
+        r.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() == 2);
+        assert!(text.contains("accuracy_pct"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Analytic model description: the Rust-side mirror of the backbone
+//! defined in `python/compile/model.py`, used for FLOP accounting (paper
+//! eq. 1) and payload sizing (paper eq. 2). Kept in sync with the manifest
+//! (cross-checked by integration tests against the manifest's parameter
+//! counts).
+
+pub mod spec;
+
+pub use spec::ModelSpec;

@@ -1,0 +1,259 @@
+//! Layer-by-layer FLOP and parameter model of the backbone.
+//!
+//! Backbone (NHWC, 32x32x3 inputs):
+//!   conv1 3->16 (3x3 SAME, relu, maxpool/2)
+//!   conv2 16->32, conv3 32->64 (same pattern)
+//!   fc1 1024->128 (relu), fc2 128->C
+//!
+//! The client owns the first `k` blocks (mu = k/5 in the paper's terms,
+//! with defaults k=1 <=> mu=0.2); the server owns the rest. FLOP counts
+//! use the standard multiply-accumulate = 2 FLOPs convention; backward
+//! passes are charged 2x forward (grad w.r.t. weights + inputs).
+
+use crate::runtime::Manifest;
+
+/// Static architecture constants + derived counts.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub img: usize,
+    pub batch: usize,
+    pub conv_channels: Vec<usize>,
+    pub fc1: usize,
+    pub proj_dim: usize,
+    pub num_classes: usize,
+}
+
+impl ModelSpec {
+    pub fn from_manifest(m: &Manifest, num_classes: usize) -> Self {
+        Self {
+            img: m.img,
+            batch: m.batch,
+            conv_channels: m.conv_channels.clone(),
+            fc1: m.fc1,
+            proj_dim: m.proj_dim,
+            num_classes,
+        }
+    }
+
+    /// Sane defaults matching `python/compile/model.py` (tests only).
+    pub fn default_for(num_classes: usize) -> Self {
+        Self {
+            img: 32,
+            batch: 32,
+            conv_channels: vec![16, 32, 64],
+            fc1: 128,
+            proj_dim: 64,
+            num_classes,
+        }
+    }
+
+    pub const N_BLOCKS: usize = 5;
+
+    /// Spatial side length at the *input* of conv block `i` (0-based).
+    fn side_in(&self, i: usize) -> usize {
+        self.img >> i
+    }
+
+    /// Channels at the input of block `i`.
+    fn ch_in(&self, i: usize) -> usize {
+        if i == 0 {
+            3
+        } else {
+            self.conv_channels[i - 1]
+        }
+    }
+
+    /// Flattened dimension entering fc1.
+    pub fn flat_dim(&self) -> usize {
+        let side = self.img >> self.conv_channels.len();
+        side * side * self.conv_channels[self.conv_channels.len() - 1]
+    }
+
+    /// Parameter count of block `i` (weights + bias).
+    pub fn block_params(&self, i: usize) -> usize {
+        match i {
+            0..=2 => 3 * 3 * self.ch_in(i) * self.conv_channels[i] + self.conv_channels[i],
+            3 => self.flat_dim() * self.fc1 + self.fc1,
+            4 => self.fc1 * self.num_classes + self.num_classes,
+            _ => panic!("block {i} out of range"),
+        }
+    }
+
+    /// Forward FLOPs of block `i`, per sample.
+    pub fn block_fwd_flops(&self, i: usize) -> f64 {
+        match i {
+            0..=2 => {
+                let side = self.side_in(i);
+                // conv output is side x side (SAME padding), then pooled
+                let out_elems = (side * side * self.conv_channels[i]) as f64;
+                let mac = 2.0 * 9.0 * self.ch_in(i) as f64;
+                // + bias/relu (1) + maxpool (~3 compares per output)
+                out_elems * (mac + 1.0) + out_elems * 0.75 * 3.0
+            }
+            3 => 2.0 * (self.flat_dim() * self.fc1) as f64,
+            4 => 2.0 * (self.fc1 * self.num_classes) as f64,
+            _ => panic!("block {i} out of range"),
+        }
+    }
+
+    /// Per-sample forward FLOPs through blocks `[0, k)` (client side).
+    pub fn client_fwd_flops(&self, k: usize) -> f64 {
+        (0..k).map(|i| self.block_fwd_flops(i)).sum()
+    }
+
+    /// Per-sample forward FLOPs through blocks `[k, 5)` (server side).
+    pub fn server_fwd_flops(&self, k: usize) -> f64 {
+        (k..Self::N_BLOCKS).map(|i| self.block_fwd_flops(i)).sum()
+    }
+
+    pub fn full_fwd_flops(&self) -> f64 {
+        self.client_fwd_flops(Self::N_BLOCKS)
+    }
+
+    /// Projection-head FLOPs per sample (GAP + dense, fwd).
+    pub fn proj_fwd_flops(&self, k: usize) -> f64 {
+        let d = self.act_feature_dim(k);
+        (self.act_elems(k) + 2 * d * self.proj_dim) as f64
+    }
+
+    /// Elements of one split activation (per sample).
+    pub fn act_elems(&self, k: usize) -> usize {
+        if k <= self.conv_channels.len() {
+            let side = self.img >> k;
+            side * side * self.conv_channels[k - 1]
+        } else {
+            self.fc1
+        }
+    }
+
+    fn act_feature_dim(&self, k: usize) -> usize {
+        if k <= self.conv_channels.len() {
+            self.conv_channels[k - 1]
+        } else {
+            self.fc1
+        }
+    }
+
+    /// Dense payload bytes of one activation batch (f32).
+    pub fn act_batch_bytes(&self, k: usize) -> usize {
+        self.act_elems(k) * self.batch * 4
+    }
+
+    /// Labels payload for one batch.
+    pub fn label_batch_bytes(&self) -> usize {
+        self.batch * 4
+    }
+
+    pub fn client_params(&self, k: usize) -> usize {
+        (0..k).map(|i| self.block_params(i)).sum()
+    }
+
+    pub fn server_params(&self, k: usize) -> usize {
+        (k..Self::N_BLOCKS).map(|i| self.block_params(i)).sum()
+    }
+
+    pub fn full_params(&self) -> usize {
+        self.client_params(Self::N_BLOCKS)
+    }
+
+    pub fn proj_params(&self, k: usize) -> usize {
+        self.act_feature_dim(k) * self.proj_dim + self.proj_dim
+    }
+
+    // ---- per-call training FLOPs (whole batch), bwd = 2x fwd ----
+
+    /// AdaSplit / SL client-local train step (fwd + bwd + head).
+    pub fn client_step_flops(&self, k: usize) -> f64 {
+        3.0 * (self.client_fwd_flops(k) + self.proj_fwd_flops(k)) * self.batch as f64
+    }
+
+    /// Client forward only (SL fwd, eval, Table-5 extra pass).
+    pub fn client_fwd_step_flops(&self, k: usize) -> f64 {
+        self.client_fwd_flops(k) * self.batch as f64
+    }
+
+    /// Client backward from injected grad (SL client bwd).
+    pub fn client_bwd_step_flops(&self, k: usize) -> f64 {
+        2.0 * self.client_fwd_flops(k) * self.batch as f64
+    }
+
+    /// Server train step; `masked` adds the mask multiply/update work.
+    pub fn server_step_flops(&self, k: usize, masked: bool) -> f64 {
+        let base = 3.0 * self.server_fwd_flops(k) * self.batch as f64;
+        if masked {
+            // p*m fwd, gate apply, mask adam: ~6 ops per server parameter
+            base + 6.0 * self.server_params(k) as f64
+        } else {
+            base
+        }
+    }
+
+    /// Server eval forward for one batch.
+    pub fn server_eval_flops(&self, k: usize) -> f64 {
+        self.server_fwd_flops(k) * self.batch as f64
+    }
+
+    /// Full-model FL train step for one batch (all on client).
+    pub fn fl_step_flops(&self) -> f64 {
+        3.0 * self.full_fwd_flops() * self.batch as f64
+    }
+
+    pub fn fl_eval_flops(&self) -> f64 {
+        self.full_fwd_flops() * self.batch as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_python_model() {
+        // mirrors python/compile/model.py: conv1 448, conv2 4640,
+        // conv3 18496, fc1 131200, fc2 1290 (C=10)
+        let s = ModelSpec::default_for(10);
+        assert_eq!(s.block_params(0), 3 * 3 * 3 * 16 + 16);
+        assert_eq!(s.block_params(1), 3 * 3 * 16 * 32 + 32);
+        assert_eq!(s.block_params(2), 3 * 3 * 32 * 64 + 64);
+        assert_eq!(s.flat_dim(), 4 * 4 * 64);
+        assert_eq!(s.block_params(3), 1024 * 128 + 128);
+        assert_eq!(s.block_params(4), 128 * 10 + 10);
+        assert_eq!(s.full_params(), 448 + 4640 + 18496 + 131200 + 1290);
+    }
+
+    #[test]
+    fn split_partitions_params() {
+        let s = ModelSpec::default_for(50);
+        for k in 1..=4 {
+            assert_eq!(s.client_params(k) + s.server_params(k), s.full_params());
+        }
+    }
+
+    #[test]
+    fn act_shapes_match_python() {
+        let s = ModelSpec::default_for(10);
+        assert_eq!(s.act_elems(1), 16 * 16 * 16);
+        assert_eq!(s.act_elems(2), 8 * 8 * 32);
+        assert_eq!(s.act_elems(3), 4 * 4 * 64);
+        assert_eq!(s.act_elems(4), 128);
+        assert_eq!(s.act_batch_bytes(1), 32 * 16 * 16 * 16 * 4);
+    }
+
+    #[test]
+    fn flops_monotonic_in_k() {
+        let s = ModelSpec::default_for(10);
+        for k in 1..4 {
+            assert!(s.client_fwd_flops(k + 1) > s.client_fwd_flops(k));
+            assert!(s.server_fwd_flops(k + 1) < s.server_fwd_flops(k));
+        }
+        let total = s.client_fwd_flops(2) + s.server_fwd_flops(2);
+        assert!((total - s.full_fwd_flops()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fl_step_dominates_client_step() {
+        // the whole point of split learning: client-side work shrinks
+        let s = ModelSpec::default_for(10);
+        assert!(s.fl_step_flops() > 2.0 * s.client_step_flops(1));
+    }
+}

@@ -1,0 +1,7 @@
+//! The AdaSplit orchestrator (paper §3.2): per-iteration UCB client
+//! selection that prioritizes clients whose data the server model is worst
+//! at (exploitation) while guaranteeing coverage (exploration).
+
+pub mod ucb;
+
+pub use ucb::UcbOrchestrator;

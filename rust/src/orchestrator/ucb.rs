@@ -1,0 +1,165 @@
+//! UCB1 advantage scoring over clients (paper eq. 6).
+//!
+//!   A_i = l_i / s_i + sqrt(2 log T / s_i)
+//!
+//! with gamma-discounted running sums l_i (server losses) and s_i
+//! (selection indicators). Unselected clients impute their loss as the
+//! mean of their two most recent values (paper §3.2), and losses are
+//! initialized to 100 for t = 0, 1 so every client is explored early.
+
+/// Discounted-UCB client selector.
+#[derive(Clone, Debug)]
+pub struct UcbOrchestrator {
+    gamma: f64,
+    /// discounted loss sum per client (l_i)
+    l: Vec<f64>,
+    /// discounted selection count per client (s_i)
+    s: Vec<f64>,
+    /// last two observed/imputed losses per client
+    last: Vec<[f64; 2]>,
+    /// total iterations elapsed (the T of eq. 6)
+    t: u64,
+}
+
+pub const INIT_LOSS: f64 = 100.0;
+
+impl UcbOrchestrator {
+    pub fn new(n_clients: usize, gamma: f64) -> Self {
+        Self {
+            gamma,
+            // seed with the t=0,1 initial losses so s_i > 0 from the start
+            l: vec![INIT_LOSS * 2.0; n_clients],
+            s: vec![2.0; n_clients],
+            last: vec![[INIT_LOSS; 2]; n_clients],
+            t: 2,
+        }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.l.len()
+    }
+
+    /// Advantage A_i (eq. 6). Never-selected clients get +inf.
+    pub fn advantage(&self, i: usize) -> f64 {
+        if self.s[i] <= 0.0 {
+            return f64::INFINITY;
+        }
+        let exploit = self.l[i] / self.s[i];
+        let explore = (2.0 * (self.t.max(2) as f64).ln() / self.s[i]).sqrt();
+        exploit + explore
+    }
+
+    /// Pick the `k` clients with the highest advantage (deterministic
+    /// tie-break by index).
+    pub fn select(&self, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.l.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.advantage(b)
+                .partial_cmp(&self.advantage(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k.min(self.l.len()));
+        idx.sort_unstable();
+        idx
+    }
+
+    /// Top-`k` selection restricted to `candidates` (clients that actually
+    /// have a batch this iteration).
+    pub fn select_among(&self, candidates: &[usize], k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = candidates.to_vec();
+        idx.sort_by(|&a, &b| {
+            self.advantage(b)
+                .partial_cmp(&self.advantage(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k.min(candidates.len()));
+        idx.sort_unstable();
+        idx
+    }
+
+    /// Advance one iteration: `observed` carries (client, server_loss) for
+    /// selected clients; everyone else imputes the mean of their last two.
+    pub fn update(&mut self, observed: &[(usize, f64)]) {
+        let n = self.l.len();
+        let mut loss = vec![None; n];
+        let mut sel = vec![0.0; n];
+        for &(i, li) in observed {
+            loss[i] = Some(li);
+            sel[i] = 1.0;
+        }
+        for i in 0..n {
+            let li = loss[i].unwrap_or((self.last[i][0] + self.last[i][1]) / 2.0);
+            self.l[i] = self.gamma * self.l[i] + li;
+            self.s[i] = self.gamma * self.s[i] + sel[i];
+            self.last[i] = [li, self.last[i][0]];
+        }
+        self.t += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_selection_is_uniformly_scored() {
+        let o = UcbOrchestrator::new(5, 0.9);
+        let adv: Vec<f64> = (0..5).map(|i| o.advantage(i)).collect();
+        for w in adv.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-12);
+        }
+        assert_eq!(o.select(3).len(), 3);
+    }
+
+    #[test]
+    fn high_loss_clients_win_exploitation() {
+        let mut o = UcbOrchestrator::new(3, 0.9);
+        for _ in 0..50 {
+            // client 2 keeps reporting a big loss, others small
+            let sel = o.select(3);
+            let obs: Vec<(usize, f64)> = sel
+                .iter()
+                .map(|&i| (i, if i == 2 { 5.0 } else { 0.1 }))
+                .collect();
+            o.update(&obs);
+        }
+        assert!(o.advantage(2) > o.advantage(0));
+        assert!(o.select(1) == vec![2]);
+    }
+
+    #[test]
+    fn exploration_revisits_starved_clients() {
+        let mut o = UcbOrchestrator::new(2, 0.87);
+        // only ever select client 0, with moderate loss
+        for _ in 0..200 {
+            o.update(&[(0, 1.0)]);
+        }
+        // client 1's s_i decays toward 0 => exploration term blows up
+        assert!(
+            o.advantage(1) > o.advantage(0),
+            "starved client must eventually dominate: {} vs {}",
+            o.advantage(1),
+            o.advantage(0)
+        );
+    }
+
+    #[test]
+    fn select_k_clamps_and_sorts() {
+        let o = UcbOrchestrator::new(4, 0.9);
+        assert_eq!(o.select(10), vec![0, 1, 2, 3]);
+        assert_eq!(o.select(0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn unselected_loss_imputation() {
+        let mut o = UcbOrchestrator::new(2, 1.0);
+        o.update(&[(0, 10.0)]); // client 1 imputes (100+100)/2 = 100
+        // l_1 = 200 + 100; l_0 = 200 + 10
+        assert!(o.l[1] > o.l[0]);
+        o.update(&[(0, 10.0), (1, 0.5)]);
+        // client 1's imputed history now includes the real 0.5
+        assert_eq!(o.last[1][0], 0.5);
+    }
+}

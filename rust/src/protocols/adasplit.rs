@@ -1,0 +1,200 @@
+//! AdaSplit (paper §3): the system contribution.
+//!
+//! * **Computation** — clients train with the local NT-Xent objective
+//!   (no server gradient); the server only trains in the *global phase*
+//!   (rounds >= kappa * R).
+//! * **Communication** — P_si = 0 (no gradient download); in the global
+//!   phase only the eta*N clients picked per iteration by the UCB
+//!   orchestrator upload activations. With beta > 0, activations are L1-
+//!   sparsified and shipped in a sparse encoding (Table 6).
+//! * **Collaboration** — each client updates only the sparse partition of
+//!   the server model allowed by its binarized mask (eq. 7); masks are
+//!   learned with an L1 penalty (eq. 8) inside the `server_step` artifact.
+//!
+//! The Table-5 ablation (`server_grad_to_client`) additionally returns the
+//! server's activation gradient to the selected client, which injects it
+//! into its *next* local step (one-iteration-stale, documented in
+//! DESIGN.md) — this is the row-2 "L_client + L_server" configuration.
+
+use anyhow::Result;
+
+use crate::metrics::RoundStat;
+use crate::orchestrator::UcbOrchestrator;
+use crate::protocols::common::{eval_split, Env};
+use crate::protocols::RunResult;
+use crate::runtime::{Tensor, TensorStore};
+
+/// Is this a per-client (mask) server-state key, as opposed to the shared
+/// server parameters?
+fn is_mask_key(k: &str) -> bool {
+    k.starts_with("state.mask.") || k.starts_with("state.mm.") || k.starts_with("state.vm.")
+}
+
+pub fn run(env: &mut Env) -> Result<RunResult> {
+    let cfg = env.cfg;
+    let k = cfg.split_k();
+    let n = cfg.clients;
+
+    let client_step = env.art_split("client_step")?;
+    let client_fwd = env.art_split("client_fwd")?;
+    let server_step = env.art_split("server_step")?;
+    let server_eval = env.art_split("server_eval")?;
+
+    // ---- state ----------------------------------------------------------
+    let mut client_states: Vec<TensorStore> = (0..n)
+        .map(|i| {
+            env.init_state(
+                &format!("{}_init_client", cfg.config_tag()),
+                env.client_seed(i),
+            )
+        })
+        .collect::<Result<_>>()?;
+
+    let server_init = env.init_state(
+        &format!("{}_init_server", cfg.config_tag()),
+        env.server_seed(),
+    )?;
+    // shared server parameters + their Adam state + step counter
+    let mut server_shared = TensorStore::new();
+    // per-client masks + their Adam state
+    let mut mask_states: Vec<TensorStore> = vec![TensorStore::new(); n];
+    for (key, t) in server_init.iter() {
+        if is_mask_key(key) {
+            for m in mask_states.iter_mut() {
+                m.insert(key.clone(), t.clone());
+            }
+        } else {
+            server_shared.insert(key.clone(), t.clone());
+        }
+    }
+
+    let mut ucb = UcbOrchestrator::new(n, cfg.gamma);
+    let act_shape: Vec<usize> = env.rt.manifest.config(&cfg.config_tag())?.act_shape.clone();
+    let zero_grad = Tensor::zeros(&act_shape);
+    // Table-5 ablation: stale server gradient to inject next local step
+    let mut pending_grad: Vec<Option<Tensor>> = vec![None; n];
+
+    let beta = Tensor::scalar(cfg.beta);
+    let lam = Tensor::scalar(cfg.lambda);
+    let local_rounds = cfg.local_rounds();
+    let n_select = cfg.selected_per_iter();
+
+    let client_step_flops = env.spec.client_step_flops(k);
+    let server_step_flops = env.spec.server_step_flops(k, true);
+    let act_bytes = env.spec.act_batch_bytes(k);
+
+    // ---- rounds ----------------------------------------------------------
+    for round in 0..cfg.rounds {
+        let global_phase = round >= local_rounds;
+        let batches: Vec<Vec<crate::data::Batch>> =
+            (0..n).map(|i| env.train_batches(i, round)).collect();
+        let t_max = batches.iter().map(|b| b.len()).max().unwrap_or(0);
+
+        let mut loss_sum = 0.0;
+        let mut loss_count = 0.0;
+        let mut density_sum = 0.0;
+        let mut density_count = 0.0;
+        let mut round_selected: Vec<usize> = Vec::new();
+
+        for t in 0..t_max {
+            // -- local client steps (every client, every phase) -----------
+            let active: Vec<usize> = (0..n).filter(|&i| t < batches[i].len()).collect();
+            let mut acts: Vec<Option<Tensor>> = vec![None; n];
+            for &i in &active {
+                let b = &batches[i][t];
+                // avoid cloning the (large) zero gradient on the default path
+                let taken = pending_grad[i].take();
+                let (ga, use_grad): (&Tensor, f32) = match &taken {
+                    Some(g) => (g, 1.0),
+                    None => (&zero_grad, 0.0),
+                };
+                let mut out = client_step.call(
+                    &[&client_states[i]],
+                    &[
+                        ("x", &b.x),
+                        ("y", &b.y),
+                        ("beta", &beta),
+                        ("grad_a", ga),
+                        ("use_grad", &Tensor::scalar(use_grad)),
+                    ],
+                )?;
+                out.write_state(&mut client_states[i]);
+                loss_sum += out.scalar("loss")? as f64;
+                loss_count += 1.0;
+                acts[i] = Some(out.take("acts")?);
+                env.meter.add_client_flops(client_step_flops);
+            }
+
+            // -- global phase: orchestrated server training ----------------
+            if global_phase && !active.is_empty() {
+                let selected = ucb.select_among(&active, n_select);
+                let mut observed = Vec::with_capacity(selected.len());
+                for &i in &selected {
+                    let a = acts[i].as_ref().expect("active client has acts");
+                    let y = &batches[i][t].y;
+                    let mut out = server_step.call(
+                        &[&server_shared, &mask_states[i]],
+                        &[("a", a), ("y", y), ("lam", &lam)],
+                    )?;
+                    out.write_state_filtered(&mut server_shared, |key| !is_mask_key(key));
+                    out.write_state_filtered(&mut mask_states[i], is_mask_key);
+                    let loss = out.scalar("loss")? as f64;
+                    observed.push((i, loss));
+                    density_sum += out.scalar("mask_density")? as f64;
+                    density_count += 1.0;
+
+                    let up = env.up_payload_bytes(a);
+                    env.meter.add_server_flops(server_step_flops);
+                    env.meter.add_up(up);
+                    if cfg.server_grad_to_client {
+                        pending_grad[i] = Some(out.take("grad_a")?);
+                        env.meter.add_down(act_bytes);
+                    }
+                    env.recorder.trace(format!(
+                        "r{round} t{t} client{i} server_loss={loss:.4}"
+                    ));
+                }
+                ucb.update(&observed);
+                for s in selected {
+                    if !round_selected.contains(&s) {
+                        round_selected.push(s);
+                    }
+                }
+            }
+        }
+
+        // -- eval ----------------------------------------------------------
+        let eval_now = round % cfg.eval_every == 0 || round + 1 == cfg.rounds;
+        let accuracy = if eval_now {
+            let roots: Vec<TensorStore> =
+                client_states.iter().map(|s| s.sub("state")).collect();
+            let shared_root = server_shared.sub("state");
+            let mask_roots: Vec<TensorStore> =
+                mask_states.iter().map(|s| s.sub("state")).collect();
+            let acc = eval_split(env, &client_fwd, &server_eval, &roots, |i| {
+                vec![shared_root.clone(), mask_roots[i].clone()]
+            })?;
+            acc.mean_client_pct()
+        } else {
+            env.recorder.last_accuracy()
+        };
+
+        env.recorder.push(RoundStat {
+            round,
+            phase: if global_phase { "global".into() } else { "local".into() },
+            train_loss: if loss_count > 0.0 { loss_sum / loss_count } else { 0.0 },
+            accuracy_pct: accuracy,
+            bandwidth_gb: env.meter.bandwidth_gb(),
+            client_tflops: env.meter.client_tflops(),
+            total_tflops: env.meter.total_tflops(),
+            mask_density: if density_count > 0.0 {
+                density_sum / density_count
+            } else {
+                1.0
+            },
+            selected: round_selected,
+        });
+    }
+
+    Ok(RunResult::from_env(env, &env.recorder, &env.meter))
+}

@@ -1,0 +1,204 @@
+//! Shared protocol machinery: the run environment, state initialization,
+//! split-model evaluation, and FedAvg-family parameter plumbing.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::data::{Batch, BatchIter, ClientData, Rng};
+use crate::metrics::{AccuracyAccum, CostMeter, Recorder};
+use crate::model::ModelSpec;
+use crate::runtime::{Artifact, Runtime, Tensor, TensorStore};
+
+/// Everything a protocol run needs.
+pub struct Env<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: &'a ExperimentConfig,
+    pub clients: Vec<ClientData>,
+    pub spec: ModelSpec,
+    pub meter: CostMeter,
+    pub recorder: Recorder,
+    pub rng: Rng,
+}
+
+impl<'a> Env<'a> {
+    pub fn new(rt: &'a Runtime, cfg: &'a ExperimentConfig, clients: Vec<ClientData>) -> Self {
+        let spec = ModelSpec::from_manifest(&rt.manifest, cfg.dataset.num_classes());
+        Self {
+            rt,
+            cfg,
+            clients,
+            spec,
+            meter: CostMeter::new(),
+            recorder: Recorder::new(cfg.trace),
+            rng: Rng::new(cfg.seed),
+        }
+    }
+
+    /// Split-config artifact, e.g. `c10_mu1_client_step`.
+    pub fn art_split(&self, suffix: &str) -> Result<Rc<Artifact>> {
+        self.rt.artifact(&format!("{}_{suffix}", self.cfg.config_tag()))
+    }
+
+    /// Dataset-level artifact (FL family), e.g. `c10_fl_step`.
+    pub fn art_ds(&self, suffix: &str) -> Result<Rc<Artifact>> {
+        self.rt.artifact(&format!("{}_{suffix}", self.cfg.dataset.tag()))
+    }
+
+    /// Run an `init_*` artifact and return the fresh state store
+    /// (keys rooted at `state.`).
+    pub fn init_state(&self, artifact: &str, seed: f32) -> Result<TensorStore> {
+        let art = self.rt.artifact(artifact)?;
+        let out = art.call(&[], &[("seed", &Tensor::scalar(seed))])?;
+        Ok(out.into_state())
+    }
+
+    /// Per-client deterministic init seed.
+    pub fn client_seed(&self, client: usize) -> f32 {
+        (self.cfg.seed as f32) * 1000.0 + client as f32 + 1.0
+    }
+
+    /// Server init seed (distinct from every client seed).
+    pub fn server_seed(&self) -> f32 {
+        (self.cfg.seed as f32) * 1000.0 + 999.0
+    }
+
+    /// Fresh per-round training batches for one client.
+    pub fn train_batches(&self, client: usize, round: usize) -> Vec<Batch> {
+        let c = &self.clients[client];
+        let mut rng = self
+            .rng
+            .derive("epoch", (round as u64) << 32 | client as u64);
+        BatchIter::train(&c.train_x, &c.train_y, self.spec.batch, &mut rng).collect()
+    }
+
+    /// Upload payload bytes for one activation batch (plus labels).
+    ///
+    /// With beta > 0 (Table-6 path) the activations are shipped in a
+    /// bitmap sparse codec — 1 bit of occupancy per position + 4 bytes per
+    /// surviving value, dropping everything with |a| <= sparse_eps — and
+    /// the cheaper of {dense, sparse} encoding is charged. At beta = 0 the
+    /// payload is the dense f32 batch.
+    pub fn up_payload_bytes(&self, acts: &Tensor) -> usize {
+        let labels = self.spec.label_batch_bytes();
+        let dense = acts.byte_size();
+        if self.cfg.beta > 0.0 {
+            let sparse = acts.len().div_ceil(8) + acts.nnz(self.cfg.sparse_eps) * 4;
+            sparse.min(dense) + labels
+        } else {
+            dense + labels
+        }
+    }
+}
+
+/// Evaluate a split model: per client, run `client_fwd` on the client's
+/// params then the provided server-eval artifact. `server_stores(i)` yields
+/// the store stack for client `i`'s server-side evaluation (shared server
+/// params, plus the client's mask store for AdaSplit).
+pub fn eval_split<F>(
+    env: &Env,
+    client_fwd: &Artifact,
+    server_eval: &Artifact,
+    client_roots: &[TensorStore],
+    server_stores: F,
+) -> Result<AccuracyAccum>
+where
+    F: Fn(usize) -> Vec<TensorStore>,
+{
+    let mut acc = AccuracyAccum::new(env.clients.len());
+    for (i, c) in env.clients.iter().enumerate() {
+        let stacks = server_stores(i);
+        let stack_refs: Vec<&TensorStore> = stacks.iter().collect();
+        for b in BatchIter::eval(&c.test_x, &c.test_y, env.spec.batch) {
+            let fwd = client_fwd.call(&[&client_roots[i]], &[("x", &b.x)])?;
+            let acts = fwd.get("acts")?;
+            let out = server_eval.call(
+                &stack_refs,
+                &[("a", acts), ("y", &b.y), ("valid", &b.valid)],
+            )?;
+            acc.add(i, out.scalar("correct")? as f64, b.n_valid as f64);
+        }
+    }
+    Ok(acc)
+}
+
+/// Evaluate the full FL model on every client's test set.
+pub fn eval_fl(env: &Env, fl_eval: &Artifact, global_p: &TensorStore) -> Result<AccuracyAccum> {
+    let mut acc = AccuracyAccum::new(env.clients.len());
+    for (i, c) in env.clients.iter().enumerate() {
+        for b in BatchIter::eval(&c.test_x, &c.test_y, env.spec.batch) {
+            let out = fl_eval.call(
+                &[global_p],
+                &[("x", &b.x), ("y", &b.y), ("valid", &b.valid)],
+            )?;
+            acc.add(i, out.scalar("correct")? as f64, b.n_valid as f64);
+        }
+    }
+    Ok(acc)
+}
+
+/// Copy tensors from `src` to `dst`, rewriting a key prefix
+/// (e.g. `state.p` -> `pg`). Returns the number of tensors copied.
+pub fn copy_prefixed(src: &TensorStore, from: &str, dst: &mut TensorStore, to: &str) -> usize {
+    let from_dot = format!("{from}.");
+    let mut n = 0;
+    for (k, v) in src.iter() {
+        if let Some(rest) = k.strip_prefix(&from_dot) {
+            dst.insert(format!("{to}.{rest}"), v.clone());
+            n += 1;
+        } else if k == from {
+            dst.insert(to.to_string(), v.clone());
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Build a zero-filled store mirroring `src`'s tensors under a new prefix.
+pub fn zeros_prefixed(src: &TensorStore, from: &str, to: &str) -> TensorStore {
+    let from_dot = format!("{from}.");
+    let mut out = TensorStore::new();
+    for (k, v) in src.iter() {
+        if let Some(rest) = k.strip_prefix(&from_dot) {
+            out.insert(format!("{to}.{rest}"), Tensor::zeros(v.shape()));
+        }
+    }
+    out
+}
+
+/// Data-size weights p_i = n_i / sum(n) for FedAvg-family aggregation.
+pub fn data_weights(clients: &[ClientData]) -> Vec<f32> {
+    let total: usize = clients.iter().map(|c| c.train_len()).sum();
+    clients
+        .iter()
+        .map(|c| c.train_len() as f32 / total as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_prefixed_rewrites() {
+        let mut src = TensorStore::new();
+        src.insert("state.p.w", Tensor::full(&[2], 1.0));
+        src.insert("state.p.b", Tensor::full(&[2], 2.0));
+        src.insert("state.m.w", Tensor::full(&[2], 3.0));
+        let mut dst = TensorStore::new();
+        assert_eq!(copy_prefixed(&src, "state.p", &mut dst, "pg"), 2);
+        assert_eq!(dst.get("pg.w").unwrap().data()[0], 1.0);
+        assert!(dst.get("pg.b").is_ok());
+        assert!(dst.get("m.w").is_err());
+    }
+
+    #[test]
+    fn zeros_prefixed_mirrors_shapes() {
+        let mut src = TensorStore::new();
+        src.insert("state.p.w", Tensor::full(&[3, 2], 5.0));
+        let z = zeros_prefixed(&src, "state.p", "c");
+        assert_eq!(z.get("c.w").unwrap().shape(), &[3, 2]);
+        assert_eq!(z.get("c.w").unwrap().mean_abs(), 0.0);
+    }
+}

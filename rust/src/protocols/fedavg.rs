@@ -1,0 +1,11 @@
+//! FedAvg (McMahan et al., 2016): local SGD/Adam epochs + data-weighted
+//! parameter averaging. Eq. 3 of the paper with p_i = n_i / sum(n).
+
+use anyhow::Result;
+
+use crate::protocols::flbase::{run_fl, FlVariant};
+use crate::protocols::{Env, RunResult};
+
+pub fn run(env: &mut Env) -> Result<RunResult> {
+    run_fl(env, FlVariant::FedAvg)
+}

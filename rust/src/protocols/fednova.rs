@@ -1,0 +1,15 @@
+//! FedNova (Wang et al., 2020): normalized averaging. Clients may take
+//! different numbers of local steps tau_i (data imbalance); averaging raw
+//! parameters would bias toward heavy clients, so the server averages
+//! *normalized update directions* instead:
+//!   p' = pg - tau_eff * sum_i w_i (pg - p_i)/tau_i.
+//! With equal tau_i this reduces to FedAvg.
+
+use anyhow::Result;
+
+use crate::protocols::flbase::{run_fl, FlVariant};
+use crate::protocols::{Env, RunResult};
+
+pub fn run(env: &mut Env) -> Result<RunResult> {
+    run_fl(env, FlVariant::FedNova)
+}

@@ -1,0 +1,13 @@
+//! FedProx (Li et al., 2020): FedAvg plus a proximal term
+//! mu/2 ||p - pg||^2 in each local objective, damping client drift on
+//! heterogeneous data. The gradient correction prox_mu * (p - pg) is
+//! applied inside the `fl_step` artifact.
+
+use anyhow::Result;
+
+use crate::protocols::flbase::{run_fl, FlVariant};
+use crate::protocols::{Env, RunResult};
+
+pub fn run(env: &mut Env) -> Result<RunResult> {
+    run_fl(env, FlVariant::FedProx)
+}

@@ -1,0 +1,188 @@
+//! Shared machinery for the federated-learning baselines.
+//!
+//! All four FL protocols drive the same `fl_step` artifact
+//! (grad' = grad + prox_mu (p - pg) + (c - ci), then Adam) and differ only
+//! in the hyperparameters they feed and how the server aggregates:
+//!
+//! * **FedAvg**   — prox_mu = 0, c = ci = 0, data-weighted averaging.
+//! * **FedProx**  — prox_mu > 0, same averaging.
+//! * **Scaffold** — control variates c/ci maintained here (option II of
+//!   the paper: ci' = ci - c + (pg - p_i)/(K_i * lr)), payload doubled.
+//! * **FedNova**  — normalized averaging of local *updates*:
+//!   p' = pg - tau_eff * sum_i w_i (pg - p_i)/tau_i, tau_eff = sum w_i tau_i.
+
+use anyhow::Result;
+
+use crate::metrics::RoundStat;
+use crate::protocols::common::{copy_prefixed, data_weights, eval_fl, zeros_prefixed, Env};
+use crate::protocols::RunResult;
+use crate::runtime::{Tensor, TensorStore};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FlVariant {
+    FedAvg,
+    FedProx,
+    Scaffold,
+    FedNova,
+}
+
+pub fn run_fl(env: &mut Env, variant: FlVariant) -> Result<RunResult> {
+    let cfg = env.cfg;
+    let n = cfg.clients;
+    let tag = cfg.dataset.tag();
+
+    let fl_step = env.art_ds("fl_step")?;
+    let fl_eval = env.art_ds("fl_eval")?;
+
+    // per-client full-model states (Adam moments stay local across rounds)
+    let mut client_states: Vec<TensorStore> = (0..n)
+        .map(|i| env.init_state(&format!("{tag}_init_fl"), env.client_seed(i)))
+        .collect::<Result<_>>()?;
+
+    // the global model: canonical keys `p.*` (feedable to fl_eval)
+    let mut global = TensorStore::new();
+    copy_prefixed(&client_states[0], "state.p", &mut global, "p");
+
+    // control variates (Scaffold) / zero placeholders (everyone else)
+    let mut c_store = zeros_prefixed(&client_states[0], "state.p", "c");
+    let mut ci_stores: Vec<TensorStore> = (0..n)
+        .map(|_| zeros_prefixed(&client_states[0], "state.p", "ci"))
+        .collect();
+
+    let weights = data_weights(&env.clients);
+    let prox_mu = Tensor::scalar(match variant {
+        FlVariant::FedProx => cfg.prox_mu,
+        _ => 0.0,
+    });
+    let lr = env.rt.manifest.lr;
+    let step_flops = env.spec.fl_step_flops();
+    let model_bytes = env.spec.full_params() * 4;
+    // parameter suffixes ("conv1.w", ...) for aggregation arithmetic
+    let suffixes: Vec<String> = global
+        .names()
+        .map(|k| k.strip_prefix("p.").unwrap().to_string())
+        .collect();
+
+    for round in 0..cfg.rounds {
+        let mut loss_sum = 0.0;
+        let mut loss_count = 0.0;
+
+        // snapshot of the round-start global model as `pg.*`
+        let mut pg_store = TensorStore::new();
+        copy_prefixed(&global, "p", &mut pg_store, "pg");
+        let mut taus = vec![0usize; n];
+
+        for i in 0..n {
+            // download the global model
+            for s in &suffixes {
+                let t = global.get(&format!("p.{s}"))?.clone();
+                client_states[i].insert(format!("state.p.{s}"), t);
+            }
+            env.meter.add_down(model_bytes);
+            if variant == FlVariant::Scaffold {
+                env.meter.add_down(model_bytes); // c travels with the model
+            }
+
+            for _epoch in 0..cfg.local_epochs {
+                for b in env.train_batches(i, round) {
+                    let mut out = fl_step.call(
+                        &[&client_states[i], &pg_store, &c_store, &ci_stores[i]],
+                        &[("prox_mu", &prox_mu), ("x", &b.x), ("y", &b.y)],
+                    )?;
+                    out.write_state(&mut client_states[i]);
+                    loss_sum += out.scalar("loss")? as f64;
+                    loss_count += 1.0;
+                    taus[i] += 1;
+                    env.meter.add_client_flops(step_flops);
+                }
+            }
+
+            // upload the trained model
+            env.meter.add_up(model_bytes);
+            if variant == FlVariant::Scaffold {
+                env.meter.add_up(model_bytes); // ci update travels back
+            }
+
+            if variant == FlVariant::Scaffold && taus[i] > 0 {
+                // ci' = ci - c + (pg - p_i) / (K_i * lr)
+                let scale = 1.0 / (taus[i] as f32 * lr);
+                for s in &suffixes {
+                    let pg = pg_store.get(&format!("pg.{s}"))?;
+                    let pi = client_states[i].get(&format!("state.p.{s}"))?;
+                    let cg = c_store.get(&format!("c.{s}"))?.clone();
+                    let ci = ci_stores[i].get_mut(&format!("ci.{s}"))?;
+                    let ci_old = ci.clone();
+                    ci.axpy(-1.0, &cg)?;
+                    let mut delta = pg.clone();
+                    delta.axpy(-1.0, pi)?;
+                    delta.scale(scale);
+                    ci.axpy(1.0, &delta)?;
+                    // server-side running update c += (ci' - ci_old)/N
+                    let mut dci = ci.clone();
+                    dci.axpy(-1.0, &ci_old)?;
+                    dci.scale(1.0 / n as f32);
+                    c_store.get_mut(&format!("c.{s}"))?.axpy(1.0, &dci)?;
+                }
+            }
+        }
+
+        // ---- aggregation --------------------------------------------------
+        match variant {
+            FlVariant::FedNova => {
+                let tau_eff: f32 = weights
+                    .iter()
+                    .zip(&taus)
+                    .map(|(w, &t)| w * t as f32)
+                    .sum();
+                for s in &suffixes {
+                    let pg = pg_store.get(&format!("pg.{s}"))?.clone();
+                    // normalized update direction sum_i w_i (pg - p_i)/tau_i
+                    let mut d = Tensor::zeros(pg.shape());
+                    for i in 0..n {
+                        if taus[i] == 0 {
+                            continue;
+                        }
+                        let mut di = pg.clone();
+                        di.axpy(-1.0, client_states[i].get(&format!("state.p.{s}"))?)?;
+                        d.axpy(weights[i] / taus[i] as f32, &di)?;
+                    }
+                    let mut p_new = pg;
+                    p_new.axpy(-tau_eff, &d)?;
+                    global.insert(format!("p.{s}"), p_new);
+                }
+            }
+            _ => {
+                for s in &suffixes {
+                    let shape = global.get(&format!("p.{s}"))?.shape().to_vec();
+                    let mut acc = Tensor::zeros(&shape);
+                    for i in 0..n {
+                        acc.axpy(weights[i], client_states[i].get(&format!("state.p.{s}"))?)?;
+                    }
+                    global.insert(format!("p.{s}"), acc);
+                }
+            }
+        }
+
+        // ---- eval ----------------------------------------------------------
+        let eval_now = round % cfg.eval_every == 0 || round + 1 == cfg.rounds;
+        let accuracy = if eval_now {
+            eval_fl(env, &fl_eval, &global)?.mean_client_pct()
+        } else {
+            env.recorder.last_accuracy()
+        };
+
+        env.recorder.push(RoundStat {
+            round,
+            phase: "train".into(),
+            train_loss: if loss_count > 0.0 { loss_sum / loss_count } else { 0.0 },
+            accuracy_pct: accuracy,
+            bandwidth_gb: env.meter.bandwidth_gb(),
+            client_tflops: env.meter.client_tflops(),
+            total_tflops: env.meter.total_tflops(),
+            mask_density: 1.0,
+            selected: (0..n).collect(),
+        });
+    }
+
+    Ok(RunResult::from_env(env, &env.recorder, &env.meter))
+}

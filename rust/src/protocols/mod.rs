@@ -1,0 +1,142 @@
+//! Protocol implementations: AdaSplit (the paper's contribution) plus the
+//! six baselines it is evaluated against.
+//!
+//! Every protocol is a state machine over `TensorStore`s driven by the
+//! AOT-compiled step artifacts; the only numerics that happen in Rust are
+//! FedAvg-family parameter aggregation (plain weighted sums) and the UCB
+//! bookkeeping — everything differentiable lives in the artifacts.
+
+mod adasplit;
+mod common;
+mod fedavg;
+mod fednova;
+mod fedprox;
+mod flbase;
+mod scaffold;
+mod sl_basic;
+mod splitfed;
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, ProtocolKind};
+use crate::data::build_partition;
+use crate::metrics::{c3_score, CostMeter, Recorder};
+use crate::runtime::Runtime;
+use crate::util::Json;
+
+pub use common::{copy_prefixed, data_weights, eval_fl, eval_split, zeros_prefixed, Env};
+
+/// Outcome of one protocol run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub protocol: String,
+    pub dataset: String,
+    /// final mean per-client test accuracy (%)
+    pub accuracy: f64,
+    /// converged accuracy = best eval point (%), the paper's convention
+    pub best_accuracy: f64,
+    pub bandwidth_gb: f64,
+    pub client_tflops: f64,
+    pub total_tflops: f64,
+    pub c3_score: f64,
+    /// mean server-mask density at the end (AdaSplit; 1.0 otherwise)
+    pub mask_density: f64,
+    pub rounds: usize,
+}
+
+impl RunResult {
+    /// JSON export (results/ directory, EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("protocol".into(), Json::Str(self.protocol.clone()));
+        m.insert("dataset".into(), Json::Str(self.dataset.clone()));
+        m.insert("accuracy".into(), Json::Num(self.accuracy));
+        m.insert("best_accuracy".into(), Json::Num(self.best_accuracy));
+        m.insert("bandwidth_gb".into(), Json::Num(self.bandwidth_gb));
+        m.insert("client_tflops".into(), Json::Num(self.client_tflops));
+        m.insert("total_tflops".into(), Json::Num(self.total_tflops));
+        m.insert("c3_score".into(), Json::Num(self.c3_score));
+        m.insert("mask_density".into(), Json::Num(self.mask_density));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        Json::Obj(m)
+    }
+
+    pub(crate) fn from_env(env: &Env, recorder: &Recorder, meter: &CostMeter) -> Self {
+        let best = recorder.best_accuracy();
+        let acc = recorder.last_accuracy();
+        let mask_density = recorder
+            .rounds
+            .last()
+            .map(|r| r.mask_density)
+            .unwrap_or(1.0);
+        Self {
+            protocol: env.cfg.protocol.name().to_string(),
+            dataset: env.cfg.dataset.name().to_string(),
+            accuracy: acc,
+            best_accuracy: best,
+            bandwidth_gb: meter.bandwidth_gb(),
+            client_tflops: meter.client_tflops(),
+            total_tflops: meter.total_tflops(),
+            c3_score: c3_score(best, meter.bandwidth_gb(), meter.client_tflops(), &env.cfg.budgets),
+            mask_density,
+            rounds: env.cfg.rounds,
+        }
+    }
+}
+
+/// Run the configured protocol end to end and return its result.
+pub fn run_protocol(rt: &Runtime, cfg: &ExperimentConfig) -> Result<RunResult> {
+    run_protocol_recorded(rt, cfg).map(|(r, _)| r)
+}
+
+/// Like [`run_protocol`] but also hands back the full round-by-round
+/// recorder (training curves, traces) for examples and figure benches.
+pub fn run_protocol_recorded(
+    rt: &Runtime,
+    cfg: &ExperimentConfig,
+) -> Result<(RunResult, Recorder)> {
+    cfg.validate()?;
+    let clients = build_partition(
+        cfg.dataset,
+        cfg.clients,
+        cfg.samples_per_client,
+        cfg.test_per_client,
+        cfg.imbalance,
+        cfg.seed,
+    )?;
+    let mut env = Env::new(rt, cfg, clients);
+    let result = match cfg.protocol {
+        ProtocolKind::AdaSplit => adasplit::run(&mut env)?,
+        ProtocolKind::SlBasic => sl_basic::run(&mut env)?,
+        ProtocolKind::SplitFed => splitfed::run(&mut env)?,
+        ProtocolKind::FedAvg => fedavg::run(&mut env)?,
+        ProtocolKind::FedProx => fedprox::run(&mut env)?,
+        ProtocolKind::Scaffold => scaffold::run(&mut env)?,
+        ProtocolKind::FedNova => fednova::run(&mut env)?,
+    };
+    Ok((result, env.recorder))
+}
+
+/// Run `seeds.len()` independent runs and aggregate mean/std accuracy
+/// (resources are averaged; they are deterministic given the config).
+pub fn run_seeds(
+    rt: &Runtime,
+    cfg: &ExperimentConfig,
+    seeds: &[u64],
+) -> Result<(RunResult, f64)> {
+    let mut results = Vec::new();
+    for &s in seeds {
+        results.push(run_protocol(rt, &cfg.clone().with_seed(s))?);
+    }
+    let accs: Vec<f64> = results.iter().map(|r| r.best_accuracy).collect();
+    let (mean, std) = crate::metrics::mean_std(&accs);
+    let mut agg = results[0].clone();
+    agg.accuracy = results.iter().map(|r| r.accuracy).sum::<f64>() / results.len() as f64;
+    agg.best_accuracy = mean;
+    agg.bandwidth_gb = results.iter().map(|r| r.bandwidth_gb).sum::<f64>() / results.len() as f64;
+    agg.client_tflops =
+        results.iter().map(|r| r.client_tflops).sum::<f64>() / results.len() as f64;
+    agg.total_tflops = results.iter().map(|r| r.total_tflops).sum::<f64>() / results.len() as f64;
+    agg.c3_score = c3_score(mean, agg.bandwidth_gb, agg.client_tflops, &cfg.budgets);
+    Ok((agg, std))
+}

@@ -1,0 +1,15 @@
+//! SCAFFOLD (Karimireddy et al., 2021): stochastic controlled averaging.
+//! Local gradients are corrected by (c - ci); after each round the client
+//! control variate is refreshed with option II of the paper
+//! (ci' = ci - c + (pg - p_i)/(K lr)) and the server variate follows.
+//! Communication is doubled (model + control variate each way), matching
+//! the paper's Tables 1-2 bandwidth column (2x FedAvg).
+
+use anyhow::Result;
+
+use crate::protocols::flbase::{run_fl, FlVariant};
+use crate::protocols::{Env, RunResult};
+
+pub fn run(env: &mut Env) -> Result<RunResult> {
+    run_fl(env, FlVariant::Scaffold)
+}

@@ -1,0 +1,105 @@
+//! SL-basic (Gupta & Raskar, 2018): classic split learning.
+//!
+//! One logical client model is handed from client to client (peer-to-peer
+//! weight transfer) in round-robin order; within a client's turn, every
+//! iteration is a synchronous fwd -> server-step -> grad download ->
+//! client-bwd exchange. The server model is shared and updated
+//! sequentially — exactly the regime whose non-IID pathology AdaSplit
+//! fixes (paper §2.2 D3).
+
+use anyhow::Result;
+
+use crate::metrics::RoundStat;
+use crate::protocols::common::{eval_split, Env};
+use crate::protocols::RunResult;
+use crate::runtime::TensorStore;
+
+pub fn run(env: &mut Env) -> Result<RunResult> {
+    let cfg = env.cfg;
+    let k = cfg.split_k();
+    let n = cfg.clients;
+    let tag = cfg.config_tag();
+
+    let client_fwd = env.art_split("client_fwd")?;
+    let server_step = env.art_split("sl_server_step")?;
+    let server_eval = env.art_split("sl_server_eval")?;
+    let client_bwd = env.art_split("client_bwd")?;
+
+    // a single shared client model, passed around peer-to-peer
+    let mut client_state: TensorStore =
+        env.init_state(&format!("{tag}_init_sl_client"), env.client_seed(0))?;
+    let mut server_state: TensorStore =
+        env.init_state(&format!("{tag}_init_sl_server"), env.server_seed())?;
+
+    let fwd_flops = env.spec.client_fwd_step_flops(k);
+    let bwd_flops = env.spec.client_bwd_step_flops(k);
+    let server_flops = env.spec.server_step_flops(k, false);
+    let act_bytes = env.spec.act_batch_bytes(k);
+    let handoff_bytes = env.spec.client_params(k) * 4;
+
+    for round in 0..cfg.rounds {
+        let mut loss_sum = 0.0;
+        let mut loss_count = 0.0;
+
+        for i in 0..n {
+            for b in env.train_batches(i, round) {
+                // client fwd (uses the traveling client model)
+                let root = client_state.sub("state");
+                let fwd = client_fwd.call(&[&root], &[("x", &b.x)])?;
+                let acts = fwd.get("acts")?;
+                env.meter.add_client_flops(fwd_flops);
+                let up = env.up_payload_bytes(acts);
+                env.meter.add_up(up);
+
+                // server: train + emit grad_a
+                let mut out =
+                    server_step.call(&[&server_state], &[("a", acts), ("y", &b.y)])?;
+                out.write_state(&mut server_state);
+                loss_sum += out.scalar("loss")? as f64;
+                loss_count += 1.0;
+                env.meter.add_server_flops(server_flops);
+                env.meter.add_down(act_bytes);
+
+                // client bwd from the downloaded gradient
+                let grad_a = out.take("grad_a")?;
+                let mut cb = client_bwd.call(
+                    &[&client_state],
+                    &[("x", &b.x), ("grad_a", &grad_a)],
+                )?;
+                cb.write_state(&mut client_state);
+                env.meter.add_client_flops(bwd_flops);
+            }
+            // hand the client model to the next client (peer transfer)
+            if i + 1 < n {
+                env.meter.add_peer(handoff_bytes);
+            }
+        }
+
+        let eval_now = round % cfg.eval_every == 0 || round + 1 == cfg.rounds;
+        let accuracy = if eval_now {
+            // every client evaluates with the (single) traveling model
+            let roots: Vec<TensorStore> = (0..n).map(|_| client_state.sub("state")).collect();
+            let server_root = server_state.sub("state");
+            let acc = eval_split(env, &client_fwd, &server_eval, &roots, |_| {
+                vec![server_root.clone()]
+            })?;
+            acc.mean_client_pct()
+        } else {
+            env.recorder.last_accuracy()
+        };
+
+        env.recorder.push(RoundStat {
+            round,
+            phase: "train".into(),
+            train_loss: if loss_count > 0.0 { loss_sum / loss_count } else { 0.0 },
+            accuracy_pct: accuracy,
+            bandwidth_gb: env.meter.bandwidth_gb(),
+            client_tflops: env.meter.client_tflops(),
+            total_tflops: env.meter.total_tflops(),
+            mask_density: 1.0,
+            selected: (0..n).collect(),
+        });
+    }
+
+    Ok(RunResult::from_env(env, &env.recorder, &env.meter))
+}

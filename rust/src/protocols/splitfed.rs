@@ -1,0 +1,119 @@
+//! SplitFed (Thapa et al., 2020): split learning + federated averaging of
+//! the client-side models after every round.
+//!
+//! Each client keeps its own client model; training within a round is the
+//! same synchronous SL exchange as SL-basic, and at the round boundary the
+//! fed server averages the client models (weights only; Adam moments stay
+//! local) and broadcasts the average — costing 2 x client-params per
+//! client per round on top of the activation traffic.
+
+use anyhow::Result;
+
+use crate::metrics::RoundStat;
+use crate::protocols::common::{data_weights, eval_split, Env};
+use crate::protocols::RunResult;
+use crate::runtime::TensorStore;
+
+pub fn run(env: &mut Env) -> Result<RunResult> {
+    let cfg = env.cfg;
+    let k = cfg.split_k();
+    let n = cfg.clients;
+    let tag = cfg.config_tag();
+
+    let client_fwd = env.art_split("client_fwd")?;
+    let server_step = env.art_split("sl_server_step")?;
+    let server_eval = env.art_split("sl_server_eval")?;
+    let client_bwd = env.art_split("client_bwd")?;
+
+    let mut client_states: Vec<TensorStore> = (0..n)
+        .map(|i| env.init_state(&format!("{tag}_init_sl_client"), env.client_seed(i)))
+        .collect::<Result<_>>()?;
+    let mut server_state =
+        env.init_state(&format!("{tag}_init_sl_server"), env.server_seed())?;
+
+    let weights = data_weights(&env.clients);
+    let fwd_flops = env.spec.client_fwd_step_flops(k);
+    let bwd_flops = env.spec.client_bwd_step_flops(k);
+    let server_flops = env.spec.server_step_flops(k, false);
+    let act_bytes = env.spec.act_batch_bytes(k);
+    let fed_bytes = env.spec.client_params(k) * 4;
+
+    for round in 0..cfg.rounds {
+        let mut loss_sum = 0.0;
+        let mut loss_count = 0.0;
+
+        // visiting order shuffled per round (SplitFed trains clients in
+        // parallel; sequential visits in shuffled order approximate the
+        // same update stream on a single shared server model)
+        let mut order: Vec<usize> = (0..n).collect();
+        env.rng.derive("splitfed-order", round as u64).shuffle(&mut order);
+
+        for &i in &order {
+            for b in env.train_batches(i, round) {
+                let root = client_states[i].sub("state");
+                let fwd = client_fwd.call(&[&root], &[("x", &b.x)])?;
+                let acts = fwd.get("acts")?;
+                env.meter.add_client_flops(fwd_flops);
+                let up = env.up_payload_bytes(acts);
+                env.meter.add_up(up);
+
+                let mut out =
+                    server_step.call(&[&server_state], &[("a", acts), ("y", &b.y)])?;
+                out.write_state(&mut server_state);
+                loss_sum += out.scalar("loss")? as f64;
+                loss_count += 1.0;
+                env.meter.add_server_flops(server_flops);
+                env.meter.add_down(act_bytes);
+
+                let grad_a = out.take("grad_a")?;
+                let mut cb = client_bwd.call(
+                    &[&client_states[i]],
+                    &[("x", &b.x), ("grad_a", &grad_a)],
+                )?;
+                cb.write_state(&mut client_states[i]);
+                env.meter.add_client_flops(bwd_flops);
+            }
+        }
+
+        // federated averaging of the client models (pc.* only)
+        let refs: Vec<&TensorStore> = client_states.iter().collect();
+        let mut avg = client_states[0].clone();
+        avg.set_weighted_sum(&refs, &weights, |key| key.starts_with("state.pc."))?;
+        for (i, s) in client_states.iter_mut().enumerate() {
+            for key in avg.keys_under("state.pc").cloned().collect::<Vec<_>>() {
+                s.insert(key.clone(), avg.get(&key)?.clone());
+            }
+            // upload own model, download the average
+            env.meter.add_up(fed_bytes);
+            env.meter.add_down(fed_bytes);
+            let _ = i;
+        }
+
+        let eval_now = round % cfg.eval_every == 0 || round + 1 == cfg.rounds;
+        let accuracy = if eval_now {
+            let roots: Vec<TensorStore> =
+                client_states.iter().map(|s| s.sub("state")).collect();
+            let server_root = server_state.sub("state");
+            let acc = eval_split(env, &client_fwd, &server_eval, &roots, |_| {
+                vec![server_root.clone()]
+            })?;
+            acc.mean_client_pct()
+        } else {
+            env.recorder.last_accuracy()
+        };
+
+        env.recorder.push(RoundStat {
+            round,
+            phase: "train".into(),
+            train_loss: if loss_count > 0.0 { loss_sum / loss_count } else { 0.0 },
+            accuracy_pct: accuracy,
+            bandwidth_gb: env.meter.bandwidth_gb(),
+            client_tflops: env.meter.client_tflops(),
+            total_tflops: env.meter.total_tflops(),
+            mask_density: 1.0,
+            selected: (0..n).collect(),
+        });
+    }
+
+    Ok(RunResult::from_env(env, &env.recorder, &env.meter))
+}

@@ -1,0 +1,8 @@
+//! Paper-style reporting: result tables (Tables 1-6) and trade-off curves
+//! (Figure 1) rendered as aligned text / CSV.
+
+pub mod series;
+pub mod table;
+
+pub use series::Series;
+pub use table::ResultTable;

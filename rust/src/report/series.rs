@@ -1,0 +1,97 @@
+//! Trade-off curve series (Figure 1): (resource, accuracy) points per
+//! method, renderable as CSV or a quick ASCII scatter.
+
+use std::fmt::Write as _;
+
+/// A named series of (x = resource, y = accuracy) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub x_label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, x_label: impl Into<String>) -> Self {
+        Self { name: name.into(), x_label: x_label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// True when accuracy is (weakly) increasing with resources — the
+    /// sanity property of any trade-off curve.
+    pub fn roughly_monotone(&self, tolerance: f64) -> bool {
+        let mut pts = self.points.clone();
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pts.windows(2).all(|w| w[1].1 >= w[0].1 - tolerance)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("{},accuracy\n", self.x_label);
+        for (x, y) in &self.points {
+            let _ = writeln!(out, "{x:.5},{y:.3}");
+        }
+        out
+    }
+}
+
+/// Render several series as a compact ASCII chart (y = accuracy %).
+pub fn ascii_chart(series: &[Series], width: usize, height: usize) -> String {
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.clone()).collect();
+    if all.is_empty() {
+        return String::from("(empty chart)\n");
+    }
+    let (xmin, xmax) = all
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), p| (lo.min(p.0), hi.max(p.0)));
+    let (ymin, ymax) = all
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), p| (lo.min(p.1), hi.max(p.1)));
+    let xspan = (xmax - xmin).max(1e-9);
+    let yspan = (ymax - ymin).max(1e-9);
+    let mut grid = vec![vec![b' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = b"*+ox#@"[si % 6];
+        for &(x, y) in &s.points {
+            let col = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - row][col] = glyph;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "accuracy {ymin:.1}%..{ymax:.1}%  x: {xmin:.2}..{xmax:.2}");
+    for row in grid {
+        let _ = writeln!(out, "|{}", String::from_utf8_lossy(&row));
+    }
+    for (si, s) in series.iter().enumerate() {
+        let _ = writeln!(out, "  {} = {}", b"*+ox#@"[si % 6] as char, s.name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_detection() {
+        let mut s = Series::new("a", "gb");
+        s.push(1.0, 50.0);
+        s.push(2.0, 60.0);
+        s.push(3.0, 59.5);
+        assert!(s.roughly_monotone(1.0));
+        assert!(!s.roughly_monotone(0.1));
+    }
+
+    #[test]
+    fn csv_and_chart() {
+        let mut s = Series::new("a", "gb");
+        s.push(1.0, 50.0);
+        s.push(2.0, 80.0);
+        assert_eq!(s.to_csv().lines().count(), 3);
+        let chart = ascii_chart(&[s], 20, 5);
+        assert!(chart.contains('*'));
+    }
+}

@@ -1,0 +1,154 @@
+//! Result table renderer matching the paper's column layout:
+//! Method | Accuracy | Bandwidth (GB) | Compute (TFLOPs) | C3-Score.
+
+use std::fmt::Write as _;
+
+use crate::protocols::RunResult;
+
+/// One printable results table.
+#[derive(Clone, Debug, Default)]
+pub struct ResultTable {
+    pub title: String,
+    rows: Vec<Row>,
+}
+
+#[derive(Clone, Debug)]
+struct Row {
+    method: String,
+    accuracy: f64,
+    acc_std: f64,
+    bandwidth_gb: f64,
+    client_tflops: f64,
+    total_tflops: f64,
+    c3: f64,
+}
+
+impl ResultTable {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self { title: title.into(), rows: Vec::new() }
+    }
+
+    pub fn add(&mut self, method: impl Into<String>, r: &RunResult, acc_std: f64) {
+        self.rows.push(Row {
+            method: method.into(),
+            accuracy: r.best_accuracy,
+            acc_std,
+            bandwidth_gb: r.bandwidth_gb,
+            client_tflops: r.client_tflops,
+            total_tflops: r.total_tflops,
+            c3: r.c3_score,
+        });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Recompute every row's C3-Score with *measured* budgets — the
+    /// paper's §4.4 convention: B_max / C_max are set to the highest
+    /// bandwidth and client-compute consumption among the table's own
+    /// methods (the worst-performing baseline), so the score discriminates
+    /// at any experiment scale.
+    pub fn recompute_c3_measured(&mut self, temp: f64) {
+        let b_max = self.rows.iter().map(|r| r.bandwidth_gb).fold(1e-12, f64::max);
+        let c_max = self.rows.iter().map(|r| r.client_tflops).fold(1e-12, f64::max);
+        let budgets = crate::metrics::Budgets { bandwidth_gb: b_max, client_tflops: c_max, temp };
+        for r in &mut self.rows {
+            r.c3 = crate::metrics::c3_score(r.accuracy, r.bandwidth_gb, r.client_tflops, &budgets);
+        }
+    }
+
+    /// Method name with the best (highest) C3-Score.
+    pub fn best_by_c3(&self) -> Option<&str> {
+        self.rows
+            .iter()
+            .max_by(|a, b| a.c3.partial_cmp(&b.c3).unwrap())
+            .map(|r| r.method.as_str())
+    }
+
+    /// Render an aligned text table (the paper's layout).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let _ = writeln!(
+            out,
+            "{:<28} {:>16} {:>14} {:>20} {:>9}",
+            "Method", "Accuracy", "Bandwidth(GB)", "Compute(TFLOPs)", "C3-Score"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{:<28} {:>10.2}±{:<5.2} {:>14.3} {:>12.2} ({:<6.2}) {:>8.3}",
+                r.method,
+                r.accuracy,
+                r.acc_std,
+                r.bandwidth_gb,
+                r.client_tflops,
+                r.total_tflops,
+                r.c3
+            );
+        }
+        out
+    }
+
+    /// CSV export for EXPERIMENTS.md / downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("method,accuracy,acc_std,bandwidth_gb,client_tflops,total_tflops,c3\n");
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{},{:.3},{:.3},{:.4},{:.4},{:.4},{:.4}",
+                r.method, r.accuracy, r.acc_std, r.bandwidth_gb, r.client_tflops,
+                r.total_tflops, r.c3
+            );
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(acc: f64, c3: f64) -> RunResult {
+        RunResult {
+            protocol: "X".into(),
+            dataset: "d".into(),
+            accuracy: acc,
+            best_accuracy: acc,
+            bandwidth_gb: 1.0,
+            client_tflops: 2.0,
+            total_tflops: 3.0,
+            c3_score: c3,
+            mask_density: 1.0,
+            rounds: 5,
+        }
+    }
+
+    #[test]
+    fn renders_rows_and_best() {
+        let mut t = ResultTable::new("Table X");
+        t.add("A", &result(80.0, 0.7), 0.1);
+        t.add("B", &result(90.0, 0.9), 0.2);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.best_by_c3(), Some("B"));
+        let text = t.render();
+        assert!(text.contains("Table X"));
+        assert!(text.contains("A"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

@@ -1,0 +1,168 @@
+//! A compiled HLO artifact plus its manifest signature, callable with
+//! named host tensors.
+//!
+//! The jax function behind every artifact takes a single dict argument and
+//! returns a dict; the manifest records the flattened order of both, so a
+//! call here is: resolve each input name to a `Tensor`, build XLA literals
+//! in manifest order, execute, decompose the result tuple, and hand back a
+//! name -> tensor map. `state.*` outputs can be written back onto a
+//! `TensorStore` in one call (the layouts are guaranteed to mirror the
+//! inputs by `python/tests/test_aot.py::test_state_round_trip_layout`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, ensure, Context, Result};
+use xla::{ElementType, Literal, PjRtLoadedExecutable};
+
+use super::manifest::ArtifactSpec;
+use super::store::TensorStore;
+use super::tensor::Tensor;
+
+/// Compiled executable + signature.
+pub struct Artifact {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+/// Named outputs of one artifact execution.
+#[derive(Debug, Default)]
+pub struct CallOutput {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl CallOutput {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow!("output `{name}` missing"))
+    }
+
+    pub fn take(&mut self, name: &str) -> Result<Tensor> {
+        self.map
+            .remove(name)
+            .ok_or_else(|| anyhow!("output `{name}` missing"))
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<f32> {
+        Ok(self.get(name)?.item())
+    }
+
+    /// Move every `state.*` output over the matching entries of `store`.
+    /// Tensors are *moved* out of the output map (zero-copy write-back on
+    /// the hot loop — see EXPERIMENTS.md §Perf).
+    pub fn write_state(&mut self, store: &mut TensorStore) {
+        self.write_state_filtered(store, |_| true)
+    }
+
+    /// Move the `state.*` outputs whose name passes `pred` into `store`
+    /// (used to split shared server params from per-client masks).
+    pub fn write_state_filtered<F: Fn(&str) -> bool>(&mut self, store: &mut TensorStore, pred: F) {
+        let keys: Vec<String> = self
+            .map
+            .keys()
+            .filter(|k| (k.as_str() == "state" || k.starts_with("state.")) && pred(k))
+            .cloned()
+            .collect();
+        for k in keys {
+            if let Some(v) = self.map.remove(&k) {
+                store.insert(k, v);
+            }
+        }
+    }
+
+    /// Move every `state.*` output into a fresh store (for init artifacts).
+    pub fn into_state(self) -> TensorStore {
+        let mut store = TensorStore::new();
+        for (k, v) in self.map {
+            if k == "state" || k.starts_with("state.") {
+                store.insert(k, v);
+            }
+        }
+        store
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, t.shape(), bytes)
+        .map_err(|e| anyhow!("literal from shape {:?}: {e}", t.shape()))
+}
+
+fn literal_to_tensor(lit: &Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec: {e}"))?;
+    Tensor::new(shape.to_vec(), data)
+}
+
+impl Artifact {
+    pub(crate) fn new(name: String, spec: ArtifactSpec, exe: PjRtLoadedExecutable) -> Self {
+        Self { name, spec, exe }
+    }
+
+    /// Execute with inputs resolved by name: `extras` first (batch data,
+    /// hyperparameters), then the `stores` in order (persistent state —
+    /// e.g. AdaSplit passes [shared server store, per-client mask store]).
+    /// Every manifest input must resolve; shapes are validated.
+    pub fn call(
+        &self,
+        stores: &[&TensorStore],
+        extras: &[(&str, &Tensor)],
+    ) -> Result<CallOutput> {
+        let mut literals = Vec::with_capacity(self.spec.inputs.len());
+        for input in &self.spec.inputs {
+            let tensor = extras
+                .iter()
+                .find(|(n, _)| *n == input.name)
+                .map(|(_, t)| *t)
+                .or_else(|| stores.iter().find_map(|s| s.get(&input.name).ok()))
+                .ok_or_else(|| {
+                    anyhow!("artifact `{}`: input `{}` unresolved", self.name, input.name)
+                })?;
+            ensure!(
+                tensor.shape() == input.shape.as_slice(),
+                "artifact `{}`: input `{}` shape {:?} != manifest {:?}",
+                self.name,
+                input.name,
+                tensor.shape(),
+                input.shape
+            );
+            literals.push(tensor_to_literal(tensor)?);
+        }
+
+        let result = self
+            .exe
+            .execute::<Literal>(&literals)
+            .map_err(|e| anyhow!("executing `{}`: {e}", self.name))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching `{}` result: {e}", self.name))?;
+        // aot.py lowers with return_tuple=True: root is a tuple of outputs
+        // in manifest order.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing `{}` tuple: {e}", self.name))?;
+        ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact `{}`: got {} outputs, manifest says {}",
+            self.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+
+        let mut map = BTreeMap::new();
+        for (lit, out) in parts.iter().zip(&self.spec.outputs) {
+            let t = literal_to_tensor(lit, &out.shape)
+                .with_context(|| format!("output `{}` of `{}`", out.name, self.name))?;
+            map.insert(out.name.clone(), t);
+        }
+        Ok(CallOutput { map })
+    }
+}

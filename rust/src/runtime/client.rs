@@ -1,0 +1,69 @@
+//! The `Runtime`: a PJRT CPU client plus a compile-on-demand artifact cache.
+//!
+//! HLO *text* is the interchange format (see DESIGN.md §4): jax >= 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; `HloModuleProto::from_text_file` reassigns ids and round-trips
+//! cleanly. Compilation is lazy and cached — a protocol run touches only
+//! the handful of artifacts for its split config.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+use xla::PjRtClient;
+
+use super::artifact::Artifact;
+use super::manifest::Manifest;
+
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and spin up the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Self { client, manifest, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Platform string of the underlying PJRT client (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (compiling on first use) the named artifact.
+    pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))
+        .context("run `make artifacts`?")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling `{name}`: {e}"))?;
+        let artifact = Rc::new(Artifact::new(name.to_string(), spec, exe));
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// Number of artifacts compiled so far (diagnostics / perf logging).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,179 @@
+//! Manifest loader: the contract emitted by `python/compile/aot.py`.
+//!
+//! The manifest pins, per artifact, the exact flattened tensor order of its
+//! inputs and outputs (jax pytree paths), plus per-split-config metadata
+//! (activation shapes, parameter counts) used by the analytic cost model.
+//! Parsed with the in-tree JSON parser (`util::json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// One named tensor slot of an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j.get("shape")?.usize_arr()?,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Signature of one HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(Self {
+            file: j.get("file")?.as_str()?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// Per split-config metadata (`c10_mu1`, ..., `c50_mu1`).
+#[derive(Clone, Debug)]
+pub struct ConfigMeta {
+    pub num_classes: usize,
+    pub k: usize,
+    pub act_shape: Vec<usize>,
+    pub client_params: usize,
+    pub server_params: usize,
+    pub proj_params: usize,
+    pub full_params: usize,
+}
+
+impl ConfigMeta {
+    /// Bytes of one dense split-activation batch (f32).
+    pub fn act_bytes(&self) -> usize {
+        self.act_shape.iter().product::<usize>() * 4
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            num_classes: j.get("num_classes")?.as_usize()?,
+            k: j.get("k")?.as_usize()?,
+            act_shape: j.get("act_shape")?.usize_arr()?,
+            client_params: j.get("client_params")?.as_usize()?,
+            server_params: j.get("server_params")?.as_usize()?,
+            proj_params: j.get("proj_params")?.as_usize()?,
+            full_params: j.get("full_params")?.as_usize()?,
+        })
+    }
+}
+
+/// The full `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub img: usize,
+    pub proj_dim: usize,
+    pub lr: f32,
+    pub tau: f32,
+    pub mask_thresh: f32,
+    pub conv_channels: Vec<usize>,
+    pub fc1: usize,
+    pub configs: BTreeMap<String, ConfigMeta>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut configs = BTreeMap::new();
+        for (k, v) in j.get("configs")?.as_obj()? {
+            configs.insert(k.clone(), ConfigMeta::from_json(v).context(k.clone())?);
+        }
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(k.clone(), ArtifactSpec::from_json(v).context(k.clone())?);
+        }
+        Ok(Self {
+            batch: j.get("batch")?.as_usize()?,
+            img: j.get("img")?.as_usize()?,
+            proj_dim: j.get("proj_dim")?.as_usize()?,
+            lr: j.get("lr")?.as_f64()? as f32,
+            tau: j.get("tau")?.as_f64()? as f32,
+            mask_thresh: j.get("mask_thresh")?.as_f64()? as f32,
+            conv_channels: j.get("conv_channels")?.usize_arr()?,
+            fc1: j.get("fc1")?.as_usize()?,
+            configs,
+            artifacts,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::from_json_text(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))
+    }
+
+    /// Metadata for a split config tag like `c10_mu1`.
+    pub fn config(&self, tag: &str) -> Result<&ConfigMeta> {
+        self.configs
+            .get(tag)
+            .ok_or_else(|| anyhow!("config `{tag}` not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let json = r#"{
+            "batch": 32, "img": 32, "proj_dim": 64, "lr": 0.001,
+            "tau": 0.07, "mask_thresh": 0.01,
+            "conv_channels": [16, 32, 64], "fc1": 128,
+            "configs": {"c10_mu1": {"num_classes": 10, "k": 1,
+                "act_shape": [32, 16, 16, 16], "client_params": 448,
+                "server_params": 100, "proj_params": 10,
+                "full_params": 548}},
+            "artifacts": {"a": {"file": "a.hlo.txt",
+                "inputs": [{"name": "x", "shape": [2, 3], "dtype": "float32"}],
+                "outputs": []}}
+        }"#;
+        let m = Manifest::from_json_text(json).unwrap();
+        assert_eq!(m.artifact("a").unwrap().inputs[0].numel(), 6);
+        assert_eq!(m.config("c10_mu1").unwrap().act_bytes(), 32 * 16 * 16 * 16 * 4);
+        assert!(m.artifact("nope").is_err());
+        assert!((m.lr - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        assert!(Manifest::from_json_text("{\"batch\": 32}").is_err());
+    }
+}

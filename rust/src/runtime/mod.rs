@@ -1,0 +1,20 @@
+//! L3 runtime: loads AOT-compiled HLO-text artifacts and executes them on
+//! the PJRT CPU client (`xla` crate).
+//!
+//! The interchange contract with the Python build path is the **manifest**
+//! (`artifacts/manifest.json`): for every artifact it records the flattened
+//! input/output tensor order (pytree paths from `aot.py`), so this module
+//! can marshal flat `f32` host buffers without knowing anything about the
+//! model. See DESIGN.md §4.
+
+mod artifact;
+mod client;
+mod manifest;
+mod store;
+mod tensor;
+
+pub use artifact::{Artifact, CallOutput};
+pub use client::Runtime;
+pub use manifest::{ConfigMeta, Manifest, TensorSpec};
+pub use store::TensorStore;
+pub use tensor::{weighted_sum, Tensor};

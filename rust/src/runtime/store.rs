@@ -1,0 +1,187 @@
+//! `TensorStore`: named host-side state (parameters, optimizer moments,
+//! masks) for one logical entity — a client model, the server model, one
+//! per-client mask set, an FL model copy.
+//!
+//! Keys are the manifest tensor names (`state.pc.conv1.w`, ...). Artifact
+//! calls read their `state.*` inputs from a store and write the matching
+//! outputs back, so protocol code never touches tensor layouts.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use super::tensor::Tensor;
+
+/// An ordered name -> tensor map (BTreeMap keeps deterministic iteration,
+/// which keeps checksums and tests reproducible).
+#[derive(Clone, Debug, Default)]
+pub struct TensorStore {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl TensorStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.map.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor `{name}` not in store"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.map
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor `{name}` not in store"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.map.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&String, &mut Tensor)> {
+        self.map.iter_mut()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    /// Keys under a dotted prefix, e.g. `prefix("state.pc")`.
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a String> + 'a {
+        self.map
+            .keys()
+            .filter(move |k| k.as_str() == prefix || k.starts_with(&format!("{prefix}.")))
+    }
+
+    /// Sub-store view (cloned) of all tensors under a prefix, re-rooted:
+    /// `sub("state")` maps `state.pc.w` -> `pc.w`.
+    pub fn sub(&self, prefix: &str) -> TensorStore {
+        let dot = format!("{prefix}.");
+        let mut out = TensorStore::new();
+        for (k, v) in &self.map {
+            if let Some(rest) = k.strip_prefix(&dot) {
+                out.insert(rest.to_string(), v.clone());
+            }
+        }
+        out
+    }
+
+    /// Total number of scalar elements across all tensors.
+    pub fn numel(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Total dense payload in bytes (f32).
+    pub fn byte_size(&self) -> usize {
+        self.numel() * 4
+    }
+
+    /// In-place: `self[k] = sum_i w_i * others_i[k]` over matching keys.
+    /// Used by FedAvg-family aggregation. Keys present in `self` but not in
+    /// the key filter are left untouched.
+    pub fn set_weighted_sum<F>(
+        &mut self,
+        others: &[&TensorStore],
+        weights: &[f32],
+        key_filter: F,
+    ) -> Result<()>
+    where
+        F: Fn(&str) -> bool,
+    {
+        ensure!(others.len() == weights.len(), "weights/stores mismatch");
+        let keys: Vec<String> = self
+            .map
+            .keys()
+            .filter(|k| key_filter(k))
+            .cloned()
+            .collect();
+        for k in keys {
+            let mut acc = Tensor::zeros(self.map[&k].shape());
+            for (o, &w) in others.iter().zip(weights) {
+                acc.axpy(w, o.get(&k)?)?;
+            }
+            self.map.insert(k, acc);
+        }
+        Ok(())
+    }
+
+    /// A cheap structural checksum (sum of mean-abs per tensor) used by
+    /// integration tests to detect unintended state mutation.
+    pub fn checksum(&self) -> f64 {
+        self.map
+            .values()
+            .map(|t| t.mean_abs() as f64)
+            .sum()
+    }
+
+    /// True if any tensor holds a NaN/Inf — used for failure injection and
+    /// divergence guards in long runs.
+    pub fn has_non_finite(&self) -> bool {
+        self.map.values().any(|t| t.has_non_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(v: f32) -> TensorStore {
+        let mut s = TensorStore::new();
+        s.insert("state.p.w", Tensor::full(&[2, 2], v));
+        s.insert("state.p.b", Tensor::full(&[2], v));
+        s.insert("state.t", Tensor::scalar(v));
+        s
+    }
+
+    #[test]
+    fn sub_reroots_prefix() {
+        let s = store(1.0);
+        let sub = s.sub("state");
+        assert!(sub.contains("p.w"));
+        assert!(sub.contains("t"));
+        assert_eq!(sub.len(), 3);
+    }
+
+    #[test]
+    fn weighted_sum_averages() {
+        let mut dst = store(0.0);
+        let a = store(1.0);
+        let b = store(3.0);
+        dst.set_weighted_sum(&[&a, &b], &[0.5, 0.5], |k| k.starts_with("state.p"))
+            .unwrap();
+        assert_eq!(dst.get("state.p.w").unwrap().data()[0], 2.0);
+        // filtered-out key untouched
+        assert_eq!(dst.get("state.t").unwrap().item(), 0.0);
+    }
+
+    #[test]
+    fn numel_and_bytes() {
+        let s = store(1.0);
+        assert_eq!(s.numel(), 4 + 2 + 1);
+        assert_eq!(s.byte_size(), 7 * 4);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let s = store(1.0);
+        assert!(s.get("nope").is_err());
+    }
+}

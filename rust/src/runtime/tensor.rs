@@ -1,0 +1,167 @@
+//! Host-side tensor: a shape plus a flat `f32` buffer.
+//!
+//! Everything that crosses the L3/L2 boundary is `f32` (enforced by
+//! `python/tests/test_aot.py::test_f32_only`), so a single concrete type
+//! suffices and all protocol state lives in plain `Vec<f32>` buffers.
+
+use anyhow::{ensure, Result};
+
+/// A dense row-major `f32` tensor on the host.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape + data; validates the element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        ensure!(
+            n == data.len(),
+            "shape {:?} wants {} elements, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// All-`v` tensor of the given shape.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Scalar (rank-0) tensor.
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Scalar value of a rank-0 / single-element tensor.
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.data.len(), 1, "item() on non-scalar");
+        self.data[0]
+    }
+
+    /// Size in bytes when transmitted densely (f32).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Number of elements with |x| > `eps` (sparse-payload accounting).
+    pub fn nnz(&self, eps: f32) -> usize {
+        self.data.iter().filter(|x| x.abs() > eps).count()
+    }
+
+    /// Elementwise in-place: `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        ensure!(self.shape == other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Mean absolute value (diagnostics).
+    pub fn mean_abs(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|x| x.abs()).sum::<f32>() / self.data.len() as f32
+    }
+
+    /// True if any element is NaN or infinite.
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+}
+
+/// Weighted average of tensors: `sum_i w_i * t_i` (weights need not sum to
+/// one — FedNova exploits this). All shapes must match.
+pub fn weighted_sum(tensors: &[&Tensor], weights: &[f32]) -> Result<Tensor> {
+    ensure!(!tensors.is_empty(), "weighted_sum of nothing");
+    ensure!(tensors.len() == weights.len(), "weights/tensors mismatch");
+    let mut out = Tensor::zeros(tensors[0].shape());
+    for (t, &w) in tensors.iter().zip(weights) {
+        out.axpy(w, t)?;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar(4.5);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.item(), 4.5);
+    }
+
+    #[test]
+    fn nnz_counts_above_eps() {
+        let t = Tensor::new(vec![4], vec![0.0, 1e-6, 0.5, -2.0]).unwrap();
+        assert_eq!(t.nnz(1e-4), 2);
+        assert_eq!(t.nnz(0.0), 3);
+    }
+
+    #[test]
+    fn axpy_and_weighted_sum() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![3.0, 2.0, 1.0]).unwrap();
+        let avg = weighted_sum(&[&a, &b], &[0.5, 0.5]).unwrap();
+        assert_eq!(avg.data(), &[2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn axpy_shape_mismatch_errors() {
+        let mut a = Tensor::zeros(&[2]);
+        let b = Tensor::zeros(&[3]);
+        assert!(a.axpy(1.0, &b).is_err());
+    }
+}

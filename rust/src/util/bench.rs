@@ -1,0 +1,82 @@
+//! Micro-benchmark harness used by the `benches/` targets (criterion is
+//! unavailable offline). Supports warmup, N timed iterations, and
+//! mean/p50/p95 reporting, plus a `--quick` env knob the table benches use
+//! to shrink workload scale.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>4} iters  mean {:>10.4}s  p50 {:>10.4}s  p95 {:>10.4}s  min {:>10.4}s",
+            self.name, self.iters, self.mean_s, self.p50_s, self.p95_s, self.min_s
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pick = |q: f64| samples[((samples.len() - 1) as f64 * q).round() as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        p50_s: pick(0.5),
+        p95_s: pick(0.95),
+        min_s: samples[0],
+    }
+}
+
+/// True when `ADASPLIT_BENCH_QUICK=1` or `--quick` is on the CLI — table
+/// benches then run a reduced workload (fewer rounds/samples, 1 seed).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("ADASPLIT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Scale hint for table benches: (rounds, samples/client, test/client,
+/// n_seeds). Full mode approaches the paper's scale; quick mode is a
+/// smoke-level run.
+pub fn bench_scale() -> (usize, usize, usize, usize) {
+    if quick_mode() {
+        (4, 96, 64, 1)
+    } else {
+        (10, 256, 128, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench("noop", 1, 16, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s);
+        assert_eq!(s.iters, 16);
+    }
+}

@@ -1,0 +1,131 @@
+//! TOML-subset config parser: `key = value` lines, `[section]` headers
+//! (flattened to `section.key`), `#` comments, bare strings/quoted
+//! strings/numbers/bools. Covers everything `configs/*.toml` uses.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+/// Parsed flat key -> raw-value map.
+#[derive(Clone, Debug, Default)]
+pub struct KvConf {
+    map: BTreeMap<String, String>,
+}
+
+impl KvConf {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: malformed section header `{raw}`", ln + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got `{raw}`", ln + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                val = val[1..val.len() - 1].to_string();
+            }
+            ensure!(!key.is_empty(), "line {}: empty key", ln + 1);
+            map.insert(key, val);
+        }
+        Ok(Self { map })
+    }
+
+    pub fn raw(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("`{key}` = `{v}`: {e}")),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        Ok(self.get_f64(key, default as f64)? as f32)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("`{key}` = `{v}`: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("`{key}` = `{v}`: {e}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.map.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => bail!("`{key}` = `{v}`: expected true/false"),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.map
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_and_types() {
+        let c = KvConf::parse(
+            "# experiment\nprotocol = \"ada-split\"\nrounds = 7 # inline\n\
+             kappa = 0.75\ntrace = true\n[budgets]\nbandwidth_gb = 35.94\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_str("protocol", ""), "ada-split");
+        assert_eq!(c.get_usize("rounds", 0).unwrap(), 7);
+        assert!((c.get_f64("kappa", 0.0).unwrap() - 0.75).abs() < 1e-12);
+        assert!(c.get_bool("trace", false).unwrap());
+        assert!((c.get_f64("budgets.bandwidth_gb", 0.0).unwrap() - 35.94).abs() < 1e-9);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = KvConf::parse("").unwrap();
+        assert_eq!(c.get_usize("rounds", 20).unwrap(), 20);
+        assert_eq!(c.get_str("dataset", "mixed-cifar"), "mixed-cifar");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(KvConf::parse("no_equals_here\n").is_err());
+        assert!(KvConf::parse("[unclosed\n").is_err());
+        let c = KvConf::parse("rounds = seven\n").unwrap();
+        assert!(c.get_usize("rounds", 0).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Small in-tree utilities that replace registry crates unavailable in the
+//! offline build environment (see Cargo.toml note): a JSON value type +
+//! recursive-descent parser/writer (for `artifacts/manifest.json` and run
+//! exports), a TOML-subset config parser, and a micro-benchmark harness
+//! used by the `benches/` targets.
+
+pub mod bench;
+pub mod json;
+pub mod kvconf;
+
+pub use json::Json;

@@ -1,0 +1,64 @@
+//! Config / packaging integration: every shipped config parses and
+//! validates, and runtime failure modes produce actionable errors.
+
+use adasplit::config::{ExperimentConfig, ProtocolKind};
+use adasplit::runtime::{Manifest, Runtime};
+
+#[test]
+fn shipped_configs_parse_and_validate() {
+    for entry in std::fs::read_dir("configs").expect("configs dir") {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "toml").unwrap_or(false) {
+            let cfg = ExperimentConfig::load_toml(&path)
+                .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+            cfg.validate().unwrap();
+        }
+    }
+}
+
+#[test]
+fn table_configs_carry_paper_budgets() {
+    let c1 = ExperimentConfig::load_toml("configs/table1_noniid.toml").unwrap();
+    assert_eq!(c1.protocol, ProtocolKind::AdaSplit);
+    assert!((c1.budgets.bandwidth_gb - 84.64).abs() < 1e-9);
+    assert!((c1.lambda - 1e-3).abs() < 1e-9);
+    let c2 = ExperimentConfig::load_toml("configs/table2_cifar.toml").unwrap();
+    assert!((c2.budgets.client_tflops - 11.77).abs() < 1e-9);
+    assert!((c2.lambda - 1e-5).abs() < 1e-9);
+}
+
+#[test]
+fn missing_artifacts_dir_is_actionable() {
+    let Err(err) = Runtime::load("/nonexistent/artifacts") else {
+        panic!("expected an error");
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join("adasplit_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_artifact_files_all_exist() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    assert!(m.artifacts.len() >= 40, "expected the full artifact set");
+    for (name, spec) in &m.artifacts {
+        let p = std::path::Path::new("artifacts").join(&spec.file);
+        assert!(p.exists(), "{name}: missing {p:?}");
+    }
+    // the five split configs the experiments need
+    for tag in ["c10_mu1", "c10_mu2", "c10_mu3", "c10_mu4", "c50_mu1"] {
+        assert!(m.configs.contains_key(tag), "missing config {tag}");
+    }
+}

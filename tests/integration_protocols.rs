@@ -1,0 +1,213 @@
+//! End-to-end protocol integration tests at CI scale: every protocol runs
+//! a short experiment, learns past chance, and its cost profile has the
+//! paper's qualitative shape (AdaSplit client compute << FL; local phase
+//! free of traffic; server gradient doubles bandwidth; etc.).
+
+use adasplit::config::{ExperimentConfig, ProtocolKind};
+use adasplit::data::DatasetKind;
+use adasplit::protocols::{run_protocol, run_protocol_recorded};
+use adasplit::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("runtime loads"))
+}
+
+fn quick(protocol: ProtocolKind) -> ExperimentConfig {
+    ExperimentConfig {
+        protocol,
+        rounds: 4,
+        samples_per_client: 96,
+        test_per_client: 64,
+        kappa: 0.5,
+        ..ExperimentConfig::default()
+    }
+}
+
+#[test]
+fn every_protocol_learns_past_chance() {
+    let Some(rt) = runtime() else { return };
+    let chance = 10.0; // 10-class Mixed-CIFAR head
+    for p in ProtocolKind::ALL {
+        let r = run_protocol(&rt, &quick(p)).unwrap();
+        assert!(
+            r.best_accuracy > chance * 1.3,
+            "{}: {:.2}% did not beat chance",
+            p.name(),
+            r.best_accuracy
+        );
+        assert!(r.bandwidth_gb > 0.0, "{} must communicate", p.name());
+        assert!(r.client_tflops > 0.0);
+        assert!(r.c3_score > 0.0 && r.c3_score <= 1.0);
+    }
+}
+
+#[test]
+fn adasplit_local_phase_has_zero_traffic() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick(ProtocolKind::AdaSplit);
+    cfg.rounds = 4;
+    cfg.kappa = 0.5; // rounds 0-1 local, 2-3 global
+    let (_, rec) = run_protocol_recorded(&rt, &cfg).unwrap();
+    assert_eq!(rec.rounds[0].phase, "local");
+    assert_eq!(rec.rounds[1].phase, "local");
+    assert_eq!(rec.rounds[2].phase, "global");
+    assert_eq!(rec.rounds[0].bandwidth_gb, 0.0, "local phase must be silent");
+    assert_eq!(rec.rounds[1].bandwidth_gb, 0.0);
+    assert!(rec.rounds[3].bandwidth_gb > 0.0, "global phase must transmit");
+    // local phase never selects clients for the server
+    assert!(rec.rounds[0].selected.is_empty());
+    assert!(!rec.rounds[3].selected.is_empty());
+}
+
+#[test]
+fn adasplit_client_compute_is_fraction_of_fl() {
+    let Some(rt) = runtime() else { return };
+    let ada = run_protocol(&rt, &quick(ProtocolKind::AdaSplit)).unwrap();
+    let fed = run_protocol(&rt, &quick(ProtocolKind::FedAvg)).unwrap();
+    // paper: ~3x reduction at mu=0.2. Allow slack but require a big gap.
+    assert!(
+        ada.client_tflops < fed.client_tflops / 2.0,
+        "AdaSplit client compute {:.4} vs FedAvg {:.4}",
+        ada.client_tflops,
+        fed.client_tflops
+    );
+}
+
+#[test]
+fn adasplit_uses_less_bandwidth_than_classic_sl() {
+    let Some(rt) = runtime() else { return };
+    let ada = run_protocol(&rt, &quick(ProtocolKind::AdaSplit)).unwrap();
+    let sl = run_protocol(&rt, &quick(ProtocolKind::SlBasic)).unwrap();
+    assert!(
+        ada.bandwidth_gb < sl.bandwidth_gb / 2.0,
+        "AdaSplit {:.4}GB vs SL {:.4}GB",
+        ada.bandwidth_gb,
+        sl.bandwidth_gb
+    );
+}
+
+#[test]
+fn scaffold_doubles_fl_bandwidth() {
+    let Some(rt) = runtime() else { return };
+    let fed = run_protocol(&rt, &quick(ProtocolKind::FedAvg)).unwrap();
+    let sca = run_protocol(&rt, &quick(ProtocolKind::Scaffold)).unwrap();
+    let ratio = sca.bandwidth_gb / fed.bandwidth_gb;
+    assert!((1.9..=2.1).contains(&ratio), "ratio {ratio}");
+}
+
+#[test]
+fn server_gradient_ablation_doubles_global_traffic() {
+    let Some(rt) = runtime() else { return };
+    let base = run_protocol(&rt, &quick(ProtocolKind::AdaSplit)).unwrap();
+    let mut cfg = quick(ProtocolKind::AdaSplit);
+    cfg.server_grad_to_client = true;
+    let grad = run_protocol(&rt, &cfg).unwrap();
+    let ratio = grad.bandwidth_gb / base.bandwidth_gb;
+    assert!((1.7..=2.1).contains(&ratio), "ratio {ratio}");
+}
+
+#[test]
+fn kappa_one_means_pure_local_training() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick(ProtocolKind::AdaSplit);
+    cfg.kappa = 1.0;
+    let r = run_protocol(&rt, &cfg).unwrap();
+    assert_eq!(r.bandwidth_gb, 0.0, "kappa=1 must never talk to the server");
+    assert_eq!(r.total_tflops, r.client_tflops, "no server compute either");
+}
+
+#[test]
+fn eta_scales_selected_clients_and_traffic() {
+    let Some(rt) = runtime() else { return };
+    let mut lo = quick(ProtocolKind::AdaSplit);
+    lo.eta = 0.2; // 1 of 5 clients
+    let mut hi = quick(ProtocolKind::AdaSplit);
+    hi.eta = 1.0; // all 5
+    let rlo = run_protocol(&rt, &lo).unwrap();
+    let rhi = run_protocol(&rt, &hi).unwrap();
+    let ratio = rhi.bandwidth_gb / rlo.bandwidth_gb;
+    assert!((4.0..=6.0).contains(&ratio), "eta 1.0/0.2 traffic ratio {ratio}");
+}
+
+#[test]
+fn activation_l1_shrinks_payload() {
+    let Some(rt) = runtime() else { return };
+    let mut base = quick(ProtocolKind::AdaSplit);
+    base.rounds = 8;
+    base.kappa = 0.25; // 6 global rounds so the L1 has time to bite
+    base.samples_per_client = 160;
+    base.sparse_eps = 0.2;
+    let dense = run_protocol(&rt, &base).unwrap();
+    let mut cfg = base.clone();
+    cfg.beta = 1e-1; // aggressive sparsity at this tiny scale
+    let sparse = run_protocol(&rt, &cfg).unwrap();
+    assert!(
+        sparse.bandwidth_gb < dense.bandwidth_gb,
+        "sparse {:.5} !< dense {:.5}",
+        sparse.bandwidth_gb,
+        dense.bandwidth_gb
+    );
+    // compute is untouched by payload sparsification
+    assert!((sparse.client_tflops - dense.client_tflops).abs() < 1e-9);
+}
+
+#[test]
+fn runs_are_deterministic_given_seed() {
+    let Some(rt) = runtime() else { return };
+    let a = run_protocol(&rt, &quick(ProtocolKind::AdaSplit)).unwrap();
+    let b = run_protocol(&rt, &quick(ProtocolKind::AdaSplit)).unwrap();
+    assert_eq!(a.best_accuracy, b.best_accuracy);
+    assert_eq!(a.bandwidth_gb, b.bandwidth_gb);
+    let c = run_protocol(&rt, &quick(ProtocolKind::AdaSplit).with_seed(9)).unwrap();
+    // different seed => different data/init => (almost surely) different acc
+    assert_ne!(a.best_accuracy, c.best_accuracy);
+}
+
+#[test]
+fn fednova_handles_imbalanced_clients() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick(ProtocolKind::FedNova);
+    cfg.imbalance = 2.0; // client sizes 1:2:4:8:16 (geometric)
+    let r = run_protocol(&rt, &cfg).unwrap();
+    assert!(r.best_accuracy > 13.0, "FedNova under imbalance: {:.2}%", r.best_accuracy);
+}
+
+#[test]
+fn mixed_noniid_protocols_run_on_50_class_head() {
+    let Some(rt) = runtime() else { return };
+    for p in [ProtocolKind::AdaSplit, ProtocolKind::FedAvg, ProtocolKind::SlBasic] {
+        let mut cfg = quick(p);
+        cfg.dataset = DatasetKind::MixedNonIid;
+        cfg.budgets = adasplit::metrics::Budgets::paper_mixed_noniid();
+        cfg.lambda = 1e-3;
+        let r = run_protocol(&rt, &cfg).unwrap();
+        // 50-class head, each client sees 10 classes; chance on own data = 10%
+        assert!(
+            r.best_accuracy > 3.0,
+            "{} on NonIID: {:.2}%",
+            p.name(),
+            r.best_accuracy
+        );
+    }
+}
+
+#[test]
+fn adasplit_masks_sparsify_with_large_lambda() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick(ProtocolKind::AdaSplit);
+    cfg.kappa = 0.25; // long global phase so masks actually train
+    cfg.rounds = 8;
+    cfg.eta = 1.0; // every client's mask updated every iteration
+    cfg.samples_per_client = 320;
+    cfg.lambda = 0.05; // heavy L1
+    let r = run_protocol(&rt, &cfg).unwrap();
+    assert!(
+        r.mask_density < 0.9,
+        "strong lambda must push mask entries to zero: {}",
+        r.mask_density
+    );
+}

@@ -1,0 +1,177 @@
+//! Integration tests over the runtime layer: artifact loading, manifest
+//! contracts, state round-trips, and cross-language consistency between
+//! the Rust analytic model spec and the Python-emitted manifest.
+//!
+//! These require `make artifacts` to have run; they are skipped (with a
+//! loud message) when the artifacts directory is absent.
+
+use adasplit::model::ModelSpec;
+use adasplit::runtime::{Runtime, Tensor};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("runtime loads"))
+}
+
+#[test]
+fn manifest_param_counts_match_rust_spec() {
+    let Some(rt) = runtime() else { return };
+    // the Rust-side FLOP model must agree exactly with the Python model
+    for (tag, meta) in &rt.manifest.configs {
+        let spec = ModelSpec::from_manifest(&rt.manifest, meta.num_classes);
+        assert_eq!(spec.client_params(meta.k), meta.client_params, "{tag} client");
+        assert_eq!(spec.server_params(meta.k), meta.server_params, "{tag} server");
+        assert_eq!(spec.full_params(), meta.full_params, "{tag} full");
+        assert_eq!(spec.proj_params(meta.k), meta.proj_params, "{tag} proj");
+        assert_eq!(
+            spec.act_elems(meta.k) * rt.manifest.batch,
+            meta.act_shape.iter().product::<usize>(),
+            "{tag} act"
+        );
+    }
+}
+
+#[test]
+fn init_artifact_is_deterministic_and_seed_sensitive() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.artifact("c10_mu1_init_client").unwrap();
+    let a = art.call(&[], &[("seed", &Tensor::scalar(5.0))]).unwrap().into_state();
+    let b = art.call(&[], &[("seed", &Tensor::scalar(5.0))]).unwrap().into_state();
+    let c = art.call(&[], &[("seed", &Tensor::scalar(6.0))]).unwrap().into_state();
+    assert_eq!(a.checksum(), b.checksum());
+    assert_ne!(a.checksum(), c.checksum());
+    // Adam moments start at zero, step at zero
+    assert_eq!(a.get("state.t").unwrap().item(), 0.0);
+    assert_eq!(a.get("state.mc.conv1.w").unwrap().mean_abs(), 0.0);
+}
+
+#[test]
+fn client_step_round_trips_state_and_learns() {
+    let Some(rt) = runtime() else { return };
+    let init = rt.artifact("c10_mu1_init_client").unwrap();
+    let step = rt.artifact("c10_mu1_client_step").unwrap();
+    let mut state = init.call(&[], &[("seed", &Tensor::scalar(1.0))]).unwrap().into_state();
+
+    // deterministic but non-degenerate inputs (constant images make the
+    // NT-Xent similarity matrix uniform and the gradient vanish)
+    let mut rng = adasplit::data::Rng::new(7);
+    let xv: Vec<f32> = (0..32 * 32 * 32 * 3).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let x = Tensor::new(vec![32, 32, 32, 3], xv).unwrap();
+    let mut yv = vec![0.0f32; 32];
+    for (i, y) in yv.iter_mut().enumerate() {
+        *y = (i % 2) as f32;
+    }
+    let y = Tensor::new(vec![32], yv).unwrap();
+    let ga = Tensor::zeros(&[32, 16, 16, 16]);
+    let zero = Tensor::scalar(0.0);
+
+    let names_before: Vec<String> = state.names().cloned().collect();
+    let mut losses = Vec::new();
+    for i in 0..5 {
+        let mut out = step
+            .call(
+                &[&state],
+                &[("x", &x), ("y", &y), ("beta", &zero), ("grad_a", &ga),
+                  ("use_grad", &zero)],
+            )
+            .unwrap();
+        out.write_state(&mut state);
+        let loss = out.scalar("loss").unwrap();
+        assert!(loss.is_finite(), "loss finite at step {i}");
+        losses.push(loss);
+    }
+    // same keys after write-back (manifest round-trip guarantee)
+    let names_after: Vec<String> = state.names().cloned().collect();
+    assert_eq!(names_before, names_after);
+    // step counter advanced, loss trending down on a fixed batch
+    assert_eq!(state.get("state.t").unwrap().item(), 5.0);
+    assert!(losses[4] < losses[0], "{losses:?}");
+    assert!(!state.has_non_finite());
+}
+
+#[test]
+fn artifact_rejects_bad_shapes_and_unresolved_inputs() {
+    let Some(rt) = runtime() else { return };
+    let step = rt.artifact("c10_mu1_client_fwd").unwrap();
+    // missing input
+    assert!(step.call(&[], &[]).is_err());
+    // wrong shape
+    let init = rt.artifact("c10_mu1_init_client").unwrap();
+    let state = init.call(&[], &[("seed", &Tensor::scalar(1.0))]).unwrap().into_state();
+    let root = state.sub("state");
+    let bad_x = Tensor::zeros(&[32, 16, 16, 3]);
+    assert!(step.call(&[&root], &[("x", &bad_x)]).is_err());
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.artifact("does_not_exist").is_err());
+}
+
+#[test]
+fn artifact_cache_compiles_once() {
+    let Some(rt) = runtime() else { return };
+    let before = rt.compiled_count();
+    let _a = rt.artifact("c10_mu1_client_fwd").unwrap();
+    let _b = rt.artifact("c10_mu1_client_fwd").unwrap();
+    assert_eq!(rt.compiled_count(), before + 1);
+}
+
+#[test]
+fn sl_grad_roundtrip_shapes() {
+    let Some(rt) = runtime() else { return };
+    let init_c = rt.artifact("c10_mu1_init_sl_client").unwrap();
+    let init_s = rt.artifact("c10_mu1_init_sl_server").unwrap();
+    let fwd = rt.artifact("c10_mu1_client_fwd").unwrap();
+    let sstep = rt.artifact("c10_mu1_sl_server_step").unwrap();
+    let cbwd = rt.artifact("c10_mu1_client_bwd").unwrap();
+
+    let mut cstate = init_c.call(&[], &[("seed", &Tensor::scalar(1.0))]).unwrap().into_state();
+    let mut sstate = init_s.call(&[], &[("seed", &Tensor::scalar(2.0))]).unwrap().into_state();
+
+    let x = Tensor::full(&[32, 32, 32, 3], 0.05);
+    let y = Tensor::zeros(&[32]);
+    let acts = fwd
+        .call(&[&cstate.sub("state")], &[("x", &x)])
+        .unwrap()
+        .take("acts")
+        .unwrap();
+    assert_eq!(acts.shape(), &[32, 16, 16, 16]);
+
+    let mut out = sstep.call(&[&sstate], &[("a", &acts), ("y", &y)]).unwrap();
+    out.write_state(&mut sstate);
+    let grad_a = out.take("grad_a").unwrap();
+    assert_eq!(grad_a.shape(), acts.shape());
+    assert!(grad_a.mean_abs() > 0.0, "gradient must be nonzero");
+
+    let before = cstate.checksum();
+    let mut cb = cbwd.call(&[&cstate], &[("x", &x), ("grad_a", &grad_a)]).unwrap();
+    cb.write_state(&mut cstate);
+    assert_ne!(before, cstate.checksum(), "client params must move");
+}
+
+#[test]
+fn server_eval_counts_bounded_by_valid() {
+    let Some(rt) = runtime() else { return };
+    let init_s = rt.artifact("c10_mu1_init_server").unwrap();
+    let eval = rt.artifact("c10_mu1_server_eval").unwrap();
+    let sstate = init_s.call(&[], &[("seed", &Tensor::scalar(3.0))]).unwrap().into_state();
+    let root = sstate.sub("state");
+
+    let a = Tensor::full(&[32, 16, 16, 16], 0.1);
+    let y = Tensor::zeros(&[32]);
+    let mut vv = vec![0.0f32; 32];
+    for v in vv.iter_mut().take(7) {
+        *v = 1.0;
+    }
+    let valid = Tensor::new(vec![32], vv).unwrap();
+    let out = eval
+        .call(&[&root], &[("a", &a), ("y", &y), ("valid", &valid)])
+        .unwrap();
+    let correct = out.scalar("correct").unwrap();
+    assert!((0.0..=7.0).contains(&correct), "correct={correct} must respect valid mask");
+}

@@ -1,0 +1,213 @@
+//! Property-based tests over the coordinator's pure invariants, driven by
+//! the in-tree deterministic RNG (the registry `proptest` crate is not
+//! available in this offline environment; the same shrink-free randomized
+//! strategy is used: many seeded cases per property, with the failing seed
+//! printed by the assertion message).
+
+use adasplit::data::partition::imbalanced_sizes;
+use adasplit::data::{build_partition, DatasetKind, Rng};
+use adasplit::metrics::{c3_score, mean_std, Budgets};
+use adasplit::model::ModelSpec;
+use adasplit::orchestrator::UcbOrchestrator;
+use adasplit::runtime::{Tensor, TensorStore};
+use adasplit::util::Json;
+
+const CASES: u64 = 200;
+
+#[test]
+fn prop_c3_monotone_and_bounded() {
+    let mut r = Rng::new(11);
+    for case in 0..CASES {
+        let b = Budgets::new(r.uniform(0.1, 100.0), r.uniform(0.1, 100.0));
+        let acc = r.uniform(0.0, 100.0);
+        let bw = r.uniform(0.0, 200.0);
+        let c = r.uniform(0.0, 200.0);
+        let s = c3_score(acc, bw, c, &b);
+        assert!((0.0..=1.0).contains(&s), "case {case}: s={s}");
+        // more accuracy never hurts; more cost never helps
+        assert!(c3_score(acc + 1.0, bw, c, &b) >= s, "case {case}");
+        assert!(c3_score(acc, bw + 1.0, c, &b) <= s, "case {case}");
+        assert!(c3_score(acc, bw, c + 1.0, &b) <= s, "case {case}");
+    }
+}
+
+#[test]
+fn prop_ucb_selection_size_and_membership() {
+    let mut r = Rng::new(22);
+    for case in 0..CASES {
+        let n = 1 + r.below(12);
+        let mut ucb = UcbOrchestrator::new(n, r.uniform(0.5, 1.0));
+        for _ in 0..r.below(30) {
+            let k = 1 + r.below(n);
+            let sel = ucb.select(k);
+            assert_eq!(sel.len(), k.min(n), "case {case}");
+            assert!(sel.iter().all(|&i| i < n), "case {case}");
+            // sorted unique
+            assert!(sel.windows(2).all(|w| w[0] < w[1]), "case {case}");
+            let obs: Vec<(usize, f64)> =
+                sel.iter().map(|&i| (i, r.uniform(0.0, 10.0))).collect();
+            ucb.update(&obs);
+        }
+    }
+}
+
+#[test]
+fn prop_ucb_prefers_higher_loss_clients_eventually() {
+    let mut r = Rng::new(33);
+    for case in 0..50 {
+        let n = 3 + r.below(5);
+        let hot = r.below(n);
+        let mut ucb = UcbOrchestrator::new(n, 0.9);
+        for _ in 0..100 {
+            let sel = ucb.select(n); // observe everyone
+            let obs: Vec<(usize, f64)> = sel
+                .iter()
+                .map(|&i| (i, if i == hot { 8.0 } else { 0.5 }))
+                .collect();
+            ucb.update(&obs);
+        }
+        let top = ucb.select(1);
+        assert_eq!(top, vec![hot], "case {case}: hot client must rank first");
+    }
+}
+
+#[test]
+fn prop_imbalanced_sizes_sum_and_positivity() {
+    let mut r = Rng::new(44);
+    for case in 0..CASES {
+        let n = 1 + r.below(10);
+        let base = 64 + r.below(512);
+        let imb = r.uniform(1.0, 3.0);
+        let sizes = imbalanced_sizes(n, base, imb);
+        assert_eq!(sizes.len(), n, "case {case}");
+        assert!(sizes.iter().all(|&s| s >= 32), "case {case}: {sizes:?}");
+        let total: usize = sizes.iter().sum();
+        let expect = n * base;
+        assert!(
+            (total as f64 - expect as f64).abs() / expect as f64 <= 0.30,
+            "case {case}: total {total} vs {expect}"
+        );
+        // monotone when imbalance > 1
+        if imb > 1.01 {
+            assert!(sizes.windows(2).all(|w| w[0] <= w[1]), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_weighted_sum_is_convex_combination() {
+    let mut r = Rng::new(55);
+    for case in 0..CASES {
+        let len = 1 + r.below(100);
+        let k = 1 + r.below(5);
+        let stores: Vec<TensorStore> = (0..k)
+            .map(|_| {
+                let mut s = TensorStore::new();
+                let data: Vec<f32> = (0..len).map(|_| r.normal_f32(0.0, 2.0)).collect();
+                s.insert("state.p.w", Tensor::new(vec![len], data).unwrap());
+                s
+            })
+            .collect();
+        let mut w: Vec<f32> = (0..k).map(|_| r.next_f32() + 0.01).collect();
+        let total: f32 = w.iter().sum();
+        w.iter_mut().for_each(|x| *x /= total);
+
+        let refs: Vec<&TensorStore> = stores.iter().collect();
+        let mut dst = stores[0].clone();
+        dst.set_weighted_sum(&refs, &w, |key| key.starts_with("state.p")).unwrap();
+        let avg = dst.get("state.p.w").unwrap();
+        for i in 0..len {
+            let vals: Vec<f32> = stores
+                .iter()
+                .map(|s| s.get("state.p.w").unwrap().data()[i])
+                .collect();
+            let lo = vals.iter().cloned().fold(f32::MAX, f32::min);
+            let hi = vals.iter().cloned().fold(f32::MIN, f32::max);
+            let v = avg.data()[i];
+            assert!(
+                v >= lo - 1e-4 && v <= hi + 1e-4,
+                "case {case}: {v} outside [{lo}, {hi}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_partition_labels_in_client_class_set() {
+    let mut r = Rng::new(66);
+    for case in 0..20 {
+        let kind = if r.next_f64() < 0.5 {
+            DatasetKind::MixedCifar
+        } else {
+            DatasetKind::MixedNonIid
+        };
+        let n = 1 + r.below(7);
+        let parts = build_partition(kind, n, 64, 32, r.uniform(1.0, 2.0), case).unwrap();
+        for c in &parts {
+            for &y in c.train_y.iter().chain(c.test_y.iter()) {
+                assert!(
+                    c.classes.contains(&(y as usize)),
+                    "case {case}: label {y} outside {:?}",
+                    c.classes
+                );
+                assert!((y as usize) < kind.num_classes(), "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_flop_model_additivity() {
+    let mut r = Rng::new(77);
+    for _ in 0..CASES {
+        let nc = 2 + r.below(100);
+        let spec = ModelSpec::default_for(nc);
+        for k in 1..=4 {
+            let total = spec.client_fwd_flops(k) + spec.server_fwd_flops(k);
+            assert!((total - spec.full_fwd_flops()).abs() < 1e-6);
+            assert_eq!(spec.client_params(k) + spec.server_params(k), spec.full_params());
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    let mut r = Rng::new(88);
+    fn gen(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.next_f64() < 0.5),
+            2 => Json::Num((r.normal() * 100.0).round() / 4.0),
+            3 => Json::Str(format!("k{}", r.below(1000))),
+            4 => Json::Arr((0..r.below(5)).map(|_| gen(r, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..r.below(5) {
+                    m.insert(format!("f{i}"), gen(r, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    for case in 0..CASES {
+        let j = gen(&mut r, 3);
+        let pretty = Json::parse(&j.to_string_pretty());
+        let compact = Json::parse(&j.to_string_compact());
+        assert_eq!(pretty.unwrap(), j, "case {case} pretty");
+        assert_eq!(compact.unwrap(), j, "case {case} compact");
+    }
+}
+
+#[test]
+fn prop_mean_std_bounds() {
+    let mut r = Rng::new(99);
+    for case in 0..CASES {
+        let n = 1 + r.below(50);
+        let xs: Vec<f64> = (0..n).map(|_| r.uniform(-10.0, 10.0)).collect();
+        let (m, s) = mean_std(&xs);
+        let lo = xs.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = xs.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(m >= lo - 1e-12 && m <= hi + 1e-12, "case {case}");
+        assert!(s >= 0.0 && s <= (hi - lo) + 1e-12, "case {case}");
+    }
+}
