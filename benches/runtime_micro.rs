@@ -6,9 +6,10 @@
 
 use adasplit::config::ExperimentConfig;
 use adasplit::data::{build_partition, DatasetKind, Rng, SyntheticDataset};
+use adasplit::engine::ClientPool;
 use adasplit::orchestrator::UcbOrchestrator;
 use adasplit::protocols::Env;
-use adasplit::runtime::{Runtime, Tensor};
+use adasplit::runtime::{Runtime, Tensor, TensorStore};
 use adasplit::util::bench::{bench, quick_mode};
 
 fn main() -> anyhow::Result<()> {
@@ -112,9 +113,57 @@ fn main() -> anyhow::Result<()> {
         dst.set_weighted_sum(&refs, &[0.2; 5], |k| k.starts_with("state.p")).unwrap();
     }));
 
+    // ---- engine scaling: one training "round" (client_step fan-out) at
+    //      1/2/4/8 workers, so the speedup lands in the bench trajectory --
+    let n_par = 8usize;
+    let par_states: Vec<TensorStore> = (0..n_par)
+        .map(|i| env.init_state("c10_mu1_init_client", 10.0 + i as f32))
+        .collect::<anyhow::Result<_>>()?;
+    let mut round_stats = Vec::new();
+    for &threads in &[1usize, 2, 4, 8] {
+        let pool = ClientPool::new(threads);
+        let s = bench(
+            &format!("engine: round of {n_par} client_steps @{threads}T"),
+            1,
+            iters,
+            || {
+                pool.run(n_par, |i| {
+                    client_step
+                        .call(
+                            &[&par_states[i]],
+                            &[("x", &b.x), ("y", &b.y), ("beta", &beta),
+                              ("grad_a", &zero_ga), ("use_grad", &zero)],
+                        )
+                        .map(|_| ())
+                })
+                .unwrap();
+            },
+        );
+        round_stats.push((threads, s.clone()));
+        stats.push(s);
+    }
+
     println!("\n== runtime_micro ==");
     for s in &stats {
         println!("{}", s.report());
+    }
+
+    // round-throughput summary across the threads axis
+    let serial_mean = round_stats[0].1.mean_s;
+    if std::env::var("ADASPLIT_PARALLEL_XLA").as_deref() != Ok("1") {
+        println!(
+            "\nnote: PJRT execution is serialized by default; set \
+             ADASPLIT_PARALLEL_XLA=1 on an Rc->Arc-patched xla-rs build \
+             (DESIGN.md §5) to measure true execution overlap"
+        );
+    }
+    println!("\nengine round throughput ({n_par} clients/round):");
+    for (threads, s) in &round_stats {
+        println!(
+            "  {threads} worker(s): {:>8.2} clients/s  speedup x{:.2}",
+            n_par as f64 / s.mean_s,
+            serial_mean / s.mean_s
+        );
     }
 
     // coordinator overhead summary: pure-Rust work per training iteration

@@ -124,6 +124,8 @@ pub struct ExperimentConfig {
     pub trace: bool,
     /// artifacts directory
     pub artifacts_dir: String,
+    /// engine worker threads for per-client fan-out (0 = host parallelism)
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -151,6 +153,7 @@ impl Default for ExperimentConfig {
             budgets: Budgets::paper_mixed_cifar(),
             trace: false,
             artifacts_dir: "artifacts".into(),
+            threads: 0,
         }
     }
 }
@@ -184,8 +187,8 @@ impl ExperimentConfig {
             "test_per_client", "imbalance", "seed", "kappa", "eta", "mu",
             "gamma", "lambda", "beta", "server_grad_to_client", "prox_mu",
             "local_epochs", "eval_every", "sparse_eps", "trace",
-            "artifacts_dir", "budgets.bandwidth_gb", "budgets.client_tflops",
-            "budgets.temp",
+            "artifacts_dir", "threads", "budgets.bandwidth_gb",
+            "budgets.client_tflops", "budgets.temp",
         ];
         for k in kv.keys() {
             ensure!(KNOWN.contains(&k.as_str()), "unknown config key `{k}`");
@@ -221,6 +224,7 @@ impl ExperimentConfig {
             },
             trace: kv.get_bool("trace", false)?,
             artifacts_dir: kv.get_str("artifacts_dir", &d.artifacts_dir),
+            threads: kv.get_usize("threads", d.threads)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -251,6 +255,16 @@ impl ExperimentConfig {
     /// Clients selected per global-phase iteration.
     pub fn selected_per_iter(&self) -> usize {
         ((self.eta * self.clients as f64).round() as usize).clamp(1, self.clients)
+    }
+
+    /// Resolved engine worker count (`threads == 0` means "use the host's
+    /// available parallelism"). Never returns 0.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::engine::available_threads()
+        } else {
+            self.threads
+        }
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -308,6 +322,11 @@ impl ExperimentConfig {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
         self
     }
 
@@ -392,6 +411,17 @@ mod tests {
         assert!(ExperimentConfig::from_kv_text("roundz = 3\n").is_err());
         assert!(ExperimentConfig::from_kv_text("protocol = \"sgd\"\n").is_err());
         assert!(ExperimentConfig::from_kv_text("kappa = 2.0\n").is_err());
+    }
+
+    #[test]
+    fn threads_default_auto_and_parse() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.threads, 0, "default is auto");
+        assert!(d.effective_threads() >= 1);
+        let c = ExperimentConfig::from_kv_text("threads = 4\n").unwrap();
+        assert_eq!(c.threads, 4);
+        assert_eq!(c.effective_threads(), 4);
+        assert_eq!(ExperimentConfig::default().with_threads(2).threads, 2);
     }
 
     #[test]

@@ -1,0 +1,283 @@
+//! Parallel client-execution engine: a scoped-thread worker pool that fans
+//! per-client work out across OS threads and merges the results back in
+//! client-id order.
+//!
+//! The determinism contract (DESIGN.md §5): a fan-out closure may read
+//! shared state (`&Env`, compiled artifacts, round-start snapshots) and
+//! mutate only *its own* slot, and every reduction over the returned
+//! per-client values happens on the caller's thread in client-id order.
+//! Because the accumulation tree is fixed by construction — independent of
+//! how indices land on workers — a run with `--threads 8` is bit-identical
+//! to `--threads 1`, which executes the very same closures inline in the
+//! same order.
+//!
+//! The pool is deliberately dependency-free (`std::thread::scope` + an
+//! atomic work index): workers claim indices from a shared counter, so a
+//! slow client (compile hit, big batch list) does not stall the others.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+/// Worker threads available on this host (>= 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Divide a thread budget across a nesting level with `n` independent
+/// units of work: returns `(outer, per_unit)` where `outer` units run
+/// concurrently and each gets `per_unit` threads for its own inner
+/// fan-outs. Division (not multiplication) keeps total concurrency ~
+/// `budget` however deep the nesting (`compare` → `run_seeds` → per-run
+/// pool). Both components are >= 1.
+pub fn split_budget(budget: usize, n: usize) -> (usize, usize) {
+    let outer = budget.min(n).max(1);
+    (outer, (budget / outer).max(1))
+}
+
+/// Anything the engine can fan client work out over. Implemented by the
+/// protocol `Env`; kept as a trait so the engine has no protocol
+/// dependency.
+pub trait ParallelEnv {
+    fn n_clients(&self) -> usize;
+    /// Resolved worker count (never 0).
+    fn threads(&self) -> usize;
+}
+
+/// Fan `f(i)` out over clients `0..env.n_clients()` and return the results
+/// in client-id order. See [`par_indexed`] for the execution contract.
+pub fn par_clients<E, T, F>(env: &E, f: F) -> Result<Vec<T>>
+where
+    E: ParallelEnv,
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    par_indexed(env.threads(), env.n_clients(), f)
+}
+
+/// A sized worker pool for round-level fan-out/fan-in.
+///
+/// `threads == 0` means "auto" (host parallelism). With one thread every
+/// `run*` call degenerates to an inline serial loop over the same closures
+/// in the same order — the basis of the serial/parallel equivalence
+/// guarantee.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientPool {
+    threads: usize,
+}
+
+impl ClientPool {
+    pub fn new(threads: usize) -> Self {
+        Self { threads: if threads == 0 { available_threads() } else { threads } }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0..n)` on the pool; results come back in index order.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+    {
+        par_indexed(self.threads, n, f)
+    }
+
+    /// Run `f(i, &mut states[i])` on the pool with each worker holding an
+    /// exclusive borrow of its claimed slot; results in index order.
+    pub fn run_mut<S, T, F>(&self, states: &mut [S], f: F) -> Result<Vec<T>>
+    where
+        S: Send,
+        T: Send,
+        F: Fn(usize, &mut S) -> Result<T> + Sync,
+    {
+        par_slice_mut(self.threads, states, f)
+    }
+}
+
+/// Execute `f(i)` for `i in 0..n` on up to `threads` workers and return
+/// the results in index order. Errors are surfaced deterministically: the
+/// lowest-index failure wins, regardless of which worker hit it first.
+pub fn par_indexed<T, F>(threads: usize, n: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let workers = threads.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
+            });
+        }
+    });
+
+    collect_slots(slots)
+}
+
+/// Raw-pointer wrapper that lets scoped workers carve disjoint `&mut`
+/// element borrows out of one slice. Soundness relies on the atomic work
+/// index handing every slot index to exactly one worker.
+struct SlicePtr<S>(*mut S);
+
+// SAFETY: `SlicePtr` is only shared between scoped workers that access
+// disjoint indices (each index is claimed exactly once from the atomic
+// counter), so concurrent `&mut` borrows never alias.
+unsafe impl<S: Send> Sync for SlicePtr<S> {}
+
+/// Execute `f(i, &mut states[i])` for every slot on up to `threads`
+/// workers; results in index order, lowest-index error wins.
+pub fn par_slice_mut<S, T, F>(threads: usize, states: &mut [S], f: F) -> Result<Vec<T>>
+where
+    S: Send,
+    T: Send,
+    F: Fn(usize, &mut S) -> Result<T> + Sync,
+{
+    let n = states.len();
+    let workers = threads.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return states.iter_mut().enumerate().map(|(i, s)| f(i, s)).collect();
+    }
+
+    let base = SlicePtr(states.as_mut_ptr());
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: `i` was claimed exactly once above, so this is
+                // the only live borrow of `states[i]`; the scope outlives
+                // no borrow (workers join before `states` is touched
+                // again).
+                let slot = unsafe { &mut *base.0.add(i) };
+                let r = f(i, slot);
+                *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
+            });
+        }
+    });
+
+    collect_slots(slots)
+}
+
+fn collect_slots<T>(slots: Vec<Mutex<Option<Result<T>>>>) -> Result<Vec<T>> {
+    let mut out = Vec::with_capacity(slots.len());
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().unwrap_or_else(|e| e.into_inner()) {
+            Some(r) => out.push(r?),
+            None => return Err(anyhow!("engine: slot {i} produced no result")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_index_order() {
+        for threads in [1, 2, 4, 8] {
+            let v = par_indexed(threads, 64, |i| Ok(i * i)).unwrap();
+            assert_eq!(v, (0..64).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_agree_on_float_work() {
+        // per-index work is self-contained, so any thread count must
+        // produce bit-identical values
+        let work = |i: usize| -> Result<f64> {
+            let mut acc = 0.0f64;
+            for k in 1..200 {
+                acc += ((i * k) as f64).sin() / k as f64;
+            }
+            Ok(acc)
+        };
+        let serial = par_indexed(1, 32, work).unwrap();
+        for threads in [2, 4, 8] {
+            assert_eq!(serial, par_indexed(threads, 32, work).unwrap());
+        }
+    }
+
+    #[test]
+    fn lowest_index_error_wins() {
+        for threads in [1, 4] {
+            let r = par_indexed(threads, 16, |i| {
+                if i % 5 == 3 {
+                    Err(anyhow!("boom {i}"))
+                } else {
+                    Ok(i)
+                }
+            });
+            assert_eq!(r.unwrap_err().to_string(), "boom 3", "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_mut_updates_every_slot_exactly_once() {
+        for threads in [1, 3, 8] {
+            let mut xs: Vec<u64> = (0..40).collect();
+            let doubled = ClientPool::new(threads)
+                .run_mut(&mut xs, |i, x| {
+                    *x *= 2;
+                    Ok(i as u64)
+                })
+                .unwrap();
+            assert_eq!(xs, (0..40).map(|i| i * 2).collect::<Vec<_>>());
+            assert_eq!(doubled, (0..40).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn split_budget_divides_not_multiplies() {
+        assert_eq!(split_budget(8, 7), (7, 1));
+        assert_eq!(split_budget(16, 7), (7, 2));
+        assert_eq!(split_budget(2, 7), (2, 1));
+        assert_eq!(split_budget(8, 3), (3, 2));
+        assert_eq!(split_budget(1, 5), (1, 1));
+        assert_eq!(split_budget(0, 5), (1, 1));
+        assert_eq!(split_budget(4, 0), (1, 4));
+        // total concurrency never exceeds the budget (when budget >= 1)
+        for budget in 1..20 {
+            for n in 1..10 {
+                let (outer, per) = split_budget(budget, n);
+                assert!(outer * per <= budget.max(1), "budget={budget} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_resolves_auto_threads() {
+        assert!(ClientPool::new(0).threads() >= 1);
+        assert_eq!(ClientPool::new(3).threads(), 3);
+        assert!(available_threads() >= 1);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        assert!(par_indexed(4, 0, |_| Ok(0u8)).unwrap().is_empty());
+        assert_eq!(par_indexed(4, 1, Ok).unwrap(), vec![0]);
+        let mut one = [7u32];
+        ClientPool::new(4).run_mut(&mut one, |_, x| { *x += 1; Ok(()) }).unwrap();
+        assert_eq!(one[0], 8);
+    }
+}

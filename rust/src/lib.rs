@@ -15,6 +15,11 @@
 //! Python never runs on the training path: [`runtime`] loads the HLO text
 //! artifacts via the PJRT C API (`xla` crate) and executes them directly.
 //!
+//! Per-round client work fans out over the [`engine`] worker pool
+//! (`--threads N`, default = host parallelism); results are merged in
+//! client-id order so parallel runs are bit-identical to serial ones
+//! (DESIGN.md §5).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -30,6 +35,7 @@
 
 pub mod config;
 pub mod data;
+pub mod engine;
 pub mod util;
 pub mod metrics;
 pub mod model;

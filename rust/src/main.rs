@@ -15,6 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use adasplit::config::{ExperimentConfig, ProtocolKind};
 use adasplit::data::DatasetKind;
+use adasplit::engine::par_indexed;
 use adasplit::protocols::{run_protocol_recorded, run_seeds};
 use adasplit::report::ResultTable;
 use adasplit::runtime::Runtime;
@@ -42,11 +43,14 @@ RUN OPTIONS:
   --kappa X --eta X --mu X --beta X --lambda X
   --server-grad          Table-5 ablation: send server gradient to client
   --imbalance X          geometric client-size skew       [1.0]
+  --threads N            engine worker threads (0 = host parallelism) [0]
   --curve-out PATH       write the per-round curve CSV
   --trace                print per-iteration orchestrator traces
 
 COMPARE OPTIONS:
   --dataset ID  --rounds N  --samples N  --test-samples N  --seeds N
+  --threads N            worker threads per run; protocols also run
+                         concurrently across the pool      [0 = auto]
 ";
 
 /// Tiny flag parser: `--key value` pairs plus boolean switches.
@@ -171,6 +175,9 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
     if let Some(v) = args.parsed("imbalance")? {
         cfg.imbalance = v;
     }
+    if let Some(v) = args.parsed("threads")? {
+        cfg.threads = v;
+    }
     cfg.server_grad_to_client |= args.has("server-grad");
     cfg.trace |= args.has("trace");
     cfg.artifacts_dir = artifacts.to_string();
@@ -216,18 +223,41 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
     let samples = args.parsed("samples")?.unwrap_or(256);
     let test = args.parsed("test-samples")?.unwrap_or(128);
     let n_seeds = args.parsed("seeds")?.unwrap_or(1usize);
+    let threads = args.parsed("threads")?.unwrap_or(0usize);
     let seed_list: Vec<u64> = (0..n_seeds as u64).collect();
 
+    let budget = adasplit::engine::ClientPool::new(threads).threads();
+    let (outer, per_protocol) = adasplit::engine::split_budget(budget, ProtocolKind::ALL.len());
+    let cfgs: Vec<ExperimentConfig> = ProtocolKind::ALL
+        .iter()
+        .map(|&p| {
+            ExperimentConfig::paper_default(dataset)
+                .with_protocol(p)
+                .with_scale(rounds, samples, test)
+                .with_threads(per_protocol)
+        })
+        .collect();
+
+    // protocol runs are independent: fan them out across the pool, then
+    // render the table in protocol order
+    let t0 = std::time::Instant::now();
+    let rows = par_indexed(outer, cfgs.len(), |i| run_seeds(rt, &cfgs[i], &seed_list))?;
+
     let mut table = ResultTable::new(format!("{} (R={rounds})", dataset.name()));
-    for p in ProtocolKind::ALL {
-        let cfg = ExperimentConfig::paper_default(dataset)
-            .with_protocol(p)
-            .with_scale(rounds, samples, test);
-        let (result, std) = run_seeds(rt, &cfg, &seed_list)?;
+    for (p, (result, std)) in ProtocolKind::ALL.iter().zip(&rows) {
         println!("{:<10} done: {:.2}%", p.name(), result.best_accuracy);
-        table.add(p.name(), &result, std);
+        table.add(p.name(), result, *std);
     }
     println!("\n{}", table.render());
+    println!(
+        "compared {} protocols x {} seed(s), thread budget {} ({} concurrent protocols x {} threads each), in {:.1}s",
+        cfgs.len(),
+        seed_list.len(),
+        budget,
+        outer,
+        per_protocol,
+        t0.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 

@@ -40,6 +40,21 @@ impl AccuracyAccum {
             .collect()
     }
 
+    /// Merge another accumulator (engine fan-in: per-worker partials are
+    /// combined on the caller's thread in client-id order, so parallel
+    /// eval is bit-identical to serial eval).
+    pub fn merge(&mut self, other: &AccuracyAccum) {
+        self.correct += other.correct;
+        self.total += other.total;
+        if self.per_client.len() < other.per_client.len() {
+            self.per_client.resize(other.per_client.len(), (0.0, 0.0));
+        }
+        for (d, s) in self.per_client.iter_mut().zip(&other.per_client) {
+            d.0 += s.0;
+            d.1 += s.1;
+        }
+    }
+
     /// Unweighted mean of per-client accuracies (the paper's convention
     /// for heterogeneous client datasets).
     pub fn mean_client_pct(&self) -> f64 {
@@ -80,6 +95,37 @@ mod tests {
     fn empty_is_zero() {
         let a = AccuracyAccum::new(0);
         assert_eq!(a.accuracy_pct(), 0.0);
+    }
+
+    #[test]
+    fn merge_matches_serial_adds() {
+        // serial accumulation ...
+        let mut serial = AccuracyAccum::new(3);
+        serial.add(0, 8.0, 10.0);
+        serial.add(1, 5.0, 10.0);
+        serial.add(2, 2.0, 4.0);
+        // ... must equal per-client partials merged in id order
+        let mut merged = AccuracyAccum::new(3);
+        for (i, (c, t)) in [(8.0, 10.0), (5.0, 10.0), (2.0, 4.0)].iter().enumerate() {
+            let mut part = AccuracyAccum::new(3);
+            part.add(i, *c, *t);
+            merged.merge(&part);
+        }
+        assert_eq!(serial.accuracy_pct(), merged.accuracy_pct());
+        assert_eq!(serial.per_client_pct(), merged.per_client_pct());
+        assert_eq!(serial.mean_client_pct(), merged.mean_client_pct());
+    }
+
+    #[test]
+    fn merge_grows_to_larger_accumulator() {
+        let mut a = AccuracyAccum::new(1);
+        a.add(0, 1.0, 2.0);
+        let mut b = AccuracyAccum::new(3);
+        b.add(2, 3.0, 4.0);
+        a.merge(&b);
+        assert_eq!(a.per_client_pct().len(), 3);
+        assert_eq!(a.per_client_pct()[2], 75.0);
+        assert!((a.accuracy_pct() - 100.0 * 4.0 / 6.0).abs() < 1e-12);
     }
 
     #[test]

@@ -58,7 +58,9 @@ impl CostMeter {
         (self.client_flops + self.server_flops) / 1e12
     }
 
-    /// Merge another meter (multi-seed aggregation).
+    /// Merge another meter (engine fan-in and multi-seed aggregation).
+    /// Per-client deltas are merged on the caller's thread in client-id
+    /// order, keeping parallel runs bit-identical to serial ones.
     pub fn merge(&mut self, other: &CostMeter) {
         self.client_flops += other.client_flops;
         self.server_flops += other.server_flops;
@@ -91,6 +93,24 @@ mod tests {
         assert!((m.bandwidth_gb() - 1.0).abs() < 1e-9);
         assert!((m.client_tflops() - 2.0).abs() < 1e-9);
         assert!((m.total_tflops() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_covers_every_field() {
+        let mut delta = CostMeter::new();
+        delta.add_client_flops(1.0);
+        delta.add_server_flops(2.0);
+        delta.add_up(3);
+        delta.add_down(4);
+        delta.add_peer(5);
+        let mut total = CostMeter::new();
+        total.merge(&delta);
+        total.merge(&delta);
+        assert_eq!(total.client_flops, 2.0);
+        assert_eq!(total.server_flops, 4.0);
+        assert_eq!(total.up_bytes, 6.0);
+        assert_eq!(total.down_bytes, 8.0);
+        assert_eq!(total.peer_bytes, 10.0);
     }
 
     #[test]

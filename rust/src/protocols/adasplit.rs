@@ -16,8 +16,17 @@
 //! into its *next* local step (one-iteration-stale, documented in
 //! DESIGN.md) — this is the row-2 "L_client + L_server" configuration.
 
+//! **Parallelism** (DESIGN.md §5): within an iteration the local client
+//! steps are independent (each touches only its own state and pending
+//! gradient), so they fan out over the engine pool; the orchestrated
+//! server phase stays sequential because every selected client updates the
+//! shared server model in selection order. Losses, activations, and cost
+//! deltas merge in client-id order, so the run is bit-identical at any
+//! thread count.
+
 use anyhow::Result;
 
+use crate::engine::par_clients;
 use crate::metrics::RoundStat;
 use crate::orchestrator::UcbOrchestrator;
 use crate::protocols::common::{eval_split, Env};
@@ -83,11 +92,15 @@ pub fn run(env: &mut Env) -> Result<RunResult> {
     let server_step_flops = env.spec.server_step_flops(k, true);
     let act_bytes = env.spec.act_batch_bytes(k);
 
+    let pool = env.pool();
+
     // ---- rounds ----------------------------------------------------------
     for round in 0..cfg.rounds {
         let global_phase = round >= local_rounds;
+        // per-client batches draw from per-client derived RNG streams, so
+        // materializing them concurrently is order-independent
         let batches: Vec<Vec<crate::data::Batch>> =
-            (0..n).map(|i| env.train_batches(i, round)).collect();
+            par_clients(&*env, |i| Ok(env.train_batches(i, round)))?;
         let t_max = batches.iter().map(|b| b.len()).max().unwrap_or(0);
 
         let mut loss_sum = 0.0;
@@ -97,19 +110,30 @@ pub fn run(env: &mut Env) -> Result<RunResult> {
         let mut round_selected: Vec<usize> = Vec::new();
 
         for t in 0..t_max {
-            // -- local client steps (every client, every phase) -----------
+            // -- local client steps (every client, every phase), fanned
+            //    out over the pool: client i touches only its own state --
             let active: Vec<usize> = (0..n).filter(|&i| t < batches[i].len()).collect();
-            let mut acts: Vec<Option<Tensor>> = vec![None; n];
-            for &i in &active {
-                let b = &batches[i][t];
+            // pending (stale) server gradients are taken on this thread,
+            // read-only inside the fan-out
+            let taken: Vec<Option<Tensor>> =
+                active.iter().map(|&i| pending_grad[i].take()).collect();
+            // disjoint &mut views of the active clients' states, in
+            // ascending client-id order (matching `active`)
+            let mut active_states: Vec<&mut TensorStore> = client_states
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| active.binary_search(i).is_ok())
+                .map(|(_, s)| s)
+                .collect();
+            let stepped = pool.run_mut(&mut active_states, |j, state| {
+                let b = &batches[active[j]][t];
                 // avoid cloning the (large) zero gradient on the default path
-                let taken = pending_grad[i].take();
-                let (ga, use_grad): (&Tensor, f32) = match &taken {
+                let (ga, use_grad): (&Tensor, f32) = match &taken[j] {
                     Some(g) => (g, 1.0),
                     None => (&zero_grad, 0.0),
                 };
                 let mut out = client_step.call(
-                    &[&client_states[i]],
+                    &[&**state],
                     &[
                         ("x", &b.x),
                         ("y", &b.y),
@@ -118,10 +142,15 @@ pub fn run(env: &mut Env) -> Result<RunResult> {
                         ("use_grad", &Tensor::scalar(use_grad)),
                     ],
                 )?;
-                out.write_state(&mut client_states[i]);
-                loss_sum += out.scalar("loss")? as f64;
+                out.write_state(state);
+                Ok((out.scalar("loss")? as f64, out.take("acts")?))
+            })?;
+            // merge in client-id order (thread-count independent)
+            let mut acts: Vec<Option<Tensor>> = vec![None; n];
+            for (j, (loss, a)) in stepped.into_iter().enumerate() {
+                loss_sum += loss;
                 loss_count += 1.0;
-                acts[i] = Some(out.take("acts")?);
+                acts[active[j]] = Some(a);
                 env.meter.add_client_flops(client_step_flops);
             }
 

@@ -1,12 +1,17 @@
 //! Shared protocol machinery: the run environment, state initialization,
 //! split-model evaluation, and FedAvg-family parameter plumbing.
+//!
+//! Evaluation fans out over the engine worker pool — per-client accuracy
+//! partials are merged in client-id order (`AccuracyAccum::merge`), so the
+//! result is independent of the thread count.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::data::{Batch, BatchIter, ClientData, Rng};
+use crate::engine::{par_clients, ClientPool, ParallelEnv};
 use crate::metrics::{AccuracyAccum, CostMeter, Recorder};
 use crate::model::ModelSpec;
 use crate::runtime::{Artifact, Runtime, Tensor, TensorStore};
@@ -37,13 +42,18 @@ impl<'a> Env<'a> {
     }
 
     /// Split-config artifact, e.g. `c10_mu1_client_step`.
-    pub fn art_split(&self, suffix: &str) -> Result<Rc<Artifact>> {
+    pub fn art_split(&self, suffix: &str) -> Result<Arc<Artifact>> {
         self.rt.artifact(&format!("{}_{suffix}", self.cfg.config_tag()))
     }
 
     /// Dataset-level artifact (FL family), e.g. `c10_fl_step`.
-    pub fn art_ds(&self, suffix: &str) -> Result<Rc<Artifact>> {
+    pub fn art_ds(&self, suffix: &str) -> Result<Arc<Artifact>> {
         self.rt.artifact(&format!("{}_{suffix}", self.cfg.dataset.tag()))
+    }
+
+    /// Worker pool sized by the experiment config (`--threads`).
+    pub fn pool(&self) -> ClientPool {
+        ClientPool::new(self.cfg.threads)
     }
 
     /// Run an `init_*` artifact and return the fresh state store
@@ -92,10 +102,23 @@ impl<'a> Env<'a> {
     }
 }
 
+impl ParallelEnv for Env<'_> {
+    fn n_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    fn threads(&self) -> usize {
+        self.cfg.effective_threads()
+    }
+}
+
 /// Evaluate a split model: per client, run `client_fwd` on the client's
 /// params then the provided server-eval artifact. `server_stores(i)` yields
 /// the store stack for client `i`'s server-side evaluation (shared server
 /// params, plus the client's mask store for AdaSplit).
+///
+/// Clients are evaluated concurrently on the engine pool (all inputs are
+/// read-only); per-client partials merge in client-id order.
 pub fn eval_split<F>(
     env: &Env,
     client_fwd: &Artifact,
@@ -104,12 +127,14 @@ pub fn eval_split<F>(
     server_stores: F,
 ) -> Result<AccuracyAccum>
 where
-    F: Fn(usize) -> Vec<TensorStore>,
+    F: Fn(usize) -> Vec<TensorStore> + Sync,
 {
-    let mut acc = AccuracyAccum::new(env.clients.len());
-    for (i, c) in env.clients.iter().enumerate() {
+    let n = env.clients.len();
+    let parts = par_clients(env, |i| {
+        let c = &env.clients[i];
         let stacks = server_stores(i);
         let stack_refs: Vec<&TensorStore> = stacks.iter().collect();
+        let mut part = AccuracyAccum::new(n);
         for b in BatchIter::eval(&c.test_x, &c.test_y, env.spec.batch) {
             let fwd = client_fwd.call(&[&client_roots[i]], &[("x", &b.x)])?;
             let acts = fwd.get("acts")?;
@@ -117,23 +142,36 @@ where
                 &stack_refs,
                 &[("a", acts), ("y", &b.y), ("valid", &b.valid)],
             )?;
-            acc.add(i, out.scalar("correct")? as f64, b.n_valid as f64);
+            part.add(i, out.scalar("correct")? as f64, b.n_valid as f64);
         }
+        Ok(part)
+    })?;
+    let mut acc = AccuracyAccum::new(n);
+    for part in &parts {
+        acc.merge(part);
     }
     Ok(acc)
 }
 
-/// Evaluate the full FL model on every client's test set.
+/// Evaluate the full FL model on every client's test set (concurrently;
+/// the global store is read-only).
 pub fn eval_fl(env: &Env, fl_eval: &Artifact, global_p: &TensorStore) -> Result<AccuracyAccum> {
-    let mut acc = AccuracyAccum::new(env.clients.len());
-    for (i, c) in env.clients.iter().enumerate() {
+    let n = env.clients.len();
+    let parts = par_clients(env, |i| {
+        let c = &env.clients[i];
+        let mut part = AccuracyAccum::new(n);
         for b in BatchIter::eval(&c.test_x, &c.test_y, env.spec.batch) {
             let out = fl_eval.call(
                 &[global_p],
                 &[("x", &b.x), ("y", &b.y), ("valid", &b.valid)],
             )?;
-            acc.add(i, out.scalar("correct")? as f64, b.n_valid as f64);
+            part.add(i, out.scalar("correct")? as f64, b.n_valid as f64);
         }
+        Ok(part)
+    })?;
+    let mut acc = AccuracyAccum::new(n);
+    for part in &parts {
+        acc.merge(part);
     }
     Ok(acc)
 }

@@ -8,8 +8,17 @@
 //! * **FedProx**  — prox_mu > 0, same averaging.
 //! * **Scaffold** — control variates c/ci maintained here (option II of
 //!   the paper: ci' = ci - c + (pg - p_i)/(K_i * lr)), payload doubled.
+//!   Every client reads the *round-start* server variate c and the
+//!   aggregate c update applies at the round boundary (the paper's server
+//!   step), which is what makes the clients independent within a round.
 //! * **FedNova**  — normalized averaging of local *updates*:
 //!   p' = pg - tau_eff * sum_i w_i (pg - p_i)/tau_i, tau_eff = sum w_i tau_i.
+//!
+//! **Parallelism** (DESIGN.md §5): clients train independently from the
+//! round-start global snapshot, so the whole per-client round (download,
+//! local epochs, variate refresh) fans out over the engine pool; losses,
+//! step counts, cost deltas, and Scaffold's c updates merge in client-id
+//! order, so runs are bit-identical at any thread count.
 
 use anyhow::Result;
 
@@ -24,6 +33,16 @@ pub enum FlVariant {
     FedProx,
     Scaffold,
     FedNova,
+}
+
+/// What one client's local round hands back to the merge step.
+struct ClientRound {
+    loss_sum: f64,
+    loss_count: f64,
+    /// local steps taken (tau_i)
+    tau: usize,
+    /// Scaffold: (ci' - ci_old) per parameter suffix, keys `d.{s}`
+    dci: Option<TensorStore>,
 }
 
 pub fn run_fl(env: &mut Env, variant: FlVariant) -> Result<RunResult> {
@@ -63,6 +82,8 @@ pub fn run_fl(env: &mut Env, variant: FlVariant) -> Result<RunResult> {
         .map(|k| k.strip_prefix("p.").unwrap().to_string())
         .collect();
 
+    let pool = env.pool();
+
     for round in 0..cfg.rounds {
         let mut loss_sum = 0.0;
         let mut loss_count = 0.0;
@@ -72,56 +93,85 @@ pub fn run_fl(env: &mut Env, variant: FlVariant) -> Result<RunResult> {
         copy_prefixed(&global, "p", &mut pg_store, "pg");
         let mut taus = vec![0usize; n];
 
-        for i in 0..n {
+        // -- per-client local rounds, fanned out over the pool: client i
+        //    mutates only its own model state and control variate --------
+        let mut pairs: Vec<(&mut TensorStore, &mut TensorStore)> =
+            client_states.iter_mut().zip(ci_stores.iter_mut()).collect();
+        let outcomes = pool.run_mut(&mut pairs, |i, pair| {
+            let (cs, ci) = &mut *pair;
             // download the global model
             for s in &suffixes {
                 let t = global.get(&format!("p.{s}"))?.clone();
-                client_states[i].insert(format!("state.p.{s}"), t);
+                cs.insert(format!("state.p.{s}"), t);
             }
+
+            let mut loss_sum = 0.0;
+            let mut loss_count = 0.0;
+            let mut tau = 0usize;
+            for _epoch in 0..cfg.local_epochs {
+                for b in env.train_batches(i, round) {
+                    let mut out = fl_step.call(
+                        &[&**cs, &pg_store, &c_store, &**ci],
+                        &[("prox_mu", &prox_mu), ("x", &b.x), ("y", &b.y)],
+                    )?;
+                    out.write_state(cs);
+                    loss_sum += out.scalar("loss")? as f64;
+                    loss_count += 1.0;
+                    tau += 1;
+                }
+            }
+
+            let mut dci = None;
+            if variant == FlVariant::Scaffold && tau > 0 {
+                // ci' = ci - c + (pg - p_i) / (K_i * lr)
+                let scale = 1.0 / (tau as f32 * lr);
+                let mut deltas = TensorStore::new();
+                for s in &suffixes {
+                    let pg = pg_store.get(&format!("pg.{s}"))?;
+                    let pi = cs.get(&format!("state.p.{s}"))?;
+                    let cg = c_store.get(&format!("c.{s}"))?;
+                    let civ = ci.get_mut(&format!("ci.{s}"))?;
+                    let ci_old = civ.clone();
+                    civ.axpy(-1.0, cg)?;
+                    let mut delta = pg.clone();
+                    delta.axpy(-1.0, pi)?;
+                    delta.scale(scale);
+                    civ.axpy(1.0, &delta)?;
+                    // hand the raw ci' - ci_old back for the server's
+                    // round-boundary c update
+                    let mut d = civ.clone();
+                    d.axpy(-1.0, &ci_old)?;
+                    deltas.insert(format!("d.{s}"), d);
+                }
+                dci = Some(deltas);
+            }
+            Ok(ClientRound { loss_sum, loss_count, tau, dci })
+        })?;
+        drop(pairs);
+
+        // -- merge in client-id order (thread-count independent) ----------
+        for (i, cr) in outcomes.iter().enumerate() {
+            loss_sum += cr.loss_sum;
+            loss_count += cr.loss_count;
+            taus[i] = cr.tau;
             env.meter.add_down(model_bytes);
             if variant == FlVariant::Scaffold {
                 env.meter.add_down(model_bytes); // c travels with the model
             }
-
-            for _epoch in 0..cfg.local_epochs {
-                for b in env.train_batches(i, round) {
-                    let mut out = fl_step.call(
-                        &[&client_states[i], &pg_store, &c_store, &ci_stores[i]],
-                        &[("prox_mu", &prox_mu), ("x", &b.x), ("y", &b.y)],
-                    )?;
-                    out.write_state(&mut client_states[i]);
-                    loss_sum += out.scalar("loss")? as f64;
-                    loss_count += 1.0;
-                    taus[i] += 1;
-                    env.meter.add_client_flops(step_flops);
-                }
+            for _ in 0..cr.tau {
+                env.meter.add_client_flops(step_flops);
             }
-
             // upload the trained model
             env.meter.add_up(model_bytes);
             if variant == FlVariant::Scaffold {
                 env.meter.add_up(model_bytes); // ci update travels back
             }
-
-            if variant == FlVariant::Scaffold && taus[i] > 0 {
-                // ci' = ci - c + (pg - p_i) / (K_i * lr)
-                let scale = 1.0 / (taus[i] as f32 * lr);
+            // server variate update c += (ci' - ci_old)/N at the boundary
+            if let Some(deltas) = &cr.dci {
                 for s in &suffixes {
-                    let pg = pg_store.get(&format!("pg.{s}"))?;
-                    let pi = client_states[i].get(&format!("state.p.{s}"))?;
-                    let cg = c_store.get(&format!("c.{s}"))?.clone();
-                    let ci = ci_stores[i].get_mut(&format!("ci.{s}"))?;
-                    let ci_old = ci.clone();
-                    ci.axpy(-1.0, &cg)?;
-                    let mut delta = pg.clone();
-                    delta.axpy(-1.0, pi)?;
-                    delta.scale(scale);
-                    ci.axpy(1.0, &delta)?;
-                    // server-side running update c += (ci' - ci_old)/N
-                    let mut dci = ci.clone();
-                    dci.axpy(-1.0, &ci_old)?;
-                    dci.scale(1.0 / n as f32);
-                    c_store.get_mut(&format!("c.{s}"))?.axpy(1.0, &dci)?;
+                    let mut d = deltas.get(&format!("d.{s}"))?.clone();
+                    d.scale(1.0 / n as f32);
+                    c_store.get_mut(&format!("c.{s}"))?.axpy(1.0, &d)?;
                 }
             }
         }

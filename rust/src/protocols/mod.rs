@@ -5,6 +5,10 @@
 //! AOT-compiled step artifacts; the only numerics that happen in Rust are
 //! FedAvg-family parameter aggregation (plain weighted sums) and the UCB
 //! bookkeeping — everything differentiable lives in the artifacts.
+//!
+//! Per-round client work runs on the [`crate::engine`] worker pool
+//! (`cfg.threads`); results merge in client-id order, so every protocol
+//! is bit-identical across thread counts (DESIGN.md §5).
 
 mod adasplit;
 mod common;
@@ -16,10 +20,11 @@ mod scaffold;
 mod sl_basic;
 mod splitfed;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::config::{ExperimentConfig, ProtocolKind};
 use crate::data::build_partition;
+use crate::engine::par_indexed;
 use crate::metrics::{c3_score, CostMeter, Recorder};
 use crate::runtime::Runtime;
 use crate::util::Json;
@@ -119,24 +124,37 @@ pub fn run_protocol_recorded(
 
 /// Run `seeds.len()` independent runs and aggregate mean/std accuracy
 /// (resources are averaged; they are deterministic given the config).
+///
+/// Runs are independent, so they fan out over the engine. The thread
+/// budget is *divided*, not multiplied, across nesting levels: with
+/// budget B and S seeds, min(B, S) runs execute concurrently and each
+/// run's inner engine pool gets B / min(B, S) workers — so total
+/// concurrency stays ~B rather than B^2. Aggregation walks the results
+/// in seed order and per-run metrics are thread-count invariant, so the
+/// aggregate does not depend on how the budget splits.
 pub fn run_seeds(
     rt: &Runtime,
     cfg: &ExperimentConfig,
     seeds: &[u64],
 ) -> Result<(RunResult, f64)> {
-    let mut results = Vec::new();
-    for &s in seeds {
-        results.push(run_protocol(rt, &cfg.clone().with_seed(s))?);
-    }
+    ensure!(!seeds.is_empty(), "run_seeds needs at least one seed");
+    let (outer, per_run) = crate::engine::split_budget(cfg.effective_threads(), seeds.len());
+    let run_cfg = cfg.clone().with_threads(per_run);
+    let results: Vec<RunResult> = par_indexed(outer, seeds.len(), |j| {
+        run_protocol(rt, &run_cfg.clone().with_seed(seeds[j]))
+    })?;
     let accs: Vec<f64> = results.iter().map(|r| r.best_accuracy).collect();
     let (mean, std) = crate::metrics::mean_std(&accs);
+    let avg = |f: fn(&RunResult) -> f64| -> f64 {
+        results.iter().map(f).sum::<f64>() / results.len() as f64
+    };
     let mut agg = results[0].clone();
-    agg.accuracy = results.iter().map(|r| r.accuracy).sum::<f64>() / results.len() as f64;
+    agg.accuracy = avg(|r| r.accuracy);
     agg.best_accuracy = mean;
-    agg.bandwidth_gb = results.iter().map(|r| r.bandwidth_gb).sum::<f64>() / results.len() as f64;
-    agg.client_tflops =
-        results.iter().map(|r| r.client_tflops).sum::<f64>() / results.len() as f64;
-    agg.total_tflops = results.iter().map(|r| r.total_tflops).sum::<f64>() / results.len() as f64;
+    agg.bandwidth_gb = avg(|r| r.bandwidth_gb);
+    agg.client_tflops = avg(|r| r.client_tflops);
+    agg.total_tflops = avg(|r| r.total_tflops);
+    agg.mask_density = avg(|r| r.mask_density);
     agg.c3_score = c3_score(mean, agg.bandwidth_gb, agg.client_tflops, &cfg.budgets);
     Ok((agg, std))
 }

@@ -6,6 +6,12 @@
 //! client-bwd exchange. The server model is shared and updated
 //! sequentially — exactly the regime whose non-IID pathology AdaSplit
 //! fixes (paper §2.2 D3).
+//!
+//! **Parallelism** (DESIGN.md §5): the training exchange is an inherent
+//! chain (one traveling client model, one shared server model updated per
+//! batch), so it stays sequential at any `--threads` and streams batches
+//! one client at a time (bounded memory); the engine fans out the split
+//! evaluation, which is per-client independent.
 
 use anyhow::Result;
 

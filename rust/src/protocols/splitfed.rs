@@ -6,6 +6,12 @@
 //! fed server averages the client models (weights only; Adam moments stay
 //! local) and broadcasts the average — costing 2 x client-params per
 //! client per round on top of the activation traffic.
+//!
+//! **Parallelism** (DESIGN.md §5): the per-batch exchange updates one
+//! shared server model in visiting order, so training stays sequential at
+//! any `--threads` and streams batches one client at a time (bounded
+//! memory); the engine fans out the split evaluation, which is
+//! per-client independent.
 
 use anyhow::Result;
 
@@ -79,14 +85,14 @@ pub fn run(env: &mut Env) -> Result<RunResult> {
         let refs: Vec<&TensorStore> = client_states.iter().collect();
         let mut avg = client_states[0].clone();
         avg.set_weighted_sum(&refs, &weights, |key| key.starts_with("state.pc."))?;
-        for (i, s) in client_states.iter_mut().enumerate() {
-            for key in avg.keys_under("state.pc").cloned().collect::<Vec<_>>() {
-                s.insert(key.clone(), avg.get(&key)?.clone());
+        let avg_keys: Vec<String> = avg.keys_under("state.pc").cloned().collect();
+        for s in client_states.iter_mut() {
+            for key in &avg_keys {
+                s.insert(key.clone(), avg.get(key)?.clone());
             }
             // upload own model, download the average
             env.meter.add_up(fed_bytes);
             env.meter.add_down(fed_bytes);
-            let _ = i;
         }
 
         let eval_now = round % cfg.eval_every == 0 || round + 1 == cfg.rounds;

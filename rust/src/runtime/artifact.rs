@@ -10,6 +10,7 @@
 //! inputs by `python/tests/test_aot.py::test_state_round_trip_layout`).
 
 use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
 
 use anyhow::{anyhow, ensure, Context, Result};
 use xla::{ElementType, Literal, PjRtLoadedExecutable};
@@ -23,6 +24,39 @@ pub struct Artifact {
     pub name: String,
     pub spec: ArtifactSpec,
     exe: PjRtLoadedExecutable,
+}
+
+// SAFETY: engine workers share compiled artifacts via `Arc<Artifact>` and
+// only ever take `&self` (`Artifact::call`). PJRT loaded executables are
+// designed for concurrent execution — every call builds its own input
+// literals and output buffers, and the executable itself is immutable
+// after compilation. One caveat does not live in this crate: the xla-rs
+// wrapper refcounts its client handle non-atomically (`Rc`) and
+// `execute()` clones the handle into every returned buffer, so the
+// handle-touching windows (execute *and* compile — see
+// `Runtime::artifact`) run under one process-wide lock by default
+// ([`xla_exec_guard`]). A build whose vendored xla-rs carries the
+// Rc->Arc patch (DESIGN.md §5) can set `ADASPLIT_PARALLEL_XLA=1` to
+// drop the lock and overlap executions; everything outside those
+// windows is unconditionally safe to run concurrently.
+unsafe impl Send for Artifact {}
+unsafe impl Sync for Artifact {}
+
+/// Process-wide serialization of the PJRT client-handle windows (execute
+/// launch + result fetch + buffer drops, and compilation). On by default
+/// because upstream xla-rs refcounts the handle with `Rc`; costs the
+/// engine its artifact-execution overlap but keeps marshalling, batching,
+/// evaluation fan-out, and reduction parallel. Set
+/// `ADASPLIT_PARALLEL_XLA=1` only on a build whose vendored xla-rs uses
+/// atomic refcounts (the Rc->Arc patch). Run results are identical either
+/// way — the lock only sequences execution.
+pub(crate) fn xla_exec_guard() -> Option<MutexGuard<'static, ()>> {
+    static PARALLEL: OnceLock<bool> = OnceLock::new();
+    static LOCK: Mutex<()> = Mutex::new(());
+    let parallel = *PARALLEL.get_or_init(|| {
+        std::env::var("ADASPLIT_PARALLEL_XLA").map(|v| v == "1").unwrap_or(false)
+    });
+    (!parallel).then(|| LOCK.lock().unwrap_or_else(|e| e.into_inner()))
 }
 
 /// Named outputs of one artifact execution.
@@ -137,6 +171,9 @@ impl Artifact {
             literals.push(tensor_to_literal(tensor)?);
         }
 
+        // held (when enabled) until the buffers in `result` drop at the
+        // end of this call — the full client-handle clone/drop window
+        let _serial_guard = xla_exec_guard();
         let result = self
             .exe
             .execute::<Literal>(&literals)

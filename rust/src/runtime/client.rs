@@ -5,11 +5,16 @@
 //! rejects; `HloModuleProto::from_text_file` reassigns ids and round-trips
 //! cleanly. Compilation is lazy and cached — a protocol run touches only
 //! the handful of artifacts for its split config.
+//!
+//! The runtime is shared across engine worker threads (DESIGN.md §5): the
+//! cache is lock-based and compiled artifacts are handed out as `Arc`s.
+//! Compilation runs outside the cache lock (hits never stall behind a
+//! compile); the client-handle window inside it is serialized by the same
+//! lock as artifact execution (`xla_exec_guard`).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 use xla::PjRtClient;
@@ -21,8 +26,20 @@ pub struct Runtime {
     client: PjRtClient,
     pub manifest: Manifest,
     dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+    cache: Mutex<HashMap<String, Arc<Artifact>>>,
 }
+
+// SAFETY: the engine shares the runtime across scoped worker threads by
+// reference only. The PJRT CPU client is internally synchronized for
+// concurrent compile/execute calls, and the artifact cache is guarded by
+// the mutex above. Compilation clones the wrapper's client handle into
+// the new executable, so `Runtime::artifact` takes the same process-wide
+// handle lock as `Artifact::call` (`xla_exec_guard`, on by default) —
+// compile never overlaps an execute window's non-atomic refcount traffic
+// unless `ADASPLIT_PARALLEL_XLA=1` asserts an Rc->Arc-patched xla-rs
+// build (DESIGN.md §5).
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
 
 impl Runtime {
     /// Load the manifest and spin up the PJRT CPU client.
@@ -30,7 +47,7 @@ impl Runtime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
         let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        Ok(Self { client, manifest, dir, cache: RefCell::new(HashMap::new()) })
+        Ok(Self { client, manifest, dir, cache: Mutex::new(HashMap::new()) })
     }
 
     /// Platform string of the underlying PJRT client (diagnostics).
@@ -38,9 +55,21 @@ impl Runtime {
         self.client.platform_name()
     }
 
-    /// Fetch (compiling on first use) the named artifact.
-    pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
-        if let Some(a) = self.cache.borrow().get(name) {
+    /// Fetch (compiling on first use) the named artifact. Safe to call from
+    /// any engine worker; the returned `Arc` can be shared across threads.
+    ///
+    /// Compilation happens *outside* the cache lock so cache hits never
+    /// stall behind an in-flight compile (or the execute it may be queued
+    /// behind); a concurrent first touch of the same artifact may compile
+    /// it twice, with the loser's executable discarded — the cache keeps
+    /// exactly one.
+    pub fn artifact(&self, name: &str) -> Result<Arc<Artifact>> {
+        if let Some(a) = self
+            .cache
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(name)
+        {
             return Ok(a.clone());
         }
         let spec = self.manifest.artifact(name)?.clone();
@@ -51,19 +80,25 @@ impl Runtime {
         .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))
         .context("run `make artifacts`?")?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling `{name}`: {e}"))?;
-        let artifact = Rc::new(Artifact::new(name.to_string(), spec, exe));
-        self.cache
-            .borrow_mut()
-            .insert(name.to_string(), artifact.clone());
-        Ok(artifact)
+        // compile clones the client handle into the executable: take the
+        // same handle lock as Artifact::call so it never races an
+        // in-flight execute window (no-op under ADASPLIT_PARALLEL_XLA=1)
+        let exe = {
+            let _handle_guard = super::artifact::xla_exec_guard();
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling `{name}`: {e}"))?
+        };
+        let artifact = Arc::new(Artifact::new(name.to_string(), spec, exe));
+        let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        Ok(cache
+            .entry(name.to_string())
+            .or_insert(artifact)
+            .clone())
     }
 
     /// Number of artifacts compiled so far (diagnostics / perf logging).
     pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 }

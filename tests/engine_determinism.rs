@@ -1,0 +1,178 @@
+//! Serial/parallel equivalence suite for the client-execution engine.
+//!
+//! The engine's contract (DESIGN.md §5) is that thread count is purely a
+//! wall-clock knob: `--threads 4` must produce bit-identical `RunResult`
+//! metrics to `--threads 1` for every protocol. The pure-engine tests run
+//! everywhere; the protocol sweeps need `make artifacts` and skip loudly
+//! otherwise, matching the other integration suites.
+
+use adasplit::config::{ExperimentConfig, ProtocolKind};
+use adasplit::engine::{par_indexed, par_slice_mut, ClientPool};
+use adasplit::metrics::{AccuracyAccum, CostMeter};
+use adasplit::protocols::run_protocol;
+use adasplit::runtime::Runtime;
+
+// ---- pure engine determinism (no artifacts required) ----------------------
+
+#[test]
+fn float_reduction_is_thread_count_invariant() {
+    // per-index work + in-order fan-in: the reduction tree is fixed, so
+    // any worker count yields the same bits
+    let work = |i: usize| -> anyhow::Result<f64> {
+        let mut acc = 0.0f64;
+        for k in 1..500 {
+            acc += ((i as f64 + 1.0) / k as f64).sqrt().sin();
+        }
+        Ok(acc)
+    };
+    let reduce = |parts: &[f64]| parts.iter().sum::<f64>();
+    let serial = reduce(&par_indexed(1, 48, work).unwrap());
+    for threads in [2, 3, 4, 8] {
+        let par = reduce(&par_indexed(threads, 48, work).unwrap());
+        assert_eq!(serial.to_bits(), par.to_bits(), "threads={threads}");
+    }
+}
+
+#[test]
+fn slice_mut_is_thread_count_invariant() {
+    let run = |threads: usize| -> Vec<f64> {
+        let mut states: Vec<f64> = (0..33).map(|i| i as f64 * 0.1).collect();
+        par_slice_mut(threads, &mut states, |i, s| {
+            for _ in 0..100 {
+                *s = (*s + i as f64).sin();
+            }
+            Ok(())
+        })
+        .unwrap();
+        states
+    };
+    let serial = run(1);
+    for threads in [2, 4, 8] {
+        assert_eq!(serial, run(threads), "threads={threads}");
+    }
+}
+
+#[test]
+fn cost_meter_merge_in_id_order_matches_serial_accounting() {
+    // serial: interleaved per-client adds; parallel: per-client deltas
+    // merged in id order — fields are plain sums, so they agree exactly
+    let mut serial = CostMeter::new();
+    for i in 0..6usize {
+        serial.add_client_flops(1e9 * (i + 1) as f64);
+        serial.add_up(1000 * (i + 1));
+        serial.add_down(500 * (i + 1));
+    }
+    let deltas: Vec<CostMeter> = (0..6usize)
+        .map(|i| {
+            let mut d = CostMeter::new();
+            d.add_client_flops(1e9 * (i + 1) as f64);
+            d.add_up(1000 * (i + 1));
+            d.add_down(500 * (i + 1));
+            d
+        })
+        .collect();
+    let mut merged = CostMeter::new();
+    for d in &deltas {
+        merged.merge(d);
+    }
+    assert_eq!(serial.client_flops, merged.client_flops);
+    assert_eq!(serial.up_bytes, merged.up_bytes);
+    assert_eq!(serial.down_bytes, merged.down_bytes);
+    assert_eq!(serial.bandwidth_gb(), merged.bandwidth_gb());
+}
+
+#[test]
+fn accuracy_merge_in_id_order_matches_serial_eval() {
+    let batches: &[(usize, f64, f64)] =
+        &[(0, 8.0, 10.0), (0, 3.0, 6.0), (1, 5.0, 10.0), (2, 2.0, 4.0)];
+    let mut serial = AccuracyAccum::new(3);
+    for &(i, c, t) in batches {
+        serial.add(i, c, t);
+    }
+    let mut merged = AccuracyAccum::new(3);
+    for client in 0..3usize {
+        let mut part = AccuracyAccum::new(3);
+        for &(i, c, t) in batches.iter().filter(|(i, _, _)| *i == client) {
+            part.add(i, c, t);
+        }
+        merged.merge(&part);
+    }
+    assert_eq!(serial.accuracy_pct(), merged.accuracy_pct());
+    assert_eq!(serial.per_client_pct(), merged.per_client_pct());
+    assert_eq!(serial.mean_client_pct(), merged.mean_client_pct());
+}
+
+#[test]
+fn pool_is_usable_concurrently_with_shared_state() {
+    let data: Vec<u64> = (0..1000).collect();
+    let sums = ClientPool::new(4)
+        .run(10, |i| Ok(data.iter().skip(i).step_by(10).sum::<u64>()))
+        .unwrap();
+    assert_eq!(sums.iter().sum::<u64>(), 1000 * 999 / 2);
+}
+
+// ---- full-protocol equivalence (requires `make artifacts`) ----------------
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("runtime loads"))
+}
+
+fn quick(protocol: ProtocolKind, threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        protocol,
+        rounds: 3,
+        samples_per_client: 64,
+        test_per_client: 32,
+        // one local + two global rounds, so AdaSplit's orchestrated
+        // server path is exercised too
+        kappa: 0.34,
+        threads,
+        ..ExperimentConfig::default()
+    }
+}
+
+#[test]
+fn every_protocol_is_thread_count_invariant() {
+    let Some(rt) = runtime() else { return };
+    for p in ProtocolKind::ALL {
+        let serial = run_protocol(&rt, &quick(p, 1)).unwrap();
+        let par = run_protocol(&rt, &quick(p, 4)).unwrap();
+        assert_eq!(serial.accuracy, par.accuracy, "{} accuracy", p.name());
+        assert_eq!(
+            serial.best_accuracy,
+            par.best_accuracy,
+            "{} best_accuracy",
+            p.name()
+        );
+        assert_eq!(serial.bandwidth_gb, par.bandwidth_gb, "{} bandwidth", p.name());
+        assert_eq!(
+            serial.client_tflops,
+            par.client_tflops,
+            "{} client_tflops",
+            p.name()
+        );
+        assert_eq!(serial.total_tflops, par.total_tflops, "{} total_tflops", p.name());
+        assert_eq!(serial.c3_score, par.c3_score, "{} c3", p.name());
+        assert_eq!(serial.mask_density, par.mask_density, "{} mask_density", p.name());
+    }
+}
+
+#[test]
+fn adasplit_server_grad_ablation_is_thread_count_invariant() {
+    // the stale-gradient path routes per-client tensors through the
+    // fan-out; make sure it stays deterministic too
+    let Some(rt) = runtime() else { return };
+    let mut serial_cfg = quick(ProtocolKind::AdaSplit, 1);
+    serial_cfg.server_grad_to_client = true;
+    let mut par_cfg = quick(ProtocolKind::AdaSplit, 4);
+    par_cfg.server_grad_to_client = true;
+    let serial = run_protocol(&rt, &serial_cfg).unwrap();
+    let par = run_protocol(&rt, &par_cfg).unwrap();
+    assert_eq!(serial.accuracy, par.accuracy);
+    assert_eq!(serial.bandwidth_gb, par.bandwidth_gb);
+    assert_eq!(serial.c3_score, par.c3_score);
+}
