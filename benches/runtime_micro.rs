@@ -150,11 +150,14 @@ fn main() -> anyhow::Result<()> {
 
     // round-throughput summary across the threads axis
     let serial_mean = round_stats[0].1.mean_s;
-    if std::env::var("ADASPLIT_PARALLEL_XLA").as_deref() != Ok("1") {
+    if !cfg!(feature = "parallel-xla")
+        || std::env::var("ADASPLIT_PARALLEL_XLA").as_deref() != Ok("1")
+    {
         println!(
-            "\nnote: PJRT execution is serialized by default; set \
-             ADASPLIT_PARALLEL_XLA=1 on an Rc->Arc-patched xla-rs build \
-             (DESIGN.md §5) to measure true execution overlap"
+            "\nnote: PJRT execution is serialized by default; build with \
+             `--features parallel-xla` (requires the Rc->Arc-patched \
+             vendored xla-rs, DESIGN.md §5) and set ADASPLIT_PARALLEL_XLA=1 \
+             to measure true execution overlap"
         );
     }
     println!("\nengine round throughput ({n_par} clients/round):");

@@ -45,6 +45,26 @@ struct ClientRound {
     dci: Option<TensorStore>,
 }
 
+/// Scaffold server-variate update, applied once per client at the round
+/// boundary: `c.{s} += d.{s} / N` where `d.{s} = ci' - ci_old`. All
+/// clients of a round train against the round-start `c` (option II of the
+/// paper — see the module doc); this replaced the pre-engine behavior of
+/// applying each client's delta mid-round, which is a deliberate,
+/// paper-faithful numerics change pinned by the unit test below.
+fn apply_c_update(
+    c_store: &mut TensorStore,
+    suffixes: &[String],
+    deltas: &TensorStore,
+    n: usize,
+) -> Result<()> {
+    for s in suffixes {
+        let mut d = deltas.get(&format!("d.{s}"))?.clone();
+        d.scale(1.0 / n as f32);
+        c_store.get_mut(&format!("c.{s}"))?.axpy(1.0, &d)?;
+    }
+    Ok(())
+}
+
 pub fn run_fl(env: &mut Env, variant: FlVariant) -> Result<RunResult> {
     let cfg = env.cfg;
     let n = cfg.clients;
@@ -166,13 +186,8 @@ pub fn run_fl(env: &mut Env, variant: FlVariant) -> Result<RunResult> {
             if variant == FlVariant::Scaffold {
                 env.meter.add_up(model_bytes); // ci update travels back
             }
-            // server variate update c += (ci' - ci_old)/N at the boundary
             if let Some(deltas) = &cr.dci {
-                for s in &suffixes {
-                    let mut d = deltas.get(&format!("d.{s}"))?.clone();
-                    d.scale(1.0 / n as f32);
-                    c_store.get_mut(&format!("c.{s}"))?.axpy(1.0, &d)?;
-                }
+                apply_c_update(&mut c_store, &suffixes, deltas, n)?;
             }
         }
 
@@ -235,4 +250,35 @@ pub fn run_fl(env: &mut Env, variant: FlVariant) -> Result<RunResult> {
     }
 
     Ok(RunResult::from_env(env, &env.recorder, &env.meter))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pins the round-boundary Scaffold semantics (option II): the merge
+    /// applies every client's raw `ci' - ci_old` delta against the
+    /// round-start `c`, so the post-round variate is exactly
+    /// `c0 + Σ_i d_i / N` — no client's delta feeds into another client's
+    /// update within the round (values chosen to be exact in f32).
+    #[test]
+    fn scaffold_c_update_is_round_boundary_mean_of_deltas() {
+        let suffixes = vec!["w".to_string()];
+        let mut c = TensorStore::new();
+        c.insert("c.w", Tensor::new(vec![2], vec![0.5, -0.5]).unwrap());
+
+        let mut d0 = TensorStore::new();
+        d0.insert("d.w", Tensor::new(vec![2], vec![1.0, 2.0]).unwrap());
+        let mut d1 = TensorStore::new();
+        d1.insert("d.w", Tensor::new(vec![2], vec![-3.0, 4.0]).unwrap());
+
+        apply_c_update(&mut c, &suffixes, &d0, 2).unwrap();
+        apply_c_update(&mut c, &suffixes, &d1, 2).unwrap();
+
+        // c0 + (d0 + d1) / N
+        assert_eq!(c.get("c.w").unwrap().data(), &[0.5 - 1.0, -0.5 + 3.0]);
+        // client deltas are read-only inputs to the merge
+        assert_eq!(d0.get("d.w").unwrap().data(), &[1.0, 2.0]);
+        assert_eq!(d1.get("d.w").unwrap().data(), &[-3.0, 4.0]);
+    }
 }

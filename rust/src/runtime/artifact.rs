@@ -35,26 +35,47 @@ pub struct Artifact {
 // `execute()` clones the handle into every returned buffer, so the
 // handle-touching windows (execute *and* compile — see
 // `Runtime::artifact`) run under one process-wide lock by default
-// ([`xla_exec_guard`]). A build whose vendored xla-rs carries the
-// Rc->Arc patch (DESIGN.md §5) can set `ADASPLIT_PARALLEL_XLA=1` to
+// ([`xla_exec_guard`]). Only a build compiled with the `parallel-xla`
+// feature — set exclusively by vendored xla-rs builds carrying the
+// Rc->Arc patch (DESIGN.md §5) — honors `ADASPLIT_PARALLEL_XLA=1` to
 // drop the lock and overlap executions; everything outside those
 // windows is unconditionally safe to run concurrently.
 unsafe impl Send for Artifact {}
 unsafe impl Sync for Artifact {}
 
+// Compile-time tie between the feature and the patched vendor: the
+// Rc->Arc patch (DESIGN.md §5) also exports this marker const, so
+// building with `parallel-xla` against an *unpatched* xla-rs fails right
+// here instead of producing a binary whose unlocked mode is unsound.
+#[cfg(feature = "parallel-xla")]
+const _: bool = xla::ATOMIC_CLIENT_HANDLE;
+
 /// Process-wide serialization of the PJRT client-handle windows (execute
 /// launch + result fetch + buffer drops, and compilation). On by default
 /// because upstream xla-rs refcounts the handle with `Rc`; costs the
 /// engine its artifact-execution overlap but keeps marshalling, batching,
-/// evaluation fan-out, and reduction parallel. Set
-/// `ADASPLIT_PARALLEL_XLA=1` only on a build whose vendored xla-rs uses
-/// atomic refcounts (the Rc->Arc patch). Run results are identical either
-/// way — the lock only sequences execution.
+/// evaluation fan-out, and reduction parallel. Run results are identical
+/// either way — the lock only sequences execution.
+///
+/// Dropping the lock requires *both* the `parallel-xla` cargo feature
+/// (set only by builds whose vendored xla-rs carries the Rc->Arc patch,
+/// DESIGN.md §5) and `ADASPLIT_PARALLEL_XLA=1` at runtime. The env var
+/// alone is refused with a warning: deployment config must not be able
+/// to flip an unpatched build into undefined behavior.
 pub(crate) fn xla_exec_guard() -> Option<MutexGuard<'static, ()>> {
     static PARALLEL: OnceLock<bool> = OnceLock::new();
     static LOCK: Mutex<()> = Mutex::new(());
     let parallel = *PARALLEL.get_or_init(|| {
-        std::env::var("ADASPLIT_PARALLEL_XLA").map(|v| v == "1").unwrap_or(false)
+        let requested = std::env::var("ADASPLIT_PARALLEL_XLA").map(|v| v == "1").unwrap_or(false);
+        if requested && !cfg!(feature = "parallel-xla") {
+            eprintln!(
+                "adasplit: ignoring ADASPLIT_PARALLEL_XLA=1 — this build lacks the \
+                 `parallel-xla` cargo feature (vendored xla-rs without the Rc->Arc \
+                 patch; unlocked execution would be unsound)"
+            );
+            return false;
+        }
+        requested
     });
     (!parallel).then(|| LOCK.lock().unwrap_or_else(|e| e.into_inner()))
 }

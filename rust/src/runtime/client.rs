@@ -7,14 +7,15 @@
 //! the handful of artifacts for its split config.
 //!
 //! The runtime is shared across engine worker threads (DESIGN.md §5): the
-//! cache is lock-based and compiled artifacts are handed out as `Arc`s.
-//! Compilation runs outside the cache lock (hits never stall behind a
-//! compile); the client-handle window inside it is serialized by the same
-//! lock as artifact execution (`xla_exec_guard`).
+//! cache maps each artifact name to a `OnceLock` slot, so every artifact
+//! compiles exactly once — concurrent first-touchers of the same name
+//! block on the slot, while hits and first touches of *other* names only
+//! graze the cache mutex. The client-handle window inside compilation is
+//! serialized by the same lock as artifact execution (`xla_exec_guard`).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{anyhow, Context, Result};
 use xla::PjRtClient;
@@ -22,11 +23,18 @@ use xla::PjRtClient;
 use super::artifact::Artifact;
 use super::manifest::Manifest;
 
+/// One cache entry: per-name once-cell so a concurrent first touch never
+/// compiles twice (a losing duplicate executable would be dropped outside
+/// `xla_exec_guard`, racing the client handle's non-atomic refcount).
+/// Errors are stored as strings (`anyhow::Error` is not `Clone`) and the
+/// slot is evicted on failure so a later call can retry.
+type CacheSlot = Arc<OnceLock<Result<Arc<Artifact>, String>>>;
+
 pub struct Runtime {
     client: PjRtClient,
     pub manifest: Manifest,
     dir: PathBuf,
-    cache: Mutex<HashMap<String, Arc<Artifact>>>,
+    cache: Mutex<HashMap<String, CacheSlot>>,
 }
 
 // SAFETY: the engine shares the runtime across scoped worker threads by
@@ -36,8 +44,12 @@ pub struct Runtime {
 // the new executable, so `Runtime::artifact` takes the same process-wide
 // handle lock as `Artifact::call` (`xla_exec_guard`, on by default) —
 // compile never overlaps an execute window's non-atomic refcount traffic
-// unless `ADASPLIT_PARALLEL_XLA=1` asserts an Rc->Arc-patched xla-rs
-// build (DESIGN.md §5).
+// unless the build carries the `parallel-xla` feature (Rc->Arc-patched
+// vendored xla-rs, DESIGN.md §5) *and* `ADASPLIT_PARALLEL_XLA=1` is set.
+// The per-name `OnceLock` slots additionally guarantee no duplicate
+// executable is ever created and dropped: every `PjRtLoadedExecutable`
+// that exists is the cached one, created under the handle lock and
+// destroyed only when the `Runtime` itself drops.
 unsafe impl Send for Runtime {}
 unsafe impl Sync for Runtime {}
 
@@ -58,20 +70,36 @@ impl Runtime {
     /// Fetch (compiling on first use) the named artifact. Safe to call from
     /// any engine worker; the returned `Arc` can be shared across threads.
     ///
-    /// Compilation happens *outside* the cache lock so cache hits never
-    /// stall behind an in-flight compile (or the execute it may be queued
-    /// behind); a concurrent first touch of the same artifact may compile
-    /// it twice, with the loser's executable discarded — the cache keeps
-    /// exactly one.
+    /// Exactly-once compile: the cache mutex is held only long enough to
+    /// fetch/insert the name's `OnceLock` slot, then the first caller runs
+    /// the compile inside `get_or_init` while concurrent first-touchers of
+    /// the *same* name block on the slot (hits and other names proceed).
+    /// No duplicate executable is ever created, so no PJRT handle is
+    /// dropped outside `xla_exec_guard` (see the `Runtime` SAFETY note).
     pub fn artifact(&self, name: &str) -> Result<Arc<Artifact>> {
-        if let Some(a) = self
+        let slot: CacheSlot = self
             .cache
             .lock()
             .unwrap_or_else(|e| e.into_inner())
-            .get(name)
-        {
-            return Ok(a.clone());
+            .entry(name.to_string())
+            .or_default()
+            .clone();
+        match slot.get_or_init(|| self.compile_artifact(name).map_err(|e| format!("{e:#}"))) {
+            Ok(a) => Ok(a.clone()),
+            Err(msg) => {
+                // evict the failed slot — unless a retry already replaced
+                // it — so a later call (e.g. after `make artifacts`) can
+                // compile afresh instead of replaying the cached error
+                let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+                if cache.get(name).is_some_and(|s| Arc::ptr_eq(s, &slot)) {
+                    cache.remove(name);
+                }
+                Err(anyhow!("{msg}"))
+            }
         }
+    }
+
+    fn compile_artifact(&self, name: &str) -> Result<Arc<Artifact>> {
         let spec = self.manifest.artifact(name)?.clone();
         let path = self.dir.join(&spec.file);
         let proto = xla::HloModuleProto::from_text_file(
@@ -82,23 +110,23 @@ impl Runtime {
         let comp = xla::XlaComputation::from_proto(&proto);
         // compile clones the client handle into the executable: take the
         // same handle lock as Artifact::call so it never races an
-        // in-flight execute window (no-op under ADASPLIT_PARALLEL_XLA=1)
+        // in-flight execute window (no-op when the lock is disabled)
         let exe = {
             let _handle_guard = super::artifact::xla_exec_guard();
             self.client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compiling `{name}`: {e}"))?
         };
-        let artifact = Arc::new(Artifact::new(name.to_string(), spec, exe));
-        let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
-        Ok(cache
-            .entry(name.to_string())
-            .or_insert(artifact)
-            .clone())
+        Ok(Arc::new(Artifact::new(name.to_string(), spec, exe)))
     }
 
     /// Number of artifacts compiled so far (diagnostics / perf logging).
     pub fn compiled_count(&self) -> usize {
-        self.cache.lock().unwrap_or_else(|e| e.into_inner()).len()
+        self.cache
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .values()
+            .filter(|s| s.get().is_some_and(|r| r.is_ok()))
+            .count()
     }
 }
