@@ -3,17 +3,68 @@
 //! step, FL step, evals), host<->literal marshalling, data synthesis, and
 //! the pure-Rust coordinator machinery (UCB, aggregation), so coordinator
 //! overhead can be read off directly against the XLA step time.
+//!
+//! Results are tracked across PRs in `BENCH_results.json` (engine round
+//! throughput over the threads axis + the deterministic mask-density
+//! trajectory of a tiny AdaSplit run). Default mode rewrites the file;
+//! `--check` compares against it instead — the trajectory must match
+//! exactly (it is deterministic) and throughput may not grossly regress —
+//! and exits 0 with a SKIP note when artifacts are absent, so CI can run
+//! the check on artifact-less runners (compile + schema check only).
+
+use std::collections::BTreeMap;
 
 use adasplit::config::ExperimentConfig;
 use adasplit::data::{build_partition, DatasetKind, Rng, SyntheticDataset};
 use adasplit::engine::ClientPool;
 use adasplit::orchestrator::UcbOrchestrator;
-use adasplit::protocols::Env;
+use adasplit::protocols::{run_protocol_recorded, Env};
 use adasplit::runtime::{Runtime, Tensor, TensorStore};
-use adasplit::util::bench::{bench, quick_mode};
+use adasplit::util::bench::{bench, quick_mode, BenchStats};
+use adasplit::util::Json;
+
+const TRACK_FILE: &str = "BENCH_results.json";
+
+fn results_json(
+    stats: &[BenchStats],
+    round_stats: &[(usize, BenchStats)],
+    densities: &[f64],
+    n_par: usize,
+    quick: bool,
+) -> Json {
+    let mut stat_map = BTreeMap::new();
+    for s in stats {
+        stat_map.insert(s.name.clone(), Json::Num(s.mean_s));
+    }
+    let mut thr = BTreeMap::new();
+    for (t, s) in round_stats {
+        thr.insert(t.to_string(), Json::Num(n_par as f64 / s.mean_s));
+    }
+    let mut m = BTreeMap::new();
+    m.insert("schema_version".into(), Json::Num(1.0));
+    m.insert("quick".into(), Json::Num(if quick { 1.0 } else { 0.0 }));
+    m.insert("stats_mean_s".into(), Json::Obj(stat_map));
+    m.insert("engine_round_clients_per_s".into(), Json::Obj(thr));
+    m.insert(
+        "mask_density".into(),
+        Json::Arr(densities.iter().map(|&d| Json::Num(d)).collect()),
+    );
+    Json::Obj(m)
+}
 
 fn main() -> anyhow::Result<()> {
-    let iters = if quick_mode() { 5 } else { 20 };
+    let check = std::env::args().any(|a| a == "--check");
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        if check {
+            println!(
+                "runtime_micro --check: SKIP measurement (artifacts not built); \
+                 bench compiled and schema logic linked — check passes"
+            );
+            return Ok(());
+        }
+        anyhow::bail!("artifacts not built (run `make artifacts`)");
+    }
+    let iters = if quick_mode() || check { 5 } else { 20 };
     let rt = Runtime::load("artifacts")?;
     let cfg = ExperimentConfig::quick_test();
     let clients = build_partition(DatasetKind::MixedCifar, 5, 64, 32, 1.0, 0)?;
@@ -178,5 +229,70 @@ fn main() -> anyhow::Result<()> {
         coord * 1e6,
         100.0 * coord / art
     );
+
+    // ---- tracked results: threads axis + mask-density trajectory ----------
+    // tiny deterministic AdaSplit run (1 local + 2 global rounds): the
+    // per-round mask densities are a pure function of the seed, so any
+    // drift between PRs is a real numerics change, not noise
+    let mut traj_cfg = ExperimentConfig::quick_test();
+    traj_cfg.kappa = 0.34;
+    traj_cfg.threads = 1;
+    let (_, traj) = run_protocol_recorded(&rt, &traj_cfg)?;
+    let densities: Vec<f64> = traj.rounds.iter().map(|r| r.mask_density).collect();
+
+    if check {
+        match std::fs::read_to_string(TRACK_FILE) {
+            Err(_) => println!(
+                "check: no tracked {TRACK_FILE}; run the bench without --check to create it"
+            ),
+            Ok(text) => {
+                let tracked = Json::parse(&text)?;
+                if let Some(md) = tracked.opt("mask_density") {
+                    let old: Vec<f64> = md
+                        .as_arr()?
+                        .iter()
+                        .map(|j| j.as_f64())
+                        .collect::<anyhow::Result<_>>()?;
+                    if old.is_empty() {
+                        println!("check: tracked mask_density empty (placeholder); skipping");
+                    } else {
+                        anyhow::ensure!(
+                            old.len() == densities.len(),
+                            "mask_density trajectory length changed: {} -> {}",
+                            old.len(),
+                            densities.len()
+                        );
+                        for (i, (a, b)) in old.iter().zip(&densities).enumerate() {
+                            anyhow::ensure!(
+                                (a - b).abs() < 1e-9,
+                                "mask_density[{i}] drifted: {a} -> {b} (numerics change?)"
+                            );
+                        }
+                        println!("check: mask_density trajectory matches ({} rounds)", old.len());
+                    }
+                }
+                if let Some(thr) = tracked.opt("engine_round_clients_per_s") {
+                    // timing is noisy across machines: only flag gross
+                    // (>60%) regressions
+                    for (t, s) in &round_stats {
+                        if let Some(old) = thr.opt(&t.to_string()) {
+                            let old = old.as_f64()?;
+                            let new = n_par as f64 / s.mean_s;
+                            anyhow::ensure!(
+                                old <= 0.0 || new > old * 0.4,
+                                "engine round throughput @{t}T regressed >60%: \
+                                 {old:.2} -> {new:.2} clients/s"
+                            );
+                        }
+                    }
+                    println!("check: engine throughput within tolerance of tracked results");
+                }
+            }
+        }
+    } else {
+        let json = results_json(&stats, &round_stats, &densities, n_par, quick_mode());
+        std::fs::write(TRACK_FILE, json.to_string_pretty())?;
+        println!("tracked results -> {TRACK_FILE}");
+    }
     Ok(())
 }

@@ -4,6 +4,7 @@
 //! ```bash
 //! cargo run --release --example compare_protocols -- --dataset mixed-noniid
 //! cargo run --release --example compare_protocols -- --rounds 20 --samples 512 --seeds 3
+//! cargo run --release --example compare_protocols -- --clients 20 --participation 0.25
 //! ```
 
 use adasplit::config::{ExperimentConfig, ProtocolKind};
@@ -25,21 +26,26 @@ fn main() -> anyhow::Result<()> {
     let samples: usize = arg("--samples").and_then(|v| v.parse().ok()).unwrap_or(192);
     let test: usize = arg("--test-samples").and_then(|v| v.parse().ok()).unwrap_or(128);
     let n_seeds: usize = arg("--seeds").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let clients: usize = arg("--clients").and_then(|v| v.parse().ok()).unwrap_or(5);
+    let participation: f64 = arg("--participation").and_then(|v| v.parse().ok()).unwrap_or(1.0);
     let seeds: Vec<u64> = (0..n_seeds as u64).collect();
 
     let rt = Runtime::load("artifacts")?;
     let mut table = ResultTable::new(format!(
-        "{} — {} rounds, {} samples/client, {} seed(s)",
+        "{} — {} rounds, {} samples/client, {} seed(s), participation {:.2}",
         dataset.name(),
         rounds,
         samples,
-        n_seeds
+        n_seeds,
+        participation
     ));
 
     for p in ProtocolKind::ALL {
         let cfg = ExperimentConfig::paper_default(dataset)
             .with_protocol(p)
-            .with_scale(rounds, samples, test);
+            .with_scale(rounds, samples, test)
+            .with_clients(clients)
+            .with_participation(participation);
         let t0 = std::time::Instant::now();
         let (result, std) = run_seeds(&rt, &cfg, &seeds)?;
         println!(

@@ -28,8 +28,14 @@ fn main() -> anyhow::Result<()> {
 
     for r in &recorder.rounds {
         println!(
-            "round {:>2} [{:>6}] client-loss={:.4} acc={:.2}% bw={:.4}GB selected={:?}",
-            r.round, r.phase, r.train_loss, r.accuracy_pct, r.bandwidth_gb, r.selected
+            "round {:>2} [{:>6}] client-loss={:.4} acc={:.2}% bw={:.4}GB participants={} selected={:?}",
+            r.round,
+            r.phase,
+            r.train_loss,
+            r.accuracy_pct,
+            r.bandwidth_gb,
+            r.participants.len(),
+            r.selected
         );
     }
     if trace {

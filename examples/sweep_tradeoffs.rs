@@ -1,6 +1,9 @@
 //! Figure-1 trade-off sweeps: accuracy vs bandwidth (varying kappa at
-//! fixed compute) and accuracy vs client compute (varying mu at fixed
-//! bandwidth budget), with the FL/SL baselines as reference points.
+//! fixed compute), accuracy vs client compute (varying mu at fixed
+//! bandwidth budget), and accuracy vs per-round participation (the third
+//! budget axis the pluggable scheduler opens: fewer sampled clients per
+//! round = less traffic and less client compute per round), with the
+//! FL/SL baselines as reference points.
 //!
 //! ```bash
 //! cargo run --release --example sweep_tradeoffs -- --rounds 10 --samples 256
@@ -53,6 +56,19 @@ fn main() -> anyhow::Result<()> {
         c_curve.push(r.client_tflops, r.best_accuracy);
     }
 
+    // accuracy vs participation: sweep the per-round sampling fraction
+    // (more clients for the scheduler to sample from than the default 5)
+    let part_base = base.clone().with_clients(10);
+    let mut p_curve = Series::new("AdaSplit (participation sweep)", "bandwidth_gb");
+    for participation in [0.3, 0.5, 0.7, 1.0] {
+        let r = run_protocol(&rt, &part_base.clone().with_participation(participation))?;
+        println!(
+            "p={participation:<4}   acc={:.2}% bw={:.4}GB cC={:.4}T sampled/round={:.1}",
+            r.best_accuracy, r.bandwidth_gb, r.client_tflops, r.sampled_clients_per_round
+        );
+        p_curve.push(r.bandwidth_gb, r.best_accuracy);
+    }
+
     // baseline reference points
     let mut base_bw = Series::new("baselines", "bandwidth_gb");
     let mut base_c = Series::new("baselines", "client_tflops");
@@ -70,10 +86,13 @@ fn main() -> anyhow::Result<()> {
     print!("{}", ascii_chart(&[bw_curve.clone(), base_bw.clone()], 60, 14));
     println!("\n=== accuracy vs client compute (Fig. 1 right) ===");
     print!("{}", ascii_chart(&[c_curve.clone(), base_c.clone()], 60, 14));
+    println!("\n=== accuracy vs bandwidth under client sampling ===");
+    print!("{}", ascii_chart(&[p_curve.clone()], 60, 14));
 
     std::fs::create_dir_all("results")?;
     std::fs::write("results/fig1_bandwidth_curve.csv", bw_curve.to_csv())?;
     std::fs::write("results/fig1_compute_curve.csv", c_curve.to_csv())?;
+    std::fs::write("results/fig1_participation_curve.csv", p_curve.to_csv())?;
     std::fs::write("results/fig1_baseline_bw.csv", base_bw.to_csv())?;
     std::fs::write("results/fig1_baseline_compute.csv", base_c.to_csv())?;
     println!("\ncurves -> results/fig1_*.csv");

@@ -64,6 +64,10 @@ fn main() -> anyhow::Result<()> {
         "bandwidth {:.4} GB | client compute {:.4} TFLOPs (total {:.4}) | C3 {:.3} | {wall:.1}s",
         result.bandwidth_gb, result.client_tflops, result.total_tflops, result.c3_score
     );
+    println!(
+        "scheduler: participation {:.2}, {:.1} clients/round through the round driver",
+        result.participation, result.sampled_clients_per_round
+    );
 
     std::fs::create_dir_all("results")?;
     let stem = format!("results/e2e_adasplit_r{rounds}_s{samples}");

@@ -126,6 +126,11 @@ pub struct ExperimentConfig {
     pub artifacts_dir: String,
     /// engine worker threads for per-client fan-out (0 = host parallelism)
     pub threads: usize,
+    /// per-round client-participation fraction p in (0, 1]: each round the
+    /// scheduler samples ceil(p * clients) clients (1.0 = everyone, the
+    /// `SyncAll` scheduler; < 1.0 = seeded `SampledSync` subsampling with
+    /// non-participant state spilled from memory)
+    pub participation: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -154,6 +159,7 @@ impl Default for ExperimentConfig {
             trace: false,
             artifacts_dir: "artifacts".into(),
             threads: 0,
+            participation: 1.0,
         }
     }
 }
@@ -187,8 +193,8 @@ impl ExperimentConfig {
             "test_per_client", "imbalance", "seed", "kappa", "eta", "mu",
             "gamma", "lambda", "beta", "server_grad_to_client", "prox_mu",
             "local_epochs", "eval_every", "sparse_eps", "trace",
-            "artifacts_dir", "threads", "budgets.bandwidth_gb",
-            "budgets.client_tflops", "budgets.temp",
+            "artifacts_dir", "threads", "participation",
+            "budgets.bandwidth_gb", "budgets.client_tflops", "budgets.temp",
         ];
         for k in kv.keys() {
             ensure!(KNOWN.contains(&k.as_str()), "unknown config key `{k}`");
@@ -225,6 +231,7 @@ impl ExperimentConfig {
             trace: kv.get_bool("trace", false)?,
             artifacts_dir: kv.get_str("artifacts_dir", &d.artifacts_dir),
             threads: kv.get_usize("threads", d.threads)?,
+            participation: kv.get_f64("participation", d.participation)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -273,6 +280,10 @@ impl ExperimentConfig {
         ensure!((0.0..=1.0).contains(&self.kappa), "kappa in [0,1]");
         ensure!(self.eta > 0.0 && self.eta <= 1.0, "eta in (0,1]");
         ensure!((0.0..=1.0).contains(&self.gamma), "gamma in [0,1]");
+        ensure!(
+            self.participation > 0.0 && self.participation <= 1.0,
+            "participation in (0,1]"
+        );
         ensure!(
             (0.05..=0.95).contains(&self.mu),
             "mu must map to a lowered split (0.2/0.4/0.6/0.8)"
@@ -327,6 +338,16 @@ impl ExperimentConfig {
 
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    pub fn with_participation(mut self, participation: f64) -> Self {
+        self.participation = participation;
+        self
+    }
+
+    pub fn with_clients(mut self, clients: usize) -> Self {
+        self.clients = clients;
         self
     }
 
@@ -411,6 +432,20 @@ mod tests {
         assert!(ExperimentConfig::from_kv_text("roundz = 3\n").is_err());
         assert!(ExperimentConfig::from_kv_text("protocol = \"sgd\"\n").is_err());
         assert!(ExperimentConfig::from_kv_text("kappa = 2.0\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("participation = 0.0\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("participation = 1.5\n").is_err());
+    }
+
+    #[test]
+    fn participation_default_parse_and_helper() {
+        let d = ExperimentConfig::default();
+        assert!((d.participation - 1.0).abs() < 1e-12, "default is full participation");
+        let c = ExperimentConfig::from_kv_text("participation = 0.25\n").unwrap();
+        assert!((c.participation - 0.25).abs() < 1e-12);
+        let c = ExperimentConfig::default().with_participation(0.5).with_clients(64);
+        assert!((c.participation - 0.5).abs() < 1e-12);
+        assert_eq!(c.clients, 64);
+        c.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! The generic round driver: one loop to run them all.
+//!
+//! Pre-redesign, every protocol was a closed `run(&mut env)` monolith that
+//! hard-coded the synchronous all-clients-every-round loop. This module
+//! inverts that: a protocol now only describes *what a client does in a
+//! round* ([`Protocol::client_round`]) and *how the server folds the
+//! results in* ([`Protocol::merge_round`]), while [`run`] owns the round
+//! loop, per-round participant selection ([`Scheduler`]), the engine
+//! fan-out, cost-meter merging, and round recording. Scheduling features
+//! (client sampling today; async/staleness and heterogeneous client
+//! speeds next, see ROADMAP) land here once instead of seven times.
+//!
+//! ## Determinism contract (DESIGN.md §5–§6)
+//!
+//! The driver preserves the engine's bit-identity guarantee:
+//!
+//! * participants are chosen on the driver thread (pure function of seed
+//!   and round);
+//! * `client_round` closures run on the worker pool and may touch only
+//!   their own [`ClientState`] plus read-only shared state;
+//! * per-client [`CostMeter`] deltas and protocol updates merge on the
+//!   driver thread in ascending client-id order;
+//! * `merge_round` / `end_round` run sequentially on the driver thread.
+//!
+//! A protocol whose training exchange is inherently sequential (SL-basic,
+//! SplitFed: one shared server model updated per batch) sets
+//! [`Protocol::fan_out`] to `false` and runs the exchange inside
+//! `merge_round` — the loop shape is still owned here.
+
+mod scheduler;
+mod store;
+
+pub use scheduler::{scheduler_for, SampledSync, Scheduler, SyncAll};
+pub use store::{scratch_dir, ClientState, ClientStateStore};
+
+use anyhow::{bail, Result};
+
+use crate::metrics::{CostMeter, RoundStat};
+use crate::protocols::{Env, RunResult};
+
+/// Read-only context handed to one client's round work on a worker.
+pub struct ClientCtx<'e, 'a> {
+    pub env: &'e Env<'a>,
+    pub round: usize,
+    /// Exchange step within the round (`0..Protocol::steps(round)`).
+    pub step: usize,
+    /// The client id this closure is running for.
+    pub client: usize,
+}
+
+/// What one client hands back from a round step: the protocol-specific
+/// payload plus the client-side cost delta the driver merges in id order.
+pub struct ClientUpdate<U> {
+    pub meter: CostMeter,
+    pub inner: U,
+}
+
+impl<U> ClientUpdate<U> {
+    pub fn new(inner: U) -> Self {
+        Self { meter: CostMeter::new(), inner }
+    }
+}
+
+/// What a round reports into the run recorder.
+pub struct RoundReport {
+    /// `train`, or AdaSplit's `local` / `global`.
+    pub phase: String,
+    pub train_loss: f64,
+    /// Mean server-mask density (AdaSplit; 1.0 otherwise).
+    pub mask_density: f64,
+    /// Clients that did server-side work this round (UCB picks for
+    /// AdaSplit; the participant set otherwise).
+    pub selected: Vec<usize>,
+}
+
+/// A distributed-training protocol, decomposed into the client-step /
+/// server-merge API the [`run`] driver schedules.
+///
+/// Call order per run: `init_state` once, then per round:
+/// `begin_round` -> (`client_round`* -> `merge_round`) x `steps` ->
+/// `end_round` -> `eval` (on eval rounds). `steps(round)` is consulted
+/// after `begin_round`, so a protocol may size its exchange count from
+/// the round's participants (AdaSplit: max batch count).
+pub trait Protocol: Sync {
+    /// Per-client payload type carried from `client_round` to `merge_round`.
+    type Update: Send;
+
+    fn name(&self) -> &'static str;
+
+    /// One-time server-side state initialization.
+    fn init_state(&mut self, env: &mut Env) -> Result<()>;
+
+    /// Build one client's initial state — must be a pure function of the
+    /// experiment seed and `client`, because the pooled store calls it
+    /// lazily on the client's *first participation* (which depends on the
+    /// scheduler) and first-touch timing must not change values.
+    fn init_client(&self, env: &Env, client: usize) -> Result<ClientState>;
+
+    /// Number of client-step/server-merge exchanges in `round`. Valid
+    /// after `begin_round(round)`.
+    fn steps(&self, round: usize) -> usize {
+        let _ = round;
+        1
+    }
+
+    /// Whether `client_round` fans out over the engine pool. Protocols
+    /// whose exchange is an inherent chain return `false` and do the
+    /// whole step inside `merge_round`.
+    fn fan_out(&self) -> bool {
+        true
+    }
+
+    /// Per-round setup on the driver thread (round-start snapshots, batch
+    /// materialization, scratch resets).
+    fn begin_round(&mut self, env: &mut Env, round: usize, participants: &[usize]) -> Result<()> {
+        let _ = (env, round, participants);
+        Ok(())
+    }
+
+    /// One participant's work for step `ctx.step`: runs on a worker, may
+    /// mutate only `state`, reads shared state through `&self`/`ctx.env`.
+    fn client_round(
+        &self,
+        ctx: &ClientCtx<'_, '_>,
+        state: &mut ClientState,
+    ) -> Result<ClientUpdate<Self::Update>> {
+        let _ = (ctx, state);
+        bail!("{} has no parallel client phase", self.name())
+    }
+
+    /// Fold the step's client updates (ascending client-id order) into
+    /// server state on the driver thread. Server-side costs are metered
+    /// here via `env.meter`.
+    fn merge_round(
+        &mut self,
+        env: &mut Env,
+        store: &mut ClientStateStore,
+        round: usize,
+        step: usize,
+        participants: &[usize],
+        updates: Vec<(usize, Self::Update)>,
+    ) -> Result<()>;
+
+    /// Round-boundary server work (aggregation, broadcasts); reports the
+    /// round's stats.
+    fn end_round(
+        &mut self,
+        env: &mut Env,
+        store: &mut ClientStateStore,
+        round: usize,
+        participants: &[usize],
+    ) -> Result<RoundReport>;
+
+    /// Mean per-client test accuracy (%) under the current state.
+    fn eval(&self, env: &Env, store: &mut ClientStateStore) -> Result<f64>;
+}
+
+/// Run `protocol` end to end under the configured scheduler and return
+/// its result. This is the only round loop in the codebase.
+pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
+    protocol.init_state(env)?;
+
+    let mut scheduler = scheduler_for(env.cfg);
+    // Spilling is active only under real subsampling: a full-participation
+    // run keeps every client resident and never touches the disk.
+    let mut store = if env.cfg.participation < 1.0 {
+        ClientStateStore::with_spill(env.cfg.clients, scratch_dir(env.cfg.seed))?
+    } else {
+        ClientStateStore::new(env.cfg.clients)
+    };
+    let pool = env.pool();
+
+    for round in 0..env.cfg.rounds {
+        let participants = scheduler.participants(round);
+        // evict last round's inactive clients first, then materialize the
+        // round's sample: peak residency ~ |old ∪ new|, not total clients
+        store.spill_except(&participants)?;
+        store.ensure_loaded(&participants, |i| protocol.init_client(env, i))?;
+
+        protocol.begin_round(env, round, &participants)?;
+        let steps = protocol.steps(round);
+        for step in 0..steps {
+            let updates: Vec<(usize, P::Update)> = if protocol.fan_out() {
+                let raw = {
+                    let p: &P = protocol;
+                    let env_ref: &Env = env;
+                    let mut states = store.loaded_mut(&participants)?;
+                    pool.run_mut(&mut states, |j, state| {
+                        let ctx = ClientCtx {
+                            env: env_ref,
+                            round,
+                            step,
+                            client: participants[j],
+                        };
+                        p.client_round(&ctx, state)
+                    })?
+                };
+                // fan-in on the driver thread, ascending client-id order
+                let mut merged = Vec::with_capacity(raw.len());
+                for (j, u) in raw.into_iter().enumerate() {
+                    env.meter.merge(&u.meter);
+                    merged.push((participants[j], u.inner));
+                }
+                merged
+            } else {
+                Vec::new()
+            };
+            protocol.merge_round(env, &mut store, round, step, &participants, updates)?;
+        }
+        let report = protocol.end_round(env, &mut store, round, &participants)?;
+
+        let eval_now = round % env.cfg.eval_every == 0 || round + 1 == env.cfg.rounds;
+        let accuracy = if eval_now {
+            protocol.eval(env, &mut store)?
+        } else {
+            env.recorder.last_accuracy()
+        };
+
+        env.recorder.push(RoundStat {
+            round,
+            phase: report.phase,
+            train_loss: report.train_loss,
+            accuracy_pct: accuracy,
+            bandwidth_gb: env.meter.bandwidth_gb(),
+            client_tflops: env.meter.client_tflops(),
+            total_tflops: env.meter.total_tflops(),
+            mask_density: report.mask_density,
+            selected: report.selected,
+            participants,
+        });
+    }
+
+    Ok(RunResult::from_env(env, &env.recorder, &env.meter))
+}

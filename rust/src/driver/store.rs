@@ -1,0 +1,597 @@
+//! Pooled per-client state: lazy initialization plus spill-to-disk, so a
+//! sampled run's resident memory tracks the *active* participant set, not
+//! the total client count.
+//!
+//! Each client owns a [`ClientState`] — a small named group of
+//! `TensorStore`s (`"model"`, `"ci"`, `"mask"`, `"pending"`, ... — the
+//! protocol picks the slots). The [`ClientStateStore`] holds one slot per
+//! client in one of three states:
+//!
+//! * **Uninit** — the client has never participated; nothing is held.
+//!   State is materialized on first participation via the protocol's
+//!   `init_client` (a pure function of the experiment seed, so *when* a
+//!   client is first initialized never changes its values).
+//! * **Loaded** — resident in memory (the active sample).
+//! * **Spilled** — serialized to a scratch file (bit-exact f32 round
+//!   trip), reloaded on the client's next participation.
+//!
+//! Spilling is enabled by the driver only when per-round sampling is
+//! active (`participation < 1.0`); a full-participation run keeps every
+//! client loaded and never touches the disk, which is one ingredient of
+//! the `SampledSync(p=1.0) == SyncAll` bit-identity guarantee.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::{Tensor, TensorStore};
+
+/// One client's named state group.
+#[derive(Clone, Debug, Default)]
+pub struct ClientState {
+    parts: BTreeMap<String, TensorStore>,
+}
+
+impl ClientState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, slot: impl Into<String>, store: TensorStore) {
+        self.parts.insert(slot.into(), store);
+    }
+
+    pub fn get(&self, slot: &str) -> Result<&TensorStore> {
+        self.parts
+            .get(slot)
+            .ok_or_else(|| anyhow::anyhow!("client-state slot `{slot}` missing"))
+    }
+
+    pub fn get_mut(&mut self, slot: &str) -> Result<&mut TensorStore> {
+        self.parts
+            .get_mut(slot)
+            .ok_or_else(|| anyhow::anyhow!("client-state slot `{slot}` missing"))
+    }
+
+    /// Disjoint `&mut` borrows of two distinct slots (e.g. an FL client's
+    /// model and its control variate inside one fan-out closure).
+    pub fn pair_mut(
+        &mut self,
+        a: &str,
+        b: &str,
+    ) -> Result<(&mut TensorStore, &mut TensorStore)> {
+        ensure!(a != b, "pair_mut needs two distinct slots");
+        let mut sa = None;
+        let mut sb = None;
+        for (k, v) in self.parts.iter_mut() {
+            if k == a {
+                sa = Some(v);
+            } else if k == b {
+                sb = Some(v);
+            }
+        }
+        match (sa, sb) {
+            (Some(x), Some(y)) => Ok((x, y)),
+            (None, _) => bail!("client-state slot `{a}` missing"),
+            (_, None) => bail!("client-state slot `{b}` missing"),
+        }
+    }
+
+    /// Remove and return one tensor (e.g. a pending stale gradient).
+    pub fn take_tensor(&mut self, slot: &str, key: &str) -> Option<Tensor> {
+        let store = self.parts.get_mut(slot)?;
+        if !store.contains(key) {
+            return None;
+        }
+        // rebuild without the key (TensorStore has no remove; the pending
+        // slot holds at most one small tensor, so this stays cheap)
+        let mut taken = None;
+        let mut rest = TensorStore::new();
+        for (k, v) in store.iter() {
+            if k == key {
+                taken = Some(v.clone());
+            } else {
+                rest.insert(k.clone(), v.clone());
+            }
+        }
+        *store = rest;
+        taken
+    }
+
+    pub fn parts(&self) -> impl Iterator<Item = (&String, &TensorStore)> {
+        self.parts.iter()
+    }
+
+    /// Resident payload in bytes (f32 tensors only; keys ignored).
+    pub fn byte_size(&self) -> usize {
+        self.parts.values().map(|s| s.byte_size()).sum()
+    }
+}
+
+enum Slot {
+    Uninit,
+    Loaded(ClientState),
+    Spilled(PathBuf),
+}
+
+/// Pooled per-client state with lazy init and optional spill-to-disk.
+pub struct ClientStateStore {
+    slots: Vec<Slot>,
+    spill_dir: Option<PathBuf>,
+}
+
+impl ClientStateStore {
+    /// All-resident store (no spilling): full-participation behavior.
+    pub fn new(n_clients: usize) -> Self {
+        Self {
+            slots: (0..n_clients).map(|_| Slot::Uninit).collect(),
+            spill_dir: None,
+        }
+    }
+
+    /// Store that spills non-active clients to scratch files under `dir`
+    /// (created here, removed on drop).
+    pub fn with_spill(n_clients: usize, dir: PathBuf) -> Result<Self> {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating spill dir {dir:?}"))?;
+        Ok(Self {
+            slots: (0..n_clients).map(|_| Slot::Uninit).collect(),
+            spill_dir: Some(dir),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn spilling(&self) -> bool {
+        self.spill_dir.is_some()
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| matches!(s, Slot::Loaded(_)))
+            .count()
+    }
+
+    /// Every client that has ever been initialized is currently resident.
+    pub fn all_loaded(&self) -> bool {
+        self.slots.iter().all(|s| matches!(s, Slot::Loaded(_)))
+    }
+
+    pub fn loaded_ids(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, Slot::Loaded(_)))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Resident bytes across loaded states (introspection / tests).
+    pub fn resident_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Slot::Loaded(c) => c.byte_size(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Make every id in `ids` resident, initializing first-timers via
+    /// `init` and reloading spilled ones.
+    pub fn ensure_loaded<F>(&mut self, ids: &[usize], init: F) -> Result<()>
+    where
+        F: Fn(usize) -> Result<ClientState>,
+    {
+        for &id in ids {
+            ensure!(id < self.slots.len(), "client {id} out of range");
+            match &self.slots[id] {
+                Slot::Loaded(_) => {}
+                Slot::Uninit => self.slots[id] = Slot::Loaded(init(id)?),
+                Slot::Spilled(path) => {
+                    let state = read_state(path)
+                        .with_context(|| format!("reloading client {id}"))?;
+                    std::fs::remove_file(path).ok();
+                    self.slots[id] = Slot::Loaded(state);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Spill every resident client *not* in `keep` (sorted ids). No-op
+    /// unless spilling is enabled.
+    pub fn spill_except(&mut self, keep: &[usize]) -> Result<usize> {
+        let Some(dir) = self.spill_dir.clone() else {
+            return Ok(0);
+        };
+        let mut spilled = 0;
+        for id in 0..self.slots.len() {
+            if keep.binary_search(&id).is_ok() {
+                continue;
+            }
+            if let Slot::Loaded(state) = &self.slots[id] {
+                let path = dir.join(format!("client_{id}.bin"));
+                write_state(&path, state)
+                    .with_context(|| format!("spilling client {id}"))?;
+                self.slots[id] = Slot::Spilled(path);
+                spilled += 1;
+            }
+        }
+        Ok(spilled)
+    }
+
+    pub fn get(&self, id: usize) -> Result<&ClientState> {
+        match self.slots.get(id) {
+            Some(Slot::Loaded(s)) => Ok(s),
+            Some(_) => bail!("client {id} not resident"),
+            None => bail!("client {id} out of range"),
+        }
+    }
+
+    pub fn get_mut(&mut self, id: usize) -> Result<&mut ClientState> {
+        match self.slots.get_mut(id) {
+            Some(Slot::Loaded(s)) => Ok(s),
+            Some(_) => bail!("client {id} not resident"),
+            None => bail!("client {id} out of range"),
+        }
+    }
+
+    /// Disjoint `&mut` borrows of the resident states for `ids`
+    /// (ascending, unique), in id order — the shape `ClientPool::run_mut`
+    /// fans out over.
+    pub fn loaded_mut(&mut self, ids: &[usize]) -> Result<Vec<&mut ClientState>> {
+        let mut out = Vec::with_capacity(ids.len());
+        let mut rest: &mut [Slot] = &mut self.slots;
+        let mut offset = 0usize;
+        for &id in ids {
+            ensure!(id >= offset, "loaded_mut ids must be ascending and unique");
+            ensure!(id < offset + rest.len(), "client {id} out of range");
+            let (left, right) = rest.split_at_mut(id - offset + 1);
+            match left.last_mut().unwrap() {
+                Slot::Loaded(s) => out.push(s),
+                _ => bail!("client {id} not resident"),
+            }
+            rest = right;
+            offset = id + 1;
+        }
+        Ok(out)
+    }
+
+    /// Visit every client in id order with its state (read-only), lazily
+    /// materializing as needed, without growing the resident set past
+    /// `keep` (sorted ids). The visit cannot mutate state (it only sees
+    /// `&ClientState`), which makes the sweep cheap under spilling:
+    ///
+    /// * resident clients are visited in place;
+    /// * spilled clients outside `keep` are read **without consuming the
+    ///   spill file** and dropped after the visit — the file stays
+    ///   authoritative, so a repeated read-only sweep (per-round
+    ///   evaluation) does zero disk writes;
+    /// * never-initialized clients are initialized, visited, and (when
+    ///   spilling and outside `keep`) written out once, so later sweeps
+    ///   take the read-only path.
+    pub fn visit_all<I, F>(&mut self, keep: &[usize], init: I, mut f: F) -> Result<()>
+    where
+        I: Fn(usize) -> Result<ClientState>,
+        F: FnMut(usize, &ClientState) -> Result<()>,
+    {
+        for id in 0..self.slots.len() {
+            let kept = keep.binary_search(&id).is_ok();
+            match &self.slots[id] {
+                Slot::Loaded(_) => {}
+                Slot::Spilled(path) => {
+                    let path = path.clone();
+                    let state =
+                        read_state(&path).with_context(|| format!("reloading client {id}"))?;
+                    if kept {
+                        std::fs::remove_file(&path).ok();
+                        self.slots[id] = Slot::Loaded(state);
+                    } else {
+                        f(id, &state)?;
+                        continue;
+                    }
+                }
+                Slot::Uninit => {
+                    let state = init(id)?;
+                    if self.spilling() && !kept {
+                        let dir = self.spill_dir.clone().expect("spilling implies dir");
+                        let path = dir.join(format!("client_{id}.bin"));
+                        write_state(&path, &state)
+                            .with_context(|| format!("spilling client {id}"))?;
+                        f(id, &state)?;
+                        self.slots[id] = Slot::Spilled(path);
+                        continue;
+                    }
+                    self.slots[id] = Slot::Loaded(state);
+                }
+            }
+            match &self.slots[id] {
+                Slot::Loaded(state) => f(id, state)?,
+                _ => unreachable!("client {id} must be resident here"),
+            }
+            // a resident client outside `keep` (caller shrank the keep
+            // set) still gets evicted after its visit under spilling
+            if self.spilling() && !kept {
+                self.spill_one(id)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn spill_one(&mut self, id: usize) -> Result<()> {
+        let Some(dir) = self.spill_dir.clone() else {
+            return Ok(());
+        };
+        if let Slot::Loaded(state) = &self.slots[id] {
+            let path = dir.join(format!("client_{id}.bin"));
+            write_state(&path, state).with_context(|| format!("spilling client {id}"))?;
+            self.slots[id] = Slot::Spilled(path);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ClientStateStore {
+    fn drop(&mut self) {
+        if let Some(dir) = &self.spill_dir {
+            std::fs::remove_dir_all(dir).ok();
+        }
+    }
+}
+
+// ---- spill codec -----------------------------------------------------------
+//
+// Little-endian binary, bit-exact f32 round trip:
+//   magic "ACS1"
+//   u32 n_parts { u32 slot_len, slot, u32 n_tensors
+//     { u32 key_len, key, u32 ndim, u32 dims[ndim], f32 data[prod(dims)] } }
+
+const MAGIC: &[u8; 4] = b"ACS1";
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    ensure!(len <= 1 << 20, "spill file: oversized string");
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+fn write_state(path: &Path, state: &ClientState) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, state.parts.len() as u32)?;
+    for (slot, store) in state.parts() {
+        write_str(&mut w, slot)?;
+        write_u32(&mut w, store.len() as u32)?;
+        for (key, t) in store.iter() {
+            write_str(&mut w, key)?;
+            write_u32(&mut w, t.shape().len() as u32)?;
+            for &d in t.shape() {
+                write_u32(&mut w, d as u32)?;
+            }
+            for &v in t.data() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn read_state(path: &Path) -> Result<ClientState> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "spill file: bad magic");
+    let n_parts = read_u32(&mut r)? as usize;
+    let mut state = ClientState::new();
+    for _ in 0..n_parts {
+        let slot = read_str(&mut r)?;
+        let n_tensors = read_u32(&mut r)? as usize;
+        let mut store = TensorStore::new();
+        for _ in 0..n_tensors {
+            let key = read_str(&mut r)?;
+            let ndim = read_u32(&mut r)? as usize;
+            ensure!(ndim <= 8, "spill file: bad rank");
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let len: usize = shape.iter().product();
+            let mut data = Vec::with_capacity(len);
+            let mut b = [0u8; 4];
+            for _ in 0..len {
+                r.read_exact(&mut b)?;
+                data.push(f32::from_le_bytes(b));
+            }
+            store.insert(key, Tensor::new(shape, data)?);
+        }
+        state.insert(slot, store);
+    }
+    Ok(state)
+}
+
+/// Unique scratch directory for one run's spill files.
+pub fn scratch_dir(seed: u64) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "adasplit-spill-{}-s{seed}-{n}",
+        std::process::id()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(v: f32) -> ClientState {
+        let mut model = TensorStore::new();
+        model.insert("state.p.w", Tensor::new(vec![2, 3], vec![v; 6]).unwrap());
+        model.insert("state.t", Tensor::scalar(v));
+        let mut s = ClientState::new();
+        s.insert("model", model);
+        s.insert("pending", TensorStore::new());
+        s
+    }
+
+    #[test]
+    fn lazy_init_runs_once_per_client() {
+        let mut store = ClientStateStore::new(4);
+        let inits = std::cell::Cell::new(0);
+        let init = |i: usize| {
+            inits.set(inits.get() + 1);
+            Ok(state(i as f32))
+        };
+        store.ensure_loaded(&[1, 3], init).unwrap();
+        store.ensure_loaded(&[1, 3], init).unwrap();
+        assert_eq!(inits.get(), 2);
+        assert_eq!(store.loaded_count(), 2);
+        assert!(!store.all_loaded());
+        assert_eq!(store.get(1).unwrap().get("model").unwrap().get("state.t").unwrap().item(), 1.0);
+        assert!(store.get(0).is_err());
+    }
+
+    #[test]
+    fn loaded_mut_hands_out_disjoint_slots_in_id_order() {
+        let mut store = ClientStateStore::new(5);
+        store.ensure_loaded(&[0, 2, 4], |i| Ok(state(i as f32))).unwrap();
+        let mut views = store.loaded_mut(&[0, 2, 4]).unwrap();
+        assert_eq!(views.len(), 3);
+        for (j, v) in views.iter_mut().enumerate() {
+            v.get_mut("model").unwrap().get_mut("state.t").unwrap().scale(10.0);
+            let expect = (j * 2) as f32 * 10.0;
+            assert_eq!(v.get("model").unwrap().get("state.t").unwrap().item(), expect);
+        }
+        assert!(store.loaded_mut(&[1]).is_err(), "non-resident rejected");
+    }
+
+    #[test]
+    fn spill_roundtrip_is_bit_exact() {
+        let dir = scratch_dir(42);
+        let mut store = ClientStateStore::with_spill(3, dir).unwrap();
+        store.ensure_loaded(&[0, 1, 2], |i| {
+            let mut s = state(i as f32 + 0.1);
+            // exercise odd values incl. negative zero and subnormals
+            s.get_mut("model").unwrap().insert(
+                "state.odd",
+                Tensor::new(vec![3], vec![-0.0, f32::MIN_POSITIVE / 2.0, 1e-38]).unwrap(),
+            );
+            Ok(s)
+        }).unwrap();
+        let before: Vec<u32> = store.get(1).unwrap().get("model").unwrap().get("state.odd")
+            .unwrap().data().iter().map(|v| v.to_bits()).collect();
+        let spilled = store.spill_except(&[0]).unwrap();
+        assert_eq!(spilled, 2);
+        assert_eq!(store.loaded_count(), 1);
+        store.ensure_loaded(&[1], |_| unreachable!("spilled, not uninit")).unwrap();
+        let after: Vec<u32> = store.get(1).unwrap().get("model").unwrap().get("state.odd")
+            .unwrap().data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(before, after);
+        assert_eq!(
+            store.get(1).unwrap().get("model").unwrap().get("state.p.w").unwrap().shape(),
+            &[2, 3]
+        );
+    }
+
+    #[test]
+    fn visit_all_bounds_residency_to_keep_set() {
+        let dir = scratch_dir(43);
+        let mut store = ClientStateStore::with_spill(6, dir).unwrap();
+        store.ensure_loaded(&[2, 3], |i| Ok(state(i as f32))).unwrap();
+        let mut seen = Vec::new();
+        store
+            .visit_all(&[2, 3], |i| Ok(state(i as f32)), |i, s| {
+                seen.push((i, s.get("model").unwrap().get("state.t").unwrap().item()));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(seen, (0..6).map(|i| (i, i as f32)).collect::<Vec<_>>());
+        // only the keep set stays resident after the sweep
+        assert_eq!(store.loaded_ids(), vec![2, 3]);
+    }
+
+    #[test]
+    fn repeated_readonly_sweeps_reuse_spill_files_without_reinit() {
+        let dir = scratch_dir(44);
+        let mut store = ClientStateStore::with_spill(5, dir.clone()).unwrap();
+        // first sweep: keep {1}; others are initialized and written once
+        store
+            .visit_all(&[1], |i| Ok(state(i as f32)), |_, _| Ok(()))
+            .unwrap();
+        assert_eq!(store.loaded_ids(), vec![1]);
+        let count_files = || std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(count_files(), 4);
+        // second sweep: spilled clients must come off their files (init
+        // would panic) and the files must survive the read-only visit
+        let mut seen = Vec::new();
+        store
+            .visit_all(
+                &[1],
+                |i| panic!("client {i} re-initialized on a read-only sweep"),
+                |i, s| {
+                    seen.push((i, s.get("model").unwrap().get("state.t").unwrap().item()));
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(seen, (0..5).map(|i| (i, i as f32)).collect::<Vec<_>>());
+        assert_eq!(count_files(), 4, "read-only sweep must not consume spill files");
+        assert_eq!(store.loaded_ids(), vec![1]);
+    }
+
+    #[test]
+    fn no_spill_mode_keeps_everything_resident() {
+        let mut store = ClientStateStore::new(3);
+        store.ensure_loaded(&[0, 1, 2], |i| Ok(state(i as f32))).unwrap();
+        assert_eq!(store.spill_except(&[0]).unwrap(), 0);
+        assert!(store.all_loaded());
+    }
+
+    #[test]
+    fn pair_mut_and_take_tensor() {
+        let mut s = state(1.0);
+        s.insert("ci", {
+            let mut t = TensorStore::new();
+            t.insert("ci.w", Tensor::scalar(5.0));
+            t
+        });
+        let (model, ci) = s.pair_mut("model", "ci").unwrap();
+        model.get_mut("state.t").unwrap().scale(2.0);
+        ci.get_mut("ci.w").unwrap().scale(3.0);
+        assert_eq!(s.get("ci").unwrap().get("ci.w").unwrap().item(), 15.0);
+        assert!(s.pair_mut("model", "model").is_err());
+        assert!(s.take_tensor("pending", "grad_a").is_none());
+        s.get_mut("pending").unwrap().insert("grad_a", Tensor::scalar(9.0));
+        assert_eq!(s.take_tensor("pending", "grad_a").unwrap().item(), 9.0);
+        assert!(s.take_tensor("pending", "grad_a").is_none());
+    }
+}

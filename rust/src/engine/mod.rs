@@ -14,9 +14,16 @@
 //! The pool is deliberately dependency-free (`std::thread::scope` + an
 //! atomic work index): workers claim indices from a shared counter, so a
 //! slow client (compile hit, big batch list) does not stall the others.
+//!
+//! **Fail-fast**: once any index returns an error, workers stop claiming
+//! *new* indices (already-claimed work runs to completion). This cannot
+//! change which error is reported: claims are handed out in ascending
+//! order, so every index below the lowest-failing one was claimed before
+//! it and completes — the lowest-index error still wins, deterministically.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -113,15 +120,23 @@ where
     }
 
     let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
     let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
+                // fail-fast: stop claiming new indices after any failure
+                if failed.load(Ordering::Acquire) {
+                    break;
+                }
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
                 let r = f(i);
+                if r.is_err() {
+                    failed.store(true, Ordering::Release);
+                }
                 *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
             });
         }
@@ -156,10 +171,15 @@ where
 
     let base = SlicePtr(states.as_mut_ptr());
     let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
     let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
+                // fail-fast: stop claiming new indices after any failure
+                if failed.load(Ordering::Acquire) {
+                    break;
+                }
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
@@ -170,6 +190,9 @@ where
                 // again).
                 let slot = unsafe { &mut *base.0.add(i) };
                 let r = f(i, slot);
+                if r.is_err() {
+                    failed.store(true, Ordering::Release);
+                }
                 *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
             });
         }
@@ -178,6 +201,10 @@ where
     collect_slots(slots)
 }
 
+/// In-order fan-in. Scanning ascending indices makes the lowest-index
+/// error win; under fail-fast, every index below the lowest error was
+/// claimed before it (claims are handed out in order) and completed, so
+/// the scan always reaches that error before any unclaimed `None` slot.
 fn collect_slots<T>(slots: Vec<Mutex<Option<Result<T>>>>) -> Result<Vec<T>> {
     let mut out = Vec::with_capacity(slots.len());
     for (i, slot) in slots.into_iter().enumerate() {
@@ -187,6 +214,71 @@ fn collect_slots<T>(slots: Vec<Mutex<Option<Result<T>>>>) -> Result<Vec<T>> {
         }
     }
     Ok(out)
+}
+
+// ---- order-preserving progress streaming ----------------------------------
+
+/// Sending half of an order-preserving progress channel: workers emit
+/// `(index, line)` from inside a fan-out as each unit finishes.
+pub struct ProgressSink {
+    tx: Mutex<mpsc::Sender<(usize, String)>>,
+}
+
+impl ProgressSink {
+    /// Emit one progress line for unit `index`. Never blocks; if the
+    /// receiver is gone the line is dropped.
+    pub fn emit(&self, index: usize, line: impl Into<String>) {
+        if let Ok(tx) = self.tx.lock() {
+            tx.send((index, line.into())).ok();
+        }
+    }
+}
+
+/// Receiving half: iterate to get lines back **in index order**, each
+/// yielded as soon as it *and every lower index* have finished — so
+/// progress streams during the fan-out instead of printing in one burst
+/// after the fan-in, and the output order never depends on scheduling.
+/// Out-of-order completions are buffered; once every sink clone is
+/// dropped, any buffered remainder drains in index order.
+pub struct OrderedProgress {
+    rx: mpsc::Receiver<(usize, String)>,
+    pending: BTreeMap<usize, String>,
+    next: usize,
+}
+
+/// Create an order-preserving progress channel.
+pub fn ordered_progress() -> (ProgressSink, OrderedProgress) {
+    let (tx, rx) = mpsc::channel();
+    (
+        ProgressSink { tx: Mutex::new(tx) },
+        OrderedProgress { rx, pending: BTreeMap::new(), next: 0 },
+    )
+}
+
+impl Iterator for OrderedProgress {
+    type Item = String;
+
+    fn next(&mut self) -> Option<String> {
+        loop {
+            if let Some(line) = self.pending.remove(&self.next) {
+                self.next += 1;
+                return Some(line);
+            }
+            match self.rx.recv() {
+                Ok((i, line)) => {
+                    self.pending.insert(i, line);
+                }
+                // channel closed: drain whatever arrived, still in order
+                Err(_) => match self.pending.pop_first() {
+                    Some((i, line)) => {
+                        self.next = i + 1;
+                        return Some(line);
+                    }
+                    None => return None,
+                },
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -270,6 +362,82 @@ mod tests {
         assert!(ClientPool::new(0).threads() >= 1);
         assert_eq!(ClientPool::new(3).threads(), 3);
         assert!(available_threads() >= 1);
+    }
+
+    #[test]
+    fn fail_fast_stops_claiming_new_indices() {
+        use std::sync::atomic::AtomicUsize;
+        // index 0 fails immediately; every other index sleeps. Without
+        // fail-fast all 400 indices would execute; with it, each worker
+        // stops after at most the one unit it already claimed.
+        let executed = AtomicUsize::new(0);
+        let r = par_indexed(4, 400, |i| {
+            executed.fetch_add(1, Ordering::Relaxed);
+            if i == 0 {
+                Err(anyhow!("boom 0"))
+            } else {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                Ok(i)
+            }
+        });
+        assert_eq!(r.unwrap_err().to_string(), "boom 0");
+        let ran = executed.load(Ordering::Relaxed);
+        assert!(ran < 400, "fail-fast must skip most work (ran {ran}/400)");
+    }
+
+    #[test]
+    fn fail_fast_preserves_lowest_index_error_in_run_mut() {
+        for threads in [1, 4] {
+            let mut xs: Vec<u64> = (0..64).collect();
+            let r = ClientPool::new(threads).run_mut(&mut xs, |i, _| {
+                if i % 7 == 5 {
+                    Err(anyhow!("boom {i}"))
+                } else {
+                    Ok(())
+                }
+            });
+            assert_eq!(r.unwrap_err().to_string(), "boom 5", "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn ordered_progress_streams_in_index_order() {
+        let (sink, progress) = ordered_progress();
+        // emit wildly out of order, from multiple threads
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in [3usize, 1, 4, 0, 2] {
+                    sink.emit(i, format!("line {i}"));
+                }
+            });
+        });
+        drop(sink);
+        let lines: Vec<String> = progress.collect();
+        assert_eq!(lines, (0..5).map(|i| format!("line {i}")).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ordered_progress_yields_early_prefix_before_channel_closes() {
+        let (sink, mut progress) = ordered_progress();
+        sink.emit(1, "b");
+        sink.emit(0, "a");
+        // index 0 and 1 are both available: the iterator must yield them
+        // without waiting for the sink to drop
+        assert_eq!(progress.next().as_deref(), Some("a"));
+        assert_eq!(progress.next().as_deref(), Some("b"));
+        drop(sink);
+        assert_eq!(progress.next(), None);
+    }
+
+    #[test]
+    fn ordered_progress_drains_gaps_after_close() {
+        let (sink, progress) = ordered_progress();
+        sink.emit(2, "two");
+        sink.emit(5, "five");
+        drop(sink);
+        // indices 0,1,3,4 never reported: remaining lines still come out
+        // in ascending index order
+        assert_eq!(progress.collect::<Vec<_>>(), vec!["two".to_string(), "five".to_string()]);
     }
 
     #[test]

@@ -15,10 +15,13 @@
 //! Python never runs on the training path: [`runtime`] loads the HLO text
 //! artifacts via the PJRT C API (`xla` crate) and executes them directly.
 //!
-//! Per-round client work fans out over the [`engine`] worker pool
-//! (`--threads N`, default = host parallelism); results are merged in
+//! Every protocol implements the [`driver`] module's client-step /
+//! server-merge `Protocol` trait; one generic `RoundDriver` owns the
+//! round loop, per-round client sampling (`--participation p`, pooled
+//! client state with spill-to-disk), and the [`engine`] fan-out
+//! (`--threads N`, default = host parallelism). Results are merged in
 //! client-id order so parallel runs are bit-identical to serial ones
-//! (DESIGN.md §5).
+//! (DESIGN.md §5–§6).
 //!
 //! ## Quickstart
 //!
@@ -35,6 +38,7 @@
 
 pub mod config;
 pub mod data;
+pub mod driver;
 pub mod engine;
 pub mod util;
 pub mod metrics;

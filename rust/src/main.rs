@@ -43,12 +43,17 @@ RUN OPTIONS:
   --kappa X --eta X --mu X --beta X --lambda X
   --server-grad          Table-5 ablation: send server gradient to client
   --imbalance X          geometric client-size skew       [1.0]
+  --clients N            number of clients                [5]
+  --participation P      per-round client sampling fraction in (0,1];
+                         < 1 samples ceil(P*N) clients per round and
+                         spills inactive client state to disk   [1.0]
   --threads N            engine worker threads (0 = host parallelism) [0]
   --curve-out PATH       write the per-round curve CSV
   --trace                print per-iteration orchestrator traces
 
 COMPARE OPTIONS:
   --dataset ID  --rounds N  --samples N  --test-samples N  --seeds N
+  --participation P      per-round client sampling fraction    [1.0]
   --threads N            worker threads per run; protocols also run
                          concurrently across the pool      [0 = auto]
 ";
@@ -175,6 +180,12 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
     if let Some(v) = args.parsed("imbalance")? {
         cfg.imbalance = v;
     }
+    if let Some(v) = args.parsed("clients")? {
+        cfg.clients = v;
+    }
+    if let Some(v) = args.parsed("participation")? {
+        cfg.participation = v;
+    }
     if let Some(v) = args.parsed("threads")? {
         cfg.threads = v;
     }
@@ -209,6 +220,12 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
         result.c3_score,
         t0.elapsed().as_secs_f64()
     );
+    if cfg.participation < 1.0 {
+        println!(
+            "participation={:.2}: {:.1} of {} clients sampled per round (inactive state spilled)",
+            result.participation, result.sampled_clients_per_round, cfg.clients
+        );
+    }
     if let Some(path) = args.get("curve-out") {
         recorder.write_csv(path)?;
         println!("curve written to {path}");
@@ -224,6 +241,7 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
     let test = args.parsed("test-samples")?.unwrap_or(128);
     let n_seeds = args.parsed("seeds")?.unwrap_or(1usize);
     let threads = args.parsed("threads")?.unwrap_or(0usize);
+    let participation = args.parsed("participation")?.unwrap_or(1.0f64);
     let seed_list: Vec<u64> = (0..n_seeds as u64).collect();
 
     let budget = adasplit::engine::ClientPool::new(threads).threads();
@@ -234,18 +252,37 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
             ExperimentConfig::paper_default(dataset)
                 .with_protocol(p)
                 .with_scale(rounds, samples, test)
+                .with_participation(participation)
                 .with_threads(per_protocol)
         })
         .collect();
 
-    // protocol runs are independent: fan them out across the pool, then
-    // render the table in protocol order
+    // protocol runs are independent: fan them out across the pool. Each
+    // run pushes its "done" line through an order-preserving progress
+    // channel, so lines stream as protocols finish (in protocol order)
+    // instead of printing in one burst after the fan-in.
     let t0 = std::time::Instant::now();
-    let rows = par_indexed(outer, cfgs.len(), |i| run_seeds(rt, &cfgs[i], &seed_list))?;
+    let (sink, progress) = adasplit::engine::ordered_progress();
+    let rows = std::thread::scope(|scope| {
+        let cfgs = &cfgs;
+        let seed_list = &seed_list;
+        let worker = scope.spawn(move || {
+            let sink = sink; // dropped when the fan-out ends => progress closes
+            par_indexed(outer, cfgs.len(), |i| {
+                let row = run_seeds(rt, &cfgs[i], seed_list)?;
+                let name = ProtocolKind::ALL[i].name();
+                sink.emit(i, format!("{:<10} done: {:.2}%", name, row.0.best_accuracy));
+                Ok(row)
+            })
+        });
+        for line in progress {
+            println!("{line}");
+        }
+        worker.join().expect("compare fan-out panicked")
+    })?;
 
     let mut table = ResultTable::new(format!("{} (R={rounds})", dataset.name()));
     for (p, (result, std)) in ProtocolKind::ALL.iter().zip(&rows) {
-        println!("{:<10} done: {:.2}%", p.name(), result.best_accuracy);
         table.add(p.name(), result, *std);
     }
     println!("\n{}", table.render());

@@ -21,8 +21,12 @@ pub struct RoundStat {
     pub total_tflops: f64,
     /// mean active-mask density on the server (AdaSplit; 1.0 otherwise)
     pub mask_density: f64,
-    /// clients selected this round (AdaSplit orchestrator; all otherwise)
+    /// clients selected this round (AdaSplit orchestrator; the round's
+    /// participant set otherwise)
     pub selected: Vec<usize>,
+    /// clients sampled into the round by the scheduler (all clients under
+    /// `SyncAll`; the per-round subsample under `SampledSync`)
+    pub participants: Vec<usize>,
 }
 
 /// Collects `RoundStat`s plus free-form trace lines.
@@ -68,12 +72,12 @@ impl Recorder {
         let mut f = std::fs::File::create(path).context("creating csv")?;
         writeln!(
             f,
-            "round,phase,train_loss,accuracy_pct,bandwidth_gb,client_tflops,total_tflops,mask_density,n_selected"
+            "round,phase,train_loss,accuracy_pct,bandwidth_gb,client_tflops,total_tflops,mask_density,n_selected,n_participants"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{},{:.6},{:.3},{:.6},{:.6},{:.6},{:.4},{}",
+                "{},{},{:.6},{:.3},{:.6},{:.6},{:.6},{:.4},{},{}",
                 r.round,
                 r.phase,
                 r.train_loss,
@@ -82,7 +86,8 @@ impl Recorder {
                 r.client_tflops,
                 r.total_tflops,
                 r.mask_density,
-                r.selected.len()
+                r.selected.len(),
+                r.participants.len()
             )?;
         }
         Ok(())
@@ -105,6 +110,12 @@ impl Recorder {
                     m.insert(
                         "selected".into(),
                         Json::Arr(r.selected.iter().map(|&s| Json::Num(s as f64)).collect()),
+                    );
+                    m.insert(
+                        "participants".into(),
+                        Json::Arr(
+                            r.participants.iter().map(|&s| Json::Num(s as f64)).collect(),
+                        ),
                     );
                     Json::Obj(m)
                 })
@@ -137,6 +148,7 @@ mod tests {
             total_tflops: 0.3,
             mask_density: 1.0,
             selected: vec![0, 1],
+            participants: vec![0, 1, 2],
         }
     }
 

@@ -15,23 +15,29 @@
 //! server's activation gradient to the selected client, which injects it
 //! into its *next* local step (one-iteration-stale, documented in
 //! DESIGN.md) — this is the row-2 "L_client + L_server" configuration.
+//! The pending gradient lives in the client's `"pending"` state slot, so
+//! it follows the client through the pooled store under sampling.
+//!
+//! **Driver mapping** (DESIGN.md §6): one exchange step per training
+//! iteration `t` — `steps(round)` is the round's max batch count.
+//! `client_round` is one local client step (fans out over the engine
+//! pool; each client touches only its own state); `merge_round` folds
+//! losses in client-id order and then runs the orchestrated server phase
+//! sequentially (selected clients update the shared server model in
+//! selection order, exactly as before the redesign). Under per-round
+//! sampling only the participant set takes local steps and the UCB picks
+//! among them.
 
-//! **Parallelism** (DESIGN.md §5): within an iteration the local client
-//! steps are independent (each touches only its own state and pending
-//! gradient), so they fan out over the engine pool; the orchestrated
-//! server phase stays sequential because every selected client updates the
-//! shared server model in selection order. Losses, activations, and cost
-//! deltas merge in client-id order, so the run is bit-identical at any
-//! thread count.
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::engine::par_clients;
-use crate::metrics::RoundStat;
+use crate::data::Batch;
+use crate::driver::{ClientCtx, ClientState, ClientStateStore, ClientUpdate, Protocol, RoundReport};
+use crate::engine::par_indexed;
 use crate::orchestrator::UcbOrchestrator;
-use crate::protocols::common::{eval_split, Env};
-use crate::protocols::RunResult;
-use crate::runtime::{Tensor, TensorStore};
+use crate::protocols::common::{eval_split, eval_split_streamed, Env};
+use crate::runtime::{Artifact, Tensor, TensorStore};
 
 /// Is this a per-client (mask) server-state key, as opposed to the shared
 /// server parameters?
@@ -39,191 +45,286 @@ fn is_mask_key(k: &str) -> bool {
     k.starts_with("state.mask.") || k.starts_with("state.mm.") || k.starts_with("state.vm.")
 }
 
-pub fn run(env: &mut Env) -> Result<RunResult> {
-    let cfg = env.cfg;
-    let k = cfg.split_k();
-    let n = cfg.clients;
+/// AdaSplit behind the [`Protocol`] trait.
+pub struct AdaSplitProtocol {
+    client_step: Arc<Artifact>,
+    client_fwd: Arc<Artifact>,
+    server_step: Arc<Artifact>,
+    server_eval: Arc<Artifact>,
+    init_client_artifact: String,
+    init_server_artifact: String,
+    /// shared server parameters + their Adam state + step counter
+    server_shared: TensorStore,
+    /// per-client mask init (cloned into each client's `"mask"` slot)
+    mask_template: TensorStore,
+    ucb: UcbOrchestrator,
+    zero_grad: Tensor,
+    beta: Tensor,
+    lam: Tensor,
+    local_rounds: usize,
+    n_select: usize,
+    client_step_flops: f64,
+    server_step_flops: f64,
+    act_bytes: usize,
+    // -- per-round scratch --
+    /// per-client training batches for the round (empty for non-participants)
+    batches: Vec<Vec<Batch>>,
+    t_max: usize,
+    loss_sum: f64,
+    loss_count: f64,
+    density_sum: f64,
+    density_count: f64,
+    round_selected: Vec<usize>,
+}
 
-    let client_step = env.art_split("client_step")?;
-    let client_fwd = env.art_split("client_fwd")?;
-    let server_step = env.art_split("server_step")?;
-    let server_eval = env.art_split("server_eval")?;
-
-    // ---- state ----------------------------------------------------------
-    let mut client_states: Vec<TensorStore> = (0..n)
-        .map(|i| {
-            env.init_state(
-                &format!("{}_init_client", cfg.config_tag()),
-                env.client_seed(i),
-            )
+impl AdaSplitProtocol {
+    pub fn new(env: &Env) -> Result<Self> {
+        let cfg = env.cfg;
+        let k = cfg.split_k();
+        let act_shape: Vec<usize> = env.rt.manifest.config(&cfg.config_tag())?.act_shape.clone();
+        Ok(Self {
+            client_step: env.art_split("client_step")?,
+            client_fwd: env.art_split("client_fwd")?,
+            server_step: env.art_split("server_step")?,
+            server_eval: env.art_split("server_eval")?,
+            init_client_artifact: format!("{}_init_client", cfg.config_tag()),
+            init_server_artifact: format!("{}_init_server", cfg.config_tag()),
+            server_shared: TensorStore::new(),
+            mask_template: TensorStore::new(),
+            ucb: UcbOrchestrator::new(cfg.clients, cfg.gamma),
+            zero_grad: Tensor::zeros(&act_shape),
+            beta: Tensor::scalar(cfg.beta),
+            lam: Tensor::scalar(cfg.lambda),
+            local_rounds: cfg.local_rounds(),
+            n_select: cfg.selected_per_iter(),
+            client_step_flops: env.spec.client_step_flops(k),
+            server_step_flops: env.spec.server_step_flops(k, true),
+            act_bytes: env.spec.act_batch_bytes(k),
+            batches: vec![Vec::new(); cfg.clients],
+            t_max: 0,
+            loss_sum: 0.0,
+            loss_count: 0.0,
+            density_sum: 0.0,
+            density_count: 0.0,
+            round_selected: Vec::new(),
         })
-        .collect::<Result<_>>()?;
+    }
+}
 
-    let server_init = env.init_state(
-        &format!("{}_init_server", cfg.config_tag()),
-        env.server_seed(),
-    )?;
-    // shared server parameters + their Adam state + step counter
-    let mut server_shared = TensorStore::new();
-    // per-client masks + their Adam state
-    let mut mask_states: Vec<TensorStore> = vec![TensorStore::new(); n];
-    for (key, t) in server_init.iter() {
-        if is_mask_key(key) {
-            for m in mask_states.iter_mut() {
-                m.insert(key.clone(), t.clone());
-            }
-        } else {
-            server_shared.insert(key.clone(), t.clone());
-        }
+impl Protocol for AdaSplitProtocol {
+    /// `(loss, acts)` for a client that had a batch this step.
+    type Update = Option<(f64, Tensor)>;
+
+    fn name(&self) -> &'static str {
+        "AdaSplit"
     }
 
-    let mut ucb = UcbOrchestrator::new(n, cfg.gamma);
-    let act_shape: Vec<usize> = env.rt.manifest.config(&cfg.config_tag())?.act_shape.clone();
-    let zero_grad = Tensor::zeros(&act_shape);
-    // Table-5 ablation: stale server gradient to inject next local step
-    let mut pending_grad: Vec<Option<Tensor>> = vec![None; n];
+    fn init_state(&mut self, env: &mut Env) -> Result<()> {
+        let server_init = env.init_state(&self.init_server_artifact, env.server_seed())?;
+        self.server_shared = TensorStore::new();
+        self.mask_template = TensorStore::new();
+        for (key, t) in server_init.iter() {
+            if is_mask_key(key) {
+                self.mask_template.insert(key.clone(), t.clone());
+            } else {
+                self.server_shared.insert(key.clone(), t.clone());
+            }
+        }
+        Ok(())
+    }
 
-    let beta = Tensor::scalar(cfg.beta);
-    let lam = Tensor::scalar(cfg.lambda);
-    let local_rounds = cfg.local_rounds();
-    let n_select = cfg.selected_per_iter();
+    fn init_client(&self, env: &Env, client: usize) -> Result<ClientState> {
+        let model = env.init_state(&self.init_client_artifact, env.client_seed(client))?;
+        let mut state = ClientState::new();
+        state.insert("model", model);
+        state.insert("mask", self.mask_template.clone());
+        // Table-5 ablation: stale server gradient to inject next local step
+        state.insert("pending", TensorStore::new());
+        Ok(state)
+    }
 
-    let client_step_flops = env.spec.client_step_flops(k);
-    let server_step_flops = env.spec.server_step_flops(k, true);
-    let act_bytes = env.spec.act_batch_bytes(k);
+    fn steps(&self, _round: usize) -> usize {
+        self.t_max
+    }
 
-    let pool = env.pool();
-
-    // ---- rounds ----------------------------------------------------------
-    for round in 0..cfg.rounds {
-        let global_phase = round >= local_rounds;
+    fn begin_round(&mut self, env: &mut Env, round: usize, participants: &[usize]) -> Result<()> {
         // per-client batches draw from per-client derived RNG streams, so
         // materializing them concurrently is order-independent
-        let batches: Vec<Vec<crate::data::Batch>> =
-            par_clients(&*env, |i| Ok(env.train_batches(i, round)))?;
-        let t_max = batches.iter().map(|b| b.len()).max().unwrap_or(0);
-
-        let mut loss_sum = 0.0;
-        let mut loss_count = 0.0;
-        let mut density_sum = 0.0;
-        let mut density_count = 0.0;
-        let mut round_selected: Vec<usize> = Vec::new();
-
-        for t in 0..t_max {
-            // -- local client steps (every client, every phase), fanned
-            //    out over the pool: client i touches only its own state --
-            let active: Vec<usize> = (0..n).filter(|&i| t < batches[i].len()).collect();
-            // pending (stale) server gradients are taken on this thread,
-            // read-only inside the fan-out
-            let taken: Vec<Option<Tensor>> =
-                active.iter().map(|&i| pending_grad[i].take()).collect();
-            // disjoint &mut views of the active clients' states, in
-            // ascending client-id order (matching `active`)
-            let mut active_states: Vec<&mut TensorStore> = client_states
-                .iter_mut()
-                .enumerate()
-                .filter(|(i, _)| active.binary_search(i).is_ok())
-                .map(|(_, s)| s)
-                .collect();
-            let stepped = pool.run_mut(&mut active_states, |j, state| {
-                let b = &batches[active[j]][t];
-                // avoid cloning the (large) zero gradient on the default path
-                let (ga, use_grad): (&Tensor, f32) = match &taken[j] {
-                    Some(g) => (g, 1.0),
-                    None => (&zero_grad, 0.0),
-                };
-                let mut out = client_step.call(
-                    &[&**state],
-                    &[
-                        ("x", &b.x),
-                        ("y", &b.y),
-                        ("beta", &beta),
-                        ("grad_a", ga),
-                        ("use_grad", &Tensor::scalar(use_grad)),
-                    ],
-                )?;
-                out.write_state(state);
-                Ok((out.scalar("loss")? as f64, out.take("acts")?))
+        let env_ref: &Env = env;
+        let lists: Vec<Vec<Batch>> =
+            par_indexed(env_ref.cfg.effective_threads(), participants.len(), |j| {
+                Ok(env_ref.train_batches(participants[j], round))
             })?;
-            // merge in client-id order (thread-count independent)
-            let mut acts: Vec<Option<Tensor>> = vec![None; n];
-            for (j, (loss, a)) in stepped.into_iter().enumerate() {
-                loss_sum += loss;
-                loss_count += 1.0;
-                acts[active[j]] = Some(a);
-                env.meter.add_client_flops(client_step_flops);
-            }
+        for b in self.batches.iter_mut() {
+            b.clear();
+        }
+        for (j, list) in lists.into_iter().enumerate() {
+            self.batches[participants[j]] = list;
+        }
+        self.t_max = participants
+            .iter()
+            .map(|&i| self.batches[i].len())
+            .max()
+            .unwrap_or(0);
+        self.loss_sum = 0.0;
+        self.loss_count = 0.0;
+        self.density_sum = 0.0;
+        self.density_count = 0.0;
+        self.round_selected = Vec::new();
+        Ok(())
+    }
 
-            // -- global phase: orchestrated server training ----------------
-            if global_phase && !active.is_empty() {
-                let selected = ucb.select_among(&active, n_select);
-                let mut observed = Vec::with_capacity(selected.len());
-                for &i in &selected {
-                    let a = acts[i].as_ref().expect("active client has acts");
-                    let y = &batches[i][t].y;
-                    let mut out = server_step.call(
-                        &[&server_shared, &mask_states[i]],
-                        &[("a", a), ("y", y), ("lam", &lam)],
-                    )?;
-                    out.write_state_filtered(&mut server_shared, |key| !is_mask_key(key));
-                    out.write_state_filtered(&mut mask_states[i], is_mask_key);
-                    let loss = out.scalar("loss")? as f64;
-                    observed.push((i, loss));
-                    density_sum += out.scalar("mask_density")? as f64;
-                    density_count += 1.0;
+    fn client_round(
+        &self,
+        ctx: &ClientCtx<'_, '_>,
+        state: &mut ClientState,
+    ) -> Result<ClientUpdate<Self::Update>> {
+        let i = ctx.client;
+        let Some(b) = self.batches[i].get(ctx.step) else {
+            // this client's shard ran out of batches before t_max
+            return Ok(ClientUpdate::new(None));
+        };
+        // pending (stale) server gradient from the client's own state slot
+        let pending = state.take_tensor("pending", "grad_a");
+        // avoid cloning the (large) zero gradient on the default path
+        let (ga, use_grad): (&Tensor, f32) = match &pending {
+            Some(g) => (g, 1.0),
+            None => (&self.zero_grad, 0.0),
+        };
+        let cs = state.get_mut("model")?;
+        let mut out = self.client_step.call(
+            &[&*cs],
+            &[
+                ("x", &b.x),
+                ("y", &b.y),
+                ("beta", &self.beta),
+                ("grad_a", ga),
+                ("use_grad", &Tensor::scalar(use_grad)),
+            ],
+        )?;
+        out.write_state(cs);
+        let mut update =
+            ClientUpdate::new(Some((out.scalar("loss")? as f64, out.take("acts")?)));
+        update.meter.add_client_flops(self.client_step_flops);
+        Ok(update)
+    }
 
-                    let up = env.up_payload_bytes(a);
-                    env.meter.add_server_flops(server_step_flops);
-                    env.meter.add_up(up);
-                    if cfg.server_grad_to_client {
-                        pending_grad[i] = Some(out.take("grad_a")?);
-                        env.meter.add_down(act_bytes);
-                    }
-                    env.recorder.trace(format!(
-                        "r{round} t{t} client{i} server_loss={loss:.4}"
-                    ));
-                }
-                ucb.update(&observed);
-                for s in selected {
-                    if !round_selected.contains(&s) {
-                        round_selected.push(s);
-                    }
-                }
+    fn merge_round(
+        &mut self,
+        env: &mut Env,
+        store: &mut ClientStateStore,
+        round: usize,
+        step: usize,
+        _participants: &[usize],
+        updates: Vec<(usize, Self::Update)>,
+    ) -> Result<()> {
+        // -- fold client losses/activations in client-id order ------------
+        let mut acts: Vec<Option<Tensor>> = vec![None; env.cfg.clients];
+        let mut active: Vec<usize> = Vec::new();
+        for (i, inner) in updates {
+            if let Some((loss, a)) = inner {
+                self.loss_sum += loss;
+                self.loss_count += 1.0;
+                acts[i] = Some(a);
+                active.push(i);
             }
         }
 
-        // -- eval ----------------------------------------------------------
-        let eval_now = round % cfg.eval_every == 0 || round + 1 == cfg.rounds;
-        let accuracy = if eval_now {
-            let roots: Vec<TensorStore> =
-                client_states.iter().map(|s| s.sub("state")).collect();
-            let shared_root = server_shared.sub("state");
-            let mask_roots: Vec<TensorStore> =
-                mask_states.iter().map(|s| s.sub("state")).collect();
-            let acc = eval_split(env, &client_fwd, &server_eval, &roots, |i| {
-                vec![shared_root.clone(), mask_roots[i].clone()]
-            })?;
-            acc.mean_client_pct()
-        } else {
-            env.recorder.last_accuracy()
-        };
+        // -- global phase: orchestrated server training --------------------
+        let global_phase = round >= self.local_rounds;
+        if global_phase && !active.is_empty() {
+            let selected = self.ucb.select_among(&active, self.n_select);
+            let mut observed = Vec::with_capacity(selected.len());
+            for &i in &selected {
+                let a = acts[i].as_ref().expect("active client has acts");
+                let y = &self.batches[i][step].y;
+                let mask_state = store.get_mut(i)?.get_mut("mask")?;
+                let mut out = self.server_step.call(
+                    &[&self.server_shared, &*mask_state],
+                    &[("a", a), ("y", y), ("lam", &self.lam)],
+                )?;
+                out.write_state_filtered(&mut self.server_shared, |key| !is_mask_key(key));
+                out.write_state_filtered(mask_state, is_mask_key);
+                let loss = out.scalar("loss")? as f64;
+                observed.push((i, loss));
+                self.density_sum += out.scalar("mask_density")? as f64;
+                self.density_count += 1.0;
 
-        env.recorder.push(RoundStat {
-            round,
+                let up = env.up_payload_bytes(a);
+                env.meter.add_server_flops(self.server_step_flops);
+                env.meter.add_up(up);
+                if env.cfg.server_grad_to_client {
+                    let grad = out.take("grad_a")?;
+                    store.get_mut(i)?.get_mut("pending")?.insert("grad_a", grad);
+                    env.meter.add_down(self.act_bytes);
+                }
+                env.recorder.trace(format!(
+                    "r{round} t{step} client{i} server_loss={loss:.4}"
+                ));
+            }
+            self.ucb.update(&observed);
+            for s in selected {
+                if !self.round_selected.contains(&s) {
+                    self.round_selected.push(s);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn end_round(
+        &mut self,
+        _env: &mut Env,
+        _store: &mut ClientStateStore,
+        round: usize,
+        _participants: &[usize],
+    ) -> Result<RoundReport> {
+        let global_phase = round >= self.local_rounds;
+        Ok(RoundReport {
             phase: if global_phase { "global".into() } else { "local".into() },
-            train_loss: if loss_count > 0.0 { loss_sum / loss_count } else { 0.0 },
-            accuracy_pct: accuracy,
-            bandwidth_gb: env.meter.bandwidth_gb(),
-            client_tflops: env.meter.client_tflops(),
-            total_tflops: env.meter.total_tflops(),
-            mask_density: if density_count > 0.0 {
-                density_sum / density_count
+            train_loss: if self.loss_count > 0.0 {
+                self.loss_sum / self.loss_count
+            } else {
+                0.0
+            },
+            mask_density: if self.density_count > 0.0 {
+                self.density_sum / self.density_count
             } else {
                 1.0
             },
-            selected: round_selected,
-        });
+            selected: self.round_selected.clone(),
+        })
     }
 
-    Ok(RunResult::from_env(env, &env.recorder, &env.meter))
+    fn eval(&self, env: &Env, store: &mut ClientStateStore) -> Result<f64> {
+        let n = env.cfg.clients;
+        let shared_root = self.server_shared.sub("state");
+        let acc = if store.all_loaded() {
+            // full-participation path: identical to the pre-redesign eval
+            // (parallel over clients, partials merged in id order)
+            let mut roots = Vec::with_capacity(n);
+            let mut mask_roots = Vec::with_capacity(n);
+            for i in 0..n {
+                let st = store.get(i)?;
+                roots.push(st.get("model")?.sub("state"));
+                mask_roots.push(st.get("mask")?.sub("state"));
+            }
+            eval_split(env, &self.client_fwd, &self.server_eval, &roots, |i| {
+                vec![shared_root.clone(), mask_roots[i].clone()]
+            })?
+        } else {
+            // sampled path: stream clients through the pooled store so
+            // residency stays bounded by the active sample
+            eval_split_streamed(
+                env,
+                &self.client_fwd,
+                &self.server_eval,
+                store,
+                |i| self.init_client(env, i),
+                |st: &ClientState| Ok(st.get("model")?.sub("state")),
+                |_, st: &ClientState| Ok(vec![shared_root.clone(), st.get("mask")?.sub("state")]),
+            )?
+        };
+        Ok(acc.mean_client_pct())
+    }
 }

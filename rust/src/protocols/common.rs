@@ -11,6 +11,7 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::data::{Batch, BatchIter, ClientData, Rng};
+use crate::driver::{ClientState, ClientStateStore};
 use crate::engine::{par_clients, ClientPool, ParallelEnv};
 use crate::metrics::{AccuracyAccum, CostMeter, Recorder};
 use crate::model::ModelSpec;
@@ -112,6 +113,34 @@ impl ParallelEnv for Env<'_> {
     }
 }
 
+/// One client's split-model evaluation sweep: `client_fwd` on the
+/// client's params, then `server_eval` on the provided store stack, over
+/// every test batch. Shared by the parallel ([`eval_split`]) and
+/// streaming ([`eval_split_streamed`]) paths, so both produce identical
+/// arithmetic per client.
+pub fn eval_split_client(
+    env: &Env,
+    client_fwd: &Artifact,
+    server_eval: &Artifact,
+    i: usize,
+    client_root: &TensorStore,
+    stacks: &[TensorStore],
+    part: &mut AccuracyAccum,
+) -> Result<()> {
+    let c = &env.clients[i];
+    let stack_refs: Vec<&TensorStore> = stacks.iter().collect();
+    for b in BatchIter::eval(&c.test_x, &c.test_y, env.spec.batch) {
+        let fwd = client_fwd.call(&[client_root], &[("x", &b.x)])?;
+        let acts = fwd.get("acts")?;
+        let out = server_eval.call(
+            &stack_refs,
+            &[("a", acts), ("y", &b.y), ("valid", &b.valid)],
+        )?;
+        part.add(i, out.scalar("correct")? as f64, b.n_valid as f64);
+    }
+    Ok(())
+}
+
 /// Evaluate a split model: per client, run `client_fwd` on the client's
 /// params then the provided server-eval artifact. `server_stores(i)` yields
 /// the store stack for client `i`'s server-side evaluation (shared server
@@ -131,25 +160,50 @@ where
 {
     let n = env.clients.len();
     let parts = par_clients(env, |i| {
-        let c = &env.clients[i];
         let stacks = server_stores(i);
-        let stack_refs: Vec<&TensorStore> = stacks.iter().collect();
         let mut part = AccuracyAccum::new(n);
-        for b in BatchIter::eval(&c.test_x, &c.test_y, env.spec.batch) {
-            let fwd = client_fwd.call(&[&client_roots[i]], &[("x", &b.x)])?;
-            let acts = fwd.get("acts")?;
-            let out = server_eval.call(
-                &stack_refs,
-                &[("a", acts), ("y", &b.y), ("valid", &b.valid)],
-            )?;
-            part.add(i, out.scalar("correct")? as f64, b.n_valid as f64);
-        }
+        eval_split_client(env, client_fwd, server_eval, i, &client_roots[i], &stacks, &mut part)?;
         Ok(part)
     })?;
     let mut acc = AccuracyAccum::new(n);
     for part in &parts {
         acc.merge(part);
     }
+    Ok(acc)
+}
+
+/// Split-model evaluation against the pooled [`ClientStateStore`]: visits
+/// clients sequentially in id order, lazily materializing never-sampled
+/// clients via `init` and re-spilling non-active ones right after their
+/// sweep — resident memory stays bounded by the active sample even while
+/// every client's test set is evaluated. Per-client partials merge in id
+/// order through the same [`eval_split_client`] arithmetic as the
+/// parallel path, so the result is independent of which path ran.
+pub fn eval_split_streamed<I, R, S>(
+    env: &Env,
+    client_fwd: &Artifact,
+    server_eval: &Artifact,
+    store: &mut ClientStateStore,
+    init: I,
+    client_root: R,
+    server_stores: S,
+) -> Result<AccuracyAccum>
+where
+    I: Fn(usize) -> Result<ClientState>,
+    R: Fn(&ClientState) -> Result<TensorStore>,
+    S: Fn(usize, &ClientState) -> Result<Vec<TensorStore>>,
+{
+    let n = env.clients.len();
+    let keep = store.loaded_ids();
+    let mut acc = AccuracyAccum::new(n);
+    store.visit_all(&keep, init, |i, state| {
+        let root = client_root(state)?;
+        let stacks = server_stores(i, state)?;
+        let mut part = AccuracyAccum::new(n);
+        eval_split_client(env, client_fwd, server_eval, i, &root, &stacks, &mut part)?;
+        acc.merge(&part);
+        Ok(())
+    })?;
     Ok(acc)
 }
 
@@ -214,6 +268,18 @@ pub fn data_weights(clients: &[ClientData]) -> Vec<f32> {
         .collect()
 }
 
+/// Aggregation weights for one round's participant set: the full-client
+/// weights verbatim when everyone participates (bit-parity with the
+/// pre-redesign all-clients loop — no division by a computed ~1.0 sum),
+/// renormalized over the sampled set otherwise.
+pub fn round_weights(weights: &[f32], participants: &[usize]) -> Vec<f32> {
+    if participants.len() == weights.len() {
+        return weights.to_vec();
+    }
+    let sum: f32 = participants.iter().map(|&i| weights[i]).sum();
+    participants.iter().map(|&i| weights[i] / sum).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +295,19 @@ mod tests {
         assert_eq!(dst.get("pg.w").unwrap().data()[0], 1.0);
         assert!(dst.get("pg.b").is_ok());
         assert!(dst.get("m.w").is_err());
+    }
+
+    #[test]
+    fn round_weights_full_set_is_verbatim_and_subsets_renormalize() {
+        let w = vec![0.1f32, 0.2, 0.3, 0.4];
+        // full participation: bitwise-identical weights, no renormalization
+        assert_eq!(round_weights(&w, &[0, 1, 2, 3]), w);
+        // subset: renormalized over the participants
+        let sub = round_weights(&w, &[1, 3]);
+        assert_eq!(sub.len(), 2);
+        assert!((sub[0] - 0.2 / 0.6).abs() < 1e-6);
+        assert!((sub[1] - 0.4 / 0.6).abs() < 1e-6);
+        assert!((sub.iter().sum::<f32>() - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! FedAvg (McMahan et al., 2016): local SGD/Adam epochs + data-weighted
-//! parameter averaging. Eq. 3 of the paper with p_i = n_i / sum(n).
+//! parameter averaging. Eq. 3 of the paper with p_i = n_i / sum(n);
+//! under per-round sampling the weights renormalize over the sampled set.
 
 use anyhow::Result;
 
-use crate::protocols::flbase::{run_fl, FlVariant};
-use crate::protocols::{Env, RunResult};
+use crate::protocols::flbase::{FlProtocol, FlVariant};
+use crate::protocols::Env;
 
-pub fn run(env: &mut Env) -> Result<RunResult> {
-    run_fl(env, FlVariant::FedAvg)
+pub fn protocol(env: &Env) -> Result<FlProtocol> {
+    FlProtocol::new(env, FlVariant::FedAvg)
 }

@@ -7,9 +7,9 @@
 
 use anyhow::Result;
 
-use crate::protocols::flbase::{run_fl, FlVariant};
-use crate::protocols::{Env, RunResult};
+use crate::protocols::flbase::{FlProtocol, FlVariant};
+use crate::protocols::Env;
 
-pub fn run(env: &mut Env) -> Result<RunResult> {
-    run_fl(env, FlVariant::FedNova)
+pub fn protocol(env: &Env) -> Result<FlProtocol> {
+    FlProtocol::new(env, FlVariant::FedNova)
 }

@@ -1,4 +1,5 @@
-//! Shared machinery for the federated-learning baselines.
+//! Shared machinery for the federated-learning baselines, as one
+//! [`Protocol`] implementation driven by the generic round driver.
 //!
 //! All four FL protocols drive the same `fl_step` artifact
 //! (grad' = grad + prox_mu (p - pg) + (c - ci), then Adam) and differ only
@@ -14,18 +15,24 @@
 //! * **FedNova**  — normalized averaging of local *updates*:
 //!   p' = pg - tau_eff * sum_i w_i (pg - p_i)/tau_i, tau_eff = sum w_i tau_i.
 //!
-//! **Parallelism** (DESIGN.md §5): clients train independently from the
-//! round-start global snapshot, so the whole per-client round (download,
-//! local epochs, variate refresh) fans out over the engine pool; losses,
-//! step counts, cost deltas, and Scaffold's c updates merge in client-id
-//! order, so runs are bit-identical at any thread count.
+//! **Driver mapping**: one exchange step per round. `client_round` is the
+//! whole local round (download the round-start global snapshot, local
+//! epochs, Scaffold variate refresh) and runs on the engine pool;
+//! `merge_round` folds losses/taus/variate deltas in client-id order;
+//! `end_round` aggregates. Under per-round sampling only the participant
+//! set trains and aggregation weights renormalize over it (with full
+//! participation the original weights are used verbatim, keeping
+//! `participation = 1.0` bit-identical to the pre-redesign loop).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::metrics::RoundStat;
-use crate::protocols::common::{copy_prefixed, data_weights, eval_fl, zeros_prefixed, Env};
-use crate::protocols::RunResult;
-use crate::runtime::{Tensor, TensorStore};
+use crate::driver::{ClientCtx, ClientState, ClientStateStore, ClientUpdate, Protocol, RoundReport};
+use crate::protocols::common::{
+    copy_prefixed, data_weights, eval_fl, round_weights, zeros_prefixed, Env,
+};
+use crate::runtime::{Artifact, Tensor, TensorStore};
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum FlVariant {
@@ -35,8 +42,19 @@ pub enum FlVariant {
     FedNova,
 }
 
+impl FlVariant {
+    fn protocol_name(&self) -> &'static str {
+        match self {
+            FlVariant::FedAvg => "FedAvg",
+            FlVariant::FedProx => "FedProx",
+            FlVariant::Scaffold => "Scaffold",
+            FlVariant::FedNova => "FedNova",
+        }
+    }
+}
+
 /// What one client's local round hands back to the merge step.
-struct ClientRound {
+pub struct FlClientRound {
     loss_sum: f64,
     loss_count: f64,
     /// local steps taken (tau_i)
@@ -46,11 +64,11 @@ struct ClientRound {
 }
 
 /// Scaffold server-variate update, applied once per client at the round
-/// boundary: `c.{s} += d.{s} / N` where `d.{s} = ci' - ci_old`. All
-/// clients of a round train against the round-start `c` (option II of the
-/// paper — see the module doc); this replaced the pre-engine behavior of
-/// applying each client's delta mid-round, which is a deliberate,
-/// paper-faithful numerics change pinned by the unit test below.
+/// boundary: `c.{s} += d.{s} / N` where `d.{s} = ci' - ci_old` and N is
+/// the *total* client count (the paper's server step — under sampling the
+/// variate moves by |S|/N of the mean participant delta). All clients of
+/// a round train against the round-start `c` (option II of the paper —
+/// see the module doc).
 fn apply_c_update(
     c_store: &mut TensorStore,
     suffixes: &[String],
@@ -65,191 +83,273 @@ fn apply_c_update(
     Ok(())
 }
 
-pub fn run_fl(env: &mut Env, variant: FlVariant) -> Result<RunResult> {
-    let cfg = env.cfg;
-    let n = cfg.clients;
-    let tag = cfg.dataset.tag();
+/// The four FedAvg-family baselines behind the [`Protocol`] trait.
+pub struct FlProtocol {
+    variant: FlVariant,
+    fl_step: Arc<Artifact>,
+    fl_eval: Arc<Artifact>,
+    init_artifact: String,
+    /// client 0's init output, kept so `init_client(0)` reuses it instead
+    /// of re-running the init artifact (it is a pure function of the seed)
+    init0: TensorStore,
+    /// the global model: canonical keys `p.*` (feedable to fl_eval)
+    global: TensorStore,
+    /// server control variate `c.*` (zeros unless Scaffold)
+    c_store: TensorStore,
+    /// parameter suffixes ("conv1.w", ...) for aggregation arithmetic
+    suffixes: Vec<String>,
+    /// data-size weights over all clients
+    weights: Vec<f32>,
+    prox_mu: Tensor,
+    lr: f32,
+    step_flops: f64,
+    model_bytes: usize,
+    // -- per-round scratch --
+    /// round-start global snapshot as `pg.*`
+    pg_store: TensorStore,
+    taus: Vec<usize>,
+    loss_sum: f64,
+    loss_count: f64,
+}
 
-    let fl_step = env.art_ds("fl_step")?;
-    let fl_eval = env.art_ds("fl_eval")?;
+impl FlProtocol {
+    pub fn new(env: &Env, variant: FlVariant) -> Result<Self> {
+        let cfg = env.cfg;
+        Ok(Self {
+            variant,
+            fl_step: env.art_ds("fl_step")?,
+            fl_eval: env.art_ds("fl_eval")?,
+            init_artifact: format!("{}_init_fl", cfg.dataset.tag()),
+            init0: TensorStore::new(),
+            global: TensorStore::new(),
+            c_store: TensorStore::new(),
+            suffixes: Vec::new(),
+            weights: data_weights(&env.clients),
+            prox_mu: Tensor::scalar(match variant {
+                FlVariant::FedProx => cfg.prox_mu,
+                _ => 0.0,
+            }),
+            lr: env.rt.manifest.lr,
+            step_flops: env.spec.fl_step_flops(),
+            model_bytes: env.spec.full_params() * 4,
+            pg_store: TensorStore::new(),
+            taus: vec![0; cfg.clients],
+            loss_sum: 0.0,
+            loss_count: 0.0,
+        })
+    }
 
-    // per-client full-model states (Adam moments stay local across rounds)
-    let mut client_states: Vec<TensorStore> = (0..n)
-        .map(|i| env.init_state(&format!("{tag}_init_fl"), env.client_seed(i)))
-        .collect::<Result<_>>()?;
+    fn is_scaffold(&self) -> bool {
+        self.variant == FlVariant::Scaffold
+    }
+}
 
-    // the global model: canonical keys `p.*` (feedable to fl_eval)
-    let mut global = TensorStore::new();
-    copy_prefixed(&client_states[0], "state.p", &mut global, "p");
+impl Protocol for FlProtocol {
+    type Update = FlClientRound;
 
-    // control variates (Scaffold) / zero placeholders (everyone else)
-    let mut c_store = zeros_prefixed(&client_states[0], "state.p", "c");
-    let mut ci_stores: Vec<TensorStore> = (0..n)
-        .map(|_| zeros_prefixed(&client_states[0], "state.p", "ci"))
-        .collect();
+    fn name(&self) -> &'static str {
+        self.variant.protocol_name()
+    }
 
-    let weights = data_weights(&env.clients);
-    let prox_mu = Tensor::scalar(match variant {
-        FlVariant::FedProx => cfg.prox_mu,
-        _ => 0.0,
-    });
-    let lr = env.rt.manifest.lr;
-    let step_flops = env.spec.fl_step_flops();
-    let model_bytes = env.spec.full_params() * 4;
-    // parameter suffixes ("conv1.w", ...) for aggregation arithmetic
-    let suffixes: Vec<String> = global
-        .names()
-        .map(|k| k.strip_prefix("p.").unwrap().to_string())
-        .collect();
+    fn init_state(&mut self, env: &mut Env) -> Result<()> {
+        // the global model starts as client 0's init (the pre-redesign
+        // behavior); the init output is kept so client 0's own lazy
+        // first-touch reuses it instead of re-running the artifact
+        self.init0 = env.init_state(&self.init_artifact, env.client_seed(0))?;
+        self.global = TensorStore::new();
+        copy_prefixed(&self.init0, "state.p", &mut self.global, "p");
+        self.c_store = zeros_prefixed(&self.init0, "state.p", "c");
+        self.suffixes = self
+            .global
+            .names()
+            .map(|k| k.strip_prefix("p.").unwrap().to_string())
+            .collect();
+        Ok(())
+    }
 
-    let pool = env.pool();
+    fn init_client(&self, env: &Env, client: usize) -> Result<ClientState> {
+        // per-client full-model state (Adam moments stay local across
+        // rounds) + control variate (zeros placeholder unless Scaffold)
+        let model = if client == 0 {
+            self.init0.clone()
+        } else {
+            env.init_state(&self.init_artifact, env.client_seed(client))?
+        };
+        let ci = zeros_prefixed(&model, "state.p", "ci");
+        let mut state = ClientState::new();
+        state.insert("model", model);
+        state.insert("ci", ci);
+        Ok(state)
+    }
 
-    for round in 0..cfg.rounds {
+    fn begin_round(
+        &mut self,
+        _env: &mut Env,
+        _round: usize,
+        _participants: &[usize],
+    ) -> Result<()> {
+        self.pg_store = TensorStore::new();
+        copy_prefixed(&self.global, "p", &mut self.pg_store, "pg");
+        self.taus.iter_mut().for_each(|t| *t = 0);
+        self.loss_sum = 0.0;
+        self.loss_count = 0.0;
+        Ok(())
+    }
+
+    fn client_round(
+        &self,
+        ctx: &ClientCtx<'_, '_>,
+        state: &mut ClientState,
+    ) -> Result<ClientUpdate<FlClientRound>> {
+        let env = ctx.env;
+        let i = ctx.client;
+        let (cs, ci) = state.pair_mut("model", "ci")?;
+
+        // download the global model
+        for s in &self.suffixes {
+            let t = self.global.get(&format!("p.{s}"))?.clone();
+            cs.insert(format!("state.p.{s}"), t);
+        }
+
         let mut loss_sum = 0.0;
         let mut loss_count = 0.0;
-
-        // snapshot of the round-start global model as `pg.*`
-        let mut pg_store = TensorStore::new();
-        copy_prefixed(&global, "p", &mut pg_store, "pg");
-        let mut taus = vec![0usize; n];
-
-        // -- per-client local rounds, fanned out over the pool: client i
-        //    mutates only its own model state and control variate --------
-        let mut pairs: Vec<(&mut TensorStore, &mut TensorStore)> =
-            client_states.iter_mut().zip(ci_stores.iter_mut()).collect();
-        let outcomes = pool.run_mut(&mut pairs, |i, pair| {
-            let (cs, ci) = &mut *pair;
-            // download the global model
-            for s in &suffixes {
-                let t = global.get(&format!("p.{s}"))?.clone();
-                cs.insert(format!("state.p.{s}"), t);
-            }
-
-            let mut loss_sum = 0.0;
-            let mut loss_count = 0.0;
-            let mut tau = 0usize;
-            for _epoch in 0..cfg.local_epochs {
-                for b in env.train_batches(i, round) {
-                    let mut out = fl_step.call(
-                        &[&**cs, &pg_store, &c_store, &**ci],
-                        &[("prox_mu", &prox_mu), ("x", &b.x), ("y", &b.y)],
-                    )?;
-                    out.write_state(cs);
-                    loss_sum += out.scalar("loss")? as f64;
-                    loss_count += 1.0;
-                    tau += 1;
-                }
-            }
-
-            let mut dci = None;
-            if variant == FlVariant::Scaffold && tau > 0 {
-                // ci' = ci - c + (pg - p_i) / (K_i * lr)
-                let scale = 1.0 / (tau as f32 * lr);
-                let mut deltas = TensorStore::new();
-                for s in &suffixes {
-                    let pg = pg_store.get(&format!("pg.{s}"))?;
-                    let pi = cs.get(&format!("state.p.{s}"))?;
-                    let cg = c_store.get(&format!("c.{s}"))?;
-                    let civ = ci.get_mut(&format!("ci.{s}"))?;
-                    let ci_old = civ.clone();
-                    civ.axpy(-1.0, cg)?;
-                    let mut delta = pg.clone();
-                    delta.axpy(-1.0, pi)?;
-                    delta.scale(scale);
-                    civ.axpy(1.0, &delta)?;
-                    // hand the raw ci' - ci_old back for the server's
-                    // round-boundary c update
-                    let mut d = civ.clone();
-                    d.axpy(-1.0, &ci_old)?;
-                    deltas.insert(format!("d.{s}"), d);
-                }
-                dci = Some(deltas);
-            }
-            Ok(ClientRound { loss_sum, loss_count, tau, dci })
-        })?;
-        drop(pairs);
-
-        // -- merge in client-id order (thread-count independent) ----------
-        for (i, cr) in outcomes.iter().enumerate() {
-            loss_sum += cr.loss_sum;
-            loss_count += cr.loss_count;
-            taus[i] = cr.tau;
-            env.meter.add_down(model_bytes);
-            if variant == FlVariant::Scaffold {
-                env.meter.add_down(model_bytes); // c travels with the model
-            }
-            for _ in 0..cr.tau {
-                env.meter.add_client_flops(step_flops);
-            }
-            // upload the trained model
-            env.meter.add_up(model_bytes);
-            if variant == FlVariant::Scaffold {
-                env.meter.add_up(model_bytes); // ci update travels back
-            }
-            if let Some(deltas) = &cr.dci {
-                apply_c_update(&mut c_store, &suffixes, deltas, n)?;
+        let mut tau = 0usize;
+        for _epoch in 0..env.cfg.local_epochs {
+            for b in env.train_batches(i, ctx.round) {
+                let mut out = self.fl_step.call(
+                    &[&*cs, &self.pg_store, &self.c_store, &*ci],
+                    &[("prox_mu", &self.prox_mu), ("x", &b.x), ("y", &b.y)],
+                )?;
+                out.write_state(cs);
+                loss_sum += out.scalar("loss")? as f64;
+                loss_count += 1.0;
+                tau += 1;
             }
         }
 
-        // ---- aggregation --------------------------------------------------
-        match variant {
+        let mut dci = None;
+        if self.is_scaffold() && tau > 0 {
+            // ci' = ci - c + (pg - p_i) / (K_i * lr)
+            let scale = 1.0 / (tau as f32 * self.lr);
+            let mut deltas = TensorStore::new();
+            for s in &self.suffixes {
+                let pg = self.pg_store.get(&format!("pg.{s}"))?;
+                let pi = cs.get(&format!("state.p.{s}"))?;
+                let cg = self.c_store.get(&format!("c.{s}"))?;
+                let civ = ci.get_mut(&format!("ci.{s}"))?;
+                let ci_old = civ.clone();
+                civ.axpy(-1.0, cg)?;
+                let mut delta = pg.clone();
+                delta.axpy(-1.0, pi)?;
+                delta.scale(scale);
+                civ.axpy(1.0, &delta)?;
+                // hand the raw ci' - ci_old back for the server's
+                // round-boundary c update
+                let mut d = civ.clone();
+                d.axpy(-1.0, &ci_old)?;
+                deltas.insert(format!("d.{s}"), d);
+            }
+            dci = Some(deltas);
+        }
+
+        // client-side cost delta: the driver merges these in client-id
+        // order, reproducing the pre-redesign serial accounting exactly
+        let mut update = ClientUpdate::new(FlClientRound { loss_sum, loss_count, tau, dci });
+        update.meter.add_down(self.model_bytes);
+        if self.is_scaffold() {
+            update.meter.add_down(self.model_bytes); // c travels with the model
+        }
+        for _ in 0..tau {
+            update.meter.add_client_flops(self.step_flops);
+        }
+        update.meter.add_up(self.model_bytes);
+        if self.is_scaffold() {
+            update.meter.add_up(self.model_bytes); // ci update travels back
+        }
+        Ok(update)
+    }
+
+    fn merge_round(
+        &mut self,
+        env: &mut Env,
+        _store: &mut ClientStateStore,
+        _round: usize,
+        _step: usize,
+        _participants: &[usize],
+        updates: Vec<(usize, FlClientRound)>,
+    ) -> Result<()> {
+        // client-id order (thread-count independent)
+        for (i, cr) in &updates {
+            self.loss_sum += cr.loss_sum;
+            self.loss_count += cr.loss_count;
+            self.taus[*i] = cr.tau;
+            if let Some(deltas) = &cr.dci {
+                apply_c_update(&mut self.c_store, &self.suffixes, deltas, env.cfg.clients)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn end_round(
+        &mut self,
+        _env: &mut Env,
+        store: &mut ClientStateStore,
+        _round: usize,
+        participants: &[usize],
+    ) -> Result<RoundReport> {
+        let w = round_weights(&self.weights, participants);
+        match self.variant {
             FlVariant::FedNova => {
-                let tau_eff: f32 = weights
+                let tau_eff: f32 = w
                     .iter()
-                    .zip(&taus)
-                    .map(|(w, &t)| w * t as f32)
+                    .zip(participants)
+                    .map(|(wi, &i)| wi * self.taus[i] as f32)
                     .sum();
-                for s in &suffixes {
-                    let pg = pg_store.get(&format!("pg.{s}"))?.clone();
+                for s in &self.suffixes {
+                    let pg = self.pg_store.get(&format!("pg.{s}"))?.clone();
                     // normalized update direction sum_i w_i (pg - p_i)/tau_i
                     let mut d = Tensor::zeros(pg.shape());
-                    for i in 0..n {
-                        if taus[i] == 0 {
+                    for (j, &i) in participants.iter().enumerate() {
+                        if self.taus[i] == 0 {
                             continue;
                         }
                         let mut di = pg.clone();
-                        di.axpy(-1.0, client_states[i].get(&format!("state.p.{s}"))?)?;
-                        d.axpy(weights[i] / taus[i] as f32, &di)?;
+                        di.axpy(-1.0, store.get(i)?.get("model")?.get(&format!("state.p.{s}"))?)?;
+                        d.axpy(w[j] / self.taus[i] as f32, &di)?;
                     }
                     let mut p_new = pg;
                     p_new.axpy(-tau_eff, &d)?;
-                    global.insert(format!("p.{s}"), p_new);
+                    self.global.insert(format!("p.{s}"), p_new);
                 }
             }
             _ => {
-                for s in &suffixes {
-                    let shape = global.get(&format!("p.{s}"))?.shape().to_vec();
+                for s in &self.suffixes {
+                    let shape = self.global.get(&format!("p.{s}"))?.shape().to_vec();
                     let mut acc = Tensor::zeros(&shape);
-                    for i in 0..n {
-                        acc.axpy(weights[i], client_states[i].get(&format!("state.p.{s}"))?)?;
+                    for (j, &i) in participants.iter().enumerate() {
+                        acc.axpy(w[j], store.get(i)?.get("model")?.get(&format!("state.p.{s}"))?)?;
                     }
-                    global.insert(format!("p.{s}"), acc);
+                    self.global.insert(format!("p.{s}"), acc);
                 }
             }
         }
-
-        // ---- eval ----------------------------------------------------------
-        let eval_now = round % cfg.eval_every == 0 || round + 1 == cfg.rounds;
-        let accuracy = if eval_now {
-            eval_fl(env, &fl_eval, &global)?.mean_client_pct()
-        } else {
-            env.recorder.last_accuracy()
-        };
-
-        env.recorder.push(RoundStat {
-            round,
+        Ok(RoundReport {
             phase: "train".into(),
-            train_loss: if loss_count > 0.0 { loss_sum / loss_count } else { 0.0 },
-            accuracy_pct: accuracy,
-            bandwidth_gb: env.meter.bandwidth_gb(),
-            client_tflops: env.meter.client_tflops(),
-            total_tflops: env.meter.total_tflops(),
+            train_loss: if self.loss_count > 0.0 {
+                self.loss_sum / self.loss_count
+            } else {
+                0.0
+            },
             mask_density: 1.0,
-            selected: (0..n).collect(),
-        });
+            selected: participants.to_vec(),
+        })
     }
 
-    Ok(RunResult::from_env(env, &env.recorder, &env.meter))
+    fn eval(&self, env: &Env, _store: &mut ClientStateStore) -> Result<f64> {
+        // FL evaluates the *global* model on every client's test set — no
+        // per-client state is needed, so sampling never touches this path
+        Ok(eval_fl(env, &self.fl_eval, &self.global)?.mean_client_pct())
+    }
 }
 
 #[cfg(test)]

@@ -6,9 +6,13 @@
 //! FedAvg-family parameter aggregation (plain weighted sums) and the UCB
 //! bookkeeping — everything differentiable lives in the artifacts.
 //!
-//! Per-round client work runs on the [`crate::engine`] worker pool
-//! (`cfg.threads`); results merge in client-id order, so every protocol
-//! is bit-identical across thread counts (DESIGN.md §5).
+//! No protocol owns a round loop: each one implements the
+//! [`crate::driver::Protocol`] client-step/server-merge API and is run by
+//! the generic [`crate::driver`] round driver, which owns participant
+//! scheduling (`--participation`), the [`crate::engine`] fan-out
+//! (`cfg.threads`), cost-meter merging, and round recording. Results
+//! merge in client-id order, so every protocol is bit-identical across
+//! thread counts (DESIGN.md §5–§6).
 
 mod adasplit;
 mod common;
@@ -24,12 +28,16 @@ use anyhow::{ensure, Result};
 
 use crate::config::{ExperimentConfig, ProtocolKind};
 use crate::data::build_partition;
+use crate::driver;
 use crate::engine::par_indexed;
 use crate::metrics::{c3_score, CostMeter, Recorder};
 use crate::runtime::Runtime;
 use crate::util::Json;
 
-pub use common::{copy_prefixed, data_weights, eval_fl, eval_split, zeros_prefixed, Env};
+pub use common::{
+    copy_prefixed, data_weights, eval_fl, eval_split, eval_split_client, eval_split_streamed,
+    round_weights, zeros_prefixed, Env,
+};
 
 /// Outcome of one protocol run.
 #[derive(Clone, Debug)]
@@ -47,6 +55,10 @@ pub struct RunResult {
     /// mean server-mask density at the end (AdaSplit; 1.0 otherwise)
     pub mask_density: f64,
     pub rounds: usize,
+    /// configured per-round participation fraction (1.0 = all clients)
+    pub participation: f64,
+    /// mean clients sampled per round by the scheduler
+    pub sampled_clients_per_round: f64,
 }
 
 impl RunResult {
@@ -63,6 +75,11 @@ impl RunResult {
         m.insert("c3_score".into(), Json::Num(self.c3_score));
         m.insert("mask_density".into(), Json::Num(self.mask_density));
         m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("participation".into(), Json::Num(self.participation));
+        m.insert(
+            "sampled_clients_per_round".into(),
+            Json::Num(self.sampled_clients_per_round),
+        );
         Json::Obj(m)
     }
 
@@ -74,6 +91,12 @@ impl RunResult {
             .last()
             .map(|r| r.mask_density)
             .unwrap_or(1.0);
+        let sampled_clients_per_round = if recorder.rounds.is_empty() {
+            env.cfg.clients as f64
+        } else {
+            recorder.rounds.iter().map(|r| r.participants.len() as f64).sum::<f64>()
+                / recorder.rounds.len() as f64
+        };
         Self {
             protocol: env.cfg.protocol.name().to_string(),
             dataset: env.cfg.dataset.name().to_string(),
@@ -85,6 +108,8 @@ impl RunResult {
             c3_score: c3_score(best, meter.bandwidth_gb(), meter.client_tflops(), &env.cfg.budgets),
             mask_density,
             rounds: env.cfg.rounds,
+            participation: env.cfg.participation,
+            sampled_clients_per_round,
         }
     }
 }
@@ -110,14 +135,37 @@ pub fn run_protocol_recorded(
         cfg.seed,
     )?;
     let mut env = Env::new(rt, cfg, clients);
+    // every protocol runs through the one generic round driver; the match
+    // only picks the Protocol-trait implementation
     let result = match cfg.protocol {
-        ProtocolKind::AdaSplit => adasplit::run(&mut env)?,
-        ProtocolKind::SlBasic => sl_basic::run(&mut env)?,
-        ProtocolKind::SplitFed => splitfed::run(&mut env)?,
-        ProtocolKind::FedAvg => fedavg::run(&mut env)?,
-        ProtocolKind::FedProx => fedprox::run(&mut env)?,
-        ProtocolKind::Scaffold => scaffold::run(&mut env)?,
-        ProtocolKind::FedNova => fednova::run(&mut env)?,
+        ProtocolKind::AdaSplit => {
+            let mut p = adasplit::AdaSplitProtocol::new(&env)?;
+            driver::run(&mut env, &mut p)?
+        }
+        ProtocolKind::SlBasic => {
+            let mut p = sl_basic::SlBasicProtocol::new(&env)?;
+            driver::run(&mut env, &mut p)?
+        }
+        ProtocolKind::SplitFed => {
+            let mut p = splitfed::SplitFedProtocol::new(&env)?;
+            driver::run(&mut env, &mut p)?
+        }
+        ProtocolKind::FedAvg => {
+            let mut p = fedavg::protocol(&env)?;
+            driver::run(&mut env, &mut p)?
+        }
+        ProtocolKind::FedProx => {
+            let mut p = fedprox::protocol(&env)?;
+            driver::run(&mut env, &mut p)?
+        }
+        ProtocolKind::Scaffold => {
+            let mut p = scaffold::protocol(&env)?;
+            driver::run(&mut env, &mut p)?
+        }
+        ProtocolKind::FedNova => {
+            let mut p = fednova::protocol(&env)?;
+            driver::run(&mut env, &mut p)?
+        }
     };
     Ok((result, env.recorder))
 }
@@ -155,6 +203,7 @@ pub fn run_seeds(
     agg.client_tflops = avg(|r| r.client_tflops);
     agg.total_tflops = avg(|r| r.total_tflops);
     agg.mask_density = avg(|r| r.mask_density);
+    agg.sampled_clients_per_round = avg(|r| r.sampled_clients_per_round);
     agg.c3_score = c3_score(mean, agg.bandwidth_gb, agg.client_tflops, &cfg.budgets);
     Ok((agg, std))
 }

@@ -7,105 +7,173 @@
 //! sequentially — exactly the regime whose non-IID pathology AdaSplit
 //! fixes (paper §2.2 D3).
 //!
-//! **Parallelism** (DESIGN.md §5): the training exchange is an inherent
-//! chain (one traveling client model, one shared server model updated per
-//! batch), so it stays sequential at any `--threads` and streams batches
-//! one client at a time (bounded memory); the engine fans out the split
-//! evaluation, which is per-client independent.
+//! **Driver mapping** (DESIGN.md §6): the training exchange is an
+//! inherent chain (one traveling client model, one shared server model
+//! updated per batch), so `fan_out` is `false` and the whole chain runs
+//! inside `merge_round` on the driver thread, streaming batches one
+//! client at a time (bounded memory) at any `--threads`. There is no
+//! per-client state at all — the traveling model lives in the protocol —
+//! so the pooled store stays empty. Under per-round sampling the model
+//! visits only the sampled clients.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::metrics::RoundStat;
+use crate::driver::{ClientState, ClientStateStore, Protocol, RoundReport};
 use crate::protocols::common::{eval_split, Env};
-use crate::protocols::RunResult;
-use crate::runtime::TensorStore;
+use crate::runtime::{Artifact, TensorStore};
 
-pub fn run(env: &mut Env) -> Result<RunResult> {
-    let cfg = env.cfg;
-    let k = cfg.split_k();
-    let n = cfg.clients;
-    let tag = cfg.config_tag();
+/// SL-basic behind the [`Protocol`] trait.
+pub struct SlBasicProtocol {
+    client_fwd: Arc<Artifact>,
+    server_step: Arc<Artifact>,
+    server_eval: Arc<Artifact>,
+    client_bwd: Arc<Artifact>,
+    init_client_artifact: String,
+    init_server_artifact: String,
+    /// a single shared client model, passed around peer-to-peer
+    client_state: TensorStore,
+    server_state: TensorStore,
+    fwd_flops: f64,
+    bwd_flops: f64,
+    server_flops: f64,
+    act_bytes: usize,
+    handoff_bytes: usize,
+    loss_sum: f64,
+    loss_count: f64,
+}
 
-    let client_fwd = env.art_split("client_fwd")?;
-    let server_step = env.art_split("sl_server_step")?;
-    let server_eval = env.art_split("sl_server_eval")?;
-    let client_bwd = env.art_split("client_bwd")?;
+impl SlBasicProtocol {
+    pub fn new(env: &Env) -> Result<Self> {
+        let cfg = env.cfg;
+        let k = cfg.split_k();
+        let tag = cfg.config_tag();
+        Ok(Self {
+            client_fwd: env.art_split("client_fwd")?,
+            server_step: env.art_split("sl_server_step")?,
+            server_eval: env.art_split("sl_server_eval")?,
+            client_bwd: env.art_split("client_bwd")?,
+            init_client_artifact: format!("{tag}_init_sl_client"),
+            init_server_artifact: format!("{tag}_init_sl_server"),
+            client_state: TensorStore::new(),
+            server_state: TensorStore::new(),
+            fwd_flops: env.spec.client_fwd_step_flops(k),
+            bwd_flops: env.spec.client_bwd_step_flops(k),
+            server_flops: env.spec.server_step_flops(k, false),
+            act_bytes: env.spec.act_batch_bytes(k),
+            handoff_bytes: env.spec.client_params(k) * 4,
+            loss_sum: 0.0,
+            loss_count: 0.0,
+        })
+    }
+}
 
-    // a single shared client model, passed around peer-to-peer
-    let mut client_state: TensorStore =
-        env.init_state(&format!("{tag}_init_sl_client"), env.client_seed(0))?;
-    let mut server_state: TensorStore =
-        env.init_state(&format!("{tag}_init_sl_server"), env.server_seed())?;
+impl Protocol for SlBasicProtocol {
+    type Update = ();
 
-    let fwd_flops = env.spec.client_fwd_step_flops(k);
-    let bwd_flops = env.spec.client_bwd_step_flops(k);
-    let server_flops = env.spec.server_step_flops(k, false);
-    let act_bytes = env.spec.act_batch_bytes(k);
-    let handoff_bytes = env.spec.client_params(k) * 4;
+    fn name(&self) -> &'static str {
+        "SL-basic"
+    }
 
-    for round in 0..cfg.rounds {
-        let mut loss_sum = 0.0;
-        let mut loss_count = 0.0;
+    fn init_state(&mut self, env: &mut Env) -> Result<()> {
+        self.client_state = env.init_state(&self.init_client_artifact, env.client_seed(0))?;
+        self.server_state = env.init_state(&self.init_server_artifact, env.server_seed())?;
+        Ok(())
+    }
 
-        for i in 0..n {
+    fn init_client(&self, _env: &Env, _client: usize) -> Result<ClientState> {
+        // the traveling model is protocol state, not per-client state
+        Ok(ClientState::new())
+    }
+
+    fn fan_out(&self) -> bool {
+        false
+    }
+
+    fn begin_round(
+        &mut self,
+        _env: &mut Env,
+        _round: usize,
+        _participants: &[usize],
+    ) -> Result<()> {
+        self.loss_sum = 0.0;
+        self.loss_count = 0.0;
+        Ok(())
+    }
+
+    fn merge_round(
+        &mut self,
+        env: &mut Env,
+        _store: &mut ClientStateStore,
+        round: usize,
+        _step: usize,
+        participants: &[usize],
+        _updates: Vec<(usize, ())>,
+    ) -> Result<()> {
+        for (idx, &i) in participants.iter().enumerate() {
             for b in env.train_batches(i, round) {
                 // client fwd (uses the traveling client model)
-                let root = client_state.sub("state");
-                let fwd = client_fwd.call(&[&root], &[("x", &b.x)])?;
+                let root = self.client_state.sub("state");
+                let fwd = self.client_fwd.call(&[&root], &[("x", &b.x)])?;
                 let acts = fwd.get("acts")?;
-                env.meter.add_client_flops(fwd_flops);
+                env.meter.add_client_flops(self.fwd_flops);
                 let up = env.up_payload_bytes(acts);
                 env.meter.add_up(up);
 
                 // server: train + emit grad_a
-                let mut out =
-                    server_step.call(&[&server_state], &[("a", acts), ("y", &b.y)])?;
-                out.write_state(&mut server_state);
-                loss_sum += out.scalar("loss")? as f64;
-                loss_count += 1.0;
-                env.meter.add_server_flops(server_flops);
-                env.meter.add_down(act_bytes);
+                let mut out = self
+                    .server_step
+                    .call(&[&self.server_state], &[("a", acts), ("y", &b.y)])?;
+                out.write_state(&mut self.server_state);
+                self.loss_sum += out.scalar("loss")? as f64;
+                self.loss_count += 1.0;
+                env.meter.add_server_flops(self.server_flops);
+                env.meter.add_down(self.act_bytes);
 
                 // client bwd from the downloaded gradient
                 let grad_a = out.take("grad_a")?;
-                let mut cb = client_bwd.call(
-                    &[&client_state],
-                    &[("x", &b.x), ("grad_a", &grad_a)],
-                )?;
-                cb.write_state(&mut client_state);
-                env.meter.add_client_flops(bwd_flops);
+                let mut cb = self
+                    .client_bwd
+                    .call(&[&self.client_state], &[("x", &b.x), ("grad_a", &grad_a)])?;
+                cb.write_state(&mut self.client_state);
+                env.meter.add_client_flops(self.bwd_flops);
             }
             // hand the client model to the next client (peer transfer)
-            if i + 1 < n {
-                env.meter.add_peer(handoff_bytes);
+            if idx + 1 < participants.len() {
+                env.meter.add_peer(self.handoff_bytes);
             }
         }
-
-        let eval_now = round % cfg.eval_every == 0 || round + 1 == cfg.rounds;
-        let accuracy = if eval_now {
-            // every client evaluates with the (single) traveling model
-            let roots: Vec<TensorStore> = (0..n).map(|_| client_state.sub("state")).collect();
-            let server_root = server_state.sub("state");
-            let acc = eval_split(env, &client_fwd, &server_eval, &roots, |_| {
-                vec![server_root.clone()]
-            })?;
-            acc.mean_client_pct()
-        } else {
-            env.recorder.last_accuracy()
-        };
-
-        env.recorder.push(RoundStat {
-            round,
-            phase: "train".into(),
-            train_loss: if loss_count > 0.0 { loss_sum / loss_count } else { 0.0 },
-            accuracy_pct: accuracy,
-            bandwidth_gb: env.meter.bandwidth_gb(),
-            client_tflops: env.meter.client_tflops(),
-            total_tflops: env.meter.total_tflops(),
-            mask_density: 1.0,
-            selected: (0..n).collect(),
-        });
+        Ok(())
     }
 
-    Ok(RunResult::from_env(env, &env.recorder, &env.meter))
+    fn end_round(
+        &mut self,
+        _env: &mut Env,
+        _store: &mut ClientStateStore,
+        _round: usize,
+        participants: &[usize],
+    ) -> Result<RoundReport> {
+        Ok(RoundReport {
+            phase: "train".into(),
+            train_loss: if self.loss_count > 0.0 {
+                self.loss_sum / self.loss_count
+            } else {
+                0.0
+            },
+            mask_density: 1.0,
+            selected: participants.to_vec(),
+        })
+    }
+
+    fn eval(&self, env: &Env, _store: &mut ClientStateStore) -> Result<f64> {
+        // every client evaluates with the (single) traveling model
+        let n = env.cfg.clients;
+        let roots: Vec<TensorStore> = (0..n).map(|_| self.client_state.sub("state")).collect();
+        let server_root = self.server_state.sub("state");
+        let acc = eval_split(env, &self.client_fwd, &self.server_eval, &roots, |_| {
+            vec![server_root.clone()]
+        })?;
+        Ok(acc.mean_client_pct())
+    }
 }

@@ -7,119 +7,208 @@
 //! local) and broadcasts the average — costing 2 x client-params per
 //! client per round on top of the activation traffic.
 //!
-//! **Parallelism** (DESIGN.md §5): the per-batch exchange updates one
-//! shared server model in visiting order, so training stays sequential at
-//! any `--threads` and streams batches one client at a time (bounded
-//! memory); the engine fans out the split evaluation, which is
-//! per-client independent.
+//! **Driver mapping** (DESIGN.md §6): the per-batch exchange updates one
+//! shared server model in visiting order, so `fan_out` is `false` and the
+//! chain runs inside `merge_round`, streaming batches one client at a
+//! time (bounded memory) at any `--threads`; per-client models live in
+//! the pooled [`ClientStateStore`], so sampled runs only keep the round's
+//! participants resident. Fed-averaging and the broadcast cover the
+//! participant set, with weights renormalized over it under sampling.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::metrics::RoundStat;
-use crate::protocols::common::{data_weights, eval_split, Env};
-use crate::protocols::RunResult;
-use crate::runtime::TensorStore;
+use crate::driver::{ClientState, ClientStateStore, Protocol, RoundReport};
+use crate::protocols::common::{
+    data_weights, eval_split, eval_split_streamed, round_weights, Env,
+};
+use crate::runtime::{Artifact, TensorStore};
 
-pub fn run(env: &mut Env) -> Result<RunResult> {
-    let cfg = env.cfg;
-    let k = cfg.split_k();
-    let n = cfg.clients;
-    let tag = cfg.config_tag();
+/// SplitFed behind the [`Protocol`] trait.
+pub struct SplitFedProtocol {
+    client_fwd: Arc<Artifact>,
+    server_step: Arc<Artifact>,
+    server_eval: Arc<Artifact>,
+    client_bwd: Arc<Artifact>,
+    init_client_artifact: String,
+    init_server_artifact: String,
+    server_state: TensorStore,
+    weights: Vec<f32>,
+    fwd_flops: f64,
+    bwd_flops: f64,
+    server_flops: f64,
+    act_bytes: usize,
+    fed_bytes: usize,
+    loss_sum: f64,
+    loss_count: f64,
+}
 
-    let client_fwd = env.art_split("client_fwd")?;
-    let server_step = env.art_split("sl_server_step")?;
-    let server_eval = env.art_split("sl_server_eval")?;
-    let client_bwd = env.art_split("client_bwd")?;
+impl SplitFedProtocol {
+    pub fn new(env: &Env) -> Result<Self> {
+        let cfg = env.cfg;
+        let k = cfg.split_k();
+        let tag = cfg.config_tag();
+        Ok(Self {
+            client_fwd: env.art_split("client_fwd")?,
+            server_step: env.art_split("sl_server_step")?,
+            server_eval: env.art_split("sl_server_eval")?,
+            client_bwd: env.art_split("client_bwd")?,
+            init_client_artifact: format!("{tag}_init_sl_client"),
+            init_server_artifact: format!("{tag}_init_sl_server"),
+            server_state: TensorStore::new(),
+            weights: data_weights(&env.clients),
+            fwd_flops: env.spec.client_fwd_step_flops(k),
+            bwd_flops: env.spec.client_bwd_step_flops(k),
+            server_flops: env.spec.server_step_flops(k, false),
+            act_bytes: env.spec.act_batch_bytes(k),
+            fed_bytes: env.spec.client_params(k) * 4,
+            loss_sum: 0.0,
+            loss_count: 0.0,
+        })
+    }
+}
 
-    let mut client_states: Vec<TensorStore> = (0..n)
-        .map(|i| env.init_state(&format!("{tag}_init_sl_client"), env.client_seed(i)))
-        .collect::<Result<_>>()?;
-    let mut server_state =
-        env.init_state(&format!("{tag}_init_sl_server"), env.server_seed())?;
+impl Protocol for SplitFedProtocol {
+    type Update = ();
 
-    let weights = data_weights(&env.clients);
-    let fwd_flops = env.spec.client_fwd_step_flops(k);
-    let bwd_flops = env.spec.client_bwd_step_flops(k);
-    let server_flops = env.spec.server_step_flops(k, false);
-    let act_bytes = env.spec.act_batch_bytes(k);
-    let fed_bytes = env.spec.client_params(k) * 4;
+    fn name(&self) -> &'static str {
+        "SplitFed"
+    }
 
-    for round in 0..cfg.rounds {
-        let mut loss_sum = 0.0;
-        let mut loss_count = 0.0;
+    fn init_state(&mut self, env: &mut Env) -> Result<()> {
+        self.server_state = env.init_state(&self.init_server_artifact, env.server_seed())?;
+        Ok(())
+    }
 
+    fn init_client(&self, env: &Env, client: usize) -> Result<ClientState> {
+        let model = env.init_state(&self.init_client_artifact, env.client_seed(client))?;
+        let mut state = ClientState::new();
+        state.insert("model", model);
+        Ok(state)
+    }
+
+    fn fan_out(&self) -> bool {
+        false
+    }
+
+    fn begin_round(
+        &mut self,
+        _env: &mut Env,
+        _round: usize,
+        _participants: &[usize],
+    ) -> Result<()> {
+        self.loss_sum = 0.0;
+        self.loss_count = 0.0;
+        Ok(())
+    }
+
+    fn merge_round(
+        &mut self,
+        env: &mut Env,
+        store: &mut ClientStateStore,
+        round: usize,
+        _step: usize,
+        participants: &[usize],
+        _updates: Vec<(usize, ())>,
+    ) -> Result<()> {
         // visiting order shuffled per round (SplitFed trains clients in
         // parallel; sequential visits in shuffled order approximate the
         // same update stream on a single shared server model)
-        let mut order: Vec<usize> = (0..n).collect();
+        let mut order: Vec<usize> = participants.to_vec();
         env.rng.derive("splitfed-order", round as u64).shuffle(&mut order);
 
         for &i in &order {
             for b in env.train_batches(i, round) {
-                let root = client_states[i].sub("state");
-                let fwd = client_fwd.call(&[&root], &[("x", &b.x)])?;
+                let model = store.get_mut(i)?.get_mut("model")?;
+                let root = model.sub("state");
+                let fwd = self.client_fwd.call(&[&root], &[("x", &b.x)])?;
                 let acts = fwd.get("acts")?;
-                env.meter.add_client_flops(fwd_flops);
+                env.meter.add_client_flops(self.fwd_flops);
                 let up = env.up_payload_bytes(acts);
                 env.meter.add_up(up);
 
-                let mut out =
-                    server_step.call(&[&server_state], &[("a", acts), ("y", &b.y)])?;
-                out.write_state(&mut server_state);
-                loss_sum += out.scalar("loss")? as f64;
-                loss_count += 1.0;
-                env.meter.add_server_flops(server_flops);
-                env.meter.add_down(act_bytes);
+                let mut out = self
+                    .server_step
+                    .call(&[&self.server_state], &[("a", acts), ("y", &b.y)])?;
+                out.write_state(&mut self.server_state);
+                self.loss_sum += out.scalar("loss")? as f64;
+                self.loss_count += 1.0;
+                env.meter.add_server_flops(self.server_flops);
+                env.meter.add_down(self.act_bytes);
 
                 let grad_a = out.take("grad_a")?;
-                let mut cb = client_bwd.call(
-                    &[&client_states[i]],
-                    &[("x", &b.x), ("grad_a", &grad_a)],
-                )?;
-                cb.write_state(&mut client_states[i]);
-                env.meter.add_client_flops(bwd_flops);
+                let mut cb = self
+                    .client_bwd
+                    .call(&[&*model], &[("x", &b.x), ("grad_a", &grad_a)])?;
+                cb.write_state(model);
+                env.meter.add_client_flops(self.bwd_flops);
             }
         }
+        Ok(())
+    }
 
-        // federated averaging of the client models (pc.* only)
-        let refs: Vec<&TensorStore> = client_states.iter().collect();
-        let mut avg = client_states[0].clone();
-        avg.set_weighted_sum(&refs, &weights, |key| key.starts_with("state.pc."))?;
+    fn end_round(
+        &mut self,
+        env: &mut Env,
+        store: &mut ClientStateStore,
+        _round: usize,
+        participants: &[usize],
+    ) -> Result<RoundReport> {
+        // federated averaging of the participating client models (pc.* only)
+        let w = round_weights(&self.weights, participants);
+        let mut refs: Vec<&TensorStore> = Vec::with_capacity(participants.len());
+        for &i in participants {
+            refs.push(store.get(i)?.get("model")?);
+        }
+        let mut avg = refs[0].clone();
+        avg.set_weighted_sum(&refs, &w, |key| key.starts_with("state.pc."))?;
+        drop(refs);
         let avg_keys: Vec<String> = avg.keys_under("state.pc").cloned().collect();
-        for s in client_states.iter_mut() {
+        for &i in participants {
+            let s = store.get_mut(i)?.get_mut("model")?;
             for key in &avg_keys {
                 s.insert(key.clone(), avg.get(key)?.clone());
             }
             // upload own model, download the average
-            env.meter.add_up(fed_bytes);
-            env.meter.add_down(fed_bytes);
+            env.meter.add_up(self.fed_bytes);
+            env.meter.add_down(self.fed_bytes);
         }
-
-        let eval_now = round % cfg.eval_every == 0 || round + 1 == cfg.rounds;
-        let accuracy = if eval_now {
-            let roots: Vec<TensorStore> =
-                client_states.iter().map(|s| s.sub("state")).collect();
-            let server_root = server_state.sub("state");
-            let acc = eval_split(env, &client_fwd, &server_eval, &roots, |_| {
-                vec![server_root.clone()]
-            })?;
-            acc.mean_client_pct()
-        } else {
-            env.recorder.last_accuracy()
-        };
-
-        env.recorder.push(RoundStat {
-            round,
+        Ok(RoundReport {
             phase: "train".into(),
-            train_loss: if loss_count > 0.0 { loss_sum / loss_count } else { 0.0 },
-            accuracy_pct: accuracy,
-            bandwidth_gb: env.meter.bandwidth_gb(),
-            client_tflops: env.meter.client_tflops(),
-            total_tflops: env.meter.total_tflops(),
+            train_loss: if self.loss_count > 0.0 {
+                self.loss_sum / self.loss_count
+            } else {
+                0.0
+            },
             mask_density: 1.0,
-            selected: (0..n).collect(),
-        });
+            selected: participants.to_vec(),
+        })
     }
 
-    Ok(RunResult::from_env(env, &env.recorder, &env.meter))
+    fn eval(&self, env: &Env, store: &mut ClientStateStore) -> Result<f64> {
+        let n = env.cfg.clients;
+        let server_root = self.server_state.sub("state");
+        let acc = if store.all_loaded() {
+            // full-participation path: identical to the pre-redesign eval
+            let mut roots = Vec::with_capacity(n);
+            for i in 0..n {
+                roots.push(store.get(i)?.get("model")?.sub("state"));
+            }
+            eval_split(env, &self.client_fwd, &self.server_eval, &roots, |_| {
+                vec![server_root.clone()]
+            })?
+        } else {
+            eval_split_streamed(
+                env,
+                &self.client_fwd,
+                &self.server_eval,
+                store,
+                |i| self.init_client(env, i),
+                |st: &ClientState| Ok(st.get("model")?.sub("state")),
+                |_, _: &ClientState| Ok(vec![server_root.clone()]),
+            )?
+        };
+        Ok(acc.mean_client_pct())
+    }
 }

@@ -135,6 +135,8 @@ mod tests {
             c3_score: c3,
             mask_density: 1.0,
             rounds: 5,
+            participation: 1.0,
+            sampled_clients_per_round: 5.0,
         }
     }
 

@@ -7,10 +7,25 @@
 //! otherwise, matching the other integration suites.
 
 use adasplit::config::{ExperimentConfig, ProtocolKind};
+use adasplit::driver::{SampledSync, Scheduler, SyncAll};
 use adasplit::engine::{par_indexed, par_slice_mut, ClientPool};
 use adasplit::metrics::{AccuracyAccum, CostMeter};
-use adasplit::protocols::run_protocol;
+use adasplit::protocols::{run_protocol, RunResult};
 use adasplit::runtime::Runtime;
+
+fn assert_results_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.accuracy, b.accuracy, "{what} accuracy");
+    assert_eq!(a.best_accuracy, b.best_accuracy, "{what} best_accuracy");
+    assert_eq!(a.bandwidth_gb, b.bandwidth_gb, "{what} bandwidth");
+    assert_eq!(a.client_tflops, b.client_tflops, "{what} client_tflops");
+    assert_eq!(a.total_tflops, b.total_tflops, "{what} total_tflops");
+    assert_eq!(a.c3_score, b.c3_score, "{what} c3");
+    assert_eq!(a.mask_density, b.mask_density, "{what} mask_density");
+    assert_eq!(
+        a.sampled_clients_per_round, b.sampled_clients_per_round,
+        "{what} sampled_clients_per_round"
+    );
+}
 
 // ---- pure engine determinism (no artifacts required) ----------------------
 
@@ -111,6 +126,36 @@ fn pool_is_usable_concurrently_with_shared_state() {
     assert_eq!(sums.iter().sum::<u64>(), 1000 * 999 / 2);
 }
 
+// ---- scheduler determinism (no artifacts required) ------------------------
+
+#[test]
+fn sampled_sync_at_full_participation_equals_sync_all() {
+    // the p = 1.0 degenerate case must be *exactly* SyncAll so that
+    // `--participation 1.0` is bit-identical to the default scheduler
+    let mut all = SyncAll::new(9);
+    let mut sampled = SampledSync::new(9, 1.0, 123);
+    for round in 0..32 {
+        assert_eq!(sampled.participants(round), all.participants(round));
+    }
+}
+
+#[test]
+fn sampled_sync_is_invocation_deterministic() {
+    // two schedulers built from the same (n, p, seed) draw the same
+    // sample stream — the basis of repeat-run determinism; thread-count
+    // invariance is automatic because sampling runs on the driver thread
+    let draws = |seed: u64| -> Vec<Vec<usize>> {
+        let mut s = SampledSync::new(200, 0.25, seed);
+        (0..16).map(|r| s.participants(r)).collect()
+    };
+    assert_eq!(draws(5), draws(5));
+    assert_ne!(draws(5), draws(6), "seed must matter");
+    for sample in draws(5) {
+        assert_eq!(sample.len(), 50, "ceil(0.25 * 200)");
+        assert!(sample.windows(2).all(|w| w[0] < w[1]), "ascending unique ids");
+    }
+}
+
 // ---- full-protocol equivalence (requires `make artifacts`) ----------------
 
 fn runtime() -> Option<Runtime> {
@@ -175,4 +220,126 @@ fn adasplit_server_grad_ablation_is_thread_count_invariant() {
     assert_eq!(serial.accuracy, par.accuracy);
     assert_eq!(serial.bandwidth_gb, par.bandwidth_gb);
     assert_eq!(serial.c3_score, par.c3_score);
+}
+
+// ---- old-vs-new parity pin (requires `make artifacts` + goldens) ----------
+
+/// Pins the redesigned driver against pre-redesign metrics, protocol by
+/// protocol. Goldens are recorded with
+/// `ADASPLIT_WRITE_GOLDENS=1 cargo test -q --test engine_determinism`
+/// (run once at the last pre-driver commit, or at any commit declared a
+/// new numerical baseline) and committed to `tests/goldens/`. The test
+/// skips loudly when the file is absent, like the artifact gate.
+#[test]
+fn driver_matches_recorded_protocol_goldens() {
+    let Some(rt) = runtime() else { return };
+    let golden_path = std::path::Path::new("tests/goldens/protocol_parity.json");
+    let results: Vec<(ProtocolKind, RunResult)> = ProtocolKind::ALL
+        .iter()
+        .map(|&p| (p, run_protocol(&rt, &quick(p, 1)).unwrap()))
+        .collect();
+
+    if std::env::var("ADASPLIT_WRITE_GOLDENS").as_deref() == Ok("1") {
+        let mut obj = std::collections::BTreeMap::new();
+        for (p, r) in &results {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("accuracy".to_string(), adasplit::util::Json::Num(r.accuracy));
+            m.insert("best_accuracy".to_string(), adasplit::util::Json::Num(r.best_accuracy));
+            m.insert("bandwidth_gb".to_string(), adasplit::util::Json::Num(r.bandwidth_gb));
+            m.insert("client_tflops".to_string(), adasplit::util::Json::Num(r.client_tflops));
+            m.insert("total_tflops".to_string(), adasplit::util::Json::Num(r.total_tflops));
+            m.insert("mask_density".to_string(), adasplit::util::Json::Num(r.mask_density));
+            obj.insert(p.id().to_string(), adasplit::util::Json::Obj(m));
+        }
+        std::fs::create_dir_all("tests/goldens").unwrap();
+        std::fs::write(golden_path, adasplit::util::Json::Obj(obj).to_string_pretty()).unwrap();
+        eprintln!("WROTE goldens to {golden_path:?}");
+        return;
+    }
+
+    let Ok(text) = std::fs::read_to_string(golden_path) else {
+        eprintln!("SKIP: no goldens recorded (ADASPLIT_WRITE_GOLDENS=1 to record)");
+        return;
+    };
+    let golden = adasplit::util::Json::parse(&text).expect("goldens parse");
+    for (p, r) in &results {
+        let g = golden.get(p.id()).expect("protocol present in goldens");
+        let field = |k: &str| g.get(k).unwrap().as_f64().unwrap();
+        assert_eq!(r.accuracy, field("accuracy"), "{} accuracy", p.name());
+        assert_eq!(r.best_accuracy, field("best_accuracy"), "{} best", p.name());
+        assert_eq!(r.bandwidth_gb, field("bandwidth_gb"), "{} bandwidth", p.name());
+        assert_eq!(r.client_tflops, field("client_tflops"), "{} client_tflops", p.name());
+        assert_eq!(r.total_tflops, field("total_tflops"), "{} total_tflops", p.name());
+        assert_eq!(r.mask_density, field("mask_density"), "{} mask_density", p.name());
+    }
+}
+
+// ---- SampledSync end-to-end (requires `make artifacts`) -------------------
+
+#[test]
+fn explicit_full_participation_is_bit_identical_to_default() {
+    // `--participation 1.0` (explicit) must route through the exact same
+    // code paths as the default SyncAll run: same scheduler behavior, no
+    // spilling, parallel eval path
+    let Some(rt) = runtime() else { return };
+    for p in ProtocolKind::ALL {
+        let base = run_protocol(&rt, &quick(p, 2)).unwrap();
+        let mut cfg = quick(p, 2);
+        cfg.participation = 1.0;
+        let explicit = run_protocol(&rt, &cfg).unwrap();
+        assert_results_identical(&base, &explicit, p.name());
+    }
+}
+
+#[test]
+fn sampled_runs_are_thread_count_invariant() {
+    // participant selection happens on the driver thread, so a sampled
+    // run must stay bit-identical across worker counts
+    let Some(rt) = runtime() else { return };
+    for p in ProtocolKind::ALL {
+        let mut serial_cfg = quick(p, 1);
+        serial_cfg.clients = 8;
+        serial_cfg.participation = 0.5;
+        let mut par_cfg = serial_cfg.clone();
+        par_cfg.threads = 4;
+        let serial = run_protocol(&rt, &serial_cfg).unwrap();
+        let par = run_protocol(&rt, &par_cfg).unwrap();
+        assert_results_identical(&serial, &par, p.name());
+        assert_eq!(serial.sampled_clients_per_round, 4.0, "{} ceil(0.5*8)", p.name());
+    }
+}
+
+#[test]
+fn sampled_runs_are_repeat_invocation_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick(ProtocolKind::AdaSplit, 2);
+    cfg.clients = 8;
+    cfg.participation = 0.25;
+    let a = run_protocol(&rt, &cfg).unwrap();
+    let b = run_protocol(&rt, &cfg).unwrap();
+    assert_results_identical(&a, &b, "repeat invocation");
+    let mut other_seed = cfg.clone();
+    other_seed.seed = 9;
+    let c = run_protocol(&rt, &other_seed).unwrap();
+    assert!(
+        a.accuracy != c.accuracy || a.bandwidth_gb != c.bandwidth_gb,
+        "different seed should draw different samples"
+    );
+}
+
+#[test]
+fn sampled_many_client_run_completes_with_pooled_state() {
+    // the acceptance-criterion shape: lots of clients, small sample —
+    // per-client state lives in the pooled store and inactive clients
+    // spill, so the run completes without holding every state resident
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick(ProtocolKind::FedAvg, 2);
+    cfg.clients = 64;
+    cfg.participation = 0.25;
+    cfg.samples_per_client = 32;
+    cfg.test_per_client = 32;
+    cfg.rounds = 2;
+    let r = run_protocol(&rt, &cfg).unwrap();
+    assert_eq!(r.sampled_clients_per_round, 16.0, "ceil(0.25*64)");
+    assert!(r.accuracy >= 0.0);
 }
