@@ -5,17 +5,21 @@
 //! overhead can be read off directly against the XLA step time.
 //!
 //! Results are tracked across PRs in `BENCH_results.json` (engine round
-//! throughput over the threads axis + the deterministic mask-density
-//! trajectory of a tiny AdaSplit run). Default mode rewrites the file;
-//! `--check` compares against it instead — the trajectory must match
-//! exactly (it is deterministic) and throughput may not grossly regress —
-//! and exits 0 with a SKIP note when artifacts are absent, so CI can run
-//! the check on artifact-less runners (compile + schema check only).
+//! throughput over the threads axis, the deterministic mask-density
+//! trajectory of a tiny AdaSplit run, and the async-scheduler axis: the
+//! deterministic `AsyncBounded` sim-time trajectory plus its planning
+//! throughput — both pure Rust, so they measure and check even on
+//! artifact-less runners). Default mode rewrites the file; `--check`
+//! compares against it instead — trajectories must match exactly (they
+//! are deterministic), throughput may not grossly regress, and the
+//! tracked file must carry the async-scheduler keys — and exits 0 with a
+//! SKIP note for the artifact-gated sections when artifacts are absent.
 
 use std::collections::BTreeMap;
 
 use adasplit::config::ExperimentConfig;
 use adasplit::data::{build_partition, DatasetKind, Rng, SyntheticDataset};
+use adasplit::driver::{AsyncBounded, ClientSpeeds, Scheduler, SpeedPreset};
 use adasplit::engine::ClientPool;
 use adasplit::orchestrator::UcbOrchestrator;
 use adasplit::protocols::{run_protocol_recorded, Env};
@@ -25,10 +29,70 @@ use adasplit::util::Json;
 
 const TRACK_FILE: &str = "BENCH_results.json";
 
+/// Deterministic async-scheduler fingerprint: the `AsyncBounded`
+/// sim-time trajectory for a fixed fleet (64 clients, stragglers 0.2,
+/// bound 2, cap 0.5, seed 7). Any drift is a real scheduling-semantics
+/// change, not noise.
+fn async_sim_trajectory() -> Vec<f64> {
+    let speeds = ClientSpeeds::new(64, SpeedPreset::Stragglers, 0.2, 7);
+    let mut s = AsyncBounded::new(64, 2, 0.5, &speeds);
+    (0..32).map(|r| s.plan(r).sim_time).collect()
+}
+
+/// Async planning throughput (plans/s on a 512-client fleet) — the
+/// coordinator-side cost of the virtual-clock simulation.
+fn async_plan_bench(iters: usize) -> BenchStats {
+    let speeds = ClientSpeeds::new(512, SpeedPreset::Lognormal { sigma: 0.5 }, 0.0, 3);
+    bench("coord: async plan x200 (512 clients)", 1, iters, || {
+        let mut s = AsyncBounded::new(512, 3, 0.25, &speeds);
+        for r in 0..200 {
+            std::hint::black_box(s.plan(r));
+        }
+    })
+}
+
+fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
+    let md = tracked
+        .opt("async_sim_time")
+        .ok_or_else(|| anyhow::anyhow!(
+            "tracked {TRACK_FILE} is missing the async-scheduler axis \
+             (`async_sim_time`); re-record with the bench"
+        ))?;
+    anyhow::ensure!(
+        tracked.opt("async_plan_rounds_per_s").is_some(),
+        "tracked {TRACK_FILE} is missing `async_plan_rounds_per_s`"
+    );
+    let old: Vec<f64> = md
+        .as_arr()?
+        .iter()
+        .map(|j| j.as_f64())
+        .collect::<anyhow::Result<_>>()?;
+    if old.is_empty() {
+        println!("check: tracked async_sim_time empty (placeholder); key present — ok");
+        return Ok(());
+    }
+    anyhow::ensure!(
+        old.len() == sim.len(),
+        "async_sim_time trajectory length changed: {} -> {}",
+        old.len(),
+        sim.len()
+    );
+    for (i, (a, b)) in old.iter().zip(sim).enumerate() {
+        anyhow::ensure!(
+            (a - b).abs() < 1e-9,
+            "async_sim_time[{i}] drifted: {a} -> {b} (scheduling-semantics change?)"
+        );
+    }
+    println!("check: async-scheduler sim-time trajectory matches ({} rounds)", old.len());
+    Ok(())
+}
+
 fn results_json(
     stats: &[BenchStats],
     round_stats: &[(usize, BenchStats)],
     densities: &[f64],
+    async_sim: &[f64],
+    async_plan: &BenchStats,
     n_par: usize,
     quick: bool,
 ) -> Json {
@@ -41,7 +105,7 @@ fn results_json(
         thr.insert(t.to_string(), Json::Num(n_par as f64 / s.mean_s));
     }
     let mut m = BTreeMap::new();
-    m.insert("schema_version".into(), Json::Num(1.0));
+    m.insert("schema_version".into(), Json::Num(2.0));
     m.insert("quick".into(), Json::Num(if quick { 1.0 } else { 0.0 }));
     m.insert("stats_mean_s".into(), Json::Obj(stat_map));
     m.insert("engine_round_clients_per_s".into(), Json::Obj(thr));
@@ -49,16 +113,33 @@ fn results_json(
         "mask_density".into(),
         Json::Arr(densities.iter().map(|&d| Json::Num(d)).collect()),
     );
+    m.insert(
+        "async_sim_time".into(),
+        Json::Arr(async_sim.iter().map(|&t| Json::Num(t)).collect()),
+    );
+    m.insert(
+        "async_plan_rounds_per_s".into(),
+        Json::Num(200.0 / async_plan.mean_s),
+    );
     Json::Obj(m)
 }
 
 fn main() -> anyhow::Result<()> {
     let check = std::env::args().any(|a| a == "--check");
+    // the async-scheduler axis is pure Rust: it measures and checks even
+    // without artifacts
+    let async_sim = async_sim_trajectory();
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         if check {
+            match std::fs::read_to_string(TRACK_FILE) {
+                Err(_) => println!(
+                    "check: no tracked {TRACK_FILE}; run the bench without --check to create it"
+                ),
+                Ok(text) => check_async_axis(&Json::parse(&text)?, &async_sim)?,
+            }
             println!(
-                "runtime_micro --check: SKIP measurement (artifacts not built); \
-                 bench compiled and schema logic linked — check passes"
+                "runtime_micro --check: SKIP artifact-gated measurements (artifacts \
+                 not built); bench compiled, async axis validated — check passes"
             );
             return Ok(());
         }
@@ -137,11 +218,14 @@ fn main() -> anyhow::Result<()> {
     }));
     stats.push(bench("coord: epoch batching (512)", 1, iters, || {
         let c = build_partition(DatasetKind::MixedCifar, 1, 512, 32, 1.0, 0).unwrap();
+        let c0 = c.get(0);
         let mut rng = Rng::new(0);
         let _: Vec<_> =
-            adasplit::data::BatchIter::train(&c[0].train_x, &c[0].train_y, 32, &mut rng)
+            adasplit::data::BatchIter::train(&c0.train_x, &c0.train_y, 32, &mut rng)
                 .collect();
     }));
+    let async_plan = async_plan_bench(iters);
+    stats.push(async_plan.clone());
     stats.push(bench("coord: UCB select+update x1000", 1, iters, || {
         let mut ucb = UcbOrchestrator::new(5, 0.87);
         for t in 0..1000u64 {
@@ -223,7 +307,12 @@ fn main() -> anyhow::Result<()> {
     // coordinator overhead summary: pure-Rust work per training iteration
     // vs the artifact execution it wraps
     let art = stats[0].mean_s;
-    let coord = stats[7].mean_s / 1000.0; // UCB per iteration
+    let coord = stats
+        .iter()
+        .find(|s| s.name.starts_with("coord: UCB"))
+        .expect("UCB bench present")
+        .mean_s
+        / 1000.0; // UCB per iteration
     println!(
         "\ncoordinator overhead per iteration (UCB) = {:.2}us = {:.4}% of client_step",
         coord * 1e6,
@@ -287,10 +376,19 @@ fn main() -> anyhow::Result<()> {
                     }
                     println!("check: engine throughput within tolerance of tracked results");
                 }
+                check_async_axis(&tracked, &async_sim)?;
             }
         }
     } else {
-        let json = results_json(&stats, &round_stats, &densities, n_par, quick_mode());
+        let json = results_json(
+            &stats,
+            &round_stats,
+            &densities,
+            &async_sim,
+            &async_plan,
+            n_par,
+            quick_mode(),
+        );
         std::fs::write(TRACK_FILE, json.to_string_pretty())?;
         println!("tracked results -> {TRACK_FILE}");
     }

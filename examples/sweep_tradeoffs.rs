@@ -1,9 +1,13 @@
 //! Figure-1 trade-off sweeps: accuracy vs bandwidth (varying kappa at
 //! fixed compute), accuracy vs client compute (varying mu at fixed
-//! bandwidth budget), and accuracy vs per-round participation (the third
+//! bandwidth budget), accuracy vs per-round participation (the third
 //! budget axis the pluggable scheduler opens: fewer sampled clients per
-//! round = less traffic and less client compute per round), with the
-//! FL/SL baselines as reference points.
+//! round = less traffic and less client compute per round), and accuracy
+//! vs simulated wall-clock under the bounded-staleness async scheduler
+//! (heterogeneous client speeds: a larger staleness bound stops the
+//! synchronous barrier from waiting on stragglers every round, trading
+//! staleness for virtual time), with the FL/SL baselines as reference
+//! points.
 //!
 //! ```bash
 //! cargo run --release --example sweep_tradeoffs -- --rounds 10 --samples 256
@@ -11,6 +15,7 @@
 
 use adasplit::config::{ExperimentConfig, ProtocolKind};
 use adasplit::data::DatasetKind;
+use adasplit::driver::SpeedPreset;
 use adasplit::protocols::run_protocol;
 use adasplit::report::series::ascii_chart;
 use adasplit::report::Series;
@@ -69,6 +74,31 @@ fn main() -> anyhow::Result<()> {
         p_curve.push(r.bandwidth_gb, r.best_accuracy);
     }
 
+    // accuracy vs simulated wall-clock: sweep the staleness bound under
+    // heterogeneous client speeds (stragglers preset). s = 0 is the
+    // synchronous barrier — every round waits for the slowest device; a
+    // larger bound lets fast clients merge while stragglers catch up,
+    // shrinking the virtual wall-clock at some accuracy cost.
+    let async_base = base
+        .clone()
+        .with_clients(10)
+        .with_client_speeds(SpeedPreset::Stragglers)
+        .with_straggler_frac(0.2);
+    let mut s_curve = Series::new("AdaSplit (staleness sweep)", "sim_time");
+    println!("\nstaleness sweep (stragglers speeds, accuracy vs simulated wall-clock):");
+    // NB: under non-uniform speeds the meter reports *link-time-weighted*
+    // bandwidth (a straggler's bytes cost 10x link-time, DESIGN.md §7) —
+    // not raw GB, and not comparable to the uniform-speed curves above
+    println!("{:<8} {:>8} {:>10} {:>14}", "bound", "acc%", "simT", "bw (link-wt)");
+    for bound in [0usize, 1, 2, 4] {
+        let r = run_protocol(&rt, &async_base.clone().with_staleness_bound(Some(bound)))?;
+        println!(
+            "s={bound:<6} {:>8.2} {:>10.2} {:>14.4}",
+            r.best_accuracy, r.sim_time, r.bandwidth_gb
+        );
+        s_curve.push(r.sim_time, r.best_accuracy);
+    }
+
     // baseline reference points
     let mut base_bw = Series::new("baselines", "bandwidth_gb");
     let mut base_c = Series::new("baselines", "client_tflops");
@@ -88,11 +118,14 @@ fn main() -> anyhow::Result<()> {
     print!("{}", ascii_chart(&[c_curve.clone(), base_c.clone()], 60, 14));
     println!("\n=== accuracy vs bandwidth under client sampling ===");
     print!("{}", ascii_chart(&[p_curve.clone()], 60, 14));
+    println!("\n=== accuracy vs simulated wall-clock (staleness sweep) ===");
+    print!("{}", ascii_chart(&[s_curve.clone()], 60, 14));
 
     std::fs::create_dir_all("results")?;
     std::fs::write("results/fig1_bandwidth_curve.csv", bw_curve.to_csv())?;
     std::fs::write("results/fig1_compute_curve.csv", c_curve.to_csv())?;
     std::fs::write("results/fig1_participation_curve.csv", p_curve.to_csv())?;
+    std::fs::write("results/fig1_staleness_curve.csv", s_curve.to_csv())?;
     std::fs::write("results/fig1_baseline_bw.csv", base_bw.to_csv())?;
     std::fs::write("results/fig1_baseline_compute.csv", base_c.to_csv())?;
     println!("\ncurves -> results/fig1_*.csv");

@@ -10,6 +10,7 @@ use std::path::Path;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::data::DatasetKind;
+use crate::driver::SpeedPreset;
 use crate::metrics::Budgets;
 use crate::util::kvconf::KvConf;
 
@@ -129,8 +130,25 @@ pub struct ExperimentConfig {
     /// per-round client-participation fraction p in (0, 1]: each round the
     /// scheduler samples ceil(p * clients) clients (1.0 = everyone, the
     /// `SyncAll` scheduler; < 1.0 = seeded `SampledSync` subsampling with
-    /// non-participant state spilled from memory)
+    /// non-participant state spilled from memory). Under `AsyncBounded`
+    /// this caps how many arrived updates the server absorbs per round
+    /// (the staleness bound still wins).
     pub participation: f64,
+    /// bounded-staleness async scheduling (`--staleness-bound s`): `Some(s)`
+    /// runs the `AsyncBounded` scheduler — clients advance on per-client
+    /// virtual clocks and the server merges updates up to `s` rounds
+    /// stale; `None` (the default) keeps rounds synchronous. `Some(0)`
+    /// with uniform speeds is bit-identical to `SyncAll`.
+    pub staleness_bound: Option<usize>,
+    /// per-client compute/network rate model (`--client-speeds`): uniform
+    /// (default) | lognormal[:sigma] | stragglers
+    pub client_speeds: SpeedPreset,
+    /// fraction of slow clients under the `stragglers` speed preset
+    pub straggler_frac: f64,
+    /// aggregation down-weight per round of staleness in (0, 1]
+    /// (`--stale-decay`): a contribution `k` rounds stale is weighted by
+    /// `stale_decay^k` before renormalization
+    pub stale_decay: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -160,6 +178,10 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".into(),
             threads: 0,
             participation: 1.0,
+            staleness_bound: None,
+            client_speeds: SpeedPreset::Uniform,
+            straggler_frac: 0.1,
+            stale_decay: 0.5,
         }
     }
 }
@@ -193,7 +215,8 @@ impl ExperimentConfig {
             "test_per_client", "imbalance", "seed", "kappa", "eta", "mu",
             "gamma", "lambda", "beta", "server_grad_to_client", "prox_mu",
             "local_epochs", "eval_every", "sparse_eps", "trace",
-            "artifacts_dir", "threads", "participation",
+            "artifacts_dir", "threads", "participation", "staleness_bound",
+            "client_speeds", "straggler_frac", "stale_decay",
             "budgets.bandwidth_gb", "budgets.client_tflops", "budgets.temp",
         ];
         for k in kv.keys() {
@@ -232,6 +255,16 @@ impl ExperimentConfig {
             artifacts_dir: kv.get_str("artifacts_dir", &d.artifacts_dir),
             threads: kv.get_usize("threads", d.threads)?,
             participation: kv.get_f64("participation", d.participation)?,
+            staleness_bound: kv
+                .raw("staleness_bound")
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|e| anyhow::anyhow!("`staleness_bound` = `{v}`: {e}"))
+                })
+                .transpose()?,
+            client_speeds: kv.get_str("client_speeds", &d.client_speeds.id()).parse()?,
+            straggler_frac: kv.get_f64("straggler_frac", d.straggler_frac)?,
+            stale_decay: kv.get_f64("stale_decay", d.stale_decay)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -283,6 +316,14 @@ impl ExperimentConfig {
         ensure!(
             self.participation > 0.0 && self.participation <= 1.0,
             "participation in (0,1]"
+        );
+        ensure!(
+            (0.0..=1.0).contains(&self.straggler_frac),
+            "straggler_frac in [0,1]"
+        );
+        ensure!(
+            self.stale_decay > 0.0 && self.stale_decay <= 1.0,
+            "stale_decay in (0,1]"
         );
         ensure!(
             (0.05..=0.95).contains(&self.mu),
@@ -343,6 +384,28 @@ impl ExperimentConfig {
 
     pub fn with_participation(mut self, participation: f64) -> Self {
         self.participation = participation;
+        self
+    }
+
+    /// `Some(s)` runs the `AsyncBounded` scheduler with staleness bound
+    /// `s`; `None` restores synchronous rounds.
+    pub fn with_staleness_bound(mut self, bound: Option<usize>) -> Self {
+        self.staleness_bound = bound;
+        self
+    }
+
+    pub fn with_client_speeds(mut self, preset: SpeedPreset) -> Self {
+        self.client_speeds = preset;
+        self
+    }
+
+    pub fn with_straggler_frac(mut self, frac: f64) -> Self {
+        self.straggler_frac = frac;
+        self
+    }
+
+    pub fn with_stale_decay(mut self, decay: f64) -> Self {
+        self.stale_decay = decay;
         self
     }
 
@@ -457,6 +520,45 @@ mod tests {
         assert_eq!(c.threads, 4);
         assert_eq!(c.effective_threads(), 4);
         assert_eq!(ExperimentConfig::default().with_threads(2).threads, 2);
+    }
+
+    #[test]
+    fn async_scheduler_keys_parse_and_validate() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.staleness_bound, None, "default is synchronous");
+        assert_eq!(d.client_speeds, SpeedPreset::Uniform);
+        assert!((d.straggler_frac - 0.1).abs() < 1e-12);
+        assert!((d.stale_decay - 0.5).abs() < 1e-12);
+
+        let c = ExperimentConfig::from_kv_text(
+            "staleness_bound = 3\nclient_speeds = \"stragglers\"\n\
+             straggler_frac = 0.25\nstale_decay = 0.8\n",
+        )
+        .unwrap();
+        assert_eq!(c.staleness_bound, Some(3));
+        assert_eq!(c.client_speeds, SpeedPreset::Stragglers);
+        assert!((c.straggler_frac - 0.25).abs() < 1e-12);
+        assert!((c.stale_decay - 0.8).abs() < 1e-12);
+
+        let c = ExperimentConfig::from_kv_text("client_speeds = \"lognormal:0.7\"\n").unwrap();
+        assert_eq!(c.client_speeds, SpeedPreset::Lognormal { sigma: 0.7 });
+        assert_eq!(c.staleness_bound, None, "absent key stays synchronous");
+
+        assert!(ExperimentConfig::from_kv_text("staleness_bound = -1\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("staleness_bound = fast\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("client_speeds = \"warp\"\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("straggler_frac = 1.5\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("stale_decay = 0.0\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("stale_decay = 1.5\n").is_err());
+
+        let c = ExperimentConfig::default()
+            .with_staleness_bound(Some(2))
+            .with_client_speeds(SpeedPreset::Stragglers)
+            .with_straggler_frac(0.3)
+            .with_stale_decay(0.9);
+        assert_eq!(c.staleness_bound, Some(2));
+        c.validate().unwrap();
+        assert_eq!(c.with_staleness_bound(None).staleness_bound, None);
     }
 
     #[test]

@@ -14,6 +14,6 @@ pub mod rng;
 pub mod synthetic;
 
 pub use batcher::{BatchIter, Batch};
-pub use partition::{build_partition, ClientData, DatasetKind};
+pub use partition::{build_partition, ClientData, DatasetKind, Partition};
 pub use rng::Rng;
 pub use synthetic::{Family, SyntheticDataset};

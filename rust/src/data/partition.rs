@@ -10,6 +10,18 @@
 //!
 //! Supports client dataset-size imbalance (`imbalance` skews sizes
 //! geometrically) so FedNova's normalized averaging has real work to do.
+//!
+//! Shards are generated **lazily**: a [`Partition`] only stores the
+//! per-client sizes (cheap) up front, and materializes a client's
+//! [`ClientData`] on first touch. Each shard is a pure function of
+//! (dataset kind, client id, seed) — materialization order, caching, and
+//! eviction can never change values. Under per-round sampling the driver
+//! points the cache at the active participant set
+//! ([`Partition::retain`]), so at `--clients 1000, p=0.05` only ~50
+//! shards are resident; out-of-sample reads (per-round evaluation) hand
+//! back transient shards that drop after use.
+
+use std::sync::{Arc, RwLock};
 
 use anyhow::{ensure, Result};
 
@@ -99,7 +111,168 @@ pub fn imbalanced_sizes(n_clients: usize, base: usize, imbalance: f64) -> Vec<us
         .collect()
 }
 
-/// Build the full partition for an experiment.
+/// The experiment's client shards, generated lazily on first touch.
+///
+/// Residency follows the driver's sampling discipline: ids inside the
+/// `keep` set ([`Partition::retain`]; everyone by default) are cached on
+/// materialization, everything else is handed out as a transient
+/// `Arc<ClientData>` that frees itself when the caller drops it. Shards
+/// are pure functions of (kind, id, seed), so a regenerated shard is
+/// bit-identical to the evicted one.
+pub struct Partition {
+    kind: DatasetKind,
+    /// per-client train-set sizes (cheap; known without materializing)
+    sizes: Vec<usize>,
+    test_per_client: usize,
+    seed: u64,
+    keep: Vec<bool>,
+    slots: Vec<RwLock<Option<Arc<ClientData>>>>,
+}
+
+impl Partition {
+    pub fn new(
+        kind: DatasetKind,
+        n_clients: usize,
+        train_per_client: usize,
+        test_per_client: usize,
+        imbalance: f64,
+        seed: u64,
+    ) -> Result<Self> {
+        ensure!(n_clients > 0, "need at least one client");
+        Ok(Self {
+            kind,
+            sizes: imbalanced_sizes(n_clients, train_per_client, imbalance),
+            test_per_client,
+            seed,
+            keep: vec![true; n_clients],
+            slots: (0..n_clients).map(|_| RwLock::new(None)).collect(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The client's train-set size, without materializing the shard
+    /// (aggregation weights need only this).
+    pub fn train_len(&self, id: usize) -> usize {
+        self.sizes[id]
+    }
+
+    /// One client's shard, materializing on first touch. Cached only for
+    /// ids inside the current keep set; other reads are transient.
+    pub fn get(&self, id: usize) -> Arc<ClientData> {
+        if let Some(c) = self.slots[id].read().expect("partition lock").as_ref() {
+            return c.clone();
+        }
+        let data = Arc::new(self.generate(id));
+        if self.keep[id] {
+            let mut w = self.slots[id].write().expect("partition lock");
+            if let Some(c) = w.as_ref() {
+                // another worker materialized concurrently — same bits
+                return c.clone();
+            }
+            *w = Some(data.clone());
+        }
+        data
+    }
+
+    /// Test-split-only read for evaluation sweeps. Cached shards come
+    /// back whole; an out-of-cache id generates **only** its test split
+    /// (train vectors left empty — train and test draw from independent
+    /// sample-index ranges, so the test bits are identical to the full
+    /// shard's). Never caches: at `--clients 1000, p=0.05` the per-round
+    /// eval sweep skips ~2/3 of the generation work (train synthesis +
+    /// shuffle) for the ~950 out-of-sample clients.
+    pub fn get_for_eval(&self, id: usize) -> Arc<ClientData> {
+        if let Some(c) = self.slots[id].read().expect("partition lock").as_ref() {
+            return c.clone();
+        }
+        if self.keep[id] {
+            // resident set: materialize and cache the full shard
+            return self.get(id);
+        }
+        Arc::new(self.generate_sized(id, 0))
+    }
+
+    /// Point the cache at `keep` (ascending ids): cached shards outside
+    /// the set are dropped, and future out-of-set reads stay transient.
+    /// The driver calls this with the round's participant set whenever
+    /// per-round sampling is active, mirroring the [`ClientStateStore`]
+    /// residency discipline.
+    ///
+    /// [`ClientStateStore`]: crate::driver::ClientStateStore
+    pub fn retain(&mut self, keep: &[usize]) {
+        for (i, k) in self.keep.iter_mut().enumerate() {
+            *k = keep.binary_search(&i).is_ok();
+        }
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if !self.keep[i] {
+                *slot.get_mut().expect("partition lock") = None;
+            }
+        }
+    }
+
+    /// Ids whose shards are currently resident (tests/introspection).
+    pub fn materialized_ids(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.read().expect("partition lock").is_some())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn materialized_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.read().expect("partition lock").is_some())
+            .count()
+    }
+
+    /// Generate client `id`'s shard — a pure function of
+    /// (kind, id, seed); bit-identical no matter when or how often it
+    /// runs.
+    fn generate(&self, id: usize) -> ClientData {
+        self.generate_sized(id, self.sizes[id])
+    }
+
+    /// `generate` with an explicit train-set size: `0` skips train
+    /// synthesis entirely (test generation uses an independent index
+    /// range, so its bits do not depend on the train size).
+    fn generate_sized(&self, id: usize, n_train: usize) -> ClientData {
+        match self.kind {
+            DatasetKind::MixedCifar => {
+                // one family, 5 fixed 2-class shards assigned round-robin
+                let ds =
+                    SyntheticDataset::new(Family::Cifar10Like, CLASSES_PER_FAMILY, self.seed);
+                let shard = id % (CLASSES_PER_FAMILY / 2);
+                let classes = vec![2 * shard, 2 * shard + 1];
+                materialize(
+                    &ds, id, Family::Cifar10Like, &classes, 0, n_train,
+                    self.test_per_client, self.seed,
+                )
+            }
+            DatasetKind::MixedNonIid => {
+                let family = Family::ALL[id % Family::ALL.len()];
+                let ds = SyntheticDataset::new(family, CLASSES_PER_FAMILY, self.seed);
+                let classes: Vec<usize> = (0..CLASSES_PER_FAMILY).collect();
+                let offset = (id % Family::ALL.len()) * CLASSES_PER_FAMILY;
+                materialize(
+                    &ds, id, family, &classes, offset, n_train,
+                    self.test_per_client, self.seed,
+                )
+            }
+        }
+    }
+}
+
+/// Build the partition for an experiment (shards generate lazily on
+/// first touch — see [`Partition`]).
 pub fn build_partition(
     kind: DatasetKind,
     n_clients: usize,
@@ -107,38 +280,8 @@ pub fn build_partition(
     test_per_client: usize,
     imbalance: f64,
     seed: u64,
-) -> Result<Vec<ClientData>> {
-    ensure!(n_clients > 0, "need at least one client");
-    let sizes = imbalanced_sizes(n_clients, train_per_client, imbalance);
-    let mut clients = Vec::with_capacity(n_clients);
-
-    match kind {
-        DatasetKind::MixedCifar => {
-            // one family, 5 fixed 2-class shards assigned round-robin
-            let ds = SyntheticDataset::new(Family::Cifar10Like, CLASSES_PER_FAMILY, seed);
-            for id in 0..n_clients {
-                let shard = id % (CLASSES_PER_FAMILY / 2);
-                let classes = vec![2 * shard, 2 * shard + 1];
-                clients.push(materialize(
-                    &ds, id, Family::Cifar10Like, &classes, 0, sizes[id],
-                    test_per_client, seed,
-                ));
-            }
-        }
-        DatasetKind::MixedNonIid => {
-            for id in 0..n_clients {
-                let family = Family::ALL[id % Family::ALL.len()];
-                let ds = SyntheticDataset::new(family, CLASSES_PER_FAMILY, seed);
-                let classes: Vec<usize> = (0..CLASSES_PER_FAMILY).collect();
-                let offset = (id % Family::ALL.len()) * CLASSES_PER_FAMILY;
-                clients.push(materialize(
-                    &ds, id, family, &classes, offset, sizes[id],
-                    test_per_client, seed,
-                ));
-            }
-        }
-    }
-    Ok(clients)
+) -> Result<Partition> {
+    Partition::new(kind, n_clients, train_per_client, test_per_client, imbalance, seed)
 }
 
 fn materialize(
@@ -184,10 +327,11 @@ mod tests {
     #[test]
     fn mixed_cifar_shards_are_disjoint_pairs() {
         let parts = build_partition(DatasetKind::MixedCifar, 5, 64, 32, 1.0, 3).unwrap();
-        let mut all: Vec<usize> = parts.iter().flat_map(|c| c.classes.clone()).collect();
+        let mut all: Vec<usize> = (0..5).flat_map(|i| parts.get(i).classes.clone()).collect();
         all.sort_unstable();
         assert_eq!(all, (0..10).collect::<Vec<_>>());
-        for c in &parts {
+        for i in 0..5 {
+            let c = parts.get(i);
             assert_eq!(c.classes.len(), 2);
             for &y in &c.train_y {
                 assert!(c.classes.contains(&(y as usize)));
@@ -198,7 +342,8 @@ mod tests {
     #[test]
     fn mixed_noniid_label_spaces_disjoint() {
         let parts = build_partition(DatasetKind::MixedNonIid, 5, 64, 32, 1.0, 3).unwrap();
-        for (i, c) in parts.iter().enumerate() {
+        for i in 0..5 {
+            let c = parts.get(i);
             assert_eq!(c.family, Family::ALL[i]);
             for &y in &c.train_y {
                 let y = y as usize;
@@ -211,10 +356,14 @@ mod tests {
     fn sizes_and_determinism() {
         let a = build_partition(DatasetKind::MixedCifar, 3, 100, 40, 1.0, 9).unwrap();
         let b = build_partition(DatasetKind::MixedCifar, 3, 100, 40, 1.0, 9).unwrap();
-        assert_eq!(a[0].train_len(), 100);
-        assert_eq!(a[0].test_len(), 40);
-        assert_eq!(a[1].train_x, b[1].train_x);
-        assert_eq!(a[2].train_y, b[2].train_y);
+        assert_eq!(a.get(0).train_len(), 100);
+        assert_eq!(a.train_len(0), 100, "size known without materializing");
+        assert_eq!(a.get(0).test_len(), 40);
+        // materialization order must not matter: touch b back-to-front
+        let b2 = b.get(2).train_y.clone();
+        let b1 = b.get(1).train_x.clone();
+        assert_eq!(a.get(1).train_x, b1);
+        assert_eq!(a.get(2).train_y, b2);
     }
 
     #[test]
@@ -227,7 +376,88 @@ mod tests {
     #[test]
     fn train_test_disjoint() {
         let parts = build_partition(DatasetKind::MixedCifar, 1, 16, 16, 1.0, 5).unwrap();
+        let c = parts.get(0);
         // same class list, but distinct sample index ranges => images differ
-        assert_ne!(&parts[0].train_x[..PIXELS], &parts[0].test_x[..PIXELS]);
+        assert_ne!(&c.train_x[..PIXELS], &c.test_x[..PIXELS]);
+    }
+
+    #[test]
+    fn only_sampled_clients_shards_materialize_at_scale() {
+        // the ROADMAP scale point: 1000 clients, p = 0.05 — per-round
+        // residency must track the ~50-client sample, not the fleet.
+        // Construction is cheap because nothing materializes up front.
+        let mut part =
+            Partition::new(DatasetKind::MixedCifar, 1000, 64, 32, 1.0, 7).unwrap();
+        assert_eq!(part.len(), 1000);
+        assert_eq!(part.materialized_count(), 0, "construction generates nothing");
+        assert_eq!(part.train_len(999), 64, "sizes known without data");
+
+        let mut rng = Rng::new(7);
+        for round in 0..4 {
+            // a seeded 5% sample, like SampledSync would draw
+            let mut sample = rng.derive("test-sample", round).permutation(1000);
+            sample.truncate(50);
+            sample.sort_unstable();
+            part.retain(&sample);
+            for &i in &sample {
+                let shard = part.get(i);
+                assert_eq!(shard.id, i);
+                assert_eq!(shard.train_len(), 64);
+            }
+            assert_eq!(
+                part.materialized_ids(),
+                sample,
+                "round {round}: exactly the sampled shards are resident"
+            );
+        }
+
+        // an out-of-sample read (eval sweep) is transient: it must not
+        // grow the resident set
+        let resident_before = part.materialized_count();
+        let outside = (0..1000usize)
+            .find(|i| part.materialized_ids().binary_search(i).is_err())
+            .unwrap();
+        let transient = part.get(outside);
+        assert_eq!(transient.id, outside);
+        assert_eq!(part.materialized_count(), resident_before);
+    }
+
+    #[test]
+    fn get_for_eval_skips_train_synthesis_without_changing_test_bits() {
+        let mut part = Partition::new(DatasetKind::MixedCifar, 8, 64, 32, 1.0, 13).unwrap();
+        part.retain(&[2]);
+        // out-of-sample: test split identical to the full shard's, train
+        // skipped, nothing cached
+        let full = Partition::new(DatasetKind::MixedCifar, 8, 64, 32, 1.0, 13)
+            .unwrap()
+            .get(5);
+        let eval_view = part.get_for_eval(5);
+        assert_eq!(eval_view.test_x, full.test_x, "test bits independent of train");
+        assert_eq!(eval_view.test_y, full.test_y);
+        assert_eq!(eval_view.train_len(), 0, "train synthesis skipped");
+        assert!(part.materialized_ids().is_empty(), "eval reads never cache");
+        // resident: the full cached shard comes back
+        let resident = part.get(2);
+        assert_eq!(resident.train_len(), 64);
+        let resident_eval = part.get_for_eval(2);
+        assert_eq!(resident_eval.train_len(), 64, "cached shard returned whole");
+        assert_eq!(part.materialized_ids(), vec![2]);
+    }
+
+    #[test]
+    fn eviction_and_regeneration_are_value_stable() {
+        let mut part = Partition::new(DatasetKind::MixedNonIid, 6, 64, 32, 1.3, 11).unwrap();
+        let first = part.get(4);
+        let (x0, y0) = (first.train_x.clone(), first.train_y.clone());
+        drop(first);
+        part.retain(&[0, 1]); // evicts 4's cached shard (0/1 were never touched)
+        assert!(part.materialized_ids().is_empty());
+        let again = part.get(4); // transient regeneration
+        assert_eq!(again.train_x, x0, "regenerated shard is bit-identical");
+        assert_eq!(again.train_y, y0);
+        part.retain(&[4]);
+        let cached = part.get(4);
+        assert_eq!(cached.train_x, x0);
+        assert_eq!(part.materialized_ids(), vec![4]);
     }
 }

@@ -7,20 +7,24 @@
 //! results in* ([`Protocol::merge_round`]), while [`run`] owns the round
 //! loop, per-round participant selection ([`Scheduler`]), the engine
 //! fan-out, cost-meter merging, and round recording. Scheduling features
-//! (client sampling today; async/staleness and heterogeneous client
-//! speeds next, see ROADMAP) land here once instead of seven times.
+//! (client sampling, bounded-staleness async rounds with heterogeneous
+//! client speeds) land here once instead of seven times.
 //!
-//! ## Determinism contract (DESIGN.md §5–§6)
+//! ## Determinism contract (DESIGN.md §5–§7)
 //!
 //! The driver preserves the engine's bit-identity guarantee:
 //!
-//! * participants are chosen on the driver thread (pure function of seed
-//!   and round);
+//! * the round plan (participants, staleness, virtual clock) is computed
+//!   on the driver thread (pure function of seed and round);
 //! * `client_round` closures run on the worker pool and may touch only
 //!   their own [`ClientState`] plus read-only shared state;
 //! * per-client [`CostMeter`] deltas and protocol updates merge on the
-//!   driver thread in ascending client-id order;
-//! * `merge_round` / `end_round` run sequentially on the driver thread.
+//!   driver thread in ascending client-id order (scaled by the client's
+//!   [`ClientSpeeds`] rates under a heterogeneous speed model; unscaled —
+//!   bit-identical to the pre-speed-model driver — under uniform speeds);
+//! * `merge_round` / `end_round` run sequentially on the driver thread,
+//!   under the round's published staleness-decay multipliers (DESIGN.md
+//!   §7) when the async scheduler reports stale contributions.
 //!
 //! A protocol whose training exchange is inherently sequential (SL-basic,
 //! SplitFed: one shared server model updated per batch) sets
@@ -28,15 +32,79 @@
 //! `merge_round` — the loop shape is still owned here.
 
 mod scheduler;
+mod speed;
 mod store;
 
-pub use scheduler::{scheduler_for, SampledSync, Scheduler, SyncAll};
+pub use scheduler::{scheduler_for, AsyncBounded, RoundPlan, SampledSync, Scheduler, SyncAll};
+pub use speed::{ClientSpeeds, SpeedPreset, STRAGGLER_SLOWDOWN};
 pub use store::{scratch_dir, ClientState, ClientStateStore};
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
 use crate::metrics::{CostMeter, RoundStat};
 use crate::protocols::{Env, RunResult};
+
+// ---- staleness-decay context ----------------------------------------------
+//
+// Aggregation weights live inside the protocols (data-size weights,
+// FedNova taus), but *how much a stale contribution counts* is scheduler
+// policy. To keep the seven protocol files scheduler-agnostic (DESIGN.md
+// §6–§7), the driver publishes the round's per-participant decay
+// multipliers here before running the merge, and
+// `protocols::common::round_weights` folds them in. Merges run
+// sequentially on the driver thread, so a thread-local is deterministic:
+// the scope is set and cleared around `merge_round`/`end_round` of one
+// round, on one thread.
+
+thread_local! {
+    static STALE_DECAY: RefCell<Option<BTreeMap<usize, f32>>> = const { RefCell::new(None) };
+}
+
+/// Scoped publication of one round's staleness-decay multipliers; the
+/// context clears when the scope drops (including on early `?` returns).
+pub(crate) struct DecayScope {
+    _private: (),
+}
+
+impl DecayScope {
+    /// Publish `decay^staleness[j]` for each participant. The driver only
+    /// opens a scope when some contribution is stale, so fully-fresh
+    /// rounds (every synchronous scheduler, and async rounds where
+    /// everyone kept up) take the verbatim-weights path bit-for-bit.
+    pub(crate) fn publish(participants: &[usize], staleness: &[usize], decay: f32) -> Self {
+        let map: BTreeMap<usize, f32> = participants
+            .iter()
+            .zip(staleness)
+            .map(|(&i, &s)| (i, decay.powi(s as i32)))
+            .collect();
+        STALE_DECAY.with(|d| *d.borrow_mut() = Some(map));
+        DecayScope { _private: () }
+    }
+}
+
+impl Drop for DecayScope {
+    fn drop(&mut self) {
+        STALE_DECAY.with(|d| *d.borrow_mut() = None);
+    }
+}
+
+/// The current round's per-participant staleness-decay multipliers, in
+/// `participants` order — `None` unless the driver published a scope for
+/// this round (i.e. unless some contribution is stale). Participants the
+/// scheduler did not report (defensive) count as fresh (`1.0`).
+pub fn stale_decay_multipliers(participants: &[usize]) -> Option<Vec<f32>> {
+    STALE_DECAY.with(|d| {
+        d.borrow().as_ref().map(|m| {
+            participants
+                .iter()
+                .map(|i| m.get(i).copied().unwrap_or(1.0))
+                .collect()
+        })
+    })
+}
 
 /// Read-only context handed to one client's round work on a worker.
 pub struct ClientCtx<'e, 'a> {
@@ -160,7 +228,9 @@ pub trait Protocol: Sync {
 pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
     protocol.init_state(env)?;
 
-    let mut scheduler = scheduler_for(env.cfg);
+    // one construction: the scheduler's virtual clock and the fan-in cost
+    // scaling below share the same fleet
+    let (mut scheduler, speeds) = scheduler_for(env.cfg);
     // Spilling is active only under real subsampling: a full-participation
     // run keeps every client resident and never touches the disk.
     let mut store = if env.cfg.participation < 1.0 {
@@ -171,13 +241,25 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
     let pool = env.pool();
 
     for round in 0..env.cfg.rounds {
-        let participants = scheduler.participants(round);
+        let RoundPlan { participants, staleness, sim_time } = scheduler.plan(round);
         // evict last round's inactive clients first, then materialize the
         // round's sample: peak residency ~ |old ∪ new|, not total clients
         store.spill_except(&participants)?;
         store.ensure_loaded(&participants, |i| protocol.init_client(env, i))?;
+        if store.spilling() {
+            // dataset shards follow the same residency discipline as
+            // client state: cache only the round's sample, regenerate
+            // others on demand (they are pure functions of (seed, client))
+            env.clients.retain(&participants);
+        }
 
         protocol.begin_round(env, round, &participants)?;
+        // stale contributions are down-weighted in the round's merges
+        // (round_weights, DESIGN.md §7); fully-fresh rounds skip the scope
+        // so the verbatim-weights path stays bit-identical
+        let decay_scope = staleness.iter().any(|&s| s > 0).then(|| {
+            DecayScope::publish(&participants, &staleness, env.cfg.stale_decay as f32)
+        });
         let steps = protocol.steps(round);
         for step in 0..steps {
             let updates: Vec<(usize, P::Update)> = if protocol.fan_out() {
@@ -195,11 +277,22 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
                         p.client_round(&ctx, state)
                     })?
                 };
-                // fan-in on the driver thread, ascending client-id order
+                // fan-in on the driver thread, ascending client-id order;
+                // heterogeneous devices scale their deltas against the
+                // budgets (uniform speeds: plain merge, bit-identical)
                 let mut merged = Vec::with_capacity(raw.len());
                 for (j, u) in raw.into_iter().enumerate() {
-                    env.meter.merge(&u.meter);
-                    merged.push((participants[j], u.inner));
+                    let i = participants[j];
+                    if speeds.is_uniform() {
+                        env.meter.merge(&u.meter);
+                    } else {
+                        env.meter.merge_scaled(
+                            &u.meter,
+                            speeds.compute_scale(i),
+                            speeds.net_scale(i),
+                        );
+                    }
+                    merged.push((i, u.inner));
                 }
                 merged
             } else {
@@ -208,6 +301,7 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
             protocol.merge_round(env, &mut store, round, step, &participants, updates)?;
         }
         let report = protocol.end_round(env, &mut store, round, &participants)?;
+        drop(decay_scope);
 
         let eval_now = round % env.cfg.eval_every == 0 || round + 1 == env.cfg.rounds;
         let accuracy = if eval_now {
@@ -225,10 +319,64 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
             client_tflops: env.meter.client_tflops(),
             total_tflops: env.meter.total_tflops(),
             mask_density: report.mask_density,
+            sim_time,
+            max_staleness: staleness.iter().copied().max().unwrap_or(0),
             selected: report.selected,
             participants,
         });
     }
 
-    Ok(RunResult::from_env(env, &env.recorder, &env.meter))
+    Ok(RunResult::from_env(env, &env.recorder, &env.meter, scheduler.name()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::round_weights;
+
+    #[test]
+    fn no_decay_context_outside_a_scope() {
+        assert!(stale_decay_multipliers(&[0, 1, 2]).is_none());
+    }
+
+    #[test]
+    fn decay_scope_publishes_and_clears_on_drop() {
+        {
+            let _scope = DecayScope::publish(&[1, 4, 7], &[0, 2, 1], 0.5);
+            let m = stale_decay_multipliers(&[1, 4, 7]).expect("scope active");
+            assert_eq!(m, vec![1.0, 0.25, 0.5], "decay^staleness");
+            // unknown ids count as fresh
+            assert_eq!(stale_decay_multipliers(&[3]).unwrap(), vec![1.0]);
+        }
+        assert!(stale_decay_multipliers(&[1]).is_none(), "cleared on drop");
+    }
+
+    #[test]
+    fn stale_decay_weights_renormalize_to_one() {
+        let weights = vec![0.25f32, 0.25, 0.5];
+        let participants = [0usize, 2];
+        let _scope = DecayScope::publish(&participants, &[0, 2], 0.5);
+        let w = round_weights(&weights, &participants);
+        assert_eq!(w.len(), 2);
+        let sum: f32 = w.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "renormalized sum {sum}");
+        // the stale client (staleness 2 => x0.25) is down-weighted
+        // relative to its fresh-weights share: raw 0.25 vs 0.5*0.25=0.125
+        assert!((w[0] - 0.25 / 0.375).abs() < 1e-6);
+        assert!((w[1] - 0.125 / 0.375).abs() < 1e-6);
+        assert!(w[0] > w[1], "fresh client outweighs the bigger-but-stale one");
+    }
+
+    #[test]
+    fn fresh_rounds_leave_round_weights_verbatim() {
+        // no scope: full participation returns the weights bitwise
+        let weights = vec![0.1f32, 0.2, 0.3, 0.4];
+        assert_eq!(round_weights(&weights, &[0, 1, 2, 3]), weights);
+        // a scope with all-fresh multipliers still renormalizes over the
+        // sampled subset exactly like the sync path
+        let _scope = DecayScope::publish(&[1, 3], &[0, 0], 0.5);
+        let w = round_weights(&weights, &[1, 3]);
+        assert!((w[0] - 0.2 / 0.6).abs() < 1e-6);
+        assert!((w[1] - 0.4 / 0.6).abs() < 1e-6);
+    }
 }

@@ -1,42 +1,96 @@
-//! Round schedulers: which clients participate in each round.
+//! Round schedulers: which clients participate in each round, how stale
+//! their contributions are, and how much virtual wall-clock the round
+//! costs.
 //!
 //! The driver asks the scheduler once per round, on the driver thread, so
-//! participant selection is a pure function of (experiment seed, round) —
-//! never of thread count or worker timing. Two schedulers ship today:
+//! the plan is a pure function of (experiment seed, round) — never of
+//! thread count or worker timing. Three schedulers ship:
 //!
-//! * [`SyncAll`] — every client, every round (the pre-redesign behavior).
+//! * [`SyncAll`] — every client, every round (the pre-redesign behavior);
+//!   the round's virtual duration is the slowest client's.
 //! * [`SampledSync`] — per-round subsampling of `ceil(p * N)` clients
 //!   (FedLite-style client sampling, arXiv 2201.11865), seeded and
 //!   deterministic across thread counts and repeated invocations.
-//!
-//! The planned async/staleness mode (ROADMAP) is a third implementor: it
-//! returns the clients whose simulated completion time falls inside the
-//! round boundary, without touching protocol code.
+//! * [`AsyncBounded`] — bounded-staleness async rounds over a per-client
+//!   virtual clock driven by the seeded [`ClientSpeeds`] model
+//!   (`--staleness-bound s` / `--client-speeds`): each client advances at
+//!   its own rate, the server merges whichever updates have arrived, and
+//!   no contribution is ever staler than `s` rounds (clients at the bound
+//!   are waited for). `s = 0` with uniform speeds reproduces [`SyncAll`]
+//!   bit-for-bit (pinned by `tests/engine_determinism.rs`).
 
 use crate::config::ExperimentConfig;
 use crate::data::Rng;
+use crate::driver::speed::ClientSpeeds;
+
+/// One round's schedule: who merges, how stale each contribution is, and
+/// the virtual wall-clock at which the merge happens.
+pub struct RoundPlan {
+    /// Ascending, unique client ids merging this round.
+    pub participants: Vec<usize>,
+    /// Per-participant staleness in rounds (parallel to `participants`):
+    /// how many server rounds elapsed while the contribution was in
+    /// flight. `0` = fresh (the synchronous case). Never exceeds the
+    /// scheduler's staleness bound.
+    pub staleness: Vec<usize>,
+    /// Simulated wall-clock at the round's merge, in baseline-round units
+    /// (monotone non-decreasing across rounds).
+    pub sim_time: f64,
+}
 
 /// Per-round client-participation policy.
 ///
-/// `participants` must return ascending, unique client ids (the driver
-/// fans out and merges in id order), and must be deterministic given the
-/// construction parameters and `round`.
+/// `plan` must return ascending, unique client ids (the driver fans out
+/// and merges in id order), and must be deterministic given the
+/// construction parameters and the *sequence* of `plan` calls: a
+/// scheduler may carry simulation state across rounds ([`AsyncBounded`]
+/// advances virtual clocks and staleness bookkeeping on every call), so
+/// the contract is one `plan` per round, in round order — the driver's
+/// usage. Replaying the same call sequence replays the same plans
+/// bit-for-bit; the stateless schedulers are additionally insensitive to
+/// repeated queries.
 pub trait Scheduler: Send {
     fn name(&self) -> &'static str;
-    /// Ascending client ids participating in `round`.
-    fn participants(&mut self, round: usize) -> Vec<usize>;
+
+    /// The round's participants, staleness, and virtual merge time.
+    /// Advances the scheduler to the next round — call once per round.
+    fn plan(&mut self, round: usize) -> RoundPlan;
+
+    /// Ascending client ids participating in `round`. **Consumes a
+    /// `plan` call** — a shorthand for tests/tools, not an idempotent
+    /// peek: mixing it with `plan` for the same round double-advances a
+    /// stateful scheduler's clock.
+    fn participants(&mut self, round: usize) -> Vec<usize> {
+        self.plan(round).participants
+    }
+
     /// Clients sampled per round (for reporting).
     fn sampled_per_round(&self) -> usize;
 }
 
-/// Every client, every round — today's synchronous behavior.
+/// Every client, every round — today's synchronous behavior. Each round's
+/// virtual duration is the slowest participant's round duration (`1.0`
+/// under uniform speeds, so the clock reads in rounds).
 pub struct SyncAll {
     n: usize,
+    round_time: f64,
+    clock: f64,
 }
 
 impl SyncAll {
     pub fn new(n_clients: usize) -> Self {
-        Self { n: n_clients }
+        Self { n: n_clients, round_time: 1.0, clock: 0.0 }
+    }
+
+    /// Synchronous rounds timed under a heterogeneous speed model: the
+    /// barrier waits for the slowest device every round.
+    pub fn with_speeds(n_clients: usize, speeds: &ClientSpeeds) -> Self {
+        let all: Vec<usize> = (0..n_clients).collect();
+        Self {
+            n: n_clients,
+            round_time: speeds.slowest_duration(&all).max(f64::MIN_POSITIVE),
+            clock: 0.0,
+        }
     }
 }
 
@@ -45,8 +99,13 @@ impl Scheduler for SyncAll {
         "sync-all"
     }
 
-    fn participants(&mut self, _round: usize) -> Vec<usize> {
-        (0..self.n).collect()
+    fn plan(&mut self, _round: usize) -> RoundPlan {
+        self.clock += self.round_time;
+        RoundPlan {
+            participants: (0..self.n).collect(),
+            staleness: vec![0; self.n],
+            sim_time: self.clock,
+        }
     }
 
     fn sampled_per_round(&self) -> usize {
@@ -62,30 +121,40 @@ impl Scheduler for SyncAll {
 /// values and across repeated invocations with the same seed, and
 /// independent of every other random decision in the run (data synthesis,
 /// shuffling) — adding sampling does not perturb the data a client sees.
+/// The round's virtual duration is the slowest *sampled* client's.
 pub struct SampledSync {
     n: usize,
     per_round: usize,
     rng: Rng,
+    speeds: ClientSpeeds,
+    clock: f64,
 }
 
 impl SampledSync {
     pub fn new(n_clients: usize, participation: f64, seed: u64) -> Self {
+        let uniform =
+            ClientSpeeds::new(n_clients, crate::driver::SpeedPreset::Uniform, 0.0, seed);
+        Self::with_speeds(n_clients, participation, seed, &uniform)
+    }
+
+    pub fn with_speeds(
+        n_clients: usize,
+        participation: f64,
+        seed: u64,
+        speeds: &ClientSpeeds,
+    ) -> Self {
         let per_round =
             ((participation * n_clients as f64).ceil() as usize).clamp(1, n_clients.max(1));
         Self {
             n: n_clients,
             per_round,
             rng: Rng::new(seed),
+            speeds: speeds.clone(),
+            clock: 0.0,
         }
     }
-}
 
-impl Scheduler for SampledSync {
-    fn name(&self) -> &'static str {
-        "sampled-sync"
-    }
-
-    fn participants(&mut self, round: usize) -> Vec<usize> {
+    fn sample(&self, round: usize) -> Vec<usize> {
         if self.per_round == self.n {
             // p = 1.0 degenerates to SyncAll exactly (bit-identity contract)
             return (0..self.n).collect();
@@ -96,25 +165,194 @@ impl Scheduler for SampledSync {
         ids.sort_unstable();
         ids
     }
+}
+
+impl Scheduler for SampledSync {
+    fn name(&self) -> &'static str {
+        "sampled-sync"
+    }
+
+    fn plan(&mut self, round: usize) -> RoundPlan {
+        let participants = self.sample(round);
+        self.clock += self.speeds.slowest_duration(&participants).max(f64::MIN_POSITIVE);
+        RoundPlan {
+            staleness: vec![0; participants.len()],
+            sim_time: self.clock,
+            participants,
+        }
+    }
 
     fn sampled_per_round(&self) -> usize {
         self.per_round
     }
 }
 
-/// Scheduler configured by the experiment (`participation` key /
-/// `--participation` flag; 1.0 = full participation).
-pub fn scheduler_for(cfg: &ExperimentConfig) -> Box<dyn Scheduler> {
-    if cfg.participation < 1.0 {
-        Box::new(SampledSync::new(cfg.clients, cfg.participation, cfg.seed))
-    } else {
-        Box::new(SyncAll::new(cfg.clients))
+/// Bounded-staleness asynchronous rounds over per-client virtual clocks.
+///
+/// Every client computes continuously at its own speed: client `i`'s
+/// current work unit completes at virtual time `ready[i]`. A server round
+/// `r` merges at time `T_r`:
+///
+/// 1. **Required set** — clients whose contribution would exceed the
+///    staleness bound `s` if they sat this round out (`r - last_sync >
+///    s`). The merge waits for the slowest of them (`T_r = max ready`),
+///    which is what makes the bound *hard*: no merged update is ever
+///    staler than `s` rounds.
+/// 2. **Empty-merge fallback** — when no one is required (large `s`,
+///    early rounds), the server waits for the fastest in-flight client
+///    instead, so the merge set is never empty.
+/// 3. **Arrivals** — every client whose work finished by `T_r` is
+///    eligible; the merge set takes the required clients plus the
+///    earliest finishers (id tie-break) up to `max(ceil(p*N), |required|)`
+///    — `--participation` caps how much the server absorbs per round,
+///    but the staleness bound always wins.
+///
+/// Merged clients restart their next unit at `T_r`; capped-out arrivals
+/// keep their finished update pending (its staleness grows until the
+/// bound forces it in). The server clock is clamped monotone.
+///
+/// A participant's staleness is the number of server rounds its work
+/// straddled: `r - 1 - last_sync` (0 when it also merged in round
+/// `r - 1`). With `s = 0` every client is required every round, the plan
+/// degenerates to [`SyncAll`] (same participants, zero staleness), and
+/// under uniform speeds the virtual clock matches too — the bit-parity
+/// contract.
+pub struct AsyncBounded {
+    n: usize,
+    bound: usize,
+    cap: usize,
+    durations: Vec<f64>,
+    /// virtual completion time of each client's in-flight work unit
+    ready: Vec<f64>,
+    /// last round each client merged (-1 = never)
+    last_sync: Vec<i64>,
+    clock: f64,
+}
+
+impl AsyncBounded {
+    pub fn new(
+        n_clients: usize,
+        staleness_bound: usize,
+        participation: f64,
+        speeds: &ClientSpeeds,
+    ) -> Self {
+        let cap =
+            ((participation * n_clients as f64).ceil() as usize).clamp(1, n_clients.max(1));
+        let durations: Vec<f64> = (0..n_clients)
+            .map(|i| speeds.round_duration(i).max(f64::MIN_POSITIVE))
+            .collect();
+        Self {
+            n: n_clients,
+            bound: staleness_bound,
+            cap,
+            ready: durations.clone(),
+            durations,
+            last_sync: vec![-1; n_clients],
+            clock: 0.0,
+        }
     }
+
+    pub fn staleness_bound(&self) -> usize {
+        self.bound
+    }
+}
+
+impl Scheduler for AsyncBounded {
+    fn name(&self) -> &'static str {
+        "async-bounded"
+    }
+
+    fn plan(&mut self, round: usize) -> RoundPlan {
+        let r = round as i64;
+        let required: Vec<usize> = (0..self.n)
+            .filter(|&i| r - self.last_sync[i] > self.bound as i64)
+            .collect();
+        let mut is_required = vec![false; self.n];
+        for &i in &required {
+            is_required[i] = true;
+        }
+
+        // merge trigger: wait for the slowest required client; with no one
+        // required, wait for the fastest in-flight client so the merge set
+        // is never empty
+        let trigger = if required.is_empty() {
+            self.ready.iter().copied().fold(f64::INFINITY, f64::min)
+        } else {
+            required
+                .iter()
+                .map(|&i| self.ready[i])
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        self.clock = self.clock.max(trigger);
+
+        // arrivals in completion order (id tie-break), required first
+        let mut arrived: Vec<usize> =
+            (0..self.n).filter(|&i| self.ready[i] <= self.clock).collect();
+        arrived.sort_by(|&a, &b| {
+            self.ready[a]
+                .partial_cmp(&self.ready[b])
+                .expect("virtual times are finite")
+                .then(a.cmp(&b))
+        });
+        let limit = self.cap.max(required.len());
+        let mut merge = required;
+        for &i in &arrived {
+            if merge.len() >= limit {
+                break;
+            }
+            if !is_required[i] {
+                merge.push(i);
+            }
+        }
+        merge.sort_unstable();
+
+        let staleness: Vec<usize> = merge
+            .iter()
+            .map(|&i| (r - 1 - self.last_sync[i]).max(0) as usize)
+            .collect();
+        for &i in &merge {
+            self.last_sync[i] = r;
+            self.ready[i] = self.clock + self.durations[i];
+        }
+        RoundPlan { participants: merge, staleness, sim_time: self.clock }
+    }
+
+    fn sampled_per_round(&self) -> usize {
+        self.cap
+    }
+}
+
+/// Scheduler configured by the experiment: `staleness_bound` set picks
+/// [`AsyncBounded`]; otherwise `participation < 1.0` picks
+/// [`SampledSync`]; the default is [`SyncAll`]. Returns the experiment's
+/// [`ClientSpeeds`] alongside — the scheduler's virtual clock and the
+/// driver's per-client cost scaling must come from the *same* fleet, so
+/// it is built exactly once here.
+pub fn scheduler_for(cfg: &ExperimentConfig) -> (Box<dyn Scheduler>, ClientSpeeds) {
+    let speeds = ClientSpeeds::from_cfg(cfg);
+    let scheduler: Box<dyn Scheduler> = if let Some(bound) = cfg.staleness_bound {
+        Box::new(AsyncBounded::new(cfg.clients, bound, cfg.participation, &speeds))
+    } else if cfg.participation < 1.0 {
+        Box::new(SampledSync::with_speeds(
+            cfg.clients,
+            cfg.participation,
+            cfg.seed,
+            &speeds,
+        ))
+    } else {
+        Box::new(SyncAll::with_speeds(cfg.clients, &speeds))
+    };
+    (scheduler, speeds)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::driver::speed::SpeedPreset;
+
+    fn speeds(n: usize, preset: SpeedPreset, frac: f64, seed: u64) -> ClientSpeeds {
+        ClientSpeeds::new(n, preset, frac, seed)
+    }
 
     #[test]
     fn sync_all_selects_everyone() {
@@ -122,6 +360,26 @@ mod tests {
         assert_eq!(s.participants(0), vec![0, 1, 2, 3]);
         assert_eq!(s.participants(17), vec![0, 1, 2, 3]);
         assert_eq!(s.sampled_per_round(), 4);
+    }
+
+    #[test]
+    fn sync_all_clock_counts_rounds_under_uniform_speeds() {
+        let mut s = SyncAll::with_speeds(3, &speeds(3, SpeedPreset::Uniform, 0.0, 0));
+        for round in 0..5 {
+            let plan = s.plan(round);
+            assert_eq!(plan.sim_time, (round + 1) as f64);
+            assert!(plan.staleness.iter().all(|&st| st == 0));
+        }
+    }
+
+    #[test]
+    fn sync_all_clock_waits_for_the_slowest_device() {
+        let sp = speeds(40, SpeedPreset::Stragglers, 0.3, 5);
+        let slowest = sp.slowest_duration(&(0..40).collect::<Vec<_>>());
+        assert!(slowest > 1.0, "seed must produce at least one straggler");
+        let mut s = SyncAll::with_speeds(40, &sp);
+        assert_eq!(s.plan(0).sim_time, slowest);
+        assert_eq!(s.plan(1).sim_time, 2.0 * slowest);
     }
 
     #[test]
@@ -181,10 +439,165 @@ mod tests {
     }
 
     #[test]
-    fn scheduler_for_picks_by_participation() {
+    fn scheduler_for_picks_by_config() {
         let mut cfg = ExperimentConfig::default();
-        assert_eq!(scheduler_for(&cfg).name(), "sync-all");
+        assert_eq!(scheduler_for(&cfg).0.name(), "sync-all");
         cfg.participation = 0.5;
-        assert_eq!(scheduler_for(&cfg).name(), "sampled-sync");
+        assert_eq!(scheduler_for(&cfg).0.name(), "sampled-sync");
+        cfg.staleness_bound = Some(2);
+        assert_eq!(scheduler_for(&cfg).0.name(), "async-bounded");
+        // the returned speeds are the fleet the scheduler was built over
+        let (_, speeds) = scheduler_for(&cfg);
+        assert_eq!(speeds.len(), cfg.clients);
+    }
+
+    // ---- AsyncBounded -----------------------------------------------------
+
+    #[test]
+    fn async_s0_uniform_degenerates_to_sync_all() {
+        let sp = speeds(7, SpeedPreset::Uniform, 0.0, 3);
+        let mut sync = SyncAll::with_speeds(7, &sp);
+        let mut async_s = AsyncBounded::new(7, 0, 1.0, &sp);
+        for round in 0..24 {
+            let a = sync.plan(round);
+            let b = async_s.plan(round);
+            assert_eq!(a.participants, b.participants, "round {round}");
+            assert_eq!(b.staleness, vec![0; 7], "round {round}");
+            assert_eq!(a.sim_time, b.sim_time, "round {round}");
+        }
+    }
+
+    #[test]
+    fn no_merged_update_is_staler_than_the_bound() {
+        for (bound, p, preset, frac) in [
+            (0usize, 1.0, SpeedPreset::Stragglers, 0.3),
+            (1, 0.5, SpeedPreset::Stragglers, 0.25),
+            (2, 0.25, SpeedPreset::Lognormal { sigma: 0.8 }, 0.0),
+            (4, 0.1, SpeedPreset::Stragglers, 0.5),
+            (3, 1.0, SpeedPreset::Lognormal { sigma: 1.5 }, 0.0),
+        ] {
+            let sp = speeds(24, preset, frac, 13);
+            let mut s = AsyncBounded::new(24, bound, p, &sp);
+            for round in 0..80 {
+                let plan = s.plan(round);
+                for (&i, &st) in plan.participants.iter().zip(&plan.staleness) {
+                    assert!(
+                        st <= bound,
+                        "bound {bound} p {p} round {round}: client {i} stale {st}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_client_merges_at_least_every_bound_plus_one_rounds() {
+        let sp = speeds(12, SpeedPreset::Stragglers, 0.4, 21);
+        let bound = 2usize;
+        let mut s = AsyncBounded::new(12, bound, 0.25, &sp);
+        let mut last = vec![-1i64; 12];
+        for round in 0..60 {
+            for i in s.plan(round).participants {
+                last[i] = round as i64;
+            }
+            for (i, &l) in last.iter().enumerate() {
+                assert!(
+                    round as i64 - l <= bound as i64,
+                    "client {i} unmerged for more than {bound} rounds at round {round}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_sets_are_sorted_unique_nonempty_and_clock_monotone() {
+        let sp = speeds(16, SpeedPreset::Stragglers, 0.9, 2);
+        let mut s = AsyncBounded::new(16, 5, 0.05, &sp);
+        let mut prev_t = 0.0f64;
+        for round in 0..100 {
+            let plan = s.plan(round);
+            assert!(!plan.participants.is_empty(), "round {round}: empty merge set");
+            assert!(
+                plan.participants.windows(2).all(|w| w[0] < w[1]),
+                "round {round}: not ascending-unique"
+            );
+            assert_eq!(plan.participants.len(), plan.staleness.len());
+            assert!(plan.sim_time >= prev_t, "round {round}: clock went backwards");
+            prev_t = plan.sim_time;
+        }
+    }
+
+    #[test]
+    fn async_plans_are_repeat_construction_deterministic() {
+        let collect = |seed: u64| -> Vec<(Vec<usize>, Vec<usize>, u64)> {
+            let sp = speeds(20, SpeedPreset::Lognormal { sigma: 0.7 }, 0.0, seed);
+            let mut s = AsyncBounded::new(20, 3, 0.5, &sp);
+            (0..40)
+                .map(|r| {
+                    let p = s.plan(r);
+                    (p.participants, p.staleness, p.sim_time.to_bits())
+                })
+                .collect()
+        };
+        assert_eq!(collect(5), collect(5));
+        assert_ne!(collect(5), collect(6), "seed must matter");
+    }
+
+    #[test]
+    fn fast_clients_merge_more_often_than_stragglers() {
+        let sp = speeds(50, SpeedPreset::Stragglers, 0.3, 17);
+        let mut s = AsyncBounded::new(50, 4, 0.5, &sp);
+        let mut merges = vec![0usize; 50];
+        for round in 0..200 {
+            for i in s.plan(round).participants {
+                merges[i] += 1;
+            }
+        }
+        let (mut fast_total, mut fast_n, mut slow_total, mut slow_n) = (0usize, 0usize, 0usize, 0usize);
+        for i in 0..50 {
+            if sp.round_duration(i) > 1.0 {
+                slow_total += merges[i];
+                slow_n += 1;
+            } else {
+                fast_total += merges[i];
+                fast_n += 1;
+            }
+        }
+        assert!(slow_n > 0 && fast_n > 0, "seed must mix fast and slow");
+        let fast_rate = fast_total as f64 / fast_n as f64;
+        let slow_rate = slow_total as f64 / slow_n as f64;
+        assert!(
+            fast_rate > slow_rate,
+            "fast {fast_rate:.1} merges/client should exceed slow {slow_rate:.1}"
+        );
+        // ... but the bound still guarantees stragglers a floor
+        assert!(
+            merges.iter().all(|&m| m >= 200 / 5),
+            "bound 4 => every client merges at least every 5th round"
+        );
+    }
+
+    #[test]
+    fn participation_caps_the_merge_set_unless_the_bound_overrides() {
+        let sp = speeds(30, SpeedPreset::Lognormal { sigma: 0.6 }, 0.0, 9);
+        let mut s = AsyncBounded::new(30, 6, 0.2, &sp); // cap = ceil(0.2*30) = 6
+        let mut last = vec![-1i64; 30];
+        for round in 0..60 {
+            // recompute the required set externally: clients whose staleness
+            // would exceed the bound if they sat this round out
+            let required = (0..30).filter(|&i| round as i64 - last[i] > 6).count();
+            let plan = s.plan(round);
+            assert!(
+                plan.participants.len() <= 6.max(required),
+                "round {round}: |merge| {} > max(cap 6, required {required})",
+                plan.participants.len()
+            );
+            for &i in &plan.participants {
+                last[i] = round as i64;
+            }
+        }
+        // s=0 forces everyone regardless of the cap
+        let mut s0 = AsyncBounded::new(30, 0, 0.2, &sp);
+        assert_eq!(s0.plan(0).participants.len(), 30);
     }
 }

@@ -1,0 +1,282 @@
+//! Per-client compute/network speed model for the async scheduler and the
+//! heterogeneous-device cost accounting (AdaptSFL-style, arXiv 2403.13101).
+//!
+//! Every client gets two rate multipliers — compute and network, `1.0` =
+//! the baseline device — drawn from a seeded preset. Rates are derived
+//! per client id from the experiment seed (`seed -> "client-speed" -> i`),
+//! so they are:
+//!
+//! * **reproducible across runs** — same seed, same fleet;
+//! * **stable across client counts** — client `i`'s rates are the same
+//!   whether the run has 10 clients or 1000 (growing the fleet appends
+//!   devices, it does not reshuffle the existing ones);
+//! * **independent of every other random decision** — enabling a speed
+//!   model never perturbs data synthesis, shuffling, or sampling.
+//!
+//! A client's simulated round duration splits one baseline time unit
+//! between compute and network ([`COMPUTE_SHARE`]/[`NET_SHARE`]), so the
+//! uniform preset yields exactly `1.0` per round and the virtual
+//! wall-clock of a synchronous run reads in "rounds of the baseline
+//! device".
+
+use anyhow::{ensure, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::Rng;
+
+/// Fraction of a baseline round spent computing.
+pub const COMPUTE_SHARE: f64 = 0.8;
+/// Fraction of a baseline round spent on the network.
+pub const NET_SHARE: f64 = 0.2;
+/// Rate multiplier of a straggler device under the `stragglers` preset.
+pub const STRAGGLER_SLOWDOWN: f64 = 10.0;
+/// Default lognormal sigma when `lognormal` is given without a value.
+pub const DEFAULT_LOGNORMAL_SIGMA: f64 = 0.5;
+
+/// How per-client rates are drawn (`--client-speeds` / `client_speeds`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum SpeedPreset {
+    /// Every client is the baseline device (rates 1.0) — the default, and
+    /// one half of the `AsyncBounded(s=0) == SyncAll` bit-parity contract.
+    #[default]
+    Uniform,
+    /// Rates `exp(sigma * z)`, `z ~ N(0, 1)`, drawn independently for
+    /// compute and network per client.
+    Lognormal { sigma: f64 },
+    /// A seeded fraction (`--straggler-frac`) of clients runs
+    /// [`STRAGGLER_SLOWDOWN`]x slower on both axes; the rest are baseline.
+    Stragglers,
+}
+
+impl SpeedPreset {
+    /// CLI/config id (`uniform`, `lognormal:0.5`, `stragglers`).
+    pub fn id(&self) -> String {
+        match self {
+            SpeedPreset::Uniform => "uniform".to_string(),
+            SpeedPreset::Lognormal { sigma } => format!("lognormal:{sigma}"),
+            SpeedPreset::Stragglers => "stragglers".to_string(),
+        }
+    }
+}
+
+impl std::str::FromStr for SpeedPreset {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        if s == "uniform" {
+            return Ok(SpeedPreset::Uniform);
+        }
+        if s == "stragglers" {
+            return Ok(SpeedPreset::Stragglers);
+        }
+        if s == "lognormal" {
+            return Ok(SpeedPreset::Lognormal { sigma: DEFAULT_LOGNORMAL_SIGMA });
+        }
+        if let Some(v) = s.strip_prefix("lognormal:") {
+            let sigma: f64 = v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("lognormal sigma `{v}`: {e}"))?;
+            ensure!(
+                sigma > 0.0 && sigma <= 3.0,
+                "lognormal sigma must be in (0, 3], got {sigma}"
+            );
+            return Ok(SpeedPreset::Lognormal { sigma });
+        }
+        anyhow::bail!(
+            "unknown speed model `{s}` (expected uniform | lognormal[:sigma] | stragglers)"
+        )
+    }
+}
+
+/// Materialized per-client rate multipliers for one run.
+#[derive(Clone, Debug)]
+pub struct ClientSpeeds {
+    compute: Vec<f64>,
+    net: Vec<f64>,
+    uniform: bool,
+}
+
+impl ClientSpeeds {
+    pub fn new(n_clients: usize, preset: SpeedPreset, straggler_frac: f64, seed: u64) -> Self {
+        let root = Rng::new(seed);
+        let mut compute = Vec::with_capacity(n_clients);
+        let mut net = Vec::with_capacity(n_clients);
+        for i in 0..n_clients {
+            // one independent stream per client id: rates are a pure
+            // function of (seed, i), never of n_clients
+            let mut r = root.derive("client-speed", i as u64);
+            let (c, nw) = match preset {
+                SpeedPreset::Uniform => (1.0, 1.0),
+                SpeedPreset::Lognormal { sigma } => {
+                    let c = (sigma * r.normal()).exp();
+                    let nw = (sigma * r.normal()).exp();
+                    (c, nw)
+                }
+                SpeedPreset::Stragglers => {
+                    if r.next_f64() < straggler_frac {
+                        (1.0 / STRAGGLER_SLOWDOWN, 1.0 / STRAGGLER_SLOWDOWN)
+                    } else {
+                        (1.0, 1.0)
+                    }
+                }
+            };
+            compute.push(c);
+            net.push(nw);
+        }
+        Self {
+            compute,
+            net,
+            uniform: preset == SpeedPreset::Uniform,
+        }
+    }
+
+    /// Speeds for the experiment's fleet (`client_speeds`,
+    /// `straggler_frac`, `seed` config keys).
+    pub fn from_cfg(cfg: &ExperimentConfig) -> Self {
+        Self::new(cfg.clients, cfg.client_speeds, cfg.straggler_frac, cfg.seed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.compute.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.compute.is_empty()
+    }
+
+    /// All clients are the baseline device — the bit-parity fast path:
+    /// the driver then merges cost deltas unscaled, exactly as before the
+    /// speed model existed.
+    pub fn is_uniform(&self) -> bool {
+        self.uniform
+    }
+
+    /// Virtual duration of one round of client work, in baseline-round
+    /// units (`1.0` for the baseline device).
+    pub fn round_duration(&self, client: usize) -> f64 {
+        COMPUTE_SHARE / self.compute[client] + NET_SHARE / self.net[client]
+    }
+
+    /// Longest round duration over a participant set (what a synchronous
+    /// barrier waits for). Empty sets cost nothing.
+    pub fn slowest_duration(&self, clients: &[usize]) -> f64 {
+        clients
+            .iter()
+            .map(|&i| self.round_duration(i))
+            .fold(0.0, f64::max)
+    }
+
+    /// Compute-budget multiplier: FLOPs on a slow device cost
+    /// proportionally more device-time against the compute budget.
+    pub fn compute_scale(&self, client: usize) -> f64 {
+        1.0 / self.compute[client]
+    }
+
+    /// Bandwidth-budget multiplier: bytes over a slow link cost
+    /// proportionally more link-time against the bandwidth budget.
+    pub fn net_scale(&self, client: usize) -> f64 {
+        1.0 / self.net[client]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_all_baseline_and_unit_duration() {
+        let s = ClientSpeeds::new(6, SpeedPreset::Uniform, 0.3, 9);
+        assert!(s.is_uniform());
+        for i in 0..6 {
+            assert_eq!(s.round_duration(i), 1.0, "COMPUTE_SHARE + NET_SHARE = 1");
+            assert_eq!(s.compute_scale(i), 1.0);
+            assert_eq!(s.net_scale(i), 1.0);
+        }
+        assert_eq!(s.slowest_duration(&[0, 3, 5]), 1.0);
+        assert_eq!(s.slowest_duration(&[]), 0.0);
+    }
+
+    #[test]
+    fn speed_model_is_reproducible_across_runs() {
+        for preset in [
+            SpeedPreset::Uniform,
+            SpeedPreset::Lognormal { sigma: 0.5 },
+            SpeedPreset::Stragglers,
+        ] {
+            let a = ClientSpeeds::new(32, preset, 0.25, 7);
+            let b = ClientSpeeds::new(32, preset, 0.25, 7);
+            assert_eq!(a.compute, b.compute, "{preset:?}");
+            assert_eq!(a.net, b.net, "{preset:?}");
+        }
+    }
+
+    #[test]
+    fn speed_model_is_stable_across_client_counts() {
+        // growing the fleet appends devices; existing ones keep their rates
+        for preset in [SpeedPreset::Lognormal { sigma: 0.8 }, SpeedPreset::Stragglers] {
+            let small = ClientSpeeds::new(8, preset, 0.3, 11);
+            let large = ClientSpeeds::new(64, preset, 0.3, 11);
+            assert_eq!(small.compute[..], large.compute[..8], "{preset:?}");
+            assert_eq!(small.net[..], large.net[..8], "{preset:?}");
+        }
+    }
+
+    #[test]
+    fn seeds_matter_for_random_presets() {
+        let a = ClientSpeeds::new(64, SpeedPreset::Lognormal { sigma: 0.5 }, 0.0, 1);
+        let b = ClientSpeeds::new(64, SpeedPreset::Lognormal { sigma: 0.5 }, 0.0, 2);
+        assert_ne!(a.compute, b.compute);
+    }
+
+    #[test]
+    fn stragglers_are_slowed_by_the_fixed_factor() {
+        let s = ClientSpeeds::new(400, SpeedPreset::Stragglers, 0.25, 3);
+        let mut slow = 0usize;
+        for i in 0..400 {
+            let d = s.round_duration(i);
+            if d > 1.0 {
+                assert!((d - STRAGGLER_SLOWDOWN).abs() < 1e-9, "client {i}: {d}");
+                assert!((s.compute_scale(i) - STRAGGLER_SLOWDOWN).abs() < 1e-9);
+                slow += 1;
+            } else {
+                assert_eq!(d, 1.0);
+            }
+        }
+        // seeded Bernoulli(0.25) over 400 clients: loose 3-sigma band
+        assert!((60..=140).contains(&slow), "straggler count {slow}");
+    }
+
+    #[test]
+    fn lognormal_rates_are_positive_and_spread() {
+        let s = ClientSpeeds::new(128, SpeedPreset::Lognormal { sigma: 0.5 }, 0.0, 5);
+        assert!(!s.is_uniform());
+        let mut distinct = std::collections::BTreeSet::new();
+        for i in 0..128 {
+            assert!(s.compute[i] > 0.0 && s.net[i] > 0.0);
+            assert!(s.round_duration(i) > 0.0);
+            distinct.insert(s.compute[i].to_bits());
+        }
+        assert!(distinct.len() > 100, "rates should be spread, not collapsed");
+    }
+
+    #[test]
+    fn preset_parsing_roundtrip() {
+        assert_eq!("uniform".parse::<SpeedPreset>().unwrap(), SpeedPreset::Uniform);
+        assert_eq!(
+            "stragglers".parse::<SpeedPreset>().unwrap(),
+            SpeedPreset::Stragglers
+        );
+        assert_eq!(
+            "lognormal".parse::<SpeedPreset>().unwrap(),
+            SpeedPreset::Lognormal { sigma: DEFAULT_LOGNORMAL_SIGMA }
+        );
+        assert_eq!(
+            "lognormal:1.2".parse::<SpeedPreset>().unwrap(),
+            SpeedPreset::Lognormal { sigma: 1.2 }
+        );
+        assert!("lognormal:-1".parse::<SpeedPreset>().is_err());
+        assert!("warp".parse::<SpeedPreset>().is_err());
+        assert_eq!(SpeedPreset::default(), SpeedPreset::Uniform);
+        assert_eq!(SpeedPreset::Stragglers.id(), "stragglers");
+    }
+}

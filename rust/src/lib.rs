@@ -18,10 +18,12 @@
 //! Every protocol implements the [`driver`] module's client-step /
 //! server-merge `Protocol` trait; one generic `RoundDriver` owns the
 //! round loop, per-round client sampling (`--participation p`, pooled
-//! client state with spill-to-disk), and the [`engine`] fan-out
-//! (`--threads N`, default = host parallelism). Results are merged in
-//! client-id order so parallel runs are bit-identical to serial ones
-//! (DESIGN.md §5–§6).
+//! client state with spill-to-disk), bounded-staleness async scheduling
+//! over a seeded per-client speed model (`--staleness-bound s`,
+//! `--client-speeds`, simulated wall-clock in every report), and the
+//! [`engine`] fan-out (`--threads N`, default = host parallelism).
+//! Results are merged in client-id order so parallel runs are
+//! bit-identical to serial ones (DESIGN.md §5–§7).
 //!
 //! ## Quickstart
 //!

@@ -15,6 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use adasplit::config::{ExperimentConfig, ProtocolKind};
 use adasplit::data::DatasetKind;
+use adasplit::driver::SpeedPreset;
 use adasplit::engine::par_indexed;
 use adasplit::protocols::{run_protocol_recorded, run_seeds};
 use adasplit::report::ResultTable;
@@ -47,6 +48,19 @@ RUN OPTIONS:
   --participation P      per-round client sampling fraction in (0,1];
                          < 1 samples ceil(P*N) clients per round and
                          spills inactive client state to disk   [1.0]
+  --staleness-bound S    async bounded-staleness scheduler: clients run on
+                         per-client virtual clocks and merged updates may
+                         be up to S rounds stale (omit = synchronous;
+                         S=0 + uniform speeds == synchronous bit-for-bit)
+  --client-speeds M      per-client speed model: uniform |
+                         lognormal[:sigma] | stragglers      [uniform]
+  --straggler-frac F     fraction of 10x-slow clients under the
+                         stragglers speed model              [0.1]
+  --stale-decay D        aggregation down-weight per round of staleness,
+                         in (0,1]; affects the weighted-aggregation
+                         protocols (FL family, SplitFed) — AdaSplit and
+                         SL-basic see staleness only as participation
+                         cadence (DESIGN.md §7)              [0.5]
   --threads N            engine worker threads (0 = host parallelism) [0]
   --curve-out PATH       write the per-round curve CSV
   --trace                print per-iteration orchestrator traces
@@ -54,6 +68,10 @@ RUN OPTIONS:
 COMPARE OPTIONS:
   --dataset ID  --rounds N  --samples N  --test-samples N  --seeds N
   --participation P      per-round client sampling fraction    [1.0]
+  --staleness-bound S    async bounded-staleness scheduling (see RUN)
+  --client-speeds M      per-client speed model (see RUN)  [uniform]
+  --straggler-frac F     stragglers-preset slow fraction       [0.1]
+  --stale-decay D        staleness down-weight (see RUN)       [0.5]
   --threads N            worker threads per run; protocols also run
                          concurrently across the pool      [0 = auto]
 ";
@@ -186,6 +204,18 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
     if let Some(v) = args.parsed("participation")? {
         cfg.participation = v;
     }
+    if let Some(v) = args.parsed("staleness-bound")? {
+        cfg.staleness_bound = Some(v);
+    }
+    if let Some(v) = args.parsed::<SpeedPreset>("client-speeds")? {
+        cfg.client_speeds = v;
+    }
+    if let Some(v) = args.parsed("straggler-frac")? {
+        cfg.straggler_frac = v;
+    }
+    if let Some(v) = args.parsed("stale-decay")? {
+        cfg.stale_decay = v;
+    }
     if let Some(v) = args.parsed("threads")? {
         cfg.threads = v;
     }
@@ -209,7 +239,7 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
         );
     }
     println!(
-        "{} on {}: acc={:.2}% (best {:.2}%) bw={:.3}GB compute={:.3} ({:.3}) TFLOPs c3={:.3} [{:.1}s]",
+        "{} on {}: acc={:.2}% (best {:.2}%) bw={:.3}GB compute={:.3} ({:.3}) TFLOPs c3={:.3} simT={:.1} [{:.1}s]",
         result.protocol,
         result.dataset,
         result.accuracy,
@@ -218,12 +248,31 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
         result.client_tflops,
         result.total_tflops,
         result.c3_score,
+        result.sim_time,
         t0.elapsed().as_secs_f64()
     );
     if cfg.participation < 1.0 {
         println!(
             "participation={:.2}: {:.1} of {} clients sampled per round (inactive state spilled)",
             result.participation, result.sampled_clients_per_round, cfg.clients
+        );
+    }
+    if let Some(bound) = cfg.staleness_bound {
+        let max_stale = recorder.rounds.iter().map(|r| r.max_staleness).max().unwrap_or(0);
+        // decay reaches aggregation only through round_weights; AdaSplit
+        // and SL-basic aggregate differently, so for them staleness is
+        // purely a participation-cadence effect (DESIGN.md §7)
+        let decay_note = match cfg.protocol {
+            ProtocolKind::AdaSplit | ProtocolKind::SlBasic => " (cadence-only here)",
+            _ => "",
+        };
+        println!(
+            "async-bounded: staleness bound {bound} (max merged {max_stale}), \
+             speeds {}, decay {:.2}{decay_note}, simulated wall-clock {:.2} vs {} synchronous rounds",
+            cfg.client_speeds.id(),
+            cfg.stale_decay,
+            result.sim_time,
+            cfg.rounds
         );
     }
     if let Some(path) = args.get("curve-out") {
@@ -242,6 +291,11 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
     let n_seeds = args.parsed("seeds")?.unwrap_or(1usize);
     let threads = args.parsed("threads")?.unwrap_or(0usize);
     let participation = args.parsed("participation")?.unwrap_or(1.0f64);
+    let staleness_bound: Option<usize> = args.parsed("staleness-bound")?;
+    let client_speeds: SpeedPreset =
+        args.parsed("client-speeds")?.unwrap_or(SpeedPreset::Uniform);
+    let straggler_frac = args.parsed("straggler-frac")?.unwrap_or(0.1f64);
+    let stale_decay = args.parsed("stale-decay")?.unwrap_or(0.5f64);
     let seed_list: Vec<u64> = (0..n_seeds as u64).collect();
 
     let budget = adasplit::engine::ClientPool::new(threads).threads();
@@ -253,6 +307,10 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
                 .with_protocol(p)
                 .with_scale(rounds, samples, test)
                 .with_participation(participation)
+                .with_staleness_bound(staleness_bound)
+                .with_client_speeds(client_speeds)
+                .with_straggler_frac(straggler_frac)
+                .with_stale_decay(stale_decay)
                 .with_threads(per_protocol)
         })
         .collect();

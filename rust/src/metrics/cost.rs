@@ -69,6 +69,23 @@ impl CostMeter {
         self.peer_bytes += other.peer_bytes;
     }
 
+    /// Merge a per-client delta under a heterogeneous device model
+    /// (DESIGN.md §7): the client's FLOPs are scaled by `compute_scale`
+    /// (device-time against the compute budget — a half-speed device's
+    /// FLOPs cost twice the budget) and its up/down/peer bytes by
+    /// `net_scale` (link-time against the bandwidth budget). Server-side
+    /// FLOPs stay unscaled (the server is the baseline). With both scales
+    /// at `1.0` this is exactly [`CostMeter::merge`] — the driver takes
+    /// the plain-merge branch under uniform speeds anyway, keeping the
+    /// default path bit-identical to the pre-speed-model accounting.
+    pub fn merge_scaled(&mut self, other: &CostMeter, compute_scale: f64, net_scale: f64) {
+        self.client_flops += other.client_flops * compute_scale;
+        self.server_flops += other.server_flops;
+        self.up_bytes += other.up_bytes * net_scale;
+        self.down_bytes += other.down_bytes * net_scale;
+        self.peer_bytes += other.peer_bytes * net_scale;
+    }
+
     /// Scale all counters (e.g. average over seeds).
     pub fn scale(&mut self, s: f64) {
         self.client_flops *= s;
@@ -111,6 +128,30 @@ mod tests {
         assert_eq!(total.up_bytes, 6.0);
         assert_eq!(total.down_bytes, 8.0);
         assert_eq!(total.peer_bytes, 10.0);
+    }
+
+    #[test]
+    fn merge_scaled_applies_per_axis_rates() {
+        let mut delta = CostMeter::new();
+        delta.add_client_flops(10.0);
+        delta.add_server_flops(8.0);
+        delta.add_up(100);
+        delta.add_down(200);
+        delta.add_peer(400);
+        let mut total = CostMeter::new();
+        total.merge_scaled(&delta, 2.0, 0.5);
+        assert_eq!(total.client_flops, 20.0, "client compute scaled by device rate");
+        assert_eq!(total.server_flops, 8.0, "server compute stays baseline");
+        assert_eq!(total.up_bytes, 50.0);
+        assert_eq!(total.down_bytes, 100.0);
+        assert_eq!(total.peer_bytes, 200.0);
+        // unit scales degenerate to the plain merge bit-for-bit
+        let mut a = CostMeter::new();
+        let mut b = CostMeter::new();
+        a.merge(&delta);
+        b.merge_scaled(&delta, 1.0, 1.0);
+        assert_eq!(a.client_flops.to_bits(), b.client_flops.to_bits());
+        assert_eq!(a.up_bytes.to_bits(), b.up_bytes.to_bits());
     }
 
     #[test]

@@ -21,6 +21,14 @@ pub struct RoundStat {
     pub total_tflops: f64,
     /// mean active-mask density on the server (AdaSplit; 1.0 otherwise)
     pub mask_density: f64,
+    /// simulated wall-clock at the round's merge, in baseline-round units
+    /// (the scheduler's virtual clock; `round + 1` for a synchronous run
+    /// over uniform client speeds)
+    pub sim_time: f64,
+    /// staleness of the round's most stale merged contribution, in rounds
+    /// (0 for every synchronous scheduler; never exceeds the
+    /// `AsyncBounded` staleness bound)
+    pub max_staleness: usize,
     /// clients selected this round (AdaSplit orchestrator; the round's
     /// participant set otherwise)
     pub selected: Vec<usize>,
@@ -72,12 +80,12 @@ impl Recorder {
         let mut f = std::fs::File::create(path).context("creating csv")?;
         writeln!(
             f,
-            "round,phase,train_loss,accuracy_pct,bandwidth_gb,client_tflops,total_tflops,mask_density,n_selected,n_participants"
+            "round,phase,train_loss,accuracy_pct,bandwidth_gb,client_tflops,total_tflops,mask_density,sim_time,max_staleness,n_selected,n_participants"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{},{:.6},{:.3},{:.6},{:.6},{:.6},{:.4},{},{}",
+                "{},{},{:.6},{:.3},{:.6},{:.6},{:.6},{:.4},{:.4},{},{},{}",
                 r.round,
                 r.phase,
                 r.train_loss,
@@ -86,6 +94,8 @@ impl Recorder {
                 r.client_tflops,
                 r.total_tflops,
                 r.mask_density,
+                r.sim_time,
+                r.max_staleness,
                 r.selected.len(),
                 r.participants.len()
             )?;
@@ -107,6 +117,8 @@ impl Recorder {
                     m.insert("client_tflops".into(), Json::Num(r.client_tflops));
                     m.insert("total_tflops".into(), Json::Num(r.total_tflops));
                     m.insert("mask_density".into(), Json::Num(r.mask_density));
+                    m.insert("sim_time".into(), Json::Num(r.sim_time));
+                    m.insert("max_staleness".into(), Json::Num(r.max_staleness as f64));
                     m.insert(
                         "selected".into(),
                         Json::Arr(r.selected.iter().map(|&s| Json::Num(s as f64)).collect()),
@@ -147,6 +159,8 @@ mod tests {
             client_tflops: 0.2,
             total_tflops: 0.3,
             mask_density: 1.0,
+            sim_time: round as f64 + 1.0,
+            max_staleness: 0,
             selected: vec![0, 1],
             participants: vec![0, 1, 2],
         }

@@ -10,7 +10,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
-use crate::data::{Batch, BatchIter, ClientData, Rng};
+use crate::data::{Batch, BatchIter, Partition, Rng};
 use crate::driver::{ClientState, ClientStateStore};
 use crate::engine::{par_clients, ClientPool, ParallelEnv};
 use crate::metrics::{AccuracyAccum, CostMeter, Recorder};
@@ -21,7 +21,9 @@ use crate::runtime::{Artifact, Runtime, Tensor, TensorStore};
 pub struct Env<'a> {
     pub rt: &'a Runtime,
     pub cfg: &'a ExperimentConfig,
-    pub clients: Vec<ClientData>,
+    /// client shards, generated lazily on first touch (the driver keeps
+    /// the cache pointed at the active sample under per-round sampling)
+    pub clients: Partition,
     pub spec: ModelSpec,
     pub meter: CostMeter,
     pub recorder: Recorder,
@@ -29,7 +31,7 @@ pub struct Env<'a> {
 }
 
 impl<'a> Env<'a> {
-    pub fn new(rt: &'a Runtime, cfg: &'a ExperimentConfig, clients: Vec<ClientData>) -> Self {
+    pub fn new(rt: &'a Runtime, cfg: &'a ExperimentConfig, clients: Partition) -> Self {
         let spec = ModelSpec::from_manifest(&rt.manifest, cfg.dataset.num_classes());
         Self {
             rt,
@@ -77,7 +79,7 @@ impl<'a> Env<'a> {
 
     /// Fresh per-round training batches for one client.
     pub fn train_batches(&self, client: usize, round: usize) -> Vec<Batch> {
-        let c = &self.clients[client];
+        let c = self.clients.get(client);
         let mut rng = self
             .rng
             .derive("epoch", (round as u64) << 32 | client as u64);
@@ -127,7 +129,8 @@ pub fn eval_split_client(
     stacks: &[TensorStore],
     part: &mut AccuracyAccum,
 ) -> Result<()> {
-    let c = &env.clients[i];
+    // test-split-only read: out-of-sample clients skip train synthesis
+    let c = env.clients.get_for_eval(i);
     let stack_refs: Vec<&TensorStore> = stacks.iter().collect();
     for b in BatchIter::eval(&c.test_x, &c.test_y, env.spec.batch) {
         let fwd = client_fwd.call(&[client_root], &[("x", &b.x)])?;
@@ -212,7 +215,7 @@ where
 pub fn eval_fl(env: &Env, fl_eval: &Artifact, global_p: &TensorStore) -> Result<AccuracyAccum> {
     let n = env.clients.len();
     let parts = par_clients(env, |i| {
-        let c = &env.clients[i];
+        let c = env.clients.get_for_eval(i);
         let mut part = AccuracyAccum::new(n);
         for b in BatchIter::eval(&c.test_x, &c.test_y, env.spec.batch) {
             let out = fl_eval.call(
@@ -260,11 +263,12 @@ pub fn zeros_prefixed(src: &TensorStore, from: &str, to: &str) -> TensorStore {
 }
 
 /// Data-size weights p_i = n_i / sum(n) for FedAvg-family aggregation.
-pub fn data_weights(clients: &[ClientData]) -> Vec<f32> {
-    let total: usize = clients.iter().map(|c| c.train_len()).sum();
-    clients
-        .iter()
-        .map(|c| c.train_len() as f32 / total as f32)
+/// Sizes are known without materializing any shard, so this never
+/// triggers lazy data generation.
+pub fn data_weights(clients: &Partition) -> Vec<f32> {
+    let total: usize = (0..clients.len()).map(|i| clients.train_len(i)).sum();
+    (0..clients.len())
+        .map(|i| clients.train_len(i) as f32 / total as f32)
         .collect()
 }
 
@@ -272,7 +276,24 @@ pub fn data_weights(clients: &[ClientData]) -> Vec<f32> {
 /// weights verbatim when everyone participates (bit-parity with the
 /// pre-redesign all-clients loop — no division by a computed ~1.0 sum),
 /// renormalized over the sampled set otherwise.
+///
+/// When the driver has published staleness-decay multipliers for the
+/// round (`AsyncBounded` with at least one stale contribution — see
+/// [`crate::driver::stale_decay_multipliers`] and DESIGN.md §7), each
+/// participant's weight is multiplied by `decay^staleness` before
+/// renormalization, so stale updates count less and the weights still
+/// sum to 1. Fresh rounds never open the scope, keeping both synchronous
+/// paths bit-identical.
 pub fn round_weights(weights: &[f32], participants: &[usize]) -> Vec<f32> {
+    if let Some(decay) = crate::driver::stale_decay_multipliers(participants) {
+        let raw: Vec<f32> = participants
+            .iter()
+            .zip(&decay)
+            .map(|(&i, &m)| weights[i] * m)
+            .collect();
+        let sum: f32 = raw.iter().sum();
+        return raw.iter().map(|w| w / sum).collect();
+    }
     if participants.len() == weights.len() {
         return weights.to_vec();
     }

@@ -59,6 +59,12 @@ pub struct RunResult {
     pub participation: f64,
     /// mean clients sampled per round by the scheduler
     pub sampled_clients_per_round: f64,
+    /// scheduler the run used (`sync-all` | `sampled-sync` | `async-bounded`)
+    pub scheduler: String,
+    /// total simulated wall-clock of the run, in baseline-round units
+    /// (the scheduler's virtual clock at the last merge; `rounds` for a
+    /// synchronous run over uniform client speeds)
+    pub sim_time: f64,
 }
 
 impl RunResult {
@@ -80,10 +86,17 @@ impl RunResult {
             "sampled_clients_per_round".into(),
             Json::Num(self.sampled_clients_per_round),
         );
+        m.insert("scheduler".into(), Json::Str(self.scheduler.clone()));
+        m.insert("sim_time".into(), Json::Num(self.sim_time));
         Json::Obj(m)
     }
 
-    pub(crate) fn from_env(env: &Env, recorder: &Recorder, meter: &CostMeter) -> Self {
+    pub(crate) fn from_env(
+        env: &Env,
+        recorder: &Recorder,
+        meter: &CostMeter,
+        scheduler: &str,
+    ) -> Self {
         let best = recorder.best_accuracy();
         let acc = recorder.last_accuracy();
         let mask_density = recorder
@@ -110,6 +123,8 @@ impl RunResult {
             rounds: env.cfg.rounds,
             participation: env.cfg.participation,
             sampled_clients_per_round,
+            scheduler: scheduler.to_string(),
+            sim_time: recorder.rounds.last().map(|r| r.sim_time).unwrap_or(0.0),
         }
     }
 }
@@ -204,6 +219,7 @@ pub fn run_seeds(
     agg.total_tflops = avg(|r| r.total_tflops);
     agg.mask_density = avg(|r| r.mask_density);
     agg.sampled_clients_per_round = avg(|r| r.sampled_clients_per_round);
+    agg.sim_time = avg(|r| r.sim_time);
     agg.c3_score = c3_score(mean, agg.bandwidth_gb, agg.client_tflops, &cfg.budgets);
     Ok((agg, std))
 }

@@ -137,6 +137,8 @@ mod tests {
             rounds: 5,
             participation: 1.0,
             sampled_clients_per_round: 5.0,
+            scheduler: "sync-all".into(),
+            sim_time: 5.0,
         }
     }
 

@@ -7,7 +7,7 @@
 //! otherwise, matching the other integration suites.
 
 use adasplit::config::{ExperimentConfig, ProtocolKind};
-use adasplit::driver::{SampledSync, Scheduler, SyncAll};
+use adasplit::driver::{AsyncBounded, ClientSpeeds, SampledSync, Scheduler, SpeedPreset, SyncAll};
 use adasplit::engine::{par_indexed, par_slice_mut, ClientPool};
 use adasplit::metrics::{AccuracyAccum, CostMeter};
 use adasplit::protocols::{run_protocol, RunResult};
@@ -25,6 +25,7 @@ fn assert_results_identical(a: &RunResult, b: &RunResult, what: &str) {
         a.sampled_clients_per_round, b.sampled_clients_per_round,
         "{what} sampled_clients_per_round"
     );
+    assert_eq!(a.sim_time, b.sim_time, "{what} sim_time");
 }
 
 // ---- pure engine determinism (no artifacts required) ----------------------
@@ -153,6 +154,48 @@ fn sampled_sync_is_invocation_deterministic() {
     for sample in draws(5) {
         assert_eq!(sample.len(), 50, "ceil(0.25 * 200)");
         assert!(sample.windows(2).all(|w| w[0] < w[1]), "ascending unique ids");
+    }
+}
+
+// ---- async scheduler determinism (no artifacts required) ------------------
+
+#[test]
+fn async_bounded_s0_uniform_plans_equal_sync_all_plans() {
+    // the degenerate async case must schedule exactly like SyncAll:
+    // same participants, zero staleness, same virtual clock
+    let speeds = ClientSpeeds::new(9, SpeedPreset::Uniform, 0.0, 123);
+    let mut sync = SyncAll::with_speeds(9, &speeds);
+    let mut asynced = AsyncBounded::new(9, 0, 1.0, &speeds);
+    for round in 0..32 {
+        let a = sync.plan(round);
+        let b = asynced.plan(round);
+        assert_eq!(a.participants, b.participants, "round {round}");
+        assert_eq!(b.staleness, vec![0; 9], "round {round}");
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "round {round}");
+    }
+}
+
+#[test]
+fn async_bounded_plan_stream_is_invocation_deterministic() {
+    // two schedulers from the same (n, s, p, speeds) draw the same plan
+    // stream; planning runs on the driver thread, so thread-count
+    // invariance of a full run follows for free
+    let stream = |seed: u64| -> Vec<(Vec<usize>, Vec<usize>, u64)> {
+        let speeds = ClientSpeeds::new(40, SpeedPreset::Stragglers, 0.25, seed);
+        let mut s = AsyncBounded::new(40, 2, 0.5, &speeds);
+        (0..24)
+            .map(|r| {
+                let p = s.plan(r);
+                (p.participants, p.staleness, p.sim_time.to_bits())
+            })
+            .collect()
+    };
+    assert_eq!(stream(5), stream(5));
+    assert_ne!(stream(5), stream(6), "seed must matter");
+    for (participants, staleness, _) in stream(5) {
+        assert!(!participants.is_empty(), "merge set never empty");
+        assert!(participants.windows(2).all(|w| w[0] < w[1]), "ascending unique");
+        assert!(staleness.iter().all(|&st| st <= 2), "bound respected");
     }
 }
 
@@ -342,4 +385,90 @@ fn sampled_many_client_run_completes_with_pooled_state() {
     let r = run_protocol(&rt, &cfg).unwrap();
     assert_eq!(r.sampled_clients_per_round, 16.0, "ceil(0.25*64)");
     assert!(r.accuracy >= 0.0);
+}
+
+// ---- AsyncBounded end-to-end (requires `make artifacts`) ------------------
+
+#[test]
+fn async_s0_uniform_is_bit_identical_to_sync_all_for_every_protocol() {
+    // the acceptance criterion: `--staleness-bound 0` with uniform speeds
+    // must reproduce the default synchronous run bit-for-bit, protocol by
+    // protocol — same participants every round, no stale contribution, no
+    // decay scope, unscaled cost merging
+    let Some(rt) = runtime() else { return };
+    for p in ProtocolKind::ALL {
+        let base = run_protocol(&rt, &quick(p, 2)).unwrap();
+        let mut cfg = quick(p, 2);
+        cfg.staleness_bound = Some(0);
+        let asynced = run_protocol(&rt, &cfg).unwrap();
+        assert_results_identical(&base, &asynced, p.name());
+        assert_eq!(asynced.scheduler, "async-bounded");
+        assert_eq!(base.scheduler, "sync-all");
+        assert_eq!(asynced.sim_time, cfg.rounds as f64, "uniform clock counts rounds");
+    }
+}
+
+#[test]
+fn async_runs_are_thread_count_invariant_for_every_protocol() {
+    // planning happens on the driver thread and merges stay in id order,
+    // so an async run with real staleness must be bit-identical across
+    // worker counts for all seven protocols
+    let Some(rt) = runtime() else { return };
+    for p in ProtocolKind::ALL {
+        let mut serial_cfg = quick(p, 1);
+        serial_cfg.clients = 8;
+        serial_cfg.staleness_bound = Some(2);
+        serial_cfg.client_speeds = SpeedPreset::Stragglers;
+        serial_cfg.straggler_frac = 0.25;
+        let mut par_cfg = serial_cfg.clone();
+        par_cfg.threads = 4;
+        let serial = run_protocol(&rt, &serial_cfg).unwrap();
+        let par = run_protocol(&rt, &par_cfg).unwrap();
+        assert_results_identical(&serial, &par, p.name());
+    }
+}
+
+#[test]
+fn async_runs_are_repeat_invocation_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick(ProtocolKind::AdaSplit, 2);
+    cfg.clients = 8;
+    cfg.staleness_bound = Some(1);
+    cfg.client_speeds = SpeedPreset::Lognormal { sigma: 0.6 };
+    let a = run_protocol(&rt, &cfg).unwrap();
+    let b = run_protocol(&rt, &cfg).unwrap();
+    assert_results_identical(&a, &b, "repeat invocation");
+    let mut other_seed = cfg.clone();
+    other_seed.seed = 9;
+    let c = run_protocol(&rt, &other_seed).unwrap();
+    assert!(
+        a.sim_time != c.sim_time || a.accuracy != c.accuracy,
+        "different seed should draw different speeds/schedules"
+    );
+}
+
+#[test]
+fn async_with_sampling_cap_completes_and_reports_the_axis() {
+    // async + participation cap + spilling store + lazy data all at once;
+    // the recorded sim_time axis must be monotone and the stale decay
+    // bounded by the configured staleness bound
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick(ProtocolKind::FedAvg, 2);
+    cfg.clients = 16;
+    cfg.participation = 0.5;
+    cfg.staleness_bound = Some(3);
+    cfg.client_speeds = SpeedPreset::Stragglers;
+    cfg.straggler_frac = 0.25;
+    cfg.samples_per_client = 32;
+    cfg.test_per_client = 32;
+    let (r, rec) = adasplit::protocols::run_protocol_recorded(&rt, &cfg).unwrap();
+    assert_eq!(r.scheduler, "async-bounded");
+    assert!(r.sim_time > 0.0);
+    let mut prev = 0.0;
+    for round in &rec.rounds {
+        assert!(round.sim_time >= prev, "virtual clock monotone");
+        prev = round.sim_time;
+        assert!(round.max_staleness <= 3, "staleness bound respected");
+        assert!(!round.participants.is_empty(), "merge set never empty");
+    }
 }

@@ -6,6 +6,7 @@
 
 use adasplit::data::partition::imbalanced_sizes;
 use adasplit::data::{build_partition, DatasetKind, Rng};
+use adasplit::driver::{AsyncBounded, ClientSpeeds, Scheduler, SpeedPreset};
 use adasplit::metrics::{c3_score, mean_std, Budgets};
 use adasplit::model::ModelSpec;
 use adasplit::orchestrator::UcbOrchestrator;
@@ -143,7 +144,8 @@ fn prop_partition_labels_in_client_class_set() {
         };
         let n = 1 + r.below(7);
         let parts = build_partition(kind, n, 64, 32, r.uniform(1.0, 2.0), case).unwrap();
-        for c in &parts {
+        for i in 0..n {
+            let c = parts.get(i);
             for &y in c.train_y.iter().chain(c.test_y.iter()) {
                 assert!(
                     c.classes.contains(&(y as usize)),
@@ -195,6 +197,105 @@ fn prop_json_roundtrip_random_trees() {
         let compact = Json::parse(&j.to_string_compact());
         assert_eq!(pretty.unwrap(), j, "case {case} pretty");
         assert_eq!(compact.unwrap(), j, "case {case} compact");
+    }
+}
+
+fn random_preset(r: &mut Rng) -> SpeedPreset {
+    match r.below(3) {
+        0 => SpeedPreset::Uniform,
+        1 => SpeedPreset::Lognormal { sigma: r.uniform(0.1, 1.5) },
+        _ => SpeedPreset::Stragglers,
+    }
+}
+
+#[test]
+fn prop_async_sim_clock_monotone_and_staleness_bounded() {
+    // over random fleets, bounds, caps, and speed presets: the simulated
+    // round wall-clock never decreases, and no merged contribution is
+    // ever staler than the bound
+    let mut r = Rng::new(111);
+    for case in 0..60 {
+        let n = 1 + r.below(40);
+        let bound = r.below(6);
+        let participation = r.uniform(0.01, 1.0);
+        let preset = random_preset(&mut r);
+        let frac = r.uniform(0.0, 1.0);
+        let speeds = ClientSpeeds::new(n, preset, frac, case);
+        let mut s = AsyncBounded::new(n, bound, participation, &speeds);
+        let mut prev_t = 0.0f64;
+        for round in 0..50 {
+            let plan = s.plan(round);
+            assert!(
+                plan.sim_time >= prev_t,
+                "case {case} round {round}: clock {} < {prev_t}",
+                plan.sim_time
+            );
+            prev_t = plan.sim_time;
+            assert!(plan.sim_time.is_finite(), "case {case}");
+            for (&i, &st) in plan.participants.iter().zip(&plan.staleness) {
+                assert!(i < n, "case {case}");
+                assert!(
+                    st <= bound,
+                    "case {case} round {round}: client {i} stale {st} > bound {bound}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_async_merge_set_never_empty() {
+    // participation x straggler-frac must never starve a round: even a
+    // 100%-straggler fleet at the minimum cap merges someone every round
+    // (the driver waits for the fastest in-flight client)
+    let mut r = Rng::new(222);
+    for case in 0..60 {
+        let n = 1 + r.below(30);
+        let bound = r.below(8);
+        // adversarial corners included: tiny participation, frac up to 1.0
+        let participation = if r.next_f64() < 0.3 { 0.001 } else { r.uniform(0.01, 1.0) };
+        let frac = if r.next_f64() < 0.3 { 1.0 } else { r.uniform(0.0, 1.0) };
+        let speeds = ClientSpeeds::new(n, SpeedPreset::Stragglers, frac, case + 1000);
+        let mut s = AsyncBounded::new(n, bound, participation, &speeds);
+        for round in 0..40 {
+            let plan = s.plan(round);
+            assert!(
+                !plan.participants.is_empty(),
+                "case {case} (n={n} p={participation} frac={frac} s={bound}) \
+                 round {round}: empty merge set"
+            );
+            assert!(
+                plan.participants.windows(2).all(|w| w[0] < w[1]),
+                "case {case} round {round}: participants not ascending-unique"
+            );
+            assert_eq!(plan.participants.len(), plan.staleness.len(), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_lazy_partition_get_is_order_independent() {
+    // shards are pure functions of (kind, id, seed): materialization
+    // order can never change values
+    let mut r = Rng::new(333);
+    for case in 0..8 {
+        let kind = if r.next_f64() < 0.5 {
+            DatasetKind::MixedCifar
+        } else {
+            DatasetKind::MixedNonIid
+        };
+        let n = 2 + r.below(6);
+        let a = build_partition(kind, n, 64, 32, 1.0, case).unwrap();
+        let b = build_partition(kind, n, 64, 32, 1.0, case).unwrap();
+        // touch a forward, b in a random order
+        let order = r.permutation(n);
+        let from_b: Vec<_> = order.iter().map(|&i| (i, b.get(i))).collect();
+        for (i, shard_b) in from_b {
+            let shard_a = a.get(i);
+            assert_eq!(shard_a.train_x, shard_b.train_x, "case {case} client {i}");
+            assert_eq!(shard_a.train_y, shard_b.train_y, "case {case} client {i}");
+            assert_eq!(shard_a.test_x, shard_b.test_x, "case {case} client {i}");
+        }
     }
 }
 
