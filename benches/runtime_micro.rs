@@ -6,20 +6,21 @@
 //!
 //! Results are tracked across PRs in `BENCH_results.json` (engine round
 //! throughput over the threads axis, the deterministic mask-density
-//! trajectory of a tiny AdaSplit run, and the async-scheduler axis: the
+//! trajectory of a tiny AdaSplit run, the async-scheduler axis — the
 //! deterministic `AsyncBounded` sim-time trajectory plus its planning
-//! throughput — both pure Rust, so they measure and check even on
-//! artifact-less runners). Default mode rewrites the file; `--check`
-//! compares against it instead — trajectories must match exactly (they
-//! are deterministic), throughput may not grossly regress, and the
-//! tracked file must carry the async-scheduler keys — and exits 0 with a
-//! SKIP note for the artifact-gated sections when artifacts are absent.
+//! throughput — and the delayed-gradient snapshot-ring axis: all pure
+//! Rust, so they measure and check even on artifact-less runners).
+//! Default mode rewrites the file; `--check` compares against it
+//! instead — trajectories must match exactly (they are deterministic),
+//! throughput may not grossly regress, and the tracked file must carry
+//! the async-scheduler and snapshot-ring keys — and exits 0 with a SKIP
+//! note for the artifact-gated sections when artifacts are absent.
 
 use std::collections::BTreeMap;
 
 use adasplit::config::ExperimentConfig;
 use adasplit::data::{build_partition, DatasetKind, Rng, SyntheticDataset};
-use adasplit::driver::{AsyncBounded, ClientSpeeds, Scheduler, SpeedPreset};
+use adasplit::driver::{AsyncBounded, ClientSpeeds, Scheduler, SnapshotRing, SpeedPreset};
 use adasplit::engine::ClientPool;
 use adasplit::orchestrator::UcbOrchestrator;
 use adasplit::protocols::{run_protocol_recorded, Env};
@@ -51,6 +52,24 @@ fn async_plan_bench(iters: usize) -> BenchStats {
     })
 }
 
+/// Snapshot-ring throughput (rounds/s): the delayed-gradient hot path on
+/// the driver thread — push one round-start broadcast snapshot (~16 KiB
+/// model) and resolve one stale version per round over a bound-3 ring.
+/// Pure Rust, so it measures and checks even on artifact-less runners.
+fn snapshot_ring_bench(iters: usize) -> BenchStats {
+    let mut model = TensorStore::new();
+    model.insert("pg.w", Tensor::full(&[4096], 1.0));
+    bench("coord: snapshot ring push+get x64 (bound 3)", 1, iters, || {
+        let mut ring = SnapshotRing::new(4);
+        for r in 0..64usize {
+            ring.push(r, model.clone()).unwrap();
+            if r >= 3 {
+                std::hint::black_box(ring.get(r - 3).unwrap());
+            }
+        }
+    })
+}
+
 fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
     let md = tracked
         .opt("async_sim_time")
@@ -61,6 +80,11 @@ fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
     anyhow::ensure!(
         tracked.opt("async_plan_rounds_per_s").is_some(),
         "tracked {TRACK_FILE} is missing `async_plan_rounds_per_s`"
+    );
+    anyhow::ensure!(
+        tracked.opt("snapshot_ring_rounds_per_s").is_some(),
+        "tracked {TRACK_FILE} is missing `snapshot_ring_rounds_per_s` \
+         (delayed-gradient snapshot-ring axis); re-record with the bench"
     );
     let old: Vec<f64> = md
         .as_arr()?
@@ -93,6 +117,7 @@ fn results_json(
     densities: &[f64],
     async_sim: &[f64],
     async_plan: &BenchStats,
+    snap_ring: &BenchStats,
     n_par: usize,
     quick: bool,
 ) -> Json {
@@ -120,6 +145,10 @@ fn results_json(
     m.insert(
         "async_plan_rounds_per_s".into(),
         Json::Num(200.0 / async_plan.mean_s),
+    );
+    m.insert(
+        "snapshot_ring_rounds_per_s".into(),
+        Json::Num(64.0 / snap_ring.mean_s),
     );
     Json::Obj(m)
 }
@@ -226,6 +255,8 @@ fn main() -> anyhow::Result<()> {
     }));
     let async_plan = async_plan_bench(iters);
     stats.push(async_plan.clone());
+    let snap_ring = snapshot_ring_bench(iters);
+    stats.push(snap_ring.clone());
     stats.push(bench("coord: UCB select+update x1000", 1, iters, || {
         let mut ucb = UcbOrchestrator::new(5, 0.87);
         for t in 0..1000u64 {
@@ -386,6 +417,7 @@ fn main() -> anyhow::Result<()> {
             &densities,
             &async_sim,
             &async_plan,
+            &snap_ring,
             n_par,
             quick_mode(),
         );

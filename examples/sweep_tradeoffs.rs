@@ -7,7 +7,10 @@
 //! (heterogeneous client speeds: a larger staleness bound stops the
 //! synchronous barrier from waiting on stragglers every round, trading
 //! staleness for virtual time), with the FL/SL baselines as reference
-//! points.
+//! points. The staleness axis additionally compares cadence-only
+//! staleness against true delayed gradients (`--delayed-gradients`:
+//! stale clients train on the model snapshot they actually pulled,
+//! DESIGN.md §8) on FedAvg, where the distinction bites.
 //!
 //! ```bash
 //! cargo run --release --example sweep_tradeoffs -- --rounds 10 --samples 256
@@ -99,6 +102,33 @@ fn main() -> anyhow::Result<()> {
         s_curve.push(r.sim_time, r.best_accuracy);
     }
 
+    // cadence-only vs true delayed gradients (--delayed-gradients):
+    // per-client model versioning hands a client merging s rounds stale
+    // the global snapshot it actually pulled s rounds ago. FedAvg is the
+    // protocol where the distinction bites — its clients download the
+    // global every round; AdaSplit clients never download server weights,
+    // so the AdaSplit curve above is cadence-only by construction
+    // (DESIGN.md §8).
+    let fl_async = async_base.clone().with_protocol(ProtocolKind::FedAvg);
+    let mut fd_cadence = Series::new("FedAvg (cadence-only)", "sim_time");
+    let mut fd_delay = Series::new("FedAvg (true-delay)", "sim_time");
+    println!("\nFedAvg staleness sweep: cadence-only vs true delayed gradients:");
+    println!(
+        "{:<8} {:>14} {:>14} {:>10} {:>10}",
+        "bound", "cadence acc%", "delayed acc%", "simT", "max stale"
+    );
+    for bound in [0usize, 1, 2, 4] {
+        let base_cfg = fl_async.clone().with_staleness_bound(Some(bound));
+        let c = run_protocol(&rt, &base_cfg)?;
+        let d = run_protocol(&rt, &base_cfg.clone().with_delayed_gradients(true))?;
+        println!(
+            "s={bound:<6} {:>14.2} {:>14.2} {:>10.2} {:>10}",
+            c.best_accuracy, d.best_accuracy, d.sim_time, d.max_staleness
+        );
+        fd_cadence.push(c.sim_time, c.best_accuracy);
+        fd_delay.push(d.sim_time, d.best_accuracy);
+    }
+
     // baseline reference points
     let mut base_bw = Series::new("baselines", "bandwidth_gb");
     let mut base_c = Series::new("baselines", "client_tflops");
@@ -120,12 +150,16 @@ fn main() -> anyhow::Result<()> {
     print!("{}", ascii_chart(&[p_curve.clone()], 60, 14));
     println!("\n=== accuracy vs simulated wall-clock (staleness sweep) ===");
     print!("{}", ascii_chart(&[s_curve.clone()], 60, 14));
+    println!("\n=== FedAvg staleness: cadence-only vs true delayed gradients ===");
+    print!("{}", ascii_chart(&[fd_cadence.clone(), fd_delay.clone()], 60, 14));
 
     std::fs::create_dir_all("results")?;
     std::fs::write("results/fig1_bandwidth_curve.csv", bw_curve.to_csv())?;
     std::fs::write("results/fig1_compute_curve.csv", c_curve.to_csv())?;
     std::fs::write("results/fig1_participation_curve.csv", p_curve.to_csv())?;
     std::fs::write("results/fig1_staleness_curve.csv", s_curve.to_csv())?;
+    std::fs::write("results/fig1_staleness_cadence_fl.csv", fd_cadence.to_csv())?;
+    std::fs::write("results/fig1_staleness_true_delay_fl.csv", fd_delay.to_csv())?;
     std::fs::write("results/fig1_baseline_bw.csv", base_bw.to_csv())?;
     std::fs::write("results/fig1_baseline_compute.csv", base_c.to_csv())?;
     println!("\ncurves -> results/fig1_*.csv");

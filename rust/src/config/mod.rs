@@ -149,6 +149,14 @@ pub struct ExperimentConfig {
     /// (`--stale-decay`): a contribution `k` rounds stale is weighted by
     /// `stale_decay^k` before renormalization
     pub stale_decay: f64,
+    /// true delayed-gradient staleness (`--delayed-gradients`): the
+    /// driver keeps a ring of round-start model snapshots and a client
+    /// merging `s` rounds stale trains against the snapshot from `s`
+    /// rounds ago — the broadcast it actually pulled — instead of the
+    /// current server model (DESIGN.md §8). Requires `staleness_bound`
+    /// (the snapshot window is the bound). `false` (the default) keeps
+    /// PR 3's cadence-only staleness; `s = 0` is bit-identical either way.
+    pub delayed_gradients: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -182,6 +190,7 @@ impl Default for ExperimentConfig {
             client_speeds: SpeedPreset::Uniform,
             straggler_frac: 0.1,
             stale_decay: 0.5,
+            delayed_gradients: false,
         }
     }
 }
@@ -216,7 +225,7 @@ impl ExperimentConfig {
             "gamma", "lambda", "beta", "server_grad_to_client", "prox_mu",
             "local_epochs", "eval_every", "sparse_eps", "trace",
             "artifacts_dir", "threads", "participation", "staleness_bound",
-            "client_speeds", "straggler_frac", "stale_decay",
+            "client_speeds", "straggler_frac", "stale_decay", "delayed_gradients",
             "budgets.bandwidth_gb", "budgets.client_tflops", "budgets.temp",
         ];
         for k in kv.keys() {
@@ -265,6 +274,7 @@ impl ExperimentConfig {
             client_speeds: kv.get_str("client_speeds", &d.client_speeds.id()).parse()?,
             straggler_frac: kv.get_f64("straggler_frac", d.straggler_frac)?,
             stale_decay: kv.get_f64("stale_decay", d.stale_decay)?,
+            delayed_gradients: kv.get_bool("delayed_gradients", false)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -324,6 +334,11 @@ impl ExperimentConfig {
         ensure!(
             self.stale_decay > 0.0 && self.stale_decay <= 1.0,
             "stale_decay in (0,1]"
+        );
+        ensure!(
+            !self.delayed_gradients || self.staleness_bound.is_some(),
+            "delayed_gradients requires staleness_bound (the version ring \
+             is sized by the bound; without async scheduling nothing is stale)"
         );
         ensure!(
             (0.05..=0.95).contains(&self.mu),
@@ -406,6 +421,13 @@ impl ExperimentConfig {
 
     pub fn with_stale_decay(mut self, decay: f64) -> Self {
         self.stale_decay = decay;
+        self
+    }
+
+    /// `true` turns on per-client model versioning: stale clients train
+    /// against the snapshot they actually pulled (DESIGN.md §8).
+    pub fn with_delayed_gradients(mut self, delayed: bool) -> Self {
+        self.delayed_gradients = delayed;
         self
     }
 
@@ -559,6 +581,31 @@ mod tests {
         assert_eq!(c.staleness_bound, Some(2));
         c.validate().unwrap();
         assert_eq!(c.with_staleness_bound(None).staleness_bound, None);
+    }
+
+    #[test]
+    fn delayed_gradients_key_parses_and_requires_a_bound() {
+        let d = ExperimentConfig::default();
+        assert!(!d.delayed_gradients, "default is cadence-only staleness");
+
+        let c = ExperimentConfig::from_kv_text(
+            "staleness_bound = 2\ndelayed_gradients = true\n",
+        )
+        .unwrap();
+        assert!(c.delayed_gradients);
+        assert_eq!(c.staleness_bound, Some(2));
+
+        // versioning without a staleness bound is a config error, not a
+        // silent no-op
+        assert!(ExperimentConfig::from_kv_text("delayed_gradients = true\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("delayed_gradients = maybe\n").is_err());
+
+        let c = ExperimentConfig::default()
+            .with_staleness_bound(Some(1))
+            .with_delayed_gradients(true);
+        c.validate().unwrap();
+        assert!(c.clone().with_delayed_gradients(false).validate().is_ok());
+        assert!(c.with_staleness_bound(None).validate().is_err());
     }
 
     #[test]

@@ -24,7 +24,12 @@
 //!   bit-identical to the pre-speed-model driver — under uniform speeds);
 //! * `merge_round` / `end_round` run sequentially on the driver thread,
 //!   under the round's published staleness-decay multipliers (DESIGN.md
-//!   §7) when the async scheduler reports stale contributions.
+//!   §7) when the async scheduler reports stale contributions;
+//! * under `--delayed-gradients`, per-participant [`ModelVersion`]
+//!   handles are resolved on the driver thread from the [`SnapshotRing`]
+//!   of round-start broadcast snapshots and shared read-only with the
+//!   workers, so a stale client trains against the model it actually
+//!   pulled without perturbing thread-count invariance (DESIGN.md §8).
 //!
 //! A protocol whose training exchange is inherently sequential (SL-basic,
 //! SplitFed: one shared server model updated per batch) sets
@@ -34,10 +39,12 @@
 mod scheduler;
 mod speed;
 mod store;
+mod versioning;
 
 pub use scheduler::{scheduler_for, AsyncBounded, RoundPlan, SampledSync, Scheduler, SyncAll};
 pub use speed::{ClientSpeeds, SpeedPreset, STRAGGLER_SLOWDOWN};
 pub use store::{scratch_dir, ClientState, ClientStateStore};
+pub use versioning::{resolve_versions, ModelVersion, SnapshotRing};
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -46,6 +53,7 @@ use anyhow::{bail, Result};
 
 use crate::metrics::{CostMeter, RoundStat};
 use crate::protocols::{Env, RunResult};
+use crate::runtime::TensorStore;
 
 // ---- staleness-decay context ----------------------------------------------
 //
@@ -114,6 +122,25 @@ pub struct ClientCtx<'e, 'a> {
     pub step: usize,
     /// The client id this closure is running for.
     pub client: usize,
+    /// Under `--delayed-gradients`, the server broadcast snapshot this
+    /// client actually pulled (round `round - staleness`); `None` when
+    /// the client is fresh or versioning is off — read the protocol's
+    /// live round-start state (DESIGN.md §8).
+    pub version: Option<ModelVersion>,
+}
+
+impl ClientCtx<'_, '_> {
+    /// The server-side store this client's round work reads: the
+    /// versioned snapshot it pulled when the driver handed one, the
+    /// protocol's live round-start store otherwise. Fresh clients take
+    /// the live path, so cadence-only runs are bit-identical to the
+    /// unversioned driver.
+    pub fn server_store<'s>(&'s self, live: &'s TensorStore) -> &'s TensorStore {
+        match &self.version {
+            Some(v) => v.state(),
+            None => live,
+        }
+    }
 }
 
 /// What one client hands back from a round step: the protocol-specific
@@ -178,6 +205,24 @@ pub trait Protocol: Sync {
         true
     }
 
+    /// The server-side state a participant downloads at round start —
+    /// everything `client_round` reads from the server (FL family: the
+    /// round-start global as `pg.*`, plus Scaffold's control variate
+    /// `c.*`). Under `--delayed-gradients` the driver snapshots this
+    /// into the version ring every round and hands stale participants
+    /// the snapshot from the round they actually pulled (DESIGN.md §8).
+    ///
+    /// `None` (the default) declares that clients read no server state
+    /// in `client_round` — AdaSplit's local objective never downloads
+    /// server weights, and SL-basic / SplitFed run their inherently
+    /// sequential exchange against the single live server model — so
+    /// staleness for those protocols stays a participation-cadence
+    /// effect (their per-client state still lags genuinely, because it
+    /// is only touched on participation).
+    fn broadcast_state(&self) -> Option<TensorStore> {
+        None
+    }
+
     /// Per-round setup on the driver thread (round-start snapshots, batch
     /// materialization, scratch resets).
     fn begin_round(&mut self, env: &mut Env, round: usize, participants: &[usize]) -> Result<()> {
@@ -239,6 +284,22 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
         ClientStateStore::new(env.cfg.clients)
     };
     let pool = env.pool();
+    // --delayed-gradients: ring of round-start broadcast snapshots over
+    // the staleness window (O(bound) snapshots). Under per-round sampling
+    // it follows the client-state residency discipline: only the newest
+    // snapshot stays resident, older ones spill to scratch (DESIGN.md §8).
+    let mut ring: Option<SnapshotRing> = if env.cfg.delayed_gradients {
+        let window = env.cfg.staleness_bound.unwrap_or(0) + 1;
+        Some(if env.cfg.participation < 1.0 {
+            // scratch_dir mints a unique directory per call, so the ring
+            // owns (and removes on drop) its whole spill dir
+            SnapshotRing::with_spill(window, scratch_dir(env.cfg.seed))?
+        } else {
+            SnapshotRing::new(window)
+        })
+    } else {
+        None
+    };
 
     for round in 0..env.cfg.rounds {
         let RoundPlan { participants, staleness, sim_time } = scheduler.plan(round);
@@ -254,6 +315,18 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
         }
 
         protocol.begin_round(env, round, &participants)?;
+        // version ring: capture this round's broadcast state, then hand
+        // each stale participant the snapshot it actually pulled (round
+        // `round - s_i`); fresh participants read the live state
+        let versions: Option<Vec<Option<ModelVersion>>> = match ring.as_mut() {
+            Some(ring) => {
+                if let Some(broadcast) = protocol.broadcast_state() {
+                    ring.push(round, broadcast)?;
+                }
+                Some(resolve_versions(ring, round, &staleness)?)
+            }
+            None => None,
+        };
         // stale contributions are down-weighted in the round's merges
         // (round_weights, DESIGN.md §7); fully-fresh rounds skip the scope
         // so the verbatim-weights path stays bit-identical
@@ -266,6 +339,7 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
                 let raw = {
                     let p: &P = protocol;
                     let env_ref: &Env = env;
+                    let versions_ref = &versions;
                     let mut states = store.loaded_mut(&participants)?;
                     pool.run_mut(&mut states, |j, state| {
                         let ctx = ClientCtx {
@@ -273,6 +347,7 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
                             round,
                             step,
                             client: participants[j],
+                            version: versions_ref.as_ref().and_then(|v| v[j].clone()),
                         };
                         p.client_round(&ctx, state)
                     })?

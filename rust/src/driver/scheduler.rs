@@ -56,13 +56,15 @@ pub trait Scheduler: Send {
     /// Advances the scheduler to the next round — call once per round.
     fn plan(&mut self, round: usize) -> RoundPlan;
 
-    /// Ascending client ids participating in `round`. **Consumes a
-    /// `plan` call** — a shorthand for tests/tools, not an idempotent
-    /// peek: mixing it with `plan` for the same round double-advances a
-    /// stateful scheduler's clock.
-    fn participants(&mut self, round: usize) -> Vec<usize> {
-        self.plan(round).participants
-    }
+    /// Ascending client ids that `plan(round)` would select, **without
+    /// advancing the scheduler**: a true peek against the current
+    /// virtual state. Peeking any number of times never perturbs a
+    /// subsequent `plan` stream, and `participants(r)` always equals the
+    /// participants of the `plan(r)` issued next (pinned by the
+    /// `async_clock_unaffected_by_participants_peek` regression test —
+    /// the pre-fix default delegated to `plan`, so mixing the two
+    /// double-advanced a stateful scheduler's clock).
+    fn participants(&self, round: usize) -> Vec<usize>;
 
     /// Clients sampled per round (for reporting).
     fn sampled_per_round(&self) -> usize;
@@ -83,12 +85,15 @@ impl SyncAll {
     }
 
     /// Synchronous rounds timed under a heterogeneous speed model: the
-    /// barrier waits for the slowest device every round.
+    /// barrier waits for the slowest device every round. (The fleet is
+    /// never empty — `clients > 0` is a config invariant, and
+    /// `slowest_duration` asserts it rather than silently freezing the
+    /// clock.)
     pub fn with_speeds(n_clients: usize, speeds: &ClientSpeeds) -> Self {
         let all: Vec<usize> = (0..n_clients).collect();
         Self {
             n: n_clients,
-            round_time: speeds.slowest_duration(&all).max(f64::MIN_POSITIVE),
+            round_time: speeds.slowest_duration(&all),
             clock: 0.0,
         }
     }
@@ -106,6 +111,10 @@ impl Scheduler for SyncAll {
             staleness: vec![0; self.n],
             sim_time: self.clock,
         }
+    }
+
+    fn participants(&self, _round: usize) -> Vec<usize> {
+        (0..self.n).collect()
     }
 
     fn sampled_per_round(&self) -> usize {
@@ -174,12 +183,20 @@ impl Scheduler for SampledSync {
 
     fn plan(&mut self, round: usize) -> RoundPlan {
         let participants = self.sample(round);
-        self.clock += self.speeds.slowest_duration(&participants).max(f64::MIN_POSITIVE);
+        // the sample is never empty (per_round >= 1 by construction), so
+        // the slowest duration is a real positive barrier time
+        self.clock += self.speeds.slowest_duration(&participants);
         RoundPlan {
             staleness: vec![0; participants.len()],
             sim_time: self.clock,
             participants,
         }
+    }
+
+    fn participants(&self, round: usize) -> Vec<usize> {
+        // the per-round sample derives from a round-keyed RNG stream, so
+        // peeking is naturally stateless
+        self.sample(round)
     }
 
     fn sampled_per_round(&self) -> usize {
@@ -255,14 +272,13 @@ impl AsyncBounded {
     pub fn staleness_bound(&self) -> usize {
         self.bound
     }
-}
 
-impl Scheduler for AsyncBounded {
-    fn name(&self) -> &'static str {
-        "async-bounded"
-    }
-
-    fn plan(&mut self, round: usize) -> RoundPlan {
+    /// Round `round`'s full merge computation against the current
+    /// virtual state, *without applying it*: the returned plan's
+    /// `sim_time` is the would-be post-merge server clock. `plan`
+    /// applies the outcome; `participants` discards it, which is what
+    /// makes peeking side-effect free.
+    fn compute(&self, round: usize) -> RoundPlan {
         let r = round as i64;
         let required: Vec<usize> = (0..self.n)
             .filter(|&i| r - self.last_sync[i] > self.bound as i64)
@@ -283,11 +299,11 @@ impl Scheduler for AsyncBounded {
                 .map(|&i| self.ready[i])
                 .fold(f64::NEG_INFINITY, f64::max)
         };
-        self.clock = self.clock.max(trigger);
+        let clock = self.clock.max(trigger);
 
         // arrivals in completion order (id tie-break), required first
         let mut arrived: Vec<usize> =
-            (0..self.n).filter(|&i| self.ready[i] <= self.clock).collect();
+            (0..self.n).filter(|&i| self.ready[i] <= clock).collect();
         arrived.sort_by(|&a, &b| {
             self.ready[a]
                 .partial_cmp(&self.ready[b])
@@ -310,11 +326,27 @@ impl Scheduler for AsyncBounded {
             .iter()
             .map(|&i| (r - 1 - self.last_sync[i]).max(0) as usize)
             .collect();
-        for &i in &merge {
-            self.last_sync[i] = r;
+        RoundPlan { participants: merge, staleness, sim_time: clock }
+    }
+}
+
+impl Scheduler for AsyncBounded {
+    fn name(&self) -> &'static str {
+        "async-bounded"
+    }
+
+    fn plan(&mut self, round: usize) -> RoundPlan {
+        let plan = self.compute(round);
+        self.clock = plan.sim_time;
+        for &i in &plan.participants {
+            self.last_sync[i] = round as i64;
             self.ready[i] = self.clock + self.durations[i];
         }
-        RoundPlan { participants: merge, staleness, sim_time: self.clock }
+        plan
+    }
+
+    fn participants(&self, round: usize) -> Vec<usize> {
+        self.compute(round).participants
     }
 
     fn sampled_per_round(&self) -> usize {
@@ -356,7 +388,7 @@ mod tests {
 
     #[test]
     fn sync_all_selects_everyone() {
-        let mut s = SyncAll::new(4);
+        let s = SyncAll::new(4);
         assert_eq!(s.participants(0), vec![0, 1, 2, 3]);
         assert_eq!(s.participants(17), vec![0, 1, 2, 3]);
         assert_eq!(s.sampled_per_round(), 4);
@@ -384,8 +416,8 @@ mod tests {
 
     #[test]
     fn full_participation_sampling_equals_sync_all() {
-        let mut all = SyncAll::new(6);
-        let mut sampled = SampledSync::new(6, 1.0, 9);
+        let all = SyncAll::new(6);
+        let sampled = SampledSync::new(6, 1.0, 9);
         for round in 0..20 {
             assert_eq!(sampled.participants(round), all.participants(round));
         }
@@ -401,9 +433,9 @@ mod tests {
 
     #[test]
     fn samples_are_sorted_unique_and_deterministic() {
-        let mut a = SampledSync::new(64, 0.25, 7);
-        let mut b = SampledSync::new(64, 0.25, 7);
-        let mut c = SampledSync::new(64, 0.25, 8);
+        let a = SampledSync::new(64, 0.25, 7);
+        let b = SampledSync::new(64, 0.25, 7);
+        let c = SampledSync::new(64, 0.25, 8);
         let mut differs = false;
         for round in 0..50 {
             let pa = a.participants(round);
@@ -420,7 +452,7 @@ mod tests {
 
     #[test]
     fn rounds_draw_different_samples() {
-        let mut s = SampledSync::new(32, 0.5, 3);
+        let s = SampledSync::new(32, 0.5, 3);
         let r0 = s.participants(0);
         let mut any_diff = false;
         for round in 1..10 {
@@ -433,8 +465,8 @@ mod tests {
 
     #[test]
     fn repeated_queries_for_one_round_agree() {
-        // stateless per-round derivation: asking twice is harmless
-        let mut s = SampledSync::new(16, 0.5, 11);
+        // participants() is a non-advancing peek: asking twice is harmless
+        let s = SampledSync::new(16, 0.5, 11);
         assert_eq!(s.participants(3), s.participants(3));
     }
 

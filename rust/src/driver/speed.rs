@@ -158,12 +158,25 @@ impl ClientSpeeds {
     }
 
     /// Longest round duration over a participant set (what a synchronous
-    /// barrier waits for). Empty sets cost nothing.
+    /// barrier waits for).
+    ///
+    /// An empty participant set is a scheduler invariant violation —
+    /// merge sets are never empty (`clients > 0` is validated, sample
+    /// sizes clamp to >= 1, and `AsyncBounded` has the fastest-client
+    /// fallback) — so it trips a debug assertion. In release builds it
+    /// returns `NaN`, which poisons the virtual clock *visibly* (a
+    /// monotonicity check or recorded sim-time comparison fails) instead
+    /// of the old behavior of returning `0.0` and silently freezing the
+    /// clock.
     pub fn slowest_duration(&self, clients: &[usize]) -> f64 {
+        debug_assert!(
+            !clients.is_empty(),
+            "slowest_duration of an empty participant set (scheduler invariant violation)"
+        );
         clients
             .iter()
             .map(|&i| self.round_duration(i))
-            .fold(0.0, f64::max)
+            .fold(f64::NAN, f64::max)
     }
 
     /// Compute-budget multiplier: FLOPs on a slow device cost
@@ -193,7 +206,23 @@ mod tests {
             assert_eq!(s.net_scale(i), 1.0);
         }
         assert_eq!(s.slowest_duration(&[0, 3, 5]), 1.0);
-        assert_eq!(s.slowest_duration(&[]), 0.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "empty participant set")]
+    fn empty_participant_set_trips_the_invariant_assertion() {
+        let s = ClientSpeeds::new(4, SpeedPreset::Uniform, 0.0, 0);
+        let _ = s.slowest_duration(&[]);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn empty_participant_set_poisons_the_clock_in_release() {
+        // release builds surface the violation as NaN (visible downstream)
+        // rather than 0.0 (a silently frozen virtual clock)
+        let s = ClientSpeeds::new(4, SpeedPreset::Uniform, 0.0, 0);
+        assert!(s.slowest_duration(&[]).is_nan());
     }
 
     #[test]

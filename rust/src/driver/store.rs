@@ -383,23 +383,51 @@ fn read_str(r: &mut impl Read) -> Result<String> {
     Ok(String::from_utf8(b)?)
 }
 
+fn write_store(w: &mut impl Write, store: &TensorStore) -> Result<()> {
+    write_u32(w, store.len() as u32)?;
+    for (key, t) in store.iter() {
+        write_str(w, key)?;
+        write_u32(w, t.shape().len() as u32)?;
+        for &d in t.shape() {
+            write_u32(w, d as u32)?;
+        }
+        for &v in t.data() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_store(r: &mut impl Read) -> Result<TensorStore> {
+    let n_tensors = read_u32(r)? as usize;
+    let mut store = TensorStore::new();
+    for _ in 0..n_tensors {
+        let key = read_str(r)?;
+        let ndim = read_u32(r)? as usize;
+        ensure!(ndim <= 8, "spill file: bad rank");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(r)? as usize);
+        }
+        let len: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(len);
+        let mut b = [0u8; 4];
+        for _ in 0..len {
+            r.read_exact(&mut b)?;
+            data.push(f32::from_le_bytes(b));
+        }
+        store.insert(key, Tensor::new(shape, data)?);
+    }
+    Ok(store)
+}
+
 fn write_state(path: &Path, state: &ClientState) -> Result<()> {
     let mut w = BufWriter::new(std::fs::File::create(path)?);
     w.write_all(MAGIC)?;
     write_u32(&mut w, state.parts.len() as u32)?;
     for (slot, store) in state.parts() {
         write_str(&mut w, slot)?;
-        write_u32(&mut w, store.len() as u32)?;
-        for (key, t) in store.iter() {
-            write_str(&mut w, key)?;
-            write_u32(&mut w, t.shape().len() as u32)?;
-            for &d in t.shape() {
-                write_u32(&mut w, d as u32)?;
-            }
-            for &v in t.data() {
-                w.write_all(&v.to_le_bytes())?;
-            }
-        }
+        write_store(&mut w, store)?;
     }
     w.flush()?;
     Ok(())
@@ -414,28 +442,34 @@ fn read_state(path: &Path) -> Result<ClientState> {
     let mut state = ClientState::new();
     for _ in 0..n_parts {
         let slot = read_str(&mut r)?;
-        let n_tensors = read_u32(&mut r)? as usize;
-        let mut store = TensorStore::new();
-        for _ in 0..n_tensors {
-            let key = read_str(&mut r)?;
-            let ndim = read_u32(&mut r)? as usize;
-            ensure!(ndim <= 8, "spill file: bad rank");
-            let mut shape = Vec::with_capacity(ndim);
-            for _ in 0..ndim {
-                shape.push(read_u32(&mut r)? as usize);
-            }
-            let len: usize = shape.iter().product();
-            let mut data = Vec::with_capacity(len);
-            let mut b = [0u8; 4];
-            for _ in 0..len {
-                r.read_exact(&mut b)?;
-                data.push(f32::from_le_bytes(b));
-            }
-            store.insert(key, Tensor::new(shape, data)?);
-        }
-        state.insert(slot, store);
+        state.insert(slot, read_store(&mut r)?);
     }
     Ok(state)
+}
+
+// ---- model-snapshot codec (delayed-gradient version ring) ------------------
+//
+// A driver model snapshot is one bare `TensorStore`; it rides the same
+// bit-exact little-endian container as spilled client state (a single
+// part named `snapshot`), so the version ring inherits the spill codec's
+// round-trip guarantees verbatim.
+
+pub(crate) fn write_snapshot(path: &Path, store: &TensorStore) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, 1)?;
+    write_str(&mut w, "snapshot")?;
+    write_store(&mut w, store)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub(crate) fn read_snapshot(path: &Path) -> Result<TensorStore> {
+    let mut state = read_state(path)?;
+    match state.parts.remove("snapshot") {
+        Some(s) => Ok(s),
+        None => bail!("snapshot file {path:?}: missing `snapshot` part"),
+    }
 }
 
 /// Unique scratch directory for one run's spill files.
@@ -566,6 +600,28 @@ mod tests {
         assert_eq!(seen, (0..5).map(|i| (i, i as f32)).collect::<Vec<_>>());
         assert_eq!(count_files(), 4, "read-only sweep must not consume spill files");
         assert_eq!(store.loaded_ids(), vec![1]);
+    }
+
+    #[test]
+    fn snapshot_codec_roundtrip_is_bit_exact() {
+        let dir = scratch_dir(45);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = TensorStore::new();
+        s.insert(
+            "pg.w",
+            Tensor::new(vec![2, 2], vec![-0.0, 1.5, f32::MIN_POSITIVE / 2.0, -3.25]).unwrap(),
+        );
+        s.insert("c.w", Tensor::scalar(0.125));
+        let path = dir.join("snap_0.bin");
+        write_snapshot(&path, &s).unwrap();
+        let back = read_snapshot(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        let bits = |st: &TensorStore, k: &str| -> Vec<u32> {
+            st.get(k).unwrap().data().iter().map(|v| v.to_bits()).collect()
+        };
+        assert_eq!(bits(&s, "pg.w"), bits(&back, "pg.w"));
+        assert_eq!(bits(&s, "c.w"), bits(&back, "c.w"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Per-client model versioning for true delayed-gradient staleness
+//! (`--delayed-gradients`, DESIGN.md §8).
+//!
+//! PR 3's `AsyncBounded` scheduler models staleness only at the
+//! scheduling level: a client reported `s` rounds stale still trains
+//! against the *current* server model, which is physically impossible on
+//! a real asynchronous fleet — the client pulled its weights `s` rounds
+//! ago and has not seen a broadcast since. This module closes that gap:
+//!
+//! * [`SnapshotRing`] keeps the last `staleness_bound + 1` round-start
+//!   broadcast snapshots (the server-side state a participant downloads,
+//!   [`Protocol::broadcast_state`](crate::driver::Protocol::broadcast_state)).
+//!   Memory is O(bound) snapshots; under per-round sampling the ring
+//!   follows the [`ClientStateStore`](crate::driver::ClientStateStore)
+//!   residency discipline — only the newest snapshot stays resident, the
+//!   rest spill to scratch through the same bit-exact codec as spilled
+//!   client state.
+//! * [`ModelVersion`] is the cheap shareable handle the driver threads
+//!   into each stale participant's `ClientCtx`: the snapshot from round
+//!   `r - s_i`, i.e. the model the client actually pulled.
+//! * [`resolve_versions`] maps one round's staleness vector to handles,
+//!   fetching each distinct version once (at most one disk read per
+//!   spilled snapshot per round).
+//!
+//! Fresh participants (`s = 0`) get no handle and read the protocol's
+//! live round-start state, so the default cadence-only mode and the
+//! `s = 0` degenerate case stay bit-identical to the unversioned driver.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::driver::store::{read_snapshot, write_snapshot};
+use crate::runtime::TensorStore;
+
+/// The server broadcast state one client actually pulled: a shared
+/// handle to the round-`round` snapshot.
+#[derive(Clone)]
+pub struct ModelVersion {
+    round: usize,
+    state: Arc<TensorStore>,
+}
+
+impl ModelVersion {
+    /// The round whose start this snapshot captures (`r - s_i` for a
+    /// participant merging at round `r` with staleness `s_i`).
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// The snapshotted broadcast state (read-only; shared across the
+    /// round's workers).
+    pub fn state(&self) -> &TensorStore {
+        &self.state
+    }
+}
+
+enum Snap {
+    Resident(Arc<TensorStore>),
+    Spilled(PathBuf),
+}
+
+/// Ring of round-start broadcast snapshots, bounded by the staleness
+/// window: after `push(r, ..)` the ring holds rounds
+/// `r - capacity + 1 ..= r`, exactly the versions a round-`r` merge can
+/// reference (`s <= bound`, capacity = bound + 1).
+pub struct SnapshotRing {
+    capacity: usize,
+    entries: VecDeque<(usize, Snap)>,
+    spill_dir: Option<PathBuf>,
+}
+
+impl SnapshotRing {
+    /// All-resident ring (full-participation runs keep O(bound)
+    /// snapshots in memory, mirroring the client-state store).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            entries: VecDeque::new(),
+            spill_dir: None,
+        }
+    }
+
+    /// Ring that keeps only the newest snapshot resident and spills the
+    /// older window to scratch files under `dir` (created here, removed
+    /// on drop) — the residency discipline of a sampled run.
+    pub fn with_spill(capacity: usize, dir: PathBuf) -> Result<Self> {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating snapshot spill dir {dir:?}"))?;
+        Ok(Self {
+            capacity: capacity.max(1),
+            entries: VecDeque::new(),
+            spill_dir: Some(dir),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Snapshots currently resident in memory (introspection / tests).
+    pub fn resident_count(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|(_, s)| matches!(s, Snap::Resident(_)))
+            .count()
+    }
+
+    /// Record round `round`'s broadcast snapshot and evict everything
+    /// that has rotated out of the staleness window. Rounds must be
+    /// pushed in ascending order (the driver's round loop).
+    pub fn push(&mut self, round: usize, state: TensorStore) -> Result<()> {
+        if let Some((last, _)) = self.entries.back() {
+            anyhow::ensure!(
+                *last < round,
+                "snapshot ring: round {round} pushed after round {last}"
+            );
+        }
+        // under spilling only the newest snapshot is resident: write the
+        // previous head out before the new one takes its place
+        if let Some(dir) = self.spill_dir.clone() {
+            if let Some((r, snap)) = self.entries.back_mut() {
+                if let Snap::Resident(state) = snap {
+                    let path = dir.join(format!("snapshot_{r}.bin"));
+                    write_snapshot(&path, state)
+                        .with_context(|| format!("spilling snapshot for round {r}"))?;
+                    *snap = Snap::Spilled(path);
+                }
+            }
+        }
+        self.entries.push_back((round, Snap::Resident(Arc::new(state))));
+        while self.entries.len() > self.capacity {
+            if let Some((_, Snap::Spilled(path))) = self.entries.pop_front() {
+                std::fs::remove_file(path).ok();
+            }
+        }
+        Ok(())
+    }
+
+    /// The snapshot captured at the start of `round`. Spilled snapshots
+    /// are read transiently (the file stays authoritative), so a `get`
+    /// never grows the resident set past the newest snapshot.
+    pub fn get(&self, round: usize) -> Result<ModelVersion> {
+        let Some((_, snap)) = self.entries.iter().find(|(r, _)| *r == round) else {
+            bail!(
+                "snapshot ring: round {round} outside the retained window \
+                 ({:?}..={:?})",
+                self.entries.front().map(|(r, _)| *r),
+                self.entries.back().map(|(r, _)| *r),
+            );
+        };
+        let state = match snap {
+            Snap::Resident(state) => Arc::clone(state),
+            Snap::Spilled(path) => Arc::new(
+                read_snapshot(path)
+                    .with_context(|| format!("reloading snapshot for round {round}"))?,
+            ),
+        };
+        Ok(ModelVersion { round, state })
+    }
+}
+
+impl Drop for SnapshotRing {
+    fn drop(&mut self) {
+        if let Some(dir) = &self.spill_dir {
+            std::fs::remove_dir_all(dir).ok();
+        }
+    }
+}
+
+/// One round's per-participant pulled versions, parallel to `staleness`:
+/// a participant with staleness `s > 0` gets the round-`round - s`
+/// snapshot handle, fresh participants get `None` (read the live state).
+/// An empty ring (the protocol broadcasts no server state — see
+/// [`Protocol::broadcast_state`](crate::driver::Protocol::broadcast_state))
+/// resolves everyone to `None`: staleness stays cadence-only there.
+pub fn resolve_versions(
+    ring: &SnapshotRing,
+    round: usize,
+    staleness: &[usize],
+) -> Result<Vec<Option<ModelVersion>>> {
+    if ring.is_empty() {
+        return Ok(vec![None; staleness.len()]);
+    }
+    let mut cache: BTreeMap<usize, ModelVersion> = BTreeMap::new();
+    staleness
+        .iter()
+        .map(|&s| {
+            if s == 0 {
+                return Ok(None);
+            }
+            let r = round.checked_sub(s).ok_or_else(|| {
+                anyhow::anyhow!("staleness {s} exceeds round index {round}")
+            })?;
+            if let Some(v) = cache.get(&r) {
+                return Ok(Some(v.clone()));
+            }
+            let v = ring.get(r)?;
+            cache.insert(r, v.clone());
+            Ok(Some(v))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::store::scratch_dir;
+    use crate::runtime::Tensor;
+
+    /// A snapshot whose contents identify the round it was taken at.
+    fn snap(round: usize) -> TensorStore {
+        let mut s = TensorStore::new();
+        s.insert("pg.w", Tensor::full(&[3], round as f32));
+        s
+    }
+
+    fn snap_round(v: &ModelVersion) -> f32 {
+        v.state().get("pg.w").unwrap().data()[0]
+    }
+
+    #[test]
+    fn ring_retains_exactly_the_staleness_window() {
+        let mut ring = SnapshotRing::new(3); // bound 2
+        for r in 0..6 {
+            ring.push(r, snap(r)).unwrap();
+        }
+        assert_eq!(ring.len(), 3);
+        for r in 3..6 {
+            let v = ring.get(r).unwrap();
+            assert_eq!(v.round(), r);
+            assert_eq!(snap_round(&v), r as f32);
+        }
+        assert!(ring.get(2).is_err(), "rotated out of the window");
+        assert!(ring.push(5, snap(5)).is_err(), "rounds must ascend");
+    }
+
+    #[test]
+    fn spilling_ring_keeps_one_resident_and_roundtrips_bit_exact() {
+        let dir = scratch_dir(46);
+        let mut ring = SnapshotRing::with_spill(4, dir.clone()).unwrap();
+        let odd = |r: usize| {
+            let mut s = TensorStore::new();
+            s.insert(
+                "pg.w",
+                Tensor::new(vec![3], vec![r as f32, -0.0, f32::MIN_POSITIVE / 2.0]).unwrap(),
+            );
+            s
+        };
+        for r in 0..4 {
+            ring.push(r, odd(r)).unwrap();
+        }
+        assert_eq!(ring.resident_count(), 1, "only the newest stays resident");
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 3);
+        for r in 0..4 {
+            let v = ring.get(r).unwrap();
+            let bits: Vec<u32> =
+                v.state().get("pg.w").unwrap().data().iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> =
+                odd(r).get("pg.w").unwrap().data().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits, want, "round {r} round-trips bit-exact");
+        }
+        // transient reads never consumed the files or grew residency
+        assert_eq!(ring.resident_count(), 1);
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 3);
+        // eviction removes the rotated-out file
+        ring.push(4, odd(4)).unwrap();
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 3, "round 0 file removed");
+        assert!(ring.get(0).is_err());
+        drop(ring);
+        assert!(!dir.exists(), "spill dir removed on drop");
+    }
+
+    #[test]
+    fn resolve_hands_round_minus_s_weights_and_leaves_fresh_clients_live() {
+        let mut ring = SnapshotRing::new(5); // bound 4
+        for r in 0..=5 {
+            ring.push(r, snap(r)).unwrap();
+        }
+        // round 5, participants with staleness [0, 2, 4, 2]
+        let versions = resolve_versions(&ring, 5, &[0, 2, 4, 2]).unwrap();
+        assert!(versions[0].is_none(), "fresh client reads the live state");
+        let v1 = versions[1].as_ref().unwrap();
+        assert_eq!(v1.round(), 3, "s=2 at round 5 pulled round 3");
+        assert_eq!(snap_round(v1), 3.0);
+        let v2 = versions[2].as_ref().unwrap();
+        assert_eq!(v2.round(), 1);
+        assert_eq!(snap_round(v2), 1.0);
+        // equal staleness shares one fetched handle
+        let v3 = versions[3].as_ref().unwrap();
+        assert!(Arc::ptr_eq(&v1.state, &v3.state), "distinct versions fetched once");
+        // a staleness outside the retained window is an invariant violation
+        assert!(resolve_versions(&ring, 5, &[5]).is_err());
+    }
+
+    #[test]
+    fn empty_ring_resolves_everyone_to_cadence_only() {
+        let ring = SnapshotRing::new(3);
+        let versions = resolve_versions(&ring, 7, &[0, 2, 3]).unwrap();
+        assert!(versions.iter().all(|v| v.is_none()));
+    }
+}

@@ -61,6 +61,15 @@ RUN OPTIONS:
                          protocols (FL family, SplitFed) — AdaSplit and
                          SL-basic see staleness only as participation
                          cadence (DESIGN.md §7)              [0.5]
+  --delayed-gradients    true delayed-gradient staleness: a client merging
+                         S rounds stale trains against the model snapshot
+                         it pulled S rounds ago (per-client versioning,
+                         DESIGN.md §8) instead of the current one; needs
+                         --staleness-bound. Off = cadence-only (PR 3).
+                         Affects protocols whose clients download server
+                         state (the FL family); AdaSplit / SL-basic /
+                         SplitFed clients pull none, so they stay
+                         cadence-only by construction
   --threads N            engine worker threads (0 = host parallelism) [0]
   --curve-out PATH       write the per-round curve CSV
   --trace                print per-iteration orchestrator traces
@@ -72,6 +81,7 @@ COMPARE OPTIONS:
   --client-speeds M      per-client speed model (see RUN)  [uniform]
   --straggler-frac F     stragglers-preset slow fraction       [0.1]
   --stale-decay D        staleness down-weight (see RUN)       [0.5]
+  --delayed-gradients    per-client model versioning (see RUN)
   --threads N            worker threads per run; protocols also run
                          concurrently across the pool      [0 = auto]
 ";
@@ -157,7 +167,7 @@ fn main() -> Result<()> {
 }
 
 fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
-    let args = Args::parse(argv, &["trace", "server-grad"])?;
+    let args = Args::parse(argv, &["trace", "server-grad", "delayed-gradients"])?;
     let mut cfg = match args.get("config") {
         Some(path) => ExperimentConfig::load_toml(path)?,
         None => {
@@ -219,6 +229,7 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
     if let Some(v) = args.parsed("threads")? {
         cfg.threads = v;
     }
+    cfg.delayed_gradients |= args.has("delayed-gradients");
     cfg.server_grad_to_client |= args.has("server-grad");
     cfg.trace |= args.has("trace");
     cfg.artifacts_dir = artifacts.to_string();
@@ -266,8 +277,13 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
             ProtocolKind::AdaSplit | ProtocolKind::SlBasic => " (cadence-only here)",
             _ => "",
         };
+        let mode = if cfg.delayed_gradients {
+            "true-delay (versioned snapshots)"
+        } else {
+            "cadence-only"
+        };
         println!(
-            "async-bounded: staleness bound {bound} (max merged {max_stale}), \
+            "async-bounded [{mode}]: staleness bound {bound} (max merged {max_stale}), \
              speeds {}, decay {:.2}{decay_note}, simulated wall-clock {:.2} vs {} synchronous rounds",
             cfg.client_speeds.id(),
             cfg.stale_decay,
@@ -283,7 +299,7 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
 }
 
 fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &[])?;
+    let args = Args::parse(argv, &["delayed-gradients"])?;
     let dataset: DatasetKind = args.get("dataset").unwrap_or("mixed-cifar").parse()?;
     let rounds = args.parsed("rounds")?.unwrap_or(10);
     let samples = args.parsed("samples")?.unwrap_or(256);
@@ -296,6 +312,7 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
         args.parsed("client-speeds")?.unwrap_or(SpeedPreset::Uniform);
     let straggler_frac = args.parsed("straggler-frac")?.unwrap_or(0.1f64);
     let stale_decay = args.parsed("stale-decay")?.unwrap_or(0.5f64);
+    let delayed_gradients = args.has("delayed-gradients");
     let seed_list: Vec<u64> = (0..n_seeds as u64).collect();
 
     let budget = adasplit::engine::ClientPool::new(threads).threads();
@@ -311,9 +328,13 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
                 .with_client_speeds(client_speeds)
                 .with_straggler_frac(straggler_frac)
                 .with_stale_decay(stale_decay)
+                .with_delayed_gradients(delayed_gradients)
                 .with_threads(per_protocol)
         })
         .collect();
+    for cfg in &cfgs {
+        cfg.validate()?;
+    }
 
     // protocol runs are independent: fan them out across the pool. Each
     // run pushes its "done" line through an order-preserving progress

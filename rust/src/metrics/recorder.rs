@@ -198,4 +198,35 @@ mod tests {
         assert!(text.contains("accuracy_pct"));
         std::fs::remove_dir_all(&dir).ok();
     }
+
+    #[test]
+    fn csv_header_and_every_row_have_the_same_column_count() {
+        // the header literal and the row format string are maintained by
+        // hand: a field added to `RoundStat` and threaded into only one
+        // of them would silently skew every downstream CSV consumer, so
+        // pin that they always agree column-for-column
+        let mut r = Recorder::new(false);
+        r.push(stat(0, 10.0));
+        r.push(stat(1, 55.5));
+        r.push(stat(2, 42.0));
+        let dir = std::env::temp_dir().join("adasplit_test_csv_columns");
+        let path = dir.join("curve.csv");
+        r.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let header = lines.next().expect("header line");
+        let columns = header.split(',').count();
+        assert!(columns >= 12, "expected the full RoundStat column set");
+        let mut rows = 0;
+        for (i, line) in lines.enumerate() {
+            assert_eq!(
+                line.split(',').count(),
+                columns,
+                "row {i} column count != header ({header})"
+            );
+            rows += 1;
+        }
+        assert_eq!(rows, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

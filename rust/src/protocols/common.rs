@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::data::{Batch, BatchIter, Partition, Rng};
-use crate::driver::{ClientState, ClientStateStore};
+use crate::driver::{ClientCtx, ClientState, ClientStateStore};
 use crate::engine::{par_clients, ClientPool, ParallelEnv};
 use crate::metrics::{AccuracyAccum, CostMeter, Recorder};
 use crate::model::ModelSpec;
@@ -231,6 +231,21 @@ pub fn eval_fl(env: &Env, fl_eval: &Artifact, global_p: &TensorStore) -> Result<
         acc.merge(part);
     }
     Ok(acc)
+}
+
+/// The round-start server store one client's `client_round` reads: the
+/// versioned snapshot the client actually pulled when the driver runs
+/// with `--delayed-gradients` and the scheduler reports it stale
+/// (`ClientCtx::version`, DESIGN.md §8), the protocol's live store
+/// otherwise. Protocols route every server-side read in `client_round`
+/// through this, so true delayed-gradient semantics need no per-protocol
+/// loop changes — and fresh clients take the live path, keeping the
+/// cadence-only mode bit-identical.
+pub fn round_server_store<'s>(
+    ctx: &'s ClientCtx<'_, '_>,
+    live: &'s TensorStore,
+) -> &'s TensorStore {
+    ctx.server_store(live)
 }
 
 /// Copy tensors from `src` to `dst`, rewriting a key prefix

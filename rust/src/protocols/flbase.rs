@@ -23,6 +23,14 @@
 //! set trains and aggregation weights renormalize over it (with full
 //! participation the original weights are used verbatim, keeping
 //! `participation = 1.0` bit-identical to the pre-redesign loop).
+//!
+//! Every server-side read in `client_round` (the `pg.*` round-start
+//! global and Scaffold's `c.*`) goes through [`round_server_store`], so
+//! under `--delayed-gradients` a stale client genuinely trains against
+//! the broadcast it pulled `s` rounds ago ([`Protocol::broadcast_state`],
+//! DESIGN.md §8); the resulting stale model/variate deltas then merge
+//! into the *current* server state, down-weighted by the PR 3 decay
+//! scope — classic delayed-gradient application.
 
 use std::sync::Arc;
 
@@ -30,7 +38,7 @@ use anyhow::Result;
 
 use crate::driver::{ClientCtx, ClientState, ClientStateStore, ClientUpdate, Protocol, RoundReport};
 use crate::protocols::common::{
-    copy_prefixed, data_weights, eval_fl, round_weights, zeros_prefixed, Env,
+    copy_prefixed, data_weights, eval_fl, round_server_store, round_weights, zeros_prefixed, Env,
 };
 use crate::runtime::{Artifact, Tensor, TensorStore};
 
@@ -182,6 +190,20 @@ impl Protocol for FlProtocol {
         Ok(state)
     }
 
+    fn broadcast_state(&self) -> Option<TensorStore> {
+        // what a client downloads at round start: the round-start global
+        // (under the `pg.*` keys the step artifact reads) plus the server
+        // control variate `c.*` (zeros unless Scaffold). The driver
+        // snapshots this under --delayed-gradients so a stale client
+        // trains against the global it actually pulled.
+        let mut b = TensorStore::new();
+        copy_prefixed(&self.global, "p", &mut b, "pg");
+        for (k, v) in self.c_store.iter() {
+            b.insert(k.clone(), v.clone());
+        }
+        Some(b)
+    }
+
     fn begin_round(
         &mut self,
         _env: &mut Env,
@@ -205,9 +227,16 @@ impl Protocol for FlProtocol {
         let i = ctx.client;
         let (cs, ci) = state.pair_mut("model", "ci")?;
 
-        // download the global model
+        // round-start server state: the versioned snapshot this client
+        // actually pulled under --delayed-gradients, the live round-start
+        // stores otherwise. `pg.*` is begin_round's copy of the global
+        // `p.*`, so the live path reads the same bits as before.
+        let pg_store = round_server_store(ctx, &self.pg_store);
+        let c_store = round_server_store(ctx, &self.c_store);
+
+        // download the (possibly stale) global model
         for s in &self.suffixes {
-            let t = self.global.get(&format!("p.{s}"))?.clone();
+            let t = pg_store.get(&format!("pg.{s}"))?.clone();
             cs.insert(format!("state.p.{s}"), t);
         }
 
@@ -217,7 +246,7 @@ impl Protocol for FlProtocol {
         for _epoch in 0..env.cfg.local_epochs {
             for b in env.train_batches(i, ctx.round) {
                 let mut out = self.fl_step.call(
-                    &[&*cs, &self.pg_store, &self.c_store, &*ci],
+                    &[&*cs, pg_store, c_store, &*ci],
                     &[("prox_mu", &self.prox_mu), ("x", &b.x), ("y", &b.y)],
                 )?;
                 out.write_state(cs);
@@ -233,9 +262,9 @@ impl Protocol for FlProtocol {
             let scale = 1.0 / (tau as f32 * self.lr);
             let mut deltas = TensorStore::new();
             for s in &self.suffixes {
-                let pg = self.pg_store.get(&format!("pg.{s}"))?;
+                let pg = pg_store.get(&format!("pg.{s}"))?;
                 let pi = cs.get(&format!("state.p.{s}"))?;
-                let cg = self.c_store.get(&format!("c.{s}"))?;
+                let cg = c_store.get(&format!("c.{s}"))?;
                 let civ = ci.get_mut(&format!("ci.{s}"))?;
                 let ci_old = civ.clone();
                 civ.axpy(-1.0, cg)?;

@@ -36,7 +36,7 @@ use crate::util::Json;
 
 pub use common::{
     copy_prefixed, data_weights, eval_fl, eval_split, eval_split_client, eval_split_streamed,
-    round_weights, zeros_prefixed, Env,
+    round_server_store, round_weights, zeros_prefixed, Env,
 };
 
 /// Outcome of one protocol run.
@@ -65,6 +65,14 @@ pub struct RunResult {
     /// (the scheduler's virtual clock at the last merge; `rounds` for a
     /// synchronous run over uniform client speeds)
     pub sim_time: f64,
+    /// staleness of the stalest contribution merged anywhere in the run,
+    /// in rounds (0 for every synchronous scheduler; never exceeds the
+    /// `AsyncBounded` staleness bound)
+    pub max_staleness: usize,
+    /// staleness-versioning mode: `true` = per-client model versioning
+    /// (`--delayed-gradients`, stale clients trained against the snapshot
+    /// they pulled); `false` = PR 3 cadence-only staleness
+    pub delayed_gradients: bool,
 }
 
 impl RunResult {
@@ -88,6 +96,8 @@ impl RunResult {
         );
         m.insert("scheduler".into(), Json::Str(self.scheduler.clone()));
         m.insert("sim_time".into(), Json::Num(self.sim_time));
+        m.insert("max_staleness".into(), Json::Num(self.max_staleness as f64));
+        m.insert("delayed_gradients".into(), Json::Bool(self.delayed_gradients));
         Json::Obj(m)
     }
 
@@ -125,6 +135,8 @@ impl RunResult {
             sampled_clients_per_round,
             scheduler: scheduler.to_string(),
             sim_time: recorder.rounds.last().map(|r| r.sim_time).unwrap_or(0.0),
+            max_staleness: recorder.rounds.iter().map(|r| r.max_staleness).max().unwrap_or(0),
+            delayed_gradients: env.cfg.delayed_gradients,
         }
     }
 }
@@ -206,6 +218,38 @@ pub fn run_seeds(
     let results: Vec<RunResult> = par_indexed(outer, seeds.len(), |j| {
         run_protocol(rt, &run_cfg.clone().with_seed(seeds[j]))
     })?;
+    aggregate_seed_results(&results, &cfg.budgets)
+}
+
+/// Fold per-seed [`RunResult`]s into one aggregate row (+ accuracy std).
+///
+/// Aggregation semantics, per field class:
+/// * **means** — accuracies, resources, `sim_time`, sampled clients:
+///   scalar metrics that vary with the seed average coherently;
+/// * **max-of-max** — `max_staleness` is already a per-run maximum, so
+///   the aggregate reports the stalest merge across *all* seeds (an
+///   averaged maximum would understate the bound actually exercised);
+/// * **invariants** — `scheduler` and `delayed_gradients` are functions
+///   of the config, not the seed: all runs must agree, and the aggregate
+///   carries the shared value (checked, so a future seed-dependent
+///   scheduler choice fails loudly instead of reporting seed 0's).
+pub fn aggregate_seed_results(
+    results: &[RunResult],
+    budgets: &crate::metrics::Budgets,
+) -> Result<(RunResult, f64)> {
+    ensure!(!results.is_empty(), "aggregate needs at least one result");
+    for r in results {
+        ensure!(
+            r.scheduler == results[0].scheduler,
+            "seed runs disagree on scheduler: `{}` vs `{}`",
+            results[0].scheduler,
+            r.scheduler
+        );
+        ensure!(
+            r.delayed_gradients == results[0].delayed_gradients,
+            "seed runs disagree on the delayed-gradients mode"
+        );
+    }
     let accs: Vec<f64> = results.iter().map(|r| r.best_accuracy).collect();
     let (mean, std) = crate::metrics::mean_std(&accs);
     let avg = |f: fn(&RunResult) -> f64| -> f64 {
@@ -220,6 +264,64 @@ pub fn run_seeds(
     agg.mask_density = avg(|r| r.mask_density);
     agg.sampled_clients_per_round = avg(|r| r.sampled_clients_per_round);
     agg.sim_time = avg(|r| r.sim_time);
-    agg.c3_score = c3_score(mean, agg.bandwidth_gb, agg.client_tflops, &cfg.budgets);
+    agg.max_staleness = results.iter().map(|r| r.max_staleness).max().unwrap_or(0);
+    agg.c3_score = c3_score(mean, agg.bandwidth_gb, agg.client_tflops, budgets);
     Ok((agg, std))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Budgets;
+
+    fn result(best: f64, sim: f64, max_stale: usize, scheduler: &str, delayed: bool) -> RunResult {
+        RunResult {
+            protocol: "FedAvg".into(),
+            dataset: "MixedCIFAR".into(),
+            accuracy: best - 1.0,
+            best_accuracy: best,
+            bandwidth_gb: 2.0,
+            client_tflops: 1.0,
+            total_tflops: 3.0,
+            c3_score: 0.0,
+            mask_density: 1.0,
+            rounds: 4,
+            participation: 1.0,
+            sampled_clients_per_round: 5.0,
+            scheduler: scheduler.into(),
+            sim_time: sim,
+            max_staleness: max_stale,
+            delayed_gradients: delayed,
+        }
+    }
+
+    #[test]
+    fn seed_aggregation_means_maxes_and_invariants() {
+        let budgets = Budgets::paper_mixed_cifar();
+        let results = vec![
+            result(60.0, 8.0, 1, "async-bounded", true),
+            result(70.0, 12.0, 3, "async-bounded", true),
+        ];
+        let (agg, std) = aggregate_seed_results(&results, &budgets).unwrap();
+        assert_eq!(agg.best_accuracy, 65.0, "best accuracy is the mean");
+        assert_eq!(agg.accuracy, 64.0);
+        assert_eq!(agg.sim_time, 10.0, "sim_time averages across seeds");
+        assert_eq!(agg.max_staleness, 3, "max-of-max, not mean or seed 0's");
+        assert_eq!(agg.scheduler, "async-bounded");
+        assert!(agg.delayed_gradients);
+        assert!(std > 0.0);
+
+        // config-derived fields must agree across seeds
+        let mixed = vec![
+            result(60.0, 8.0, 1, "async-bounded", true),
+            result(70.0, 12.0, 3, "sync-all", true),
+        ];
+        assert!(aggregate_seed_results(&mixed, &budgets).is_err());
+        let mixed_mode = vec![
+            result(60.0, 8.0, 1, "async-bounded", true),
+            result(70.0, 12.0, 3, "async-bounded", false),
+        ];
+        assert!(aggregate_seed_results(&mixed_mode, &budgets).is_err());
+        assert!(aggregate_seed_results(&[], &budgets).is_err());
+    }
 }

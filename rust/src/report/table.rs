@@ -139,6 +139,8 @@ mod tests {
             sampled_clients_per_round: 5.0,
             scheduler: "sync-all".into(),
             sim_time: 5.0,
+            max_staleness: 0,
+            delayed_gradients: false,
         }
     }
 

@@ -7,11 +7,14 @@
 //! otherwise, matching the other integration suites.
 
 use adasplit::config::{ExperimentConfig, ProtocolKind};
-use adasplit::driver::{AsyncBounded, ClientSpeeds, SampledSync, Scheduler, SpeedPreset, SyncAll};
+use adasplit::driver::{
+    resolve_versions, AsyncBounded, ClientSpeeds, SampledSync, Scheduler, SnapshotRing,
+    SpeedPreset, SyncAll,
+};
 use adasplit::engine::{par_indexed, par_slice_mut, ClientPool};
 use adasplit::metrics::{AccuracyAccum, CostMeter};
 use adasplit::protocols::{run_protocol, RunResult};
-use adasplit::runtime::Runtime;
+use adasplit::runtime::{Runtime, Tensor, TensorStore};
 
 fn assert_results_identical(a: &RunResult, b: &RunResult, what: &str) {
     assert_eq!(a.accuracy, b.accuracy, "{what} accuracy");
@@ -26,6 +29,7 @@ fn assert_results_identical(a: &RunResult, b: &RunResult, what: &str) {
         "{what} sampled_clients_per_round"
     );
     assert_eq!(a.sim_time, b.sim_time, "{what} sim_time");
+    assert_eq!(a.max_staleness, b.max_staleness, "{what} max_staleness");
 }
 
 // ---- pure engine determinism (no artifacts required) ----------------------
@@ -133,8 +137,8 @@ fn pool_is_usable_concurrently_with_shared_state() {
 fn sampled_sync_at_full_participation_equals_sync_all() {
     // the p = 1.0 degenerate case must be *exactly* SyncAll so that
     // `--participation 1.0` is bit-identical to the default scheduler
-    let mut all = SyncAll::new(9);
-    let mut sampled = SampledSync::new(9, 1.0, 123);
+    let all = SyncAll::new(9);
+    let sampled = SampledSync::new(9, 1.0, 123);
     for round in 0..32 {
         assert_eq!(sampled.participants(round), all.participants(round));
     }
@@ -146,7 +150,7 @@ fn sampled_sync_is_invocation_deterministic() {
     // sample stream — the basis of repeat-run determinism; thread-count
     // invariance is automatic because sampling runs on the driver thread
     let draws = |seed: u64| -> Vec<Vec<usize>> {
-        let mut s = SampledSync::new(200, 0.25, seed);
+        let s = SampledSync::new(200, 0.25, seed);
         (0..16).map(|r| s.participants(r)).collect()
     };
     assert_eq!(draws(5), draws(5));
@@ -197,6 +201,53 @@ fn async_bounded_plan_stream_is_invocation_deterministic() {
         assert!(participants.windows(2).all(|w| w[0] < w[1]), "ascending unique");
         assert!(staleness.iter().all(|&st| st <= 2), "bound respected");
     }
+}
+
+#[test]
+fn async_clock_unaffected_by_participants_peek() {
+    // `Scheduler::participants` is a non-advancing peek: interleaving it
+    // with `plan` must leave a stateful scheduler's plan stream (clients,
+    // staleness, virtual clock) bit-identical to a peek-free run
+    let speeds = ClientSpeeds::new(24, SpeedPreset::Stragglers, 0.3, 7);
+    let mut clean = AsyncBounded::new(24, 3, 0.5, &speeds);
+    let mut peeked = AsyncBounded::new(24, 3, 0.5, &speeds);
+    for round in 0..40 {
+        let peek = peeked.participants(round);
+        assert_eq!(peek, peeked.participants(round), "round {round}: peeks agree");
+        let a = clean.plan(round);
+        let b = peeked.plan(round);
+        assert_eq!(peek, b.participants, "round {round}: peek == next plan");
+        assert_eq!(a.participants, b.participants, "round {round}");
+        assert_eq!(a.staleness, b.staleness, "round {round}");
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "round {round}");
+    }
+}
+
+// ---- delayed-gradient version resolution (no artifacts required) ----------
+
+#[test]
+fn delayed_version_resolution_hands_round_minus_s_weights() {
+    // the tentpole contract in miniature: at round r, a participant the
+    // scheduler reports s rounds stale is handed the broadcast snapshot
+    // from round r - s — the model it actually pulled — while fresh
+    // participants read the live state (no handle)
+    let mut ring = SnapshotRing::new(4); // staleness bound 3
+    for r in 0..8usize {
+        let mut snap = TensorStore::new();
+        snap.insert("pg.w", Tensor::full(&[2], r as f32));
+        ring.push(r, snap).unwrap();
+    }
+    let versions = resolve_versions(&ring, 7, &[0, 1, 3, 1]).unwrap();
+    assert!(versions[0].is_none(), "fresh participant reads the live model");
+    let v = versions[1].as_ref().unwrap();
+    assert_eq!(v.round(), 6, "s=1 at round 7 pulled round 6");
+    assert_eq!(v.state().get("pg.w").unwrap().data(), &[6.0, 6.0]);
+    let v = versions[2].as_ref().unwrap();
+    assert_eq!(v.round(), 4, "s=3 at round 7 pulled round 4");
+    assert_eq!(v.state().get("pg.w").unwrap().data(), &[4.0, 4.0]);
+    assert_eq!(versions[3].as_ref().unwrap().round(), 6);
+    // a version past the retained window is an invariant violation
+    assert!(resolve_versions(&ring, 7, &[4]).is_err());
 }
 
 // ---- full-protocol equivalence (requires `make artifacts`) ----------------
@@ -438,6 +489,124 @@ fn async_runs_are_repeat_invocation_deterministic() {
     let a = run_protocol(&rt, &cfg).unwrap();
     let b = run_protocol(&rt, &cfg).unwrap();
     assert_results_identical(&a, &b, "repeat invocation");
+    let mut other_seed = cfg.clone();
+    other_seed.seed = 9;
+    let c = run_protocol(&rt, &other_seed).unwrap();
+    assert!(
+        a.sim_time != c.sim_time || a.accuracy != c.accuracy,
+        "different seed should draw different speeds/schedules"
+    );
+}
+
+// ---- delayed-gradient versioning end-to-end (requires `make artifacts`) ---
+
+#[test]
+fn delayed_s0_remains_bit_identical_for_every_protocol() {
+    // acceptance criterion: with --delayed-gradients off (the default —
+    // literally the unversioned code path) and with --staleness-bound 0
+    // (everything fresh, the ring is pushed but never read), all seven
+    // protocols reproduce the synchronous baseline bit-for-bit
+    let Some(rt) = runtime() else { return };
+    for p in ProtocolKind::ALL {
+        let base = run_protocol(&rt, &quick(p, 2)).unwrap();
+        let mut s0 = quick(p, 2);
+        s0.staleness_bound = Some(0);
+        let cadence0 = run_protocol(&rt, &s0).unwrap();
+        let mut v0 = s0.clone();
+        v0.delayed_gradients = true;
+        let versioned0 = run_protocol(&rt, &v0).unwrap();
+        assert_results_identical(&base, &cadence0, p.name());
+        assert_results_identical(&base, &versioned0, p.name());
+        assert!(versioned0.delayed_gradients && !cadence0.delayed_gradients);
+        assert_eq!(versioned0.max_staleness, 0, "{} s=0 is all-fresh", p.name());
+    }
+}
+
+#[test]
+fn delayed_gradients_change_fl_training_but_not_costs_or_schedule() {
+    // with real staleness, true delayed gradients must train FedAvg
+    // against *different* weights than the cadence-only approximation —
+    // while the schedule (participants, staleness, sim-time) and every
+    // metered cost stay identical, because versioning changes which
+    // bits a client trains on, not what work is done
+    let Some(rt) = runtime() else { return };
+    let mut cadence_cfg = quick(ProtocolKind::FedAvg, 2);
+    cadence_cfg.clients = 8;
+    cadence_cfg.staleness_bound = Some(2);
+    cadence_cfg.client_speeds = SpeedPreset::Stragglers;
+    cadence_cfg.straggler_frac = 0.25;
+    let mut delayed_cfg = cadence_cfg.clone();
+    delayed_cfg.delayed_gradients = true;
+    let (cadence, cadence_rec) =
+        adasplit::protocols::run_protocol_recorded(&rt, &cadence_cfg).unwrap();
+    let (delayed, delayed_rec) =
+        adasplit::protocols::run_protocol_recorded(&rt, &delayed_cfg).unwrap();
+    assert_eq!(cadence.bandwidth_gb, delayed.bandwidth_gb, "same bytes moved");
+    assert_eq!(cadence.client_tflops, delayed.client_tflops, "same client work");
+    assert_eq!(cadence.total_tflops, delayed.total_tflops, "same total work");
+    assert_eq!(cadence.sim_time, delayed.sim_time, "same virtual clock");
+    assert_eq!(cadence.max_staleness, delayed.max_staleness, "same schedule");
+    // divergence is asserted on the continuous train-loss trajectory, not
+    // the coarse eval accuracy (two different weight trajectories can tie
+    // on a tiny test set's argmax count)
+    let losses = |rec: &adasplit::metrics::Recorder| -> Vec<u64> {
+        rec.rounds.iter().map(|r| r.train_loss.to_bits()).collect()
+    };
+    let max_stale = cadence_rec.rounds.iter().map(|r| r.max_staleness).max().unwrap_or(0);
+    if max_stale > 0 {
+        assert_ne!(
+            losses(&cadence_rec),
+            losses(&delayed_rec),
+            "true delay (max staleness {max_stale}) must train against different weights"
+        );
+    } else {
+        // nothing went stale under this seed: the modes must then agree
+        assert_eq!(cadence.accuracy, delayed.accuracy);
+        assert_eq!(losses(&cadence_rec), losses(&delayed_rec));
+    }
+}
+
+#[test]
+fn delayed_runs_are_thread_count_invariant_for_every_protocol() {
+    // version handles are resolved on the driver thread and shared
+    // read-only with the workers, so the versioned run must stay
+    // bit-identical across worker counts — including the protocols whose
+    // versioning degenerates to cadence-only (no broadcast state)
+    let Some(rt) = runtime() else { return };
+    for p in ProtocolKind::ALL {
+        let mut serial_cfg = quick(p, 1);
+        serial_cfg.clients = 8;
+        serial_cfg.staleness_bound = Some(2);
+        serial_cfg.client_speeds = SpeedPreset::Stragglers;
+        serial_cfg.straggler_frac = 0.25;
+        serial_cfg.delayed_gradients = true;
+        let mut par_cfg = serial_cfg.clone();
+        par_cfg.threads = 4;
+        let serial = run_protocol(&rt, &serial_cfg).unwrap();
+        let par = run_protocol(&rt, &par_cfg).unwrap();
+        assert_results_identical(&serial, &par, p.name());
+    }
+}
+
+#[test]
+fn delayed_with_sampling_spills_snapshots_and_stays_deterministic() {
+    // async + participation cap + spilling client store + the *spilling
+    // snapshot ring* all at once: repeated invocations must agree
+    // bit-for-bit (spilled snapshots round-trip exactly), and a
+    // different seed must diverge
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick(ProtocolKind::Scaffold, 2);
+    cfg.clients = 16;
+    cfg.participation = 0.5;
+    cfg.staleness_bound = Some(3);
+    cfg.client_speeds = SpeedPreset::Lognormal { sigma: 0.6 };
+    cfg.delayed_gradients = true;
+    cfg.samples_per_client = 32;
+    cfg.test_per_client = 32;
+    let a = run_protocol(&rt, &cfg).unwrap();
+    let b = run_protocol(&rt, &cfg).unwrap();
+    assert_results_identical(&a, &b, "repeat invocation");
+    assert!(a.delayed_gradients);
     let mut other_seed = cfg.clone();
     other_seed.seed = 9;
     let c = run_protocol(&rt, &other_seed).unwrap();
