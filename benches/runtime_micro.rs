@@ -8,8 +8,9 @@
 //! throughput over the threads axis, the deterministic mask-density
 //! trajectory of a tiny AdaSplit run, the async-scheduler axis — the
 //! deterministic `AsyncBounded` sim-time trajectory plus its planning
-//! throughput — and the delayed-gradient snapshot-ring axis: all pure
-//! Rust, so they measure and check even on artifact-less runners).
+//! throughput — the delayed-gradient snapshot-ring axis, and the
+//! adaptive-bound controller axis (`bound_controller_steps_per_s`): all
+//! pure Rust, so they measure and check even on artifact-less runners).
 //! Default mode rewrites the file; `--check` compares against it
 //! instead — trajectories must match exactly (they are deterministic),
 //! throughput may not grossly regress, and the tracked file must carry
@@ -20,7 +21,10 @@ use std::collections::BTreeMap;
 
 use adasplit::config::ExperimentConfig;
 use adasplit::data::{build_partition, DatasetKind, Rng, SyntheticDataset};
-use adasplit::driver::{AsyncBounded, ClientSpeeds, Scheduler, SnapshotRing, SpeedPreset};
+use adasplit::driver::{
+    AsyncBounded, BoundController, ClientSpeeds, Scheduler, SnapshotRing, SpeedPreset,
+    WindowDelta,
+};
 use adasplit::engine::ClientPool;
 use adasplit::orchestrator::UcbOrchestrator;
 use adasplit::protocols::{run_protocol_recorded, Env};
@@ -70,6 +74,27 @@ fn snapshot_ring_bench(iters: usize) -> BenchStats {
     })
 }
 
+/// Bound-controller throughput (controller steps/s): one C3-shaped
+/// reward + UCB arm re-selection per step over the default five-arm set
+/// — the adaptive-bound hot path on the driver thread (one step per
+/// adaptation window). Pure Rust, so it measures and checks even on
+/// artifact-less runners.
+fn bound_controller_bench(iters: usize) -> BenchStats {
+    let budgets = adasplit::metrics::Budgets::paper_mixed_cifar();
+    bench("coord: bound controller observe+select x1000", 1, iters, || {
+        let mut c = BoundController::new(8, 5, 7, budgets);
+        for w in 0..1000u64 {
+            let d = WindowDelta {
+                d_accuracy_pct: (w % 7) as f64 * 0.3,
+                d_sim_time: 5.0 / (1.0 + c.current_bound() as f64),
+                d_bandwidth_gb: 0.4,
+                d_client_tflops: 0.2,
+            };
+            std::hint::black_box(c.observe_window(&d));
+        }
+    })
+}
+
 fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
     let md = tracked
         .opt("async_sim_time")
@@ -85,6 +110,11 @@ fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
         tracked.opt("snapshot_ring_rounds_per_s").is_some(),
         "tracked {TRACK_FILE} is missing `snapshot_ring_rounds_per_s` \
          (delayed-gradient snapshot-ring axis); re-record with the bench"
+    );
+    anyhow::ensure!(
+        tracked.opt("bound_controller_steps_per_s").is_some(),
+        "tracked {TRACK_FILE} is missing `bound_controller_steps_per_s` \
+         (adaptive-bound controller axis); re-record with the bench"
     );
     let old: Vec<f64> = md
         .as_arr()?
@@ -118,6 +148,7 @@ fn results_json(
     async_sim: &[f64],
     async_plan: &BenchStats,
     snap_ring: &BenchStats,
+    bound_ctrl: &BenchStats,
     n_par: usize,
     quick: bool,
 ) -> Json {
@@ -149,6 +180,10 @@ fn results_json(
     m.insert(
         "snapshot_ring_rounds_per_s".into(),
         Json::Num(64.0 / snap_ring.mean_s),
+    );
+    m.insert(
+        "bound_controller_steps_per_s".into(),
+        Json::Num(1000.0 / bound_ctrl.mean_s),
     );
     Json::Obj(m)
 }
@@ -257,6 +292,8 @@ fn main() -> anyhow::Result<()> {
     stats.push(async_plan.clone());
     let snap_ring = snapshot_ring_bench(iters);
     stats.push(snap_ring.clone());
+    let bound_ctrl = bound_controller_bench(iters);
+    stats.push(bound_ctrl.clone());
     stats.push(bench("coord: UCB select+update x1000", 1, iters, || {
         let mut ucb = UcbOrchestrator::new(5, 0.87);
         for t in 0..1000u64 {
@@ -418,6 +455,7 @@ fn main() -> anyhow::Result<()> {
             &async_sim,
             &async_plan,
             &snap_ring,
+            &bound_ctrl,
             n_par,
             quick_mode(),
         );

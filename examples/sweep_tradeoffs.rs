@@ -10,7 +10,10 @@
 //! points. The staleness axis additionally compares cadence-only
 //! staleness against true delayed gradients (`--delayed-gradients`:
 //! stale clients train on the model snapshot they actually pulled,
-//! DESIGN.md §8) on FedAvg, where the distinction bites.
+//! DESIGN.md §8) on FedAvg, where the distinction bites — and overlays
+//! the adaptive-bound controller (`--adaptive-bound`, DESIGN.md §9),
+//! which walks the same frontier online instead of by grid search
+//! (`results/fig1_adaptive_bound.csv`).
 //!
 //! ```bash
 //! cargo run --release --example sweep_tradeoffs -- --rounds 10 --samples 256
@@ -18,8 +21,8 @@
 
 use adasplit::config::{ExperimentConfig, ProtocolKind};
 use adasplit::data::DatasetKind;
-use adasplit::driver::SpeedPreset;
-use adasplit::protocols::run_protocol;
+use adasplit::driver::{SpeedPreset, DEFAULT_BOUND_ARMS};
+use adasplit::protocols::{run_protocol, run_protocol_recorded};
 use adasplit::report::series::ascii_chart;
 use adasplit::report::Series;
 use adasplit::runtime::Runtime;
@@ -88,19 +91,57 @@ fn main() -> anyhow::Result<()> {
         .with_client_speeds(SpeedPreset::Stragglers)
         .with_straggler_frac(0.2);
     let mut s_curve = Series::new("AdaSplit (staleness sweep)", "sim_time");
+    let mut worst_fixed_c3 = f64::INFINITY;
     println!("\nstaleness sweep (stragglers speeds, accuracy vs simulated wall-clock):");
     // NB: under non-uniform speeds the meter reports *link-time-weighted*
     // bandwidth (a straggler's bytes cost 10x link-time, DESIGN.md §7) —
     // not raw GB, and not comparable to the uniform-speed curves above
     println!("{:<8} {:>8} {:>10} {:>14}", "bound", "acc%", "simT", "bw (link-wt)");
-    for bound in [0usize, 1, 2, 4] {
+    // the grid is exactly the controller's candidate set clipped to the
+    // ceiling below, so the adaptive curve picks among the bounds this
+    // sweep measures and the end-of-run C3 floor compares like with like
+    let bound_ceiling = 4usize;
+    let mut fixed_bounds: Vec<usize> =
+        DEFAULT_BOUND_ARMS.iter().map(|&c| c.min(bound_ceiling)).collect();
+    fixed_bounds.dedup();
+    for bound in fixed_bounds {
         let r = run_protocol(&rt, &async_base.clone().with_staleness_bound(Some(bound)))?;
         println!(
             "s={bound:<6} {:>8.2} {:>10.2} {:>14.4}",
             r.best_accuracy, r.sim_time, r.bandwidth_gb
         );
         s_curve.push(r.sim_time, r.best_accuracy);
+        worst_fixed_c3 = worst_fixed_c3.min(r.c3_score);
     }
+
+    // the third curve: the UCB bound controller picks among the same
+    // fixed bounds online (the default arm set clipped to the same
+    // ceiling), one window per quarter of the run. The per-window
+    // (sim_time, accuracy) checkpoints trace how the controller moves
+    // along the frontier the fixed-bound grid search mapped offline.
+    let adaptive_cfg = async_base
+        .clone()
+        .with_staleness_bound(Some(bound_ceiling))
+        .with_adaptive_bound(true)
+        .with_adapt_window((rounds / 4).max(1));
+    let (ar, arec) = run_protocol_recorded(&rt, &adaptive_cfg)?;
+    let mut a_curve = Series::new("AdaSplit (adaptive bound)", "sim_time");
+    let w = adaptive_cfg.adapt_window;
+    println!("\nadaptive bound (UCB over the clipped default arms, window {w} rounds):");
+    println!("{:<10} {:>6} {:>8} {:>10}", "round", "bound", "acc%", "simT");
+    for stat in &arec.rounds {
+        if (stat.round + 1) % w == 0 || stat.round + 1 == arec.rounds.len() {
+            println!(
+                "r={:<8} {:>6} {:>8.2} {:>10.2}",
+                stat.round, stat.bound, stat.accuracy_pct, stat.sim_time
+            );
+            a_curve.push(stat.sim_time, stat.accuracy_pct);
+        }
+    }
+    println!(
+        "adaptive: final bound {}, {} switch(es), c3={:.3} (worst fixed arm c3={:.3})",
+        ar.final_bound, ar.bound_switches, ar.c3_score, worst_fixed_c3
+    );
 
     // cadence-only vs true delayed gradients (--delayed-gradients):
     // per-client model versioning hands a client merging s rounds stale
@@ -149,7 +190,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== accuracy vs bandwidth under client sampling ===");
     print!("{}", ascii_chart(&[p_curve.clone()], 60, 14));
     println!("\n=== accuracy vs simulated wall-clock (staleness sweep) ===");
-    print!("{}", ascii_chart(&[s_curve.clone()], 60, 14));
+    print!("{}", ascii_chart(&[s_curve.clone(), a_curve.clone()], 60, 14));
     println!("\n=== FedAvg staleness: cadence-only vs true delayed gradients ===");
     print!("{}", ascii_chart(&[fd_cadence.clone(), fd_delay.clone()], 60, 14));
 
@@ -158,10 +199,22 @@ fn main() -> anyhow::Result<()> {
     std::fs::write("results/fig1_compute_curve.csv", c_curve.to_csv())?;
     std::fs::write("results/fig1_participation_curve.csv", p_curve.to_csv())?;
     std::fs::write("results/fig1_staleness_curve.csv", s_curve.to_csv())?;
+    std::fs::write("results/fig1_adaptive_bound.csv", a_curve.to_csv())?;
     std::fs::write("results/fig1_staleness_cadence_fl.csv", fd_cadence.to_csv())?;
     std::fs::write("results/fig1_staleness_true_delay_fl.csv", fd_delay.to_csv())?;
     std::fs::write("results/fig1_baseline_bw.csv", base_bw.to_csv())?;
     std::fs::write("results/fig1_baseline_compute.csv", base_c.to_csv())?;
     println!("\ncurves -> results/fig1_*.csv");
+
+    // sanity floor, checked after every curve is on disk so a controller
+    // regression never destroys the sweep's other outputs: picking among
+    // the arms online must not end up below the worst fixed arm on the
+    // same seed
+    anyhow::ensure!(
+        ar.c3_score >= worst_fixed_c3,
+        "adaptive controller scored c3={:.4}, below the worst fixed bound's {:.4}",
+        ar.c3_score,
+        worst_fixed_c3
+    );
     Ok(())
 }

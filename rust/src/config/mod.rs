@@ -79,6 +79,21 @@ impl std::str::FromStr for ProtocolKind {
     }
 }
 
+/// Parse a comma-separated candidate-bound list (`0,1,2,4,8`) for the
+/// adaptive controller — shared by the config key and the CLI flag.
+pub fn parse_arm_list(s: &str) -> Result<Vec<usize>> {
+    let arms: Vec<usize> = s
+        .split(',')
+        .map(|part| {
+            part.trim()
+                .parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("`adapt_arms` entry `{part}`: {e}"))
+        })
+        .collect::<Result<_>>()?;
+    ensure!(!arms.is_empty(), "adapt_arms must list at least one candidate bound");
+    Ok(arms)
+}
+
 /// Full experiment configuration (paper §4.4 defaults).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -149,6 +164,27 @@ pub struct ExperimentConfig {
     /// (`--stale-decay`): a contribution `k` rounds stale is weighted by
     /// `stale_decay^k` before renormalization
     pub stale_decay: f64,
+    /// adaptive staleness bound (`--adaptive-bound`): a seeded UCB1
+    /// controller re-picks the `AsyncBounded` bound from the candidate
+    /// set every `adapt_window` rounds, rewarded by the window's
+    /// C3-shaped accuracy-per-sim-time trade-off (DESIGN.md §9).
+    /// Requires `staleness_bound` — the configured bound is the ceiling
+    /// the candidate arms are clipped to (and sizes the delayed-gradient
+    /// snapshot ring, which must cover every arm).
+    pub adaptive_bound: bool,
+    /// rounds per adaptation window (`--adapt-window`): the controller
+    /// observes a reward and may switch arms only at window boundaries
+    pub adapt_window: usize,
+    /// explicit candidate bounds for the controller (`--adapt-arms
+    /// 0,1,2`), clipped element-wise to `staleness_bound`; `None` uses
+    /// the default set {0, 1, 2, 4, 8} (same clip). A singleton set
+    /// degenerates to the equivalent fixed-bound run: the training
+    /// trajectory and schedule are always identical, and the recorded
+    /// metrics are bit-identical whenever the `eval_every` cadence
+    /// already covers window boundaries (in particular at the default
+    /// `eval_every = 1` — otherwise the adaptive run records extra,
+    /// value-neutral eval points at the boundaries).
+    pub adapt_arms: Option<Vec<usize>>,
     /// true delayed-gradient staleness (`--delayed-gradients`): the
     /// driver keeps a ring of round-start model snapshots and a client
     /// merging `s` rounds stale trains against the snapshot from `s`
@@ -190,6 +226,9 @@ impl Default for ExperimentConfig {
             client_speeds: SpeedPreset::Uniform,
             straggler_frac: 0.1,
             stale_decay: 0.5,
+            adaptive_bound: false,
+            adapt_window: 5,
+            adapt_arms: None,
             delayed_gradients: false,
         }
     }
@@ -226,6 +265,7 @@ impl ExperimentConfig {
             "local_epochs", "eval_every", "sparse_eps", "trace",
             "artifacts_dir", "threads", "participation", "staleness_bound",
             "client_speeds", "straggler_frac", "stale_decay", "delayed_gradients",
+            "adaptive_bound", "adapt_window", "adapt_arms",
             "budgets.bandwidth_gb", "budgets.client_tflops", "budgets.temp",
         ];
         for k in kv.keys() {
@@ -274,6 +314,9 @@ impl ExperimentConfig {
             client_speeds: kv.get_str("client_speeds", &d.client_speeds.id()).parse()?,
             straggler_frac: kv.get_f64("straggler_frac", d.straggler_frac)?,
             stale_decay: kv.get_f64("stale_decay", d.stale_decay)?,
+            adaptive_bound: kv.get_bool("adaptive_bound", false)?,
+            adapt_window: kv.get_usize("adapt_window", d.adapt_window)?,
+            adapt_arms: kv.raw("adapt_arms").map(parse_arm_list).transpose()?,
             delayed_gradients: kv.get_bool("delayed_gradients", false)?,
         };
         cfg.validate()?;
@@ -340,6 +383,22 @@ impl ExperimentConfig {
             "delayed_gradients requires staleness_bound (the version ring \
              is sized by the bound; without async scheduling nothing is stale)"
         );
+        ensure!(
+            self.adapt_window > 0,
+            "adapt_window must be > 0 (rounds per adaptation window)"
+        );
+        ensure!(
+            !self.adaptive_bound || self.staleness_bound.is_some(),
+            "adaptive_bound requires staleness_bound (the candidate arms are \
+             clipped to it, and the delayed-gradient snapshot ring it sizes \
+             must cover every arm the controller can pick)"
+        );
+        if let Some(arms) = &self.adapt_arms {
+            ensure!(
+                !arms.is_empty(),
+                "adapt_arms must list at least one candidate bound"
+            );
+        }
         ensure!(
             (0.05..=0.95).contains(&self.mu),
             "mu must map to a lowered split (0.2/0.4/0.6/0.8)"
@@ -421,6 +480,25 @@ impl ExperimentConfig {
 
     pub fn with_stale_decay(mut self, decay: f64) -> Self {
         self.stale_decay = decay;
+        self
+    }
+
+    /// `true` turns on the UCB bound controller (requires a
+    /// `staleness_bound` ceiling for the candidate arms).
+    pub fn with_adaptive_bound(mut self, adaptive: bool) -> Self {
+        self.adaptive_bound = adaptive;
+        self
+    }
+
+    pub fn with_adapt_window(mut self, window: usize) -> Self {
+        self.adapt_window = window;
+        self
+    }
+
+    /// Explicit candidate bounds for the controller (`None` restores the
+    /// default {0, 1, 2, 4, 8} set).
+    pub fn with_adapt_arms(mut self, arms: Option<Vec<usize>>) -> Self {
+        self.adapt_arms = arms;
         self
     }
 
@@ -606,6 +684,105 @@ mod tests {
         c.validate().unwrap();
         assert!(c.clone().with_delayed_gradients(false).validate().is_ok());
         assert!(c.with_staleness_bound(None).validate().is_err());
+    }
+
+    #[test]
+    fn adaptive_bound_keys_parse_and_validate() {
+        let d = ExperimentConfig::default();
+        assert!(!d.adaptive_bound, "default is a fixed bound");
+        assert_eq!(d.adapt_window, 5);
+        assert_eq!(d.adapt_arms, None);
+
+        let c = ExperimentConfig::from_kv_text(
+            "staleness_bound = 4\nadaptive_bound = true\nadapt_window = 3\n\
+             adapt_arms = \"0, 2,4\"\n",
+        )
+        .unwrap();
+        assert!(c.adaptive_bound);
+        assert_eq!(c.adapt_window, 3);
+        assert_eq!(c.adapt_arms, Some(vec![0, 2, 4]));
+
+        assert!(ExperimentConfig::from_kv_text("adapt_arms = \"fast\"\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("adapt_arms = \"\"\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("adaptive_bound = maybe\n").is_err());
+
+        let c = ExperimentConfig::default()
+            .with_staleness_bound(Some(2))
+            .with_adaptive_bound(true)
+            .with_adapt_window(4)
+            .with_adapt_arms(Some(vec![0, 2]));
+        c.validate().unwrap();
+        assert!(c.clone().with_adapt_arms(None).validate().is_ok());
+        assert!(c.with_staleness_bound(None).validate().is_err());
+    }
+
+    #[test]
+    fn invalid_combinations_yield_distinct_error_messages() {
+        // every invalid combination must produce its own actionable
+        // message — a shared or shuffled error would send the user
+        // hunting in the wrong place. The matrix pins (input -> message
+        // fragment) and cross-checks that all fragments are distinct.
+        let matrix: Vec<(ExperimentConfig, &str)> = vec![
+            (
+                ExperimentConfig::default().with_adaptive_bound(true),
+                "adaptive_bound requires staleness_bound",
+            ),
+            (
+                ExperimentConfig::default()
+                    .with_staleness_bound(Some(2))
+                    .with_adaptive_bound(true)
+                    .with_adapt_window(0),
+                "adapt_window must be > 0",
+            ),
+            (
+                ExperimentConfig::default().with_delayed_gradients(true),
+                "delayed_gradients requires staleness_bound",
+            ),
+            (
+                ExperimentConfig::default().with_stale_decay(0.0),
+                "stale_decay in (0,1]",
+            ),
+            (
+                ExperimentConfig::default().with_stale_decay(1.5),
+                "stale_decay in (0,1]",
+            ),
+            (
+                ExperimentConfig::default()
+                    .with_staleness_bound(Some(2))
+                    .with_adaptive_bound(true)
+                    .with_adapt_arms(Some(vec![])),
+                "adapt_arms must list at least one candidate bound",
+            ),
+        ];
+        for (cfg, fragment) in &matrix {
+            let err = cfg.validate().expect_err(fragment).to_string();
+            assert!(
+                err.contains(fragment),
+                "expected `{fragment}` in `{err}`"
+            );
+        }
+        // distinctness: each failure mode names its own knob
+        let fragments: std::collections::BTreeSet<&str> =
+            matrix.iter().map(|(_, f)| *f).collect();
+        assert_eq!(fragments.len(), 5, "five distinct messages across the matrix");
+
+        // the same combinations are rejected on the text-config path too
+        assert!(ExperimentConfig::from_kv_text("adaptive_bound = true\n").is_err());
+        assert!(ExperimentConfig::from_kv_text(
+            "staleness_bound = 2\nadaptive_bound = true\nadapt_window = 0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_kv_text("delayed_gradients = true\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("stale_decay = 0.0\n").is_err());
+    }
+
+    #[test]
+    fn arm_list_parsing() {
+        assert_eq!(parse_arm_list("0,1,2,4,8").unwrap(), vec![0, 1, 2, 4, 8]);
+        assert_eq!(parse_arm_list(" 3 ").unwrap(), vec![3]);
+        assert!(parse_arm_list("").is_err());
+        assert!(parse_arm_list("1,x").is_err());
+        assert!(parse_arm_list("1,-2").is_err());
     }
 
     #[test]

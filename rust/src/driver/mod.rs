@@ -36,11 +36,13 @@
 //! [`Protocol::fan_out`] to `false` and runs the exchange inside
 //! `merge_round` — the loop shape is still owned here.
 
+mod adaptive;
 mod scheduler;
 mod speed;
 mod store;
 mod versioning;
 
+pub use adaptive::{BoundController, WindowDelta, DEFAULT_BOUND_ARMS};
 pub use scheduler::{scheduler_for, AsyncBounded, RoundPlan, SampledSync, Scheduler, SyncAll};
 pub use speed::{ClientSpeeds, SpeedPreset, STRAGGLER_SLOWDOWN};
 pub use store::{scratch_dir, ClientState, ClientStateStore};
@@ -268,6 +270,16 @@ pub trait Protocol: Sync {
     fn eval(&self, env: &Env, store: &mut ClientStateStore) -> Result<f64>;
 }
 
+/// Metric snapshot at the last adaptation-window boundary: the window
+/// reward is shaped from "end minus mark" deltas.
+#[derive(Clone, Copy, Default)]
+struct WindowMark {
+    accuracy: f64,
+    sim_time: f64,
+    bandwidth_gb: f64,
+    client_tflops: f64,
+}
+
 /// Run `protocol` end to end under the configured scheduler and return
 /// its result. This is the only round loop in the codebase.
 pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
@@ -276,6 +288,19 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
     // one construction: the scheduler's virtual clock and the fan-in cost
     // scaling below share the same fleet
     let (mut scheduler, speeds) = scheduler_for(env.cfg);
+    // --adaptive-bound: the UCB controller picks its seeded first arm
+    // before round 0 and re-decides at every window boundary; every
+    // decision runs on the driver thread off thread-count-invariant
+    // metrics, so adaptivity never perturbs the determinism contract
+    // (DESIGN.md §9)
+    let mut controller = if env.cfg.adaptive_bound {
+        let c = BoundController::from_cfg(env.cfg);
+        scheduler.set_bound(c.current_bound(), 0);
+        Some(c)
+    } else {
+        None
+    };
+    let mut window_mark = WindowMark::default();
     // Spilling is active only under real subsampling: a full-participation
     // run keeps every client resident and never touches the disk.
     let mut store = if env.cfg.participation < 1.0 {
@@ -300,8 +325,22 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
     } else {
         None
     };
+    // the first window's Δaccuracy needs a pre-training baseline: an
+    // untrained model already scores around chance, and measuring the
+    // first window from 0% would credit the seed-chosen first arm with
+    // the entire warm-up jump — an inflated mean it would carry through
+    // every later UCB comparison. The eval is value-neutral (it reads
+    // `&Env`, and state/shard materialization is a pure function of the
+    // seed), so non-adaptive parity is untouched.
+    if controller.is_some() {
+        window_mark.accuracy = protocol.eval(env, &mut store)?;
+    }
 
     for round in 0..env.cfg.rounds {
+        // the bound in effect while this round was planned (0 for the
+        // synchronous schedulers) — recorded per round so the adaptive
+        // trajectory is visible on the CSV/JSON axes
+        let bound = scheduler.current_bound();
         let RoundPlan { participants, staleness, sim_time } = scheduler.plan(round);
         // evict last round's inactive clients first, then materialize the
         // round's sample: peak residency ~ |old ∪ new|, not total clients
@@ -378,7 +417,14 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
         let report = protocol.end_round(env, &mut store, round, &participants)?;
         drop(decay_scope);
 
-        let eval_now = round % env.cfg.eval_every == 0 || round + 1 == env.cfg.rounds;
+        // the controller needs a fresh accuracy reading at every window
+        // boundary (its Δaccuracy signal), so adaptivity widens the eval
+        // cadence instead of reusing a stale reading
+        let window_end = controller
+            .as_ref()
+            .is_some_and(|c| (round + 1) % c.window() == 0);
+        let eval_now =
+            round % env.cfg.eval_every == 0 || round + 1 == env.cfg.rounds || window_end;
         let accuracy = if eval_now {
             protocol.eval(env, &mut store)?
         } else {
@@ -396,9 +442,40 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
             mask_density: report.mask_density,
             sim_time,
             max_staleness: staleness.iter().copied().max().unwrap_or(0),
+            bound,
             selected: report.selected,
             participants,
         });
+
+        // window boundary: credit the finished window to the current arm
+        // and switch the scheduler to the UCB pick for the next one —
+        // switches only ever land here, never mid-window
+        if window_end {
+            if let Some(ctrl) = controller.as_mut() {
+                let sim_now = sim_time;
+                let delta = WindowDelta {
+                    d_accuracy_pct: accuracy - window_mark.accuracy,
+                    d_sim_time: sim_now - window_mark.sim_time,
+                    d_bandwidth_gb: env.meter.bandwidth_gb() - window_mark.bandwidth_gb,
+                    d_client_tflops: env.meter.client_tflops() - window_mark.client_tflops,
+                };
+                window_mark = WindowMark {
+                    accuracy,
+                    sim_time: sim_now,
+                    bandwidth_gb: env.meter.bandwidth_gb(),
+                    client_tflops: env.meter.client_tflops(),
+                };
+                if round + 1 < env.cfg.rounds {
+                    let (next, reward) = ctrl.observe_window(&delta);
+                    scheduler.set_bound(next, round + 1);
+                    if env.recorder.trace_enabled {
+                        env.recorder.trace(format!(
+                            "adaptive: window ending round {round} reward {reward:.4} -> bound {next}"
+                        ));
+                    }
+                }
+            }
+        }
     }
 
     Ok(RunResult::from_env(env, &env.recorder, &env.meter, scheduler.name()))

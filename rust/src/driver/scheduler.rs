@@ -68,6 +68,30 @@ pub trait Scheduler: Send {
 
     /// Clients sampled per round (for reporting).
     fn sampled_per_round(&self) -> usize;
+
+    /// The staleness bound currently in effect: how stale a merged
+    /// contribution may be, in rounds. Synchronous schedulers are always
+    /// fresh, so the default is `0`; [`AsyncBounded`] reports its live
+    /// (possibly controller-switched) bound.
+    fn current_bound(&self) -> usize {
+        0
+    }
+
+    /// Switch the staleness bound before `next_round` is planned — the
+    /// adaptive controller's actuator, only ever called on a window
+    /// boundary. Returns `true` when the scheduler supports runtime
+    /// bound switching ([`AsyncBounded`]); the synchronous schedulers
+    /// have no bound to move and return `false` untouched.
+    ///
+    /// Implementations must preserve the scheduler invariants across the
+    /// switch: the merge set stays non-empty, the server clock stays
+    /// monotone, and no contribution merged from `next_round` on is
+    /// staler than the *new* bound (pinned by the `adaptive_*` property
+    /// suite in `tests/engine_determinism.rs`).
+    fn set_bound(&mut self, bound: usize, next_round: usize) -> bool {
+        let _ = (bound, next_round);
+        false
+    }
 }
 
 /// Every client, every round — today's synchronous behavior. Each round's
@@ -352,6 +376,39 @@ impl Scheduler for AsyncBounded {
     fn sampled_per_round(&self) -> usize {
         self.cap
     }
+
+    fn current_bound(&self) -> usize {
+        self.bound
+    }
+
+    /// Runtime bound switch (the adaptive controller's actuator).
+    ///
+    /// Loosening only widens future staleness allowances — no state
+    /// moves. Tightening re-bases: a client whose in-flight work would
+    /// already be staler than the new bound re-pulls at the switch — its
+    /// staleness base (`last_sync`) is clamped up to the floor the new
+    /// bound implies at `next_round`, so it is *required* in the very
+    /// next merge and its contribution reports staleness ≤ the new
+    /// bound. That is the honest semantic, not bookkeeping sleight of
+    /// hand: `client_round` work actually executes at the merge round
+    /// against the snapshot `staleness` names (DESIGN.md §8), so a
+    /// smaller declared staleness means the client genuinely trains
+    /// against the fresher model it just re-pulled. Completion times
+    /// (`ready`) and the server clock are untouched, so clock
+    /// monotonicity and plan determinism are preserved, and re-setting
+    /// the current bound is a pure no-op (`last_sync >= round - 1 -
+    /// bound` already holds under a constant bound — the singleton-arm
+    /// bit-parity contract).
+    fn set_bound(&mut self, bound: usize, next_round: usize) -> bool {
+        self.bound = bound;
+        let floor = next_round as i64 - 1 - bound as i64;
+        for ls in &mut self.last_sync {
+            if *ls < floor {
+                *ls = floor;
+            }
+        }
+        true
+    }
 }
 
 /// Scheduler configured by the experiment: `staleness_bound` set picks
@@ -607,6 +664,78 @@ mod tests {
             merges.iter().all(|&m| m >= 200 / 5),
             "bound 4 => every client merges at least every 5th round"
         );
+    }
+
+    #[test]
+    fn synchronous_schedulers_have_no_bound_to_move() {
+        let mut sync = SyncAll::new(4);
+        assert_eq!(sync.current_bound(), 0);
+        assert!(!sync.set_bound(3, 0), "SyncAll has no runtime bound");
+        let mut sampled = SampledSync::new(8, 0.5, 1);
+        assert_eq!(sampled.current_bound(), 0);
+        assert!(!sampled.set_bound(3, 5));
+    }
+
+    #[test]
+    fn set_bound_to_the_current_bound_is_a_plan_level_no_op() {
+        // re-applying the active bound between rounds (what the adaptive
+        // driver does when the controller keeps its arm — and always,
+        // with a singleton arm set) must leave the plan stream
+        // bit-identical to an untouched scheduler
+        let sp = speeds(20, SpeedPreset::Stragglers, 0.3, 11);
+        let mut clean = AsyncBounded::new(20, 3, 0.5, &sp);
+        let mut reset = AsyncBounded::new(20, 3, 0.5, &sp);
+        for round in 0..50 {
+            assert!(reset.set_bound(3, round), "AsyncBounded supports switching");
+            let a = clean.plan(round);
+            let b = reset.plan(round);
+            assert_eq!(a.participants, b.participants, "round {round}");
+            assert_eq!(a.staleness, b.staleness, "round {round}");
+            assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn set_bound_tighten_rebases_so_staleness_respects_the_new_bound() {
+        let sp = speeds(24, SpeedPreset::Stragglers, 0.4, 5);
+        let mut s = AsyncBounded::new(24, 6, 0.25, &sp);
+        for round in 0..12 {
+            s.plan(round);
+        }
+        // mid-run tighten 6 -> 1: the stale backlog re-pulls at the
+        // switch, so from round 12 on nothing merges staler than 1
+        assert!(s.set_bound(1, 12));
+        assert_eq!(s.current_bound(), 1);
+        let mut prev_t = 0.0f64;
+        for round in 12..40 {
+            let plan = s.plan(round);
+            assert!(!plan.participants.is_empty(), "round {round}");
+            for (&i, &st) in plan.participants.iter().zip(&plan.staleness) {
+                assert!(st <= 1, "round {round}: client {i} stale {st} > tightened bound");
+            }
+            assert!(plan.sim_time >= prev_t, "round {round}: clock went backwards");
+            prev_t = plan.sim_time;
+        }
+    }
+
+    #[test]
+    fn set_bound_loosen_lets_staleness_grow_only_to_the_new_bound() {
+        let sp = speeds(16, SpeedPreset::Stragglers, 0.5, 9);
+        let mut s = AsyncBounded::new(16, 0, 0.5, &sp);
+        for round in 0..5 {
+            let plan = s.plan(round);
+            assert!(plan.staleness.iter().all(|&st| st == 0), "s=0 is all-fresh");
+        }
+        assert!(s.set_bound(4, 5));
+        let mut saw_stale = false;
+        for round in 5..60 {
+            let plan = s.plan(round);
+            for &st in &plan.staleness {
+                assert!(st <= 4, "round {round}: stale {st} > loosened bound");
+                saw_stale |= st > 0;
+            }
+        }
+        assert!(saw_stale, "a loosened bound under stragglers must admit staleness");
     }
 
     #[test]

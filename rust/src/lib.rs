@@ -20,7 +20,9 @@
 //! round loop, per-round client sampling (`--participation p`, pooled
 //! client state with spill-to-disk), bounded-staleness async scheduling
 //! over a seeded per-client speed model (`--staleness-bound s`,
-//! `--client-speeds`, simulated wall-clock in every report), and the
+//! `--client-speeds`, simulated wall-clock in every report), an online
+//! UCB controller that re-picks the staleness bound from each window's
+//! C3-shaped reward (`--adaptive-bound`, DESIGN.md §9), and the
 //! [`engine`] fan-out (`--threads N`, default = host parallelism).
 //! Results are merged in client-id order so parallel runs are
 //! bit-identical to serial ones (DESIGN.md §5–§7).

@@ -70,6 +70,17 @@ RUN OPTIONS:
                          state (the FL family); AdaSplit / SL-basic /
                          SplitFed clients pull none, so they stay
                          cadence-only by construction
+  --adaptive-bound       adaptive staleness bound: a seeded UCB1
+                         controller re-picks the AsyncBounded bound from
+                         the candidate set every --adapt-window rounds,
+                         rewarded by each window's C3-shaped accuracy /
+                         sim-time trade-off (DESIGN.md §9); needs
+                         --staleness-bound (the arm ceiling). Switches
+                         only land on window boundaries
+  --adapt-window W       rounds per adaptation window          [5]
+  --adapt-arms LIST      comma-separated candidate bounds, clipped to
+                         --staleness-bound (a singleton list reproduces
+                         the fixed-bound run bit-for-bit) [0,1,2,4,8]
   --threads N            engine worker threads (0 = host parallelism) [0]
   --curve-out PATH       write the per-round curve CSV
   --trace                print per-iteration orchestrator traces
@@ -82,6 +93,9 @@ COMPARE OPTIONS:
   --straggler-frac F     stragglers-preset slow fraction       [0.1]
   --stale-decay D        staleness down-weight (see RUN)       [0.5]
   --delayed-gradients    per-client model versioning (see RUN)
+  --adaptive-bound       UCB-adaptive staleness bound (see RUN)
+  --adapt-window W       rounds per adaptation window          [5]
+  --adapt-arms LIST      candidate bounds for the controller (see RUN)
   --threads N            worker threads per run; protocols also run
                          concurrently across the pool      [0 = auto]
 ";
@@ -167,7 +181,10 @@ fn main() -> Result<()> {
 }
 
 fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
-    let args = Args::parse(argv, &["trace", "server-grad", "delayed-gradients"])?;
+    let args = Args::parse(
+        argv,
+        &["trace", "server-grad", "delayed-gradients", "adaptive-bound"],
+    )?;
     let mut cfg = match args.get("config") {
         Some(path) => ExperimentConfig::load_toml(path)?,
         None => {
@@ -226,9 +243,16 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
     if let Some(v) = args.parsed("stale-decay")? {
         cfg.stale_decay = v;
     }
+    if let Some(v) = args.parsed("adapt-window")? {
+        cfg.adapt_window = v;
+    }
+    if let Some(v) = args.get("adapt-arms") {
+        cfg.adapt_arms = Some(adasplit::config::parse_arm_list(v)?);
+    }
     if let Some(v) = args.parsed("threads")? {
         cfg.threads = v;
     }
+    cfg.adaptive_bound |= args.has("adaptive-bound");
     cfg.delayed_gradients |= args.has("delayed-gradients");
     cfg.server_grad_to_client |= args.has("server-grad");
     cfg.trace |= args.has("trace");
@@ -291,6 +315,13 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
             cfg.rounds
         );
     }
+    if cfg.adaptive_bound {
+        println!(
+            "adaptive bound: UCB over {} rounds/window, final bound {}, {} switch(es) \
+             (per-round trajectory in the curve CSV `bound` column)",
+            cfg.adapt_window, result.final_bound, result.bound_switches
+        );
+    }
     if let Some(path) = args.get("curve-out") {
         recorder.write_csv(path)?;
         println!("curve written to {path}");
@@ -299,7 +330,7 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
 }
 
 fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["delayed-gradients"])?;
+    let args = Args::parse(argv, &["delayed-gradients", "adaptive-bound"])?;
     let dataset: DatasetKind = args.get("dataset").unwrap_or("mixed-cifar").parse()?;
     let rounds = args.parsed("rounds")?.unwrap_or(10);
     let samples = args.parsed("samples")?.unwrap_or(256);
@@ -313,6 +344,12 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
     let straggler_frac = args.parsed("straggler-frac")?.unwrap_or(0.1f64);
     let stale_decay = args.parsed("stale-decay")?.unwrap_or(0.5f64);
     let delayed_gradients = args.has("delayed-gradients");
+    let adaptive_bound = args.has("adaptive-bound");
+    let adapt_window = args.parsed("adapt-window")?.unwrap_or(5usize);
+    let adapt_arms = args
+        .get("adapt-arms")
+        .map(adasplit::config::parse_arm_list)
+        .transpose()?;
     let seed_list: Vec<u64> = (0..n_seeds as u64).collect();
 
     let budget = adasplit::engine::ClientPool::new(threads).threads();
@@ -329,6 +366,9 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
                 .with_straggler_frac(straggler_frac)
                 .with_stale_decay(stale_decay)
                 .with_delayed_gradients(delayed_gradients)
+                .with_adaptive_bound(adaptive_bound)
+                .with_adapt_window(adapt_window)
+                .with_adapt_arms(adapt_arms.clone())
                 .with_threads(per_protocol)
         })
         .collect();

@@ -35,12 +35,36 @@ impl Budgets {
     }
 }
 
+/// One budget axis's normalized consumption. A non-positive budget is a
+/// degenerate "no allowance" axis: the naive `consumed / 0.0` would give
+/// `inf` (or `NaN` at `0/0`), which then poisons every downstream
+/// consumer of the score — notably the adaptive bound controller's
+/// reward. The defined limit treats a zero-budget axis as *saturated*:
+/// it contributes exactly its full share (`1.0`, i.e. an `exp(-1/T)`
+/// decay factor), the same as spending a positive budget to the brim.
+fn axis_hat(consumed: f64, budget: f64) -> f64 {
+    if budget <= 0.0 {
+        1.0
+    } else {
+        (consumed / budget).max(0.0)
+    }
+}
+
+/// The C3 cost-decay factor `exp(-(B/B_max + C/C_max) / T)` in (0, 1]:
+/// the resource half of the score, reused by the adaptive bound
+/// controller to shape per-window rewards. Degenerate (zero) budget axes
+/// count as saturated — see [`axis_hat`] — so the factor is always a
+/// finite, positive number.
+pub fn cost_decay(bandwidth_gb: f64, client_tflops: f64, b: &Budgets) -> f64 {
+    let b_hat = axis_hat(bandwidth_gb, b.bandwidth_gb);
+    let c_hat = axis_hat(client_tflops, b.client_tflops);
+    (-(b_hat + c_hat) / b.temp).exp()
+}
+
 /// C3-Score of a method. `accuracy_pct` in [0, 100].
 pub fn c3_score(accuracy_pct: f64, bandwidth_gb: f64, client_tflops: f64, b: &Budgets) -> f64 {
     let a_hat = (accuracy_pct / 100.0).clamp(0.0, 1.0);
-    let b_hat = (bandwidth_gb / b.bandwidth_gb).max(0.0);
-    let c_hat = (client_tflops / b.client_tflops).max(0.0);
-    a_hat * (-(b_hat + c_hat) / b.temp).exp()
+    a_hat * cost_decay(bandwidth_gb, client_tflops, b)
 }
 
 #[cfg(test)]
@@ -70,6 +94,44 @@ mod tests {
         assert!(c3_score(90.0, 1.0, 1.0, &b) > c3_score(80.0, 1.0, 1.0, &b));
         assert!(c3_score(90.0, 1.0, 1.0, &b) > c3_score(90.0, 2.0, 1.0, &b));
         assert!(c3_score(90.0, 1.0, 1.0, &b) > c3_score(90.0, 1.0, 2.0, &b));
+    }
+
+    #[test]
+    fn zero_budget_axes_are_saturated_not_nan() {
+        // B_max == 0: the bandwidth axis is a defined limit (full decay
+        // share exp(-1/T)), not a division by zero
+        let b0 = Budgets::new(0.0, 10.0);
+        let s = c3_score(80.0, 5.0, 5.0, &b0);
+        assert!(s.is_finite(), "zero bandwidth budget must not produce NaN/inf");
+        let expect = 0.8 * (-(1.0 + 0.5) / b0.temp).exp();
+        assert!((s - expect).abs() < 1e-12, "got {s}, expected {expect}");
+        // ... even when consumption on that axis is also zero (0/0)
+        assert!(c3_score(80.0, 0.0, 5.0, &b0).is_finite());
+
+        // C_max == 0: same on the compute axis
+        let c0 = Budgets::new(10.0, 0.0);
+        let s = c3_score(80.0, 5.0, 0.0, &c0);
+        let expect = 0.8 * (-(0.5 + 1.0) / c0.temp).exp();
+        assert!((s - expect).abs() < 1e-12, "got {s}, expected {expect}");
+
+        // both axes degenerate: both saturated, score still in (0, 1]
+        let bc0 = Budgets::new(0.0, 0.0);
+        let s = c3_score(100.0, 123.0, 456.0, &bc0);
+        let expect = (-2.0 / bc0.temp).exp();
+        assert!((s - expect).abs() < 1e-12, "got {s}, expected {expect}");
+        assert!((0.0..=1.0).contains(&s));
+    }
+
+    #[test]
+    fn cost_decay_is_bounded_finite_and_monotone() {
+        let b = Budgets::new(10.0, 10.0);
+        assert!((cost_decay(0.0, 0.0, &b) - 1.0).abs() < 1e-12, "free is no decay");
+        assert!(cost_decay(5.0, 5.0, &b) > cost_decay(10.0, 5.0, &b));
+        assert!(cost_decay(5.0, 5.0, &b) > cost_decay(5.0, 10.0, &b));
+        for budgets in [b, Budgets::new(0.0, 10.0), Budgets::new(0.0, 0.0)] {
+            let d = cost_decay(1e9, 1e9, &budgets);
+            assert!(d.is_finite() && d > 0.0 && d <= 1.0, "{d}");
+        }
     }
 
     #[test]

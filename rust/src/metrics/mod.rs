@@ -7,6 +7,6 @@ pub mod cost;
 pub mod recorder;
 
 pub use accuracy::{mean_std, AccuracyAccum};
-pub use c3::{c3_score, Budgets};
+pub use c3::{c3_score, cost_decay, Budgets};
 pub use cost::CostMeter;
 pub use recorder::{Recorder, RoundStat};

@@ -29,6 +29,11 @@ pub struct RoundStat {
     /// (0 for every synchronous scheduler; never exceeds the
     /// `AsyncBounded` staleness bound)
     pub max_staleness: usize,
+    /// staleness bound in effect while the round was planned (0 for the
+    /// synchronous schedulers; the configured bound for a fixed async
+    /// run; the controller's current arm under `--adaptive-bound`, so
+    /// the column traces the bound trajectory)
+    pub bound: usize,
     /// clients selected this round (AdaSplit orchestrator; the round's
     /// participant set otherwise)
     pub selected: Vec<usize>,
@@ -80,12 +85,12 @@ impl Recorder {
         let mut f = std::fs::File::create(path).context("creating csv")?;
         writeln!(
             f,
-            "round,phase,train_loss,accuracy_pct,bandwidth_gb,client_tflops,total_tflops,mask_density,sim_time,max_staleness,n_selected,n_participants"
+            "round,phase,train_loss,accuracy_pct,bandwidth_gb,client_tflops,total_tflops,mask_density,sim_time,max_staleness,bound,n_selected,n_participants"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{},{:.6},{:.3},{:.6},{:.6},{:.6},{:.4},{:.4},{},{},{}",
+                "{},{},{:.6},{:.3},{:.6},{:.6},{:.6},{:.4},{:.4},{},{},{},{}",
                 r.round,
                 r.phase,
                 r.train_loss,
@@ -96,6 +101,7 @@ impl Recorder {
                 r.mask_density,
                 r.sim_time,
                 r.max_staleness,
+                r.bound,
                 r.selected.len(),
                 r.participants.len()
             )?;
@@ -119,6 +125,7 @@ impl Recorder {
                     m.insert("mask_density".into(), Json::Num(r.mask_density));
                     m.insert("sim_time".into(), Json::Num(r.sim_time));
                     m.insert("max_staleness".into(), Json::Num(r.max_staleness as f64));
+                    m.insert("bound".into(), Json::Num(r.bound as f64));
                     m.insert(
                         "selected".into(),
                         Json::Arr(r.selected.iter().map(|&s| Json::Num(s as f64)).collect()),
@@ -161,6 +168,7 @@ mod tests {
             mask_density: 1.0,
             sim_time: round as f64 + 1.0,
             max_staleness: 0,
+            bound: 2,
             selected: vec![0, 1],
             participants: vec![0, 1, 2],
         }
@@ -200,6 +208,15 @@ mod tests {
     }
 
     #[test]
+    fn json_rows_carry_the_bound_trajectory() {
+        let mut r = Recorder::new(false);
+        r.push(stat(0, 10.0));
+        let json = r.to_json();
+        let rows = json.as_arr().unwrap();
+        assert_eq!(rows[0].get("bound").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
     fn csv_header_and_every_row_have_the_same_column_count() {
         // the header literal and the row format string are maintained by
         // hand: a field added to `RoundStat` and threaded into only one
@@ -216,7 +233,11 @@ mod tests {
         let mut lines = text.lines();
         let header = lines.next().expect("header line");
         let columns = header.split(',').count();
-        assert!(columns >= 12, "expected the full RoundStat column set");
+        assert!(columns >= 13, "expected the full RoundStat column set");
+        assert!(
+            header.split(',').any(|c| c == "bound"),
+            "adaptive bound trajectory column missing from the header"
+        );
         let mut rows = 0;
         for (i, line) in lines.enumerate() {
             assert_eq!(

@@ -73,6 +73,17 @@ pub struct RunResult {
     /// (`--delayed-gradients`, stale clients trained against the snapshot
     /// they pulled); `false` = PR 3 cadence-only staleness
     pub delayed_gradients: bool,
+    /// `true` = the UCB bound controller re-picked the staleness bound
+    /// online (`--adaptive-bound`); `false` = the bound was a fixed flag
+    pub adaptive: bool,
+    /// staleness bound in effect for the final round (the configured
+    /// bound for a fixed async run; 0 for synchronous schedulers; the
+    /// controller's last arm under `--adaptive-bound`)
+    pub final_bound: usize,
+    /// rounds whose bound differed from the previous round's — 0 for
+    /// every fixed-bound run, and for an adaptive run whose controller
+    /// kept one arm throughout (e.g. a singleton candidate set)
+    pub bound_switches: usize,
 }
 
 impl RunResult {
@@ -98,6 +109,9 @@ impl RunResult {
         m.insert("sim_time".into(), Json::Num(self.sim_time));
         m.insert("max_staleness".into(), Json::Num(self.max_staleness as f64));
         m.insert("delayed_gradients".into(), Json::Bool(self.delayed_gradients));
+        m.insert("adaptive".into(), Json::Bool(self.adaptive));
+        m.insert("final_bound".into(), Json::Num(self.final_bound as f64));
+        m.insert("bound_switches".into(), Json::Num(self.bound_switches as f64));
         Json::Obj(m)
     }
 
@@ -137,6 +151,13 @@ impl RunResult {
             sim_time: recorder.rounds.last().map(|r| r.sim_time).unwrap_or(0.0),
             max_staleness: recorder.rounds.iter().map(|r| r.max_staleness).max().unwrap_or(0),
             delayed_gradients: env.cfg.delayed_gradients,
+            adaptive: env.cfg.adaptive_bound,
+            final_bound: recorder.rounds.last().map(|r| r.bound).unwrap_or(0),
+            bound_switches: recorder
+                .rounds
+                .windows(2)
+                .filter(|w| w[1].bound != w[0].bound)
+                .count(),
         }
     }
 }
@@ -229,10 +250,15 @@ pub fn run_seeds(
 /// * **max-of-max** — `max_staleness` is already a per-run maximum, so
 ///   the aggregate reports the stalest merge across *all* seeds (an
 ///   averaged maximum would understate the bound actually exercised);
-/// * **invariants** — `scheduler` and `delayed_gradients` are functions
-///   of the config, not the seed: all runs must agree, and the aggregate
-///   carries the shared value (checked, so a future seed-dependent
-///   scheduler choice fails loudly instead of reporting seed 0's).
+///   `final_bound` and `bound_switches` follow the same rule: the
+///   controller's trajectory is seed-dependent, so the aggregate reports
+///   the upper envelope (the loosest endpoint and the most switching any
+///   seed saw) rather than an average that describes no run;
+/// * **invariants** — `scheduler`, `delayed_gradients`, and `adaptive`
+///   are functions of the config, not the seed: all runs must agree, and
+///   the aggregate carries the shared value (checked, so a future
+///   seed-dependent scheduler choice fails loudly instead of reporting
+///   seed 0's).
 pub fn aggregate_seed_results(
     results: &[RunResult],
     budgets: &crate::metrics::Budgets,
@@ -248,6 +274,10 @@ pub fn aggregate_seed_results(
         ensure!(
             r.delayed_gradients == results[0].delayed_gradients,
             "seed runs disagree on the delayed-gradients mode"
+        );
+        ensure!(
+            r.adaptive == results[0].adaptive,
+            "seed runs disagree on the adaptive-bound mode"
         );
     }
     let accs: Vec<f64> = results.iter().map(|r| r.best_accuracy).collect();
@@ -265,6 +295,8 @@ pub fn aggregate_seed_results(
     agg.sampled_clients_per_round = avg(|r| r.sampled_clients_per_round);
     agg.sim_time = avg(|r| r.sim_time);
     agg.max_staleness = results.iter().map(|r| r.max_staleness).max().unwrap_or(0);
+    agg.final_bound = results.iter().map(|r| r.final_bound).max().unwrap_or(0);
+    agg.bound_switches = results.iter().map(|r| r.bound_switches).max().unwrap_or(0);
     agg.c3_score = c3_score(mean, agg.bandwidth_gb, agg.client_tflops, budgets);
     Ok((agg, std))
 }
@@ -292,6 +324,9 @@ mod tests {
             sim_time: sim,
             max_staleness: max_stale,
             delayed_gradients: delayed,
+            adaptive: false,
+            final_bound: 0,
+            bound_switches: 0,
         }
     }
 
@@ -323,5 +358,47 @@ mod tests {
         ];
         assert!(aggregate_seed_results(&mixed_mode, &budgets).is_err());
         assert!(aggregate_seed_results(&[], &budgets).is_err());
+    }
+
+    #[test]
+    fn seed_aggregation_reports_the_adaptive_upper_envelope() {
+        let budgets = Budgets::paper_mixed_cifar();
+        let mut a = result(60.0, 8.0, 1, "async-bounded", false);
+        a.adaptive = true;
+        a.final_bound = 1;
+        a.bound_switches = 4;
+        let mut b = result(70.0, 12.0, 3, "async-bounded", false);
+        b.adaptive = true;
+        b.final_bound = 4;
+        b.bound_switches = 2;
+        let (agg, _) = aggregate_seed_results(&[a.clone(), b.clone()], &budgets).unwrap();
+        assert!(agg.adaptive);
+        assert_eq!(agg.final_bound, 4, "loosest endpoint across seeds");
+        assert_eq!(agg.bound_switches, 4, "most controller activity across seeds");
+        // the adaptive mode is config-derived: seeds must agree
+        let mut fixed = b;
+        fixed.adaptive = false;
+        assert!(aggregate_seed_results(&[a, fixed], &budgets).is_err());
+    }
+
+    #[test]
+    fn run_result_json_round_trips_the_adaptive_axis() {
+        // the JSON export is the results/-directory interchange format:
+        // pin that the adaptive trajectory fields survive a write+parse
+        // round trip with their values (not just their presence)
+        let mut r = result(70.0, 9.0, 2, "async-bounded", false);
+        r.adaptive = true;
+        r.final_bound = 4;
+        r.bound_switches = 3;
+        let parsed = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert!(parsed.get("adaptive").unwrap().as_bool().unwrap());
+        assert_eq!(parsed.get("final_bound").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(parsed.get("bound_switches").unwrap().as_usize().unwrap(), 3);
+
+        let fixed = result(50.0, 4.0, 0, "sync-all", false);
+        let parsed = Json::parse(&fixed.to_json().to_string_pretty()).unwrap();
+        assert!(!parsed.get("adaptive").unwrap().as_bool().unwrap());
+        assert_eq!(parsed.get("final_bound").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(parsed.get("bound_switches").unwrap().as_usize().unwrap(), 0);
     }
 }

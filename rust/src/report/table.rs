@@ -141,6 +141,9 @@ mod tests {
             sim_time: 5.0,
             max_staleness: 0,
             delayed_gradients: false,
+            adaptive: false,
+            final_bound: 0,
+            bound_switches: 0,
         }
     }
 

@@ -58,6 +58,13 @@ impl Json {
         Ok(x as usize)
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool"),
+        }
+    }
+
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -357,6 +364,8 @@ mod tests {
             "float32"
         );
         assert_eq!(j.get("flag").unwrap(), &Json::Bool(true));
+        assert!(j.get("flag").unwrap().as_bool().unwrap());
+        assert!(j.get("batch").unwrap().as_bool().is_err(), "numbers are not bools");
     }
 
     #[test]
