@@ -8,8 +8,11 @@
 //! throughput over the threads axis, the deterministic mask-density
 //! trajectory of a tiny AdaSplit run, the async-scheduler axis — the
 //! deterministic `AsyncBounded` sim-time trajectory plus its planning
-//! throughput — the delayed-gradient snapshot-ring axis, and the
-//! adaptive-bound controller axis (`bound_controller_steps_per_s`): all
+//! throughput — the delayed-gradient snapshot-ring axis, the
+//! adaptive-bound controller axis (`bound_controller_steps_per_s`), the
+//! persistent worker-pool axis (`pool_jobs_per_s`: warm-pool dispatch,
+//! zero per-run spawns), and the sharded client-state axis
+//! (`shard_store_ops_per_s`: 500-of-100000 residency bookkeeping): all
 //! pure Rust, so they measure and check even on artifact-less runners).
 //! Default mode rewrites the file; `--check` compares against it
 //! instead — trajectories must match exactly (they are deterministic),
@@ -22,8 +25,8 @@ use std::collections::BTreeMap;
 use adasplit::config::ExperimentConfig;
 use adasplit::data::{build_partition, DatasetKind, Rng, SyntheticDataset};
 use adasplit::driver::{
-    AsyncBounded, BoundController, ClientSpeeds, Scheduler, SnapshotRing, SpeedPreset,
-    WindowDelta,
+    AsyncBounded, BoundController, ClientSpeeds, ClientState, ClientStateStore, Scheduler,
+    SnapshotRing, SpeedPreset, WindowDelta,
 };
 use adasplit::engine::ClientPool;
 use adasplit::orchestrator::UcbOrchestrator;
@@ -95,6 +98,50 @@ fn bound_controller_bench(iters: usize) -> BenchStats {
     })
 }
 
+/// Persistent-pool dispatch throughput (jobs/s through a warm 4-worker
+/// pool; 64 runs x 64 tiny jobs per iteration) — the per-client fan-out
+/// overhead the engine pays once spawn/join is amortized away. The pool
+/// is warmed before timing, so the number is pure dispatch, zero spawns.
+fn pool_jobs_bench(iters: usize) -> BenchStats {
+    let pool = ClientPool::new(4);
+    pool.run(64, |_| Ok(())).unwrap(); // warm up: workers spawn here, once
+    bench("engine: warm pool dispatch 64 runs x 64 jobs", 1, iters, || {
+        for _ in 0..64 {
+            pool.run(64, |i| Ok(std::hint::black_box(i * 2 + 1))).unwrap();
+        }
+    })
+}
+
+/// Per-iteration job count of [`pool_jobs_bench`].
+const POOL_JOBS_PER_ITER: f64 = 64.0 * 64.0;
+
+/// Sharded client-state bookkeeping throughput (ensure-loaded ops/s at
+/// the 100000-client / 500-sample scale point): four rounds of
+/// ensure_loaded + the resident-id walk per iteration. The sharded store
+/// keeps this O(resident), so the number is flat in the fleet size.
+fn shard_store_bench(iters: usize) -> BenchStats {
+    let samples: Vec<Vec<usize>> = (0..4usize)
+        .map(|r| {
+            let mut s: Vec<usize> =
+                (0..500usize).map(|j| (j * 97 + r * 13) % 100_000).collect();
+            s.sort_unstable();
+            s.dedup();
+            s
+        })
+        .collect();
+    bench("engine: sharded store 4 rounds x ~500 of 100k", 1, iters, || {
+        let mut store = ClientStateStore::new(100_000);
+        for sample in &samples {
+            store.ensure_loaded(sample, |_| Ok(ClientState::new())).unwrap();
+            std::hint::black_box(store.loaded_ids());
+            std::hint::black_box(store.loaded_count());
+        }
+    })
+}
+
+/// Per-iteration op count of [`shard_store_bench`].
+const SHARD_OPS_PER_ITER: f64 = 4.0 * 500.0;
+
 fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
     let md = tracked
         .opt("async_sim_time")
@@ -115,6 +162,16 @@ fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
         tracked.opt("bound_controller_steps_per_s").is_some(),
         "tracked {TRACK_FILE} is missing `bound_controller_steps_per_s` \
          (adaptive-bound controller axis); re-record with the bench"
+    );
+    anyhow::ensure!(
+        tracked.opt("pool_jobs_per_s").is_some(),
+        "tracked {TRACK_FILE} is missing `pool_jobs_per_s` \
+         (persistent worker-pool axis); re-record with the bench"
+    );
+    anyhow::ensure!(
+        tracked.opt("shard_store_ops_per_s").is_some(),
+        "tracked {TRACK_FILE} is missing `shard_store_ops_per_s` \
+         (sharded client-state axis); re-record with the bench"
     );
     let old: Vec<f64> = md
         .as_arr()?
@@ -149,6 +206,8 @@ fn results_json(
     async_plan: &BenchStats,
     snap_ring: &BenchStats,
     bound_ctrl: &BenchStats,
+    pool_jobs: &BenchStats,
+    shard_store: &BenchStats,
     n_par: usize,
     quick: bool,
 ) -> Json {
@@ -184,6 +243,11 @@ fn results_json(
     m.insert(
         "bound_controller_steps_per_s".into(),
         Json::Num(1000.0 / bound_ctrl.mean_s),
+    );
+    m.insert("pool_jobs_per_s".into(), Json::Num(POOL_JOBS_PER_ITER / pool_jobs.mean_s));
+    m.insert(
+        "shard_store_ops_per_s".into(),
+        Json::Num(SHARD_OPS_PER_ITER / shard_store.mean_s),
     );
     Json::Obj(m)
 }
@@ -294,6 +358,10 @@ fn main() -> anyhow::Result<()> {
     stats.push(snap_ring.clone());
     let bound_ctrl = bound_controller_bench(iters);
     stats.push(bound_ctrl.clone());
+    let pool_jobs = pool_jobs_bench(iters);
+    stats.push(pool_jobs.clone());
+    let shard_store = shard_store_bench(iters);
+    stats.push(shard_store.clone());
     stats.push(bench("coord: UCB select+update x1000", 1, iters, || {
         let mut ucb = UcbOrchestrator::new(5, 0.87);
         for t in 0..1000u64 {
@@ -456,6 +524,8 @@ fn main() -> anyhow::Result<()> {
             &async_plan,
             &snap_ring,
             &bound_ctrl,
+            &pool_jobs,
+            &shard_store,
             n_par,
             quick_mode(),
         );

@@ -21,12 +21,14 @@
 //! shards are resident; out-of-sample reads (per-round evaluation) hand
 //! back transient shards that drop after use.
 
+use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
 use anyhow::{ensure, Result};
 
 use crate::data::rng::Rng;
 use crate::data::synthetic::{Family, SyntheticDataset, PIXELS};
+use crate::engine::stable_shard;
 
 pub const CLASSES_PER_FAMILY: usize = 10;
 
@@ -100,7 +102,7 @@ impl ClientData {
 /// `imbalance = 1.0` gives equal sizes; `2.0` makes each client twice the
 /// previous one's size (normalized to keep the total close to n*base).
 pub fn imbalanced_sizes(n_clients: usize, base: usize, imbalance: f64) -> Vec<usize> {
-    if (imbalance - 1.0).abs() < 1e-9 {
+    if uniform_imbalance(imbalance) {
         return vec![base; n_clients];
     }
     let weights: Vec<f64> = (0..n_clients).map(|i| imbalance.powi(i as i32)).collect();
@@ -111,6 +113,15 @@ pub fn imbalanced_sizes(n_clients: usize, base: usize, imbalance: f64) -> Vec<us
         .collect()
 }
 
+fn uniform_imbalance(imbalance: f64) -> bool {
+    (imbalance - 1.0).abs() < 1e-9
+}
+
+/// Number of hash-map shards the partition cache spreads clients over —
+/// per-shard `RwLock`s replace one lock per client, so a 100000-client
+/// fleet carries 16 locks, not 100000.
+pub const PARTITION_SHARDS: usize = 16;
+
 /// The experiment's client shards, generated lazily on first touch.
 ///
 /// Residency follows the driver's sampling discipline: ids inside the
@@ -119,14 +130,28 @@ pub fn imbalanced_sizes(n_clients: usize, base: usize, imbalance: f64) -> Vec<us
 /// `Arc<ClientData>` that frees itself when the caller drops it. Shards
 /// are pure functions of (kind, id, seed), so a regenerated shard is
 /// bit-identical to the evicted one.
+///
+/// Every per-instance allocation is O(resident ∪ keep), never O(fleet):
+/// the cache is [`PARTITION_SHARDS`] id-keyed maps (placement =
+/// [`stable_shard`]), the keep set is the driver's sorted sample, and
+/// train-set sizes are computed on demand from the imbalance geometry —
+/// bit-identical to the eager [`imbalanced_sizes`] table.
 pub struct Partition {
     kind: DatasetKind,
-    /// per-client train-set sizes (cheap; known without materializing)
-    sizes: Vec<usize>,
+    n_clients: usize,
+    train_per_client: usize,
+    imbalance: f64,
+    /// `sum(imbalance^i for i in 0..n)` — the normalizer `imbalanced_sizes`
+    /// divides by, precomputed with the same sequential sum so lazy
+    /// lookups reproduce the eager table bit-for-bit. Unused (0.0) when
+    /// the imbalance is uniform.
+    weight_total: f64,
     test_per_client: usize,
     seed: u64,
-    keep: Vec<bool>,
-    slots: Vec<RwLock<Option<Arc<ClientData>>>>,
+    /// `None` = keep everyone (full participation); `Some` holds the
+    /// driver's sorted sample.
+    keep: Option<Vec<usize>>,
+    shards: Vec<RwLock<HashMap<usize, Arc<ClientData>>>>,
 }
 
 impl Partition {
@@ -139,44 +164,68 @@ impl Partition {
         seed: u64,
     ) -> Result<Self> {
         ensure!(n_clients > 0, "need at least one client");
+        let weight_total = if uniform_imbalance(imbalance) {
+            0.0
+        } else {
+            (0..n_clients).map(|i| imbalance.powi(i as i32)).sum()
+        };
         Ok(Self {
             kind,
-            sizes: imbalanced_sizes(n_clients, train_per_client, imbalance),
+            n_clients,
+            train_per_client,
+            imbalance,
+            weight_total,
             test_per_client,
             seed,
-            keep: vec![true; n_clients],
-            slots: (0..n_clients).map(|_| RwLock::new(None)).collect(),
+            keep: None,
+            shards: (0..PARTITION_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
         })
     }
 
     pub fn len(&self) -> usize {
-        self.slots.len()
+        self.n_clients
     }
 
     pub fn is_empty(&self) -> bool {
-        self.slots.is_empty()
+        self.n_clients == 0
     }
 
     /// The client's train-set size, without materializing the shard
-    /// (aggregation weights need only this).
+    /// (aggregation weights need only this). Computed on demand; equals
+    /// `imbalanced_sizes(n, base, imbalance)[id]` exactly.
     pub fn train_len(&self, id: usize) -> usize {
-        self.sizes[id]
+        debug_assert!(id < self.n_clients, "client {id} out of range");
+        if uniform_imbalance(self.imbalance) {
+            return self.train_per_client;
+        }
+        let w = self.imbalance.powi(id as i32);
+        ((w / self.weight_total) * (self.train_per_client * self.n_clients) as f64)
+            .round()
+            .max(32.0) as usize
+    }
+
+    fn kept(&self, id: usize) -> bool {
+        match &self.keep {
+            None => true,
+            Some(keep) => keep.binary_search(&id).is_ok(),
+        }
     }
 
     /// One client's shard, materializing on first touch. Cached only for
     /// ids inside the current keep set; other reads are transient.
     pub fn get(&self, id: usize) -> Arc<ClientData> {
-        if let Some(c) = self.slots[id].read().expect("partition lock").as_ref() {
+        let shard = &self.shards[stable_shard(id, PARTITION_SHARDS)];
+        if let Some(c) = shard.read().expect("partition lock").get(&id) {
             return c.clone();
         }
         let data = Arc::new(self.generate(id));
-        if self.keep[id] {
-            let mut w = self.slots[id].write().expect("partition lock");
-            if let Some(c) = w.as_ref() {
+        if self.kept(id) {
+            let mut w = shard.write().expect("partition lock");
+            if let Some(c) = w.get(&id) {
                 // another worker materialized concurrently — same bits
                 return c.clone();
             }
-            *w = Some(data.clone());
+            w.insert(id, data.clone());
         }
         data
     }
@@ -189,10 +238,11 @@ impl Partition {
     /// eval sweep skips ~2/3 of the generation work (train synthesis +
     /// shuffle) for the ~950 out-of-sample clients.
     pub fn get_for_eval(&self, id: usize) -> Arc<ClientData> {
-        if let Some(c) = self.slots[id].read().expect("partition lock").as_ref() {
+        let shard = &self.shards[stable_shard(id, PARTITION_SHARDS)];
+        if let Some(c) = shard.read().expect("partition lock").get(&id) {
             return c.clone();
         }
-        if self.keep[id] {
+        if self.kept(id) {
             // resident set: materialize and cache the full shard
             return self.get(id);
         }
@@ -203,42 +253,50 @@ impl Partition {
     /// the set are dropped, and future out-of-set reads stay transient.
     /// The driver calls this with the round's participant set whenever
     /// per-round sampling is active, mirroring the [`ClientStateStore`]
-    /// residency discipline.
+    /// residency discipline. Costs O(resident + |keep|) — the cache is
+    /// walked, never the fleet.
     ///
     /// [`ClientStateStore`]: crate::driver::ClientStateStore
     pub fn retain(&mut self, keep: &[usize]) {
-        for (i, k) in self.keep.iter_mut().enumerate() {
-            *k = keep.binary_search(&i).is_ok();
+        for shard in &mut self.shards {
+            shard
+                .get_mut()
+                .expect("partition lock")
+                .retain(|id, _| keep.binary_search(id).is_ok());
         }
-        for (i, slot) in self.slots.iter_mut().enumerate() {
-            if !self.keep[i] {
-                *slot.get_mut().expect("partition lock") = None;
-            }
-        }
+        self.keep = Some(keep.to_vec());
     }
 
-    /// Ids whose shards are currently resident (tests/introspection).
+    /// Ids whose shards are currently resident (tests/introspection),
+    /// sorted ascending.
     pub fn materialized_ids(&self) -> Vec<usize> {
-        self.slots
+        let mut ids: Vec<usize> = self
+            .shards
             .iter()
-            .enumerate()
-            .filter(|(_, s)| s.read().expect("partition lock").is_some())
-            .map(|(i, _)| i)
-            .collect()
+            .flat_map(|s| {
+                s.read()
+                    .expect("partition lock")
+                    .keys()
+                    .copied()
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        ids.sort_unstable();
+        ids
     }
 
     pub fn materialized_count(&self) -> usize {
-        self.slots
+        self.shards
             .iter()
-            .filter(|s| s.read().expect("partition lock").is_some())
-            .count()
+            .map(|s| s.read().expect("partition lock").len())
+            .sum()
     }
 
     /// Generate client `id`'s shard — a pure function of
     /// (kind, id, seed); bit-identical no matter when or how often it
     /// runs.
     fn generate(&self, id: usize) -> ClientData {
-        self.generate_sized(id, self.sizes[id])
+        self.generate_sized(id, self.train_len(id))
     }
 
     /// `generate` with an explicit train-set size: `0` skips train
@@ -442,6 +500,42 @@ mod tests {
         let resident_eval = part.get_for_eval(2);
         assert_eq!(resident_eval.train_len(), 64, "cached shard returned whole");
         assert_eq!(part.materialized_ids(), vec![2]);
+    }
+
+    #[test]
+    fn shard_lazy_sizes_match_eager_table() {
+        // the on-demand size formula must reproduce the eager table
+        // exactly — same powi, same sequential normalizer sum
+        for &(n, base, imb) in &[(64usize, 100usize, 1.07f64), (16, 48, 2.0), (40, 64, 0.93)] {
+            let eager = imbalanced_sizes(n, base, imb);
+            let part = Partition::new(DatasetKind::MixedCifar, n, base, 32, imb, 3).unwrap();
+            let lazy: Vec<usize> = (0..n).map(|i| part.train_len(i)).collect();
+            assert_eq!(lazy, eager, "n={n} base={base} imbalance={imb}");
+        }
+    }
+
+    #[test]
+    fn shard_fleet_scale_partition_is_o_sample() {
+        // 100000 clients, p = 0.005: construction allocates 16 empty
+        // shard maps, and a round touches only the ~500-id sample
+        let mut part =
+            Partition::new(DatasetKind::MixedNonIid, 100_000, 64, 32, 1.0, 17).unwrap();
+        assert_eq!(part.len(), 100_000);
+        assert_eq!(part.materialized_count(), 0);
+        assert_eq!(part.train_len(99_999), 64);
+        let sample: Vec<usize> = (0..500).map(|j| j * 199 + 3).collect();
+        part.retain(&sample);
+        for &i in sample.iter().step_by(50) {
+            assert_eq!(part.get(i).id, i);
+        }
+        assert_eq!(part.materialized_count(), 10, "only touched sampled ids cached");
+        // out-of-sample reads stay transient even at fleet scale
+        let t = part.get(99_998);
+        assert_eq!(t.id, 99_998);
+        assert_eq!(part.materialized_count(), 10);
+        // next round's sample evicts the previous one
+        part.retain(&[7, 8, 9]);
+        assert!(part.materialized_ids().is_empty());
     }
 
     #[test]

@@ -18,10 +18,11 @@
 //!   on the driver thread (pure function of seed and round);
 //! * `client_round` closures run on the worker pool and may touch only
 //!   their own [`ClientState`] plus read-only shared state;
-//! * per-client [`CostMeter`] deltas and protocol updates merge on the
-//!   driver thread in ascending client-id order (scaled by the client's
-//!   [`ClientSpeeds`] rates under a heterogeneous speed model; unscaled —
-//!   bit-identical to the pre-speed-model driver — under uniform speeds);
+//! * per-client [`CostMeter`] deltas (scaled by the client's
+//!   [`ClientSpeeds`] rates under a heterogeneous speed model) combine on
+//!   the driver thread through a balanced tree over the id-ordered
+//!   participant list ([`crate::engine::tree_reduce`], DESIGN.md §10),
+//!   and protocol updates merge in ascending client-id order;
 //! * `merge_round` / `end_round` run sequentially on the driver thread,
 //!   under the round's published staleness-decay multipliers (DESIGN.md
 //!   §7) when the async scheduler reports stale contributions;
@@ -391,22 +392,33 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
                         p.client_round(&ctx, state)
                     })?
                 };
-                // fan-in on the driver thread, ascending client-id order;
-                // heterogeneous devices scale their deltas against the
-                // budgets (uniform speeds: plain merge, bit-identical)
+                // fan-in on the driver thread: per-client deltas (scaled
+                // against the budgets under heterogeneous speeds) combine
+                // through a balanced tree whose shape is a pure function
+                // of the id-ordered participant list, then fold into the
+                // run meter once — the reduce order depends on client ids
+                // only, never the thread schedule, so threads N ≡ 1 holds
+                // at any fan-out width (DESIGN.md §10)
                 let mut merged = Vec::with_capacity(raw.len());
+                let mut deltas = Vec::with_capacity(raw.len());
                 for (j, u) in raw.into_iter().enumerate() {
                     let i = participants[j];
-                    if speeds.is_uniform() {
-                        env.meter.merge(&u.meter);
+                    let delta = if speeds.is_uniform() {
+                        u.meter
                     } else {
-                        env.meter.merge_scaled(
-                            &u.meter,
-                            speeds.compute_scale(i),
-                            speeds.net_scale(i),
-                        );
-                    }
+                        let mut d = CostMeter::new();
+                        d.merge_scaled(&u.meter, speeds.compute_scale(i), speeds.net_scale(i));
+                        d
+                    };
+                    deltas.push(delta);
                     merged.push((i, u.inner));
+                }
+                let combined = crate::engine::tree_reduce(deltas, |mut a, b| {
+                    a.merge(&b);
+                    a
+                });
+                if let Some(round_delta) = combined {
+                    env.meter.merge(&round_delta);
                 }
                 merged
             } else {

@@ -192,11 +192,21 @@ impl SampledSync {
             // p = 1.0 degenerates to SyncAll exactly (bit-identity contract)
             return (0..self.n).collect();
         }
+        // Floyd's k-of-n sampling: k draws and O(k) memory, instead of
+        // materializing (and shuffling) an O(fleet) permutation per round.
+        // Uniform over k-subsets; the round-keyed stream keeps it
+        // deterministic across threads and repeated peeks.
         let mut r = self.rng.derive("sampled-sync", round as u64);
-        let mut ids = r.permutation(self.n);
-        ids.truncate(self.per_round);
-        ids.sort_unstable();
-        ids
+        let k = self.per_round;
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in (self.n - k)..self.n {
+            let t = r.below(j + 1);
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        // BTreeSet iteration is ascending: sorted + unique by construction
+        chosen.into_iter().collect()
     }
 }
 
@@ -307,10 +317,6 @@ impl AsyncBounded {
         let required: Vec<usize> = (0..self.n)
             .filter(|&i| r - self.last_sync[i] > self.bound as i64)
             .collect();
-        let mut is_required = vec![false; self.n];
-        for &i in &required {
-            is_required[i] = true;
-        }
 
         // merge trigger: wait for the slowest required client; with no one
         // required, wait for the fastest in-flight client so the merge set
@@ -325,7 +331,62 @@ impl AsyncBounded {
         };
         let clock = self.clock.max(trigger);
 
-        // arrivals in completion order (id tie-break), required first
+        // non-required arrivals, earliest completion first (id tie-break),
+        // up to `cap` total: a bounded max-heap over (ready-bits, id) keys
+        // keeps the per-round allocation proportional to the merge set
+        // instead of collecting and sorting every arrival in the fleet.
+        // `ready` times are strictly positive finite (durations clamp to
+        // MIN_POSITIVE, the clock is monotone from 0), so the IEEE bit
+        // pattern orders exactly like the float — the same (ready, id)
+        // selection the old full sort made, pinned against the naive
+        // reference by `optimized_merge_selection_matches_naive_reference`.
+        let extra = self.cap.max(required.len()) - required.len();
+        let mut best: std::collections::BinaryHeap<(u64, usize)> =
+            std::collections::BinaryHeap::with_capacity(extra + 1);
+        if extra > 0 {
+            for i in 0..self.n {
+                if self.ready[i] > clock || required.binary_search(&i).is_ok() {
+                    continue;
+                }
+                best.push((self.ready[i].to_bits(), i));
+                if best.len() > extra {
+                    best.pop();
+                }
+            }
+        }
+        let mut merge = required;
+        merge.extend(best.into_iter().map(|(_, i)| i));
+        merge.sort_unstable();
+
+        let staleness: Vec<usize> = merge
+            .iter()
+            .map(|&i| (r - 1 - self.last_sync[i]).max(0) as usize)
+            .collect();
+        RoundPlan { participants: merge, staleness, sim_time: clock }
+    }
+
+    /// The pre-optimization merge computation (materialize + full sort of
+    /// every arrival), kept verbatim as the semantic reference for the
+    /// bounded-heap fast path above. Test-only.
+    #[cfg(test)]
+    fn compute_naive(&self, round: usize) -> RoundPlan {
+        let r = round as i64;
+        let required: Vec<usize> = (0..self.n)
+            .filter(|&i| r - self.last_sync[i] > self.bound as i64)
+            .collect();
+        let mut is_required = vec![false; self.n];
+        for &i in &required {
+            is_required[i] = true;
+        }
+        let trigger = if required.is_empty() {
+            self.ready.iter().copied().fold(f64::INFINITY, f64::min)
+        } else {
+            required
+                .iter()
+                .map(|&i| self.ready[i])
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        let clock = self.clock.max(trigger);
         let mut arrived: Vec<usize> =
             (0..self.n).filter(|&i| self.ready[i] <= clock).collect();
         arrived.sort_by(|&a, &b| {
@@ -345,7 +406,6 @@ impl AsyncBounded {
             }
         }
         merge.sort_unstable();
-
         let staleness: Vec<usize> = merge
             .iter()
             .map(|&i| (r - 1 - self.last_sync[i]).max(0) as usize)
@@ -736,6 +796,57 @@ mod tests {
             }
         }
         assert!(saw_stale, "a loosened bound under stragglers must admit staleness");
+    }
+
+    #[test]
+    fn optimized_merge_selection_matches_naive_reference() {
+        // the bounded-heap fast path must reproduce the old materialize-
+        // and-sort selection bit-for-bit, including under mid-stream bound
+        // switches (the adaptive controller's adversarial case)
+        for (n, bound, p, preset, frac, seed) in [
+            (24usize, 0usize, 1.0, SpeedPreset::Stragglers, 0.3, 13u64),
+            (24, 2, 0.25, SpeedPreset::Lognormal { sigma: 0.8 }, 0.0, 13),
+            (16, 5, 0.05, SpeedPreset::Stragglers, 0.9, 2),
+            (30, 6, 0.2, SpeedPreset::Lognormal { sigma: 0.6 }, 0.0, 9),
+            (12, 1, 0.5, SpeedPreset::Uniform, 0.0, 7),
+        ] {
+            let sp = speeds(n, preset, frac, seed);
+            let mut s = AsyncBounded::new(n, bound, p, &sp);
+            for round in 0..80 {
+                if round == 30 {
+                    s.set_bound(bound + 3, round);
+                }
+                if round == 55 {
+                    s.set_bound(bound, round);
+                }
+                let fast = s.compute(round);
+                let naive = s.compute_naive(round);
+                assert_eq!(fast.participants, naive.participants, "round {round} n {n}");
+                assert_eq!(fast.staleness, naive.staleness, "round {round} n {n}");
+                assert_eq!(
+                    fast.sim_time.to_bits(),
+                    naive.sim_time.to_bits(),
+                    "round {round} n {n}"
+                );
+                s.plan(round);
+            }
+        }
+    }
+
+    #[test]
+    fn floyd_sampling_is_sorted_unique_and_in_range_at_scale() {
+        // the O(k) sampler's invariants at a fleet size where the old
+        // permutation path would have allocated 100k-entry scratch
+        let s = SampledSync::new(100_000, 0.005, 42);
+        assert_eq!(s.sampled_per_round(), 500);
+        for round in 0..5 {
+            let ids = s.participants(round);
+            assert_eq!(ids.len(), 500, "round {round}");
+            assert!(ids.windows(2).all(|w| w[0] < w[1]), "round {round}: sorted+unique");
+            assert!(*ids.last().unwrap() < 100_000);
+            assert_eq!(ids, s.participants(round), "round {round}: peek-stable");
+        }
+        assert_ne!(s.participants(0), s.participants(1), "rounds draw fresh samples");
     }
 
     #[test]

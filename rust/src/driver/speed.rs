@@ -88,46 +88,26 @@ impl std::str::FromStr for SpeedPreset {
     }
 }
 
-/// Materialized per-client rate multipliers for one run.
+/// Per-client rate multipliers for one run, computed on demand.
+///
+/// The model stores only its parameters (preset, straggler fraction, root
+/// stream) — **O(1) memory however large the fleet** — and derives client
+/// `i`'s rates from its independent stream `seed -> "client-speed" -> i`
+/// at each lookup. Because every id always had its own derived stream,
+/// the lazy values are bit-identical to the old eagerly-materialized
+/// vectors; a sampled round now touches O(sample) streams instead of
+/// paying an O(fleet) allocation up front.
 #[derive(Clone, Debug)]
 pub struct ClientSpeeds {
-    compute: Vec<f64>,
-    net: Vec<f64>,
-    uniform: bool,
+    n: usize,
+    preset: SpeedPreset,
+    straggler_frac: f64,
+    root: Rng,
 }
 
 impl ClientSpeeds {
     pub fn new(n_clients: usize, preset: SpeedPreset, straggler_frac: f64, seed: u64) -> Self {
-        let root = Rng::new(seed);
-        let mut compute = Vec::with_capacity(n_clients);
-        let mut net = Vec::with_capacity(n_clients);
-        for i in 0..n_clients {
-            // one independent stream per client id: rates are a pure
-            // function of (seed, i), never of n_clients
-            let mut r = root.derive("client-speed", i as u64);
-            let (c, nw) = match preset {
-                SpeedPreset::Uniform => (1.0, 1.0),
-                SpeedPreset::Lognormal { sigma } => {
-                    let c = (sigma * r.normal()).exp();
-                    let nw = (sigma * r.normal()).exp();
-                    (c, nw)
-                }
-                SpeedPreset::Stragglers => {
-                    if r.next_f64() < straggler_frac {
-                        (1.0 / STRAGGLER_SLOWDOWN, 1.0 / STRAGGLER_SLOWDOWN)
-                    } else {
-                        (1.0, 1.0)
-                    }
-                }
-            };
-            compute.push(c);
-            net.push(nw);
-        }
-        Self {
-            compute,
-            net,
-            uniform: preset == SpeedPreset::Uniform,
-        }
+        Self { n: n_clients, preset, straggler_frac, root: Rng::new(seed) }
     }
 
     /// Speeds for the experiment's fleet (`client_speeds`,
@@ -137,24 +117,49 @@ impl ClientSpeeds {
     }
 
     pub fn len(&self) -> usize {
-        self.compute.len()
+        self.n
     }
 
     pub fn is_empty(&self) -> bool {
-        self.compute.is_empty()
+        self.n == 0
     }
 
     /// All clients are the baseline device — the bit-parity fast path:
     /// the driver then merges cost deltas unscaled, exactly as before the
     /// speed model existed.
     pub fn is_uniform(&self) -> bool {
-        self.uniform
+        self.preset == SpeedPreset::Uniform
+    }
+
+    /// `(compute, net)` rate multipliers for one client: a pure function
+    /// of (seed, client) — never of the fleet size or of which other
+    /// clients were looked up first.
+    pub fn rates(&self, client: usize) -> (f64, f64) {
+        debug_assert!(client < self.n, "client {client} out of fleet 0..{}", self.n);
+        // one independent stream per client id
+        let mut r = self.root.derive("client-speed", client as u64);
+        match self.preset {
+            SpeedPreset::Uniform => (1.0, 1.0),
+            SpeedPreset::Lognormal { sigma } => {
+                let c = (sigma * r.normal()).exp();
+                let nw = (sigma * r.normal()).exp();
+                (c, nw)
+            }
+            SpeedPreset::Stragglers => {
+                if r.next_f64() < self.straggler_frac {
+                    (1.0 / STRAGGLER_SLOWDOWN, 1.0 / STRAGGLER_SLOWDOWN)
+                } else {
+                    (1.0, 1.0)
+                }
+            }
+        }
     }
 
     /// Virtual duration of one round of client work, in baseline-round
     /// units (`1.0` for the baseline device).
     pub fn round_duration(&self, client: usize) -> f64 {
-        COMPUTE_SHARE / self.compute[client] + NET_SHARE / self.net[client]
+        let (compute, net) = self.rates(client);
+        COMPUTE_SHARE / compute + NET_SHARE / net
     }
 
     /// Longest round duration over a participant set (what a synchronous
@@ -182,13 +187,13 @@ impl ClientSpeeds {
     /// Compute-budget multiplier: FLOPs on a slow device cost
     /// proportionally more device-time against the compute budget.
     pub fn compute_scale(&self, client: usize) -> f64 {
-        1.0 / self.compute[client]
+        1.0 / self.rates(client).0
     }
 
     /// Bandwidth-budget multiplier: bytes over a slow link cost
     /// proportionally more link-time against the bandwidth budget.
     pub fn net_scale(&self, client: usize) -> f64 {
-        1.0 / self.net[client]
+        1.0 / self.rates(client).1
     }
 }
 
@@ -234,8 +239,11 @@ mod tests {
         ] {
             let a = ClientSpeeds::new(32, preset, 0.25, 7);
             let b = ClientSpeeds::new(32, preset, 0.25, 7);
-            assert_eq!(a.compute, b.compute, "{preset:?}");
-            assert_eq!(a.net, b.net, "{preset:?}");
+            for i in 0..32 {
+                assert_eq!(a.rates(i), b.rates(i), "{preset:?} client {i}");
+                // lookups are pure: repeating one changes nothing
+                assert_eq!(a.rates(i), a.rates(i), "{preset:?} client {i}");
+            }
         }
     }
 
@@ -245,8 +253,9 @@ mod tests {
         for preset in [SpeedPreset::Lognormal { sigma: 0.8 }, SpeedPreset::Stragglers] {
             let small = ClientSpeeds::new(8, preset, 0.3, 11);
             let large = ClientSpeeds::new(64, preset, 0.3, 11);
-            assert_eq!(small.compute[..], large.compute[..8], "{preset:?}");
-            assert_eq!(small.net[..], large.net[..8], "{preset:?}");
+            for i in 0..8 {
+                assert_eq!(small.rates(i), large.rates(i), "{preset:?} client {i}");
+            }
         }
     }
 
@@ -254,7 +263,9 @@ mod tests {
     fn seeds_matter_for_random_presets() {
         let a = ClientSpeeds::new(64, SpeedPreset::Lognormal { sigma: 0.5 }, 0.0, 1);
         let b = ClientSpeeds::new(64, SpeedPreset::Lognormal { sigma: 0.5 }, 0.0, 2);
-        assert_ne!(a.compute, b.compute);
+        let ca: Vec<u64> = (0..64).map(|i| a.rates(i).0.to_bits()).collect();
+        let cb: Vec<u64> = (0..64).map(|i| b.rates(i).0.to_bits()).collect();
+        assert_ne!(ca, cb);
     }
 
     #[test]
@@ -281,9 +292,10 @@ mod tests {
         assert!(!s.is_uniform());
         let mut distinct = std::collections::BTreeSet::new();
         for i in 0..128 {
-            assert!(s.compute[i] > 0.0 && s.net[i] > 0.0);
+            let (compute, net) = s.rates(i);
+            assert!(compute > 0.0 && net > 0.0);
             assert!(s.round_duration(i) > 0.0);
-            distinct.insert(s.compute[i].to_bits());
+            distinct.insert(compute.to_bits());
         }
         assert!(distinct.len() > 100, "rates should be spread, not collapsed");
     }

@@ -4,28 +4,39 @@
 //!
 //! Each client owns a [`ClientState`] — a small named group of
 //! `TensorStore`s (`"model"`, `"ci"`, `"mask"`, `"pending"`, ... — the
-//! protocol picks the slots). The [`ClientStateStore`] holds one slot per
-//! client in one of three states:
+//! protocol picks the slots). The [`ClientStateStore`] tracks each client
+//! in one of three states:
 //!
-//! * **Uninit** — the client has never participated; nothing is held.
-//!   State is materialized on first participation via the protocol's
+//! * **Uninit** — the client has never participated; nothing is held
+//!   (not even a placeholder: absence from the shard maps *is* the
+//!   state, so a never-sampled client costs zero bytes). State is
+//!   materialized on first participation via the protocol's
 //!   `init_client` (a pure function of the experiment seed, so *when* a
 //!   client is first initialized never changes its values).
 //! * **Loaded** — resident in memory (the active sample).
 //! * **Spilled** — serialized to a scratch file (bit-exact f32 round
 //!   trip), reloaded on the client's next participation.
 //!
+//! Storage is sharded: ids map to a fixed set of hash-map shards via the
+//! engine's [`stable_shard`] bit-mix (a pure function of the id, so
+//! placement is reproducible across runs and thread counts), and a
+//! sorted resident-id index makes every per-round bookkeeping operation
+//! — `loaded_ids`, `loaded_count`, `resident_bytes`, `spill_except` —
+//! O(resident), never O(fleet). A `--clients 100000, p=0.005` run pays
+//! for ~500 states per round, not 100000 slots.
+//!
 //! Spilling is enabled by the driver only when per-round sampling is
 //! active (`participation < 1.0`); a full-participation run keeps every
 //! client loaded and never touches the disk, which is one ingredient of
 //! the `SampledSync(p=1.0) == SyncAll` bit-identity guarantee.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::engine::stable_shard;
 use crate::runtime::{Tensor, TensorStore};
 
 /// One client's named state group.
@@ -111,14 +122,25 @@ impl ClientState {
 }
 
 enum Slot {
-    Uninit,
     Loaded(ClientState),
     Spilled(PathBuf),
 }
 
+/// Number of hash-map shards a store spreads its clients over. Fixed (not
+/// thread-count dependent) so placement never varies between runs.
+pub const STORE_SHARDS: usize = 16;
+
 /// Pooled per-client state with lazy init and optional spill-to-disk.
+///
+/// Clients live in [`STORE_SHARDS`] hash-map shards keyed by id (shard
+/// choice = [`stable_shard`]); an id absent from its shard is **Uninit**.
+/// A sorted resident-id index keeps every bookkeeping query O(resident).
 pub struct ClientStateStore {
-    slots: Vec<Slot>,
+    n_clients: usize,
+    shards: Vec<HashMap<usize, Slot>>,
+    /// Ids currently `Loaded`, in sorted order. Invariant: `resident`
+    /// contains exactly the ids whose shard entry is `Slot::Loaded`.
+    resident: BTreeSet<usize>,
     spill_dir: Option<PathBuf>,
 }
 
@@ -126,7 +148,9 @@ impl ClientStateStore {
     /// All-resident store (no spilling): full-participation behavior.
     pub fn new(n_clients: usize) -> Self {
         Self {
-            slots: (0..n_clients).map(|_| Slot::Uninit).collect(),
+            n_clients,
+            shards: (0..STORE_SHARDS).map(|_| HashMap::new()).collect(),
+            resident: BTreeSet::new(),
             spill_dir: None,
         }
     }
@@ -136,18 +160,17 @@ impl ClientStateStore {
     pub fn with_spill(n_clients: usize, dir: PathBuf) -> Result<Self> {
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating spill dir {dir:?}"))?;
-        Ok(Self {
-            slots: (0..n_clients).map(|_| Slot::Uninit).collect(),
-            spill_dir: Some(dir),
-        })
+        let mut store = Self::new(n_clients);
+        store.spill_dir = Some(dir);
+        Ok(store)
     }
 
     pub fn len(&self) -> usize {
-        self.slots.len()
+        self.n_clients
     }
 
     pub fn is_empty(&self) -> bool {
-        self.slots.is_empty()
+        self.n_clients == 0
     }
 
     pub fn spilling(&self) -> bool {
@@ -155,33 +178,25 @@ impl ClientStateStore {
     }
 
     pub fn loaded_count(&self) -> usize {
-        self.slots
-            .iter()
-            .filter(|s| matches!(s, Slot::Loaded(_)))
-            .count()
+        self.resident.len()
     }
 
-    /// Every client that has ever been initialized is currently resident.
+    /// Every client — including never-sampled ones — is currently resident.
     pub fn all_loaded(&self) -> bool {
-        self.slots.iter().all(|s| matches!(s, Slot::Loaded(_)))
+        self.resident.len() == self.n_clients
     }
 
     pub fn loaded_ids(&self) -> Vec<usize> {
-        self.slots
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| matches!(s, Slot::Loaded(_)))
-            .map(|(i, _)| i)
-            .collect()
+        self.resident.iter().copied().collect()
     }
 
     /// Resident bytes across loaded states (introspection / tests).
     pub fn resident_bytes(&self) -> usize {
-        self.slots
+        self.resident
             .iter()
-            .map(|s| match s {
-                Slot::Loaded(c) => c.byte_size(),
-                _ => 0,
+            .map(|&id| match self.shards[stable_shard(id, STORE_SHARDS)].get(&id) {
+                Some(Slot::Loaded(c)) => c.byte_size(),
+                _ => unreachable!("resident index out of sync for client {id}"),
             })
             .sum()
     }
@@ -193,15 +208,22 @@ impl ClientStateStore {
         F: Fn(usize) -> Result<ClientState>,
     {
         for &id in ids {
-            ensure!(id < self.slots.len(), "client {id} out of range");
-            match &self.slots[id] {
-                Slot::Loaded(_) => {}
-                Slot::Uninit => self.slots[id] = Slot::Loaded(init(id)?),
-                Slot::Spilled(path) => {
-                    let state = read_state(path)
+            ensure!(id < self.n_clients, "client {id} out of range");
+            let sh = stable_shard(id, STORE_SHARDS);
+            match self.shards[sh].get(&id) {
+                Some(Slot::Loaded(_)) => {}
+                Some(Slot::Spilled(path)) => {
+                    let path = path.clone();
+                    let state = read_state(&path)
                         .with_context(|| format!("reloading client {id}"))?;
-                    std::fs::remove_file(path).ok();
-                    self.slots[id] = Slot::Loaded(state);
+                    std::fs::remove_file(&path).ok();
+                    self.shards[sh].insert(id, Slot::Loaded(state));
+                    self.resident.insert(id);
+                }
+                None => {
+                    let state = init(id)?;
+                    self.shards[sh].insert(id, Slot::Loaded(state));
+                    self.resident.insert(id);
                 }
             }
         }
@@ -209,40 +231,42 @@ impl ClientStateStore {
     }
 
     /// Spill every resident client *not* in `keep` (sorted ids). No-op
-    /// unless spilling is enabled.
+    /// unless spilling is enabled. Walks the resident index, so a round's
+    /// eviction pass costs O(resident · log keep), independent of the
+    /// fleet size.
     pub fn spill_except(&mut self, keep: &[usize]) -> Result<usize> {
-        let Some(dir) = self.spill_dir.clone() else {
+        if self.spill_dir.is_none() {
             return Ok(0);
-        };
-        let mut spilled = 0;
-        for id in 0..self.slots.len() {
-            if keep.binary_search(&id).is_ok() {
-                continue;
-            }
-            if let Slot::Loaded(state) = &self.slots[id] {
-                let path = dir.join(format!("client_{id}.bin"));
-                write_state(&path, state)
-                    .with_context(|| format!("spilling client {id}"))?;
-                self.slots[id] = Slot::Spilled(path);
-                spilled += 1;
-            }
         }
-        Ok(spilled)
+        let evict: Vec<usize> = self
+            .resident
+            .iter()
+            .copied()
+            .filter(|id| keep.binary_search(id).is_err())
+            .collect();
+        for &id in &evict {
+            self.spill_one(id)?;
+        }
+        Ok(evict.len())
     }
 
     pub fn get(&self, id: usize) -> Result<&ClientState> {
-        match self.slots.get(id) {
+        if id >= self.n_clients {
+            bail!("client {id} out of range");
+        }
+        match self.shards[stable_shard(id, STORE_SHARDS)].get(&id) {
             Some(Slot::Loaded(s)) => Ok(s),
-            Some(_) => bail!("client {id} not resident"),
-            None => bail!("client {id} out of range"),
+            _ => bail!("client {id} not resident"),
         }
     }
 
     pub fn get_mut(&mut self, id: usize) -> Result<&mut ClientState> {
-        match self.slots.get_mut(id) {
+        if id >= self.n_clients {
+            bail!("client {id} out of range");
+        }
+        match self.shards[stable_shard(id, STORE_SHARDS)].get_mut(&id) {
             Some(Slot::Loaded(s)) => Ok(s),
-            Some(_) => bail!("client {id} not resident"),
-            None => bail!("client {id} out of range"),
+            _ => bail!("client {id} not resident"),
         }
     }
 
@@ -251,18 +275,25 @@ impl ClientStateStore {
     /// fans out over.
     pub fn loaded_mut(&mut self, ids: &[usize]) -> Result<Vec<&mut ClientState>> {
         let mut out = Vec::with_capacity(ids.len());
-        let mut rest: &mut [Slot] = &mut self.slots;
-        let mut offset = 0usize;
+        let mut prev: Option<usize> = None;
         for &id in ids {
-            ensure!(id >= offset, "loaded_mut ids must be ascending and unique");
-            ensure!(id < offset + rest.len(), "client {id} out of range");
-            let (left, right) = rest.split_at_mut(id - offset + 1);
-            match left.last_mut().unwrap() {
-                Slot::Loaded(s) => out.push(s),
+            ensure!(
+                prev.map_or(true, |p| id > p),
+                "loaded_mut ids must be ascending and unique"
+            );
+            prev = Some(id);
+            ensure!(id < self.n_clients, "client {id} out of range");
+            match self.shards[stable_shard(id, STORE_SHARDS)].get_mut(&id) {
+                Some(Slot::Loaded(s)) => {
+                    // SAFETY: ids are strictly ascending (checked above),
+                    // so every (shard, key) pair is visited at most once
+                    // and the borrows are disjoint; the maps are not
+                    // mutated while the views are live, so the value
+                    // addresses stay stable.
+                    out.push(unsafe { &mut *(s as *mut ClientState) });
+                }
                 _ => bail!("client {id} not resident"),
             }
-            rest = right;
-            offset = id + 1;
         }
         Ok(out)
     }
@@ -285,23 +316,34 @@ impl ClientStateStore {
         I: Fn(usize) -> Result<ClientState>,
         F: FnMut(usize, &ClientState) -> Result<()>,
     {
-        for id in 0..self.slots.len() {
+        enum Disposition {
+            Resident,
+            OnDisk(PathBuf),
+            Fresh,
+        }
+        for id in 0..self.n_clients {
             let kept = keep.binary_search(&id).is_ok();
-            match &self.slots[id] {
-                Slot::Loaded(_) => {}
-                Slot::Spilled(path) => {
-                    let path = path.clone();
+            let sh = stable_shard(id, STORE_SHARDS);
+            let disp = match self.shards[sh].get(&id) {
+                Some(Slot::Loaded(_)) => Disposition::Resident,
+                Some(Slot::Spilled(path)) => Disposition::OnDisk(path.clone()),
+                None => Disposition::Fresh,
+            };
+            match disp {
+                Disposition::Resident => {}
+                Disposition::OnDisk(path) => {
                     let state =
                         read_state(&path).with_context(|| format!("reloading client {id}"))?;
                     if kept {
                         std::fs::remove_file(&path).ok();
-                        self.slots[id] = Slot::Loaded(state);
+                        self.shards[sh].insert(id, Slot::Loaded(state));
+                        self.resident.insert(id);
                     } else {
                         f(id, &state)?;
                         continue;
                     }
                 }
-                Slot::Uninit => {
+                Disposition::Fresh => {
                     let state = init(id)?;
                     if self.spilling() && !kept {
                         let dir = self.spill_dir.clone().expect("spilling implies dir");
@@ -309,14 +351,15 @@ impl ClientStateStore {
                         write_state(&path, &state)
                             .with_context(|| format!("spilling client {id}"))?;
                         f(id, &state)?;
-                        self.slots[id] = Slot::Spilled(path);
+                        self.shards[sh].insert(id, Slot::Spilled(path));
                         continue;
                     }
-                    self.slots[id] = Slot::Loaded(state);
+                    self.shards[sh].insert(id, Slot::Loaded(state));
+                    self.resident.insert(id);
                 }
             }
-            match &self.slots[id] {
-                Slot::Loaded(state) => f(id, state)?,
+            match self.shards[sh].get(&id) {
+                Some(Slot::Loaded(state)) => f(id, state)?,
                 _ => unreachable!("client {id} must be resident here"),
             }
             // a resident client outside `keep` (caller shrank the keep
@@ -332,10 +375,12 @@ impl ClientStateStore {
         let Some(dir) = self.spill_dir.clone() else {
             return Ok(());
         };
-        if let Slot::Loaded(state) = &self.slots[id] {
+        let sh = stable_shard(id, STORE_SHARDS);
+        if let Some(Slot::Loaded(state)) = self.shards[sh].get(&id) {
             let path = dir.join(format!("client_{id}.bin"));
             write_state(&path, state).with_context(|| format!("spilling client {id}"))?;
-            self.slots[id] = Slot::Spilled(path);
+            self.shards[sh].insert(id, Slot::Spilled(path));
+            self.resident.remove(&id);
         }
         Ok(())
     }
@@ -630,6 +675,63 @@ mod tests {
         store.ensure_loaded(&[0, 1, 2], |i| Ok(state(i as f32))).unwrap();
         assert_eq!(store.spill_except(&[0]).unwrap(), 0);
         assert!(store.all_loaded());
+    }
+
+    #[test]
+    fn shard_residency_tracks_sample_not_fleet() {
+        // a fleet-scale store costs nothing until clients materialize:
+        // only the sampled ids ever occupy memory or bookkeeping
+        let mut store = ClientStateStore::new(100_000);
+        assert_eq!(store.len(), 100_000);
+        assert_eq!(store.loaded_count(), 0);
+        assert_eq!(store.resident_bytes(), 0);
+        let sample: Vec<usize> = (0..500).map(|j| j * 200 + 7).collect();
+        store.ensure_loaded(&sample, |i| Ok(state(i as f32))).unwrap();
+        assert_eq!(store.loaded_count(), 500);
+        assert_eq!(store.loaded_ids(), sample, "sorted id order preserved");
+        assert!(!store.all_loaded());
+        let per_state = state(0.0).byte_size();
+        assert_eq!(store.resident_bytes(), 500 * per_state);
+        // unsampled ids are absent, not placeholders
+        assert!(store.get(8).is_err());
+        // disjoint &mut across shard collisions (500 ids over 16 shards
+        // guarantees many same-shard neighbors)
+        let mut views = store.loaded_mut(&sample).unwrap();
+        for v in views.iter_mut() {
+            v.get_mut("model").unwrap().get_mut("state.t").unwrap().scale(2.0);
+        }
+        for (j, &id) in sample.iter().enumerate() {
+            let got = store.get(id).unwrap().get("model").unwrap().get("state.t").unwrap().item();
+            assert_eq!(got, id as f32 * 2.0, "sample index {j}");
+        }
+    }
+
+    #[test]
+    fn shard_spill_except_walks_resident_only() {
+        let dir = scratch_dir(46);
+        let mut store = ClientStateStore::with_spill(100_000, dir.clone()).unwrap();
+        let sample = [3usize, 41, 999, 7_000, 31_337, 54_321, 70_001, 99_999];
+        store.ensure_loaded(&sample, |i| Ok(state(i as f32))).unwrap();
+        let keep = [41usize, 31_337, 99_999];
+        let spilled = store.spill_except(&keep).unwrap();
+        assert_eq!(spilled, sample.len() - keep.len());
+        assert_eq!(store.loaded_ids(), keep.to_vec());
+        assert_eq!(
+            std::fs::read_dir(&dir).unwrap().count(),
+            sample.len() - keep.len(),
+            "one spill file per evicted client"
+        );
+        // a second pass over the same keep set evicts nothing
+        assert_eq!(store.spill_except(&keep).unwrap(), 0);
+        // spilled clients reload from disk, never re-init
+        store
+            .ensure_loaded(&[3, 7_000], |i| panic!("client {i} re-initialized"))
+            .unwrap();
+        assert_eq!(store.loaded_ids(), vec![3, 41, 7_000, 31_337, 99_999]);
+        assert_eq!(
+            store.get(7_000).unwrap().get("model").unwrap().get("state.t").unwrap().item(),
+            7_000.0
+        );
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Parallel client-execution engine: a scoped-thread worker pool that fans
+//! Parallel client-execution engine: a persistent worker pool that fans
 //! per-client work out across OS threads and merges the results back in
 //! client-id order.
 //!
@@ -11,9 +11,14 @@
 //! to `--threads 1`, which executes the very same closures inline in the
 //! same order.
 //!
-//! The pool is deliberately dependency-free (`std::thread::scope` + an
-//! atomic work index): workers claim indices from a shared counter, so a
+//! The pool is deliberately dependency-free (`std::thread` + an mpsc job
+//! channel + an atomic work index). Workers are spawned lazily on the
+//! first parallel `run*` call and then *persist*: subsequent calls enqueue
+//! a lifetime-erased job instead of paying spawn/join, which is what makes
+//! per-step fan-outs (AdaSplit's per-iteration exchanges especially)
+//! cheap. Within a run, workers claim indices from a shared counter, so a
 //! slow client (compile hit, big batch list) does not stall the others.
+//! Dropping the pool closes the job channel and joins every worker.
 //!
 //! **Fail-fast**: once any index returns an error, workers stop claiming
 //! *new* indices (already-claimed work runs to completion). This cannot
@@ -23,7 +28,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -52,153 +57,292 @@ pub trait ParallelEnv {
     fn n_clients(&self) -> usize;
     /// Resolved worker count (never 0).
     fn threads(&self) -> usize;
+    /// A long-lived pool whose warmed workers should be reused for this
+    /// env's fan-outs. The default (`None`) makes [`par_clients`] fall
+    /// back to a transient pool, preserving the old per-call behaviour
+    /// for envs that don't carry one.
+    fn shared_pool(&self) -> Option<&ClientPool> {
+        None
+    }
 }
 
 /// Fan `f(i)` out over clients `0..env.n_clients()` and return the results
-/// in client-id order. See [`par_indexed`] for the execution contract.
+/// in client-id order. Reuses the env's shared pool when it has one (no
+/// spawn after warm-up); see [`ClientPool::run`] for the execution
+/// contract.
 pub fn par_clients<E, T, F>(env: &E, f: F) -> Result<Vec<T>>
 where
     E: ParallelEnv,
     T: Send,
     F: Fn(usize) -> Result<T> + Sync,
 {
-    par_indexed(env.threads(), env.n_clients(), f)
+    match env.shared_pool() {
+        Some(pool) => pool.run(env.n_clients(), f),
+        None => par_indexed(env.threads(), env.n_clients(), f),
+    }
 }
 
-/// A sized worker pool for round-level fan-out/fan-in.
+/// The claim loop shared by every parallel entry point (caller thread and
+/// pool workers alike): claim ascending indices from `next`, stop as soon
+/// as `failed` is observed or the range is exhausted, and hand each
+/// claimed index to `run_one` exactly once.
+///
+/// Factored out so the fail-fast/claim semantics live in one place and
+/// can be pinned directly by tests (no sleep-based racing required).
+pub(crate) fn worker_loop<R>(next: &AtomicUsize, failed: &AtomicBool, n: usize, run_one: &R)
+where
+    R: Fn(usize) + ?Sized,
+{
+    loop {
+        // fail-fast: stop claiming new indices after any failure
+        if failed.load(Ordering::Acquire) {
+            break;
+        }
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        run_one(i);
+    }
+}
+
+/// A lifetime-erased unit of pool work: "run this borrowed closure, then
+/// signal completion". The dispatcher guarantees (by blocking on the
+/// completion channel) that the borrow outlives every use, so the
+/// `'static` on the reference is a promise kept by control flow, not by
+/// the type system — see [`ClientPool::fan_out`].
+struct Job {
+    task: &'static (dyn Fn() + Sync),
+    done: DoneGuard,
+}
+
+/// Signals job completion on drop, so the dispatcher is released even if
+/// the task panics on a worker (the unwind drops the guard).
+struct DoneGuard(mpsc::Sender<()>);
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let _ = self.0.send(());
+    }
+}
+
+/// Long-lived worker threads + the sending half of their job channel.
+struct PoolCore {
+    job_tx: mpsc::Sender<Job>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// A sized, persistent worker pool for round-level fan-out/fan-in.
 ///
 /// `threads == 0` means "auto" (host parallelism). With one thread every
 /// `run*` call degenerates to an inline serial loop over the same closures
 /// in the same order — the basis of the serial/parallel equivalence
 /// guarantee.
-#[derive(Clone, Copy, Debug)]
+///
+/// Workers (`threads - 1` of them; the calling thread always participates
+/// as the final worker) are spawned lazily on the first parallel call and
+/// then parked on the job channel between calls: after warm-up, a `run*`
+/// call costs two channel hops instead of a spawn/join cycle. Dropping
+/// the pool closes the channel and joins every worker.
 pub struct ClientPool {
     threads: usize,
+    core: Mutex<Option<PoolCore>>,
+    spawned: AtomicUsize,
+}
+
+impl std::fmt::Debug for ClientPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ClientPool")
+            .field("threads", &self.threads)
+            .field("spawned", &self.spawned.load(Ordering::Relaxed))
+            .finish()
+    }
 }
 
 impl ClientPool {
     pub fn new(threads: usize) -> Self {
-        Self { threads: if threads == 0 { available_threads() } else { threads } }
+        Self {
+            threads: if threads == 0 { available_threads() } else { threads },
+            core: Mutex::new(None),
+            spawned: AtomicUsize::new(0),
+        }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// Total worker threads spawned over this pool's lifetime. After
+    /// warm-up this is exactly `threads - 1` and never grows again — the
+    /// observable "zero spawns per call" property.
+    pub fn spawned_workers(&self) -> usize {
+        self.spawned.load(Ordering::Relaxed)
+    }
+
     /// Run `f(0..n)` on the pool; results come back in index order.
+    /// Errors are surfaced deterministically: the lowest-index failure
+    /// wins, regardless of which worker hit it first.
     pub fn run<T, F>(&self, n: usize, f: F) -> Result<Vec<T>>
     where
         T: Send,
         F: Fn(usize) -> Result<T> + Sync,
     {
-        par_indexed(self.threads, n, f)
+        let workers = self.threads.max(1).min(n.max(1));
+        if workers <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+
+        let next = AtomicUsize::new(0);
+        let failed = AtomicBool::new(false);
+        let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let run_one = |i: usize| {
+            let r = f(i);
+            if r.is_err() {
+                failed.store(true, Ordering::Release);
+            }
+            *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
+        };
+        let task = || worker_loop(&next, &failed, n, &run_one);
+        self.fan_out(workers - 1, &task);
+        collect_slots(slots)
     }
 
     /// Run `f(i, &mut states[i])` on the pool with each worker holding an
-    /// exclusive borrow of its claimed slot; results in index order.
+    /// exclusive borrow of its claimed slot; results in index order,
+    /// lowest-index error wins.
     pub fn run_mut<S, T, F>(&self, states: &mut [S], f: F) -> Result<Vec<T>>
     where
         S: Send,
         T: Send,
         F: Fn(usize, &mut S) -> Result<T> + Sync,
     {
-        par_slice_mut(self.threads, states, f)
+        let n = states.len();
+        let base = SlicePtr(states.as_mut_ptr());
+        self.run(n, move |i| {
+            // SAFETY: `i` is claimed exactly once from the atomic work
+            // index, so this is the only live borrow of `states[i]`; the
+            // pool's fan-in blocks until every worker is done, so no
+            // borrow outlives this call while `states` is reborrowed.
+            let slot = unsafe { &mut *base.0.add(i) };
+            f(i, slot)
+        })
+    }
+
+    /// Dispatch `extra` copies of `task` to pool workers, run it once on
+    /// the calling thread, and block until every dispatched copy has
+    /// finished. Blocking here is what makes the lifetime erasure in
+    /// [`Job`] sound: `task`'s borrows of the caller's stack stay alive
+    /// until no worker can still be executing it.
+    fn fan_out(&self, extra: usize, task: &(dyn Fn() + Sync)) {
+        if extra == 0 {
+            task();
+            return;
+        }
+        // SAFETY: the erased reference is only reachable through jobs
+        // whose completion (send-or-drop of the DoneGuard) we await below
+        // before returning, so it never outlives the frame it borrows.
+        let task_static: &'static (dyn Fn() + Sync) = unsafe { std::mem::transmute(task) };
+        let (done_tx, done_rx) = mpsc::channel();
+        let job_tx = self.ensure_workers();
+        for _ in 0..extra {
+            let job = Job { task: task_static, done: DoneGuard(done_tx.clone()) };
+            if job_tx.send(job).is_err() {
+                // channel closed (cannot happen while `self` is alive,
+                // but degrade to caller-only execution rather than hang)
+                break;
+            }
+        }
+        drop(done_tx);
+        task();
+        // Ok = a worker finished one copy; Err = every outstanding guard
+        // is gone (all copies finished, some by unwinding). Either way no
+        // worker can still hold the erased borrow once this loop exits.
+        while done_rx.recv().is_ok() {}
+    }
+
+    /// Lazily spawn the long-lived workers (`threads - 1`; the caller is
+    /// the last worker) and hand back the job sender. Workers share one
+    /// receiver behind a mutex: a parked worker blocks in `recv`, the
+    /// rest queue on the lock — pickup is serialised, execution is not.
+    fn ensure_workers(&self) -> mpsc::Sender<Job> {
+        let mut core = self.core.lock().unwrap_or_else(|e| e.into_inner());
+        if core.is_none() {
+            let (job_tx, job_rx) = mpsc::channel::<Job>();
+            let job_rx = Arc::new(Mutex::new(job_rx));
+            let workers = self.threads.saturating_sub(1);
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let rx = Arc::clone(&job_rx);
+                handles.push(std::thread::spawn(move || loop {
+                    let job = {
+                        let rx = rx.lock().unwrap_or_else(|e| e.into_inner());
+                        match rx.recv() {
+                            Ok(job) => job,
+                            // sender dropped: pool is shutting down
+                            Err(_) => return,
+                        }
+                    };
+                    // A panicking task must not kill the worker (later
+                    // jobs would queue forever); containment here turns
+                    // it into an empty slot, reported by the fan-in as a
+                    // deterministic error. `job.done` signals on drop.
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job.task));
+                }));
+            }
+            self.spawned.fetch_add(workers, Ordering::Relaxed);
+            *core = Some(PoolCore { job_tx, handles });
+        }
+        core.as_ref().expect("pool core just initialised").job_tx.clone()
+    }
+}
+
+impl Drop for ClientPool {
+    fn drop(&mut self) {
+        let core = self.core.get_mut().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(core) = core {
+            // closing the channel wakes every parked worker with RecvError
+            drop(core.job_tx);
+            for handle in core.handles {
+                let _ = handle.join();
+            }
+        }
     }
 }
 
 /// Execute `f(i)` for `i in 0..n` on up to `threads` workers and return
-/// the results in index order. Errors are surfaced deterministically: the
-/// lowest-index failure wins, regardless of which worker hit it first.
+/// the results in index order. Convenience wrapper over a transient
+/// [`ClientPool`] (spawn + join per call) — hot per-round paths should
+/// hold a pool and call [`ClientPool::run`] instead.
 pub fn par_indexed<T, F>(threads: usize, n: usize, f: F) -> Result<Vec<T>>
 where
     T: Send,
     F: Fn(usize) -> Result<T> + Sync,
 {
-    let workers = threads.max(1).min(n.max(1));
-    if workers <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
-    }
-
-    let next = AtomicUsize::new(0);
-    let failed = AtomicBool::new(false);
-    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                // fail-fast: stop claiming new indices after any failure
-                if failed.load(Ordering::Acquire) {
-                    break;
-                }
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(i);
-                if r.is_err() {
-                    failed.store(true, Ordering::Release);
-                }
-                *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
-            });
-        }
-    });
-
-    collect_slots(slots)
+    ClientPool::new(threads.max(1)).run(n, f)
 }
 
-/// Raw-pointer wrapper that lets scoped workers carve disjoint `&mut`
+/// Raw-pointer wrapper that lets pool workers carve disjoint `&mut`
 /// element borrows out of one slice. Soundness relies on the atomic work
 /// index handing every slot index to exactly one worker.
+#[derive(Clone, Copy)]
 struct SlicePtr<S>(*mut S);
 
-// SAFETY: `SlicePtr` is only shared between scoped workers that access
-// disjoint indices (each index is claimed exactly once from the atomic
-// counter), so concurrent `&mut` borrows never alias.
+// SAFETY: `SlicePtr` is only shared between workers that access disjoint
+// indices (each index is claimed exactly once from the atomic counter),
+// so concurrent `&mut` borrows never alias.
 unsafe impl<S: Send> Sync for SlicePtr<S> {}
+unsafe impl<S: Send> Send for SlicePtr<S> {}
 
 /// Execute `f(i, &mut states[i])` for every slot on up to `threads`
-/// workers; results in index order, lowest-index error wins.
+/// workers; results in index order, lowest-index error wins. Convenience
+/// wrapper over a transient [`ClientPool`], like [`par_indexed`].
 pub fn par_slice_mut<S, T, F>(threads: usize, states: &mut [S], f: F) -> Result<Vec<T>>
 where
     S: Send,
     T: Send,
     F: Fn(usize, &mut S) -> Result<T> + Sync,
 {
-    let n = states.len();
-    let workers = threads.max(1).min(n.max(1));
-    if workers <= 1 || n <= 1 {
-        return states.iter_mut().enumerate().map(|(i, s)| f(i, s)).collect();
-    }
-
-    let base = SlicePtr(states.as_mut_ptr());
-    let next = AtomicUsize::new(0);
-    let failed = AtomicBool::new(false);
-    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                // fail-fast: stop claiming new indices after any failure
-                if failed.load(Ordering::Acquire) {
-                    break;
-                }
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                // SAFETY: `i` was claimed exactly once above, so this is
-                // the only live borrow of `states[i]`; the scope outlives
-                // no borrow (workers join before `states` is touched
-                // again).
-                let slot = unsafe { &mut *base.0.add(i) };
-                let r = f(i, slot);
-                if r.is_err() {
-                    failed.store(true, Ordering::Release);
-                }
-                *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
-            });
-        }
-    });
-
-    collect_slots(slots)
+    ClientPool::new(threads.max(1)).run_mut(states, f)
 }
 
 /// In-order fan-in. Scanning ascending indices makes the lowest-index
@@ -214,6 +358,46 @@ fn collect_slots<T>(slots: Vec<Mutex<Option<Result<T>>>>) -> Result<Vec<T>> {
         }
     }
     Ok(out)
+}
+
+/// Stable shard assignment for a client id: a SplitMix64 bit-mix reduced
+/// to `shards` buckets. A pure function of the id — identical across
+/// runs, platforms, and thread counts — so sharded stores place (and
+/// find) every client deterministically, independent of insertion order
+/// or scheduling.
+pub fn stable_shard(id: usize, shards: usize) -> usize {
+    debug_assert!(shards > 0, "stable_shard needs at least one shard");
+    let mut z = (id as u64).wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    (z % shards as u64) as usize
+}
+
+// ---- deterministic tree reduction -----------------------------------------
+
+/// Fold an id-ordered list of per-client values into one through a
+/// balanced tree of adjacent-pair combines. The reduction shape is a pure
+/// function of `items.len()` — independent of thread count or worker
+/// schedule — so every thread count produces the bit-identical result,
+/// and large fan-ins avoid the left-leaning error accumulation of a
+/// sequential fold. Returns `None` for an empty input.
+pub fn tree_reduce<T, C>(mut items: Vec<T>, mut combine: C) -> Option<T>
+where
+    C: FnMut(T, T) -> T,
+{
+    while items.len() > 1 {
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        let mut it = items.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(combine(a, b)),
+                None => next.push(a),
+            }
+        }
+        items = next;
+    }
+    items.pop()
 }
 
 // ---- order-preserving progress streaming ----------------------------------
@@ -364,25 +548,49 @@ mod tests {
         assert!(available_threads() >= 1);
     }
 
+    /// Deterministic pin of the fail-fast claim semantics, driving
+    /// [`worker_loop`] directly (no sleeps, no races): each simulated
+    /// worker observes `failed` before its next claim because the failing
+    /// unit sets it *before returning* and every other unit spins until
+    /// the flag is visible. So each worker executes at most one unit, and
+    /// only from the first batch of claims.
     #[test]
     fn fail_fast_stops_claiming_new_indices() {
-        use std::sync::atomic::AtomicUsize;
-        // index 0 fails immediately; every other index sleeps. Without
-        // fail-fast all 400 indices would execute; with it, each worker
-        // stops after at most the one unit it already claimed.
-        let executed = AtomicUsize::new(0);
-        let r = par_indexed(4, 400, |i| {
-            executed.fetch_add(1, Ordering::Relaxed);
+        const WORKERS: usize = 4;
+        const N: usize = 400;
+        let next = AtomicUsize::new(0);
+        let failed = AtomicBool::new(false);
+        let executed: Vec<AtomicBool> = (0..N).map(|_| AtomicBool::new(false)).collect();
+        let run_one = |i: usize| {
+            executed[i].store(true, Ordering::Relaxed);
             if i == 0 {
-                Err(anyhow!("boom 0"))
+                // the "error": published before run_one returns, exactly
+                // as the engine's run_one stores `failed` before looping
+                failed.store(true, Ordering::Release);
             } else {
-                std::thread::sleep(std::time::Duration::from_millis(2));
-                Ok(i)
+                // every other unit holds its worker until the failure is
+                // globally visible — the deterministic stand-in for "slow
+                // work still in flight when the error lands"
+                while !failed.load(Ordering::Acquire) {
+                    std::hint::spin_loop();
+                }
+            }
+        };
+        std::thread::scope(|scope| {
+            for _ in 0..WORKERS {
+                scope.spawn(|| worker_loop(&next, &failed, N, &run_one));
             }
         });
-        assert_eq!(r.unwrap_err().to_string(), "boom 0");
-        let ran = executed.load(Ordering::Relaxed);
-        assert!(ran < 400, "fail-fast must skip most work (ran {ran}/400)");
+        let ran: Vec<usize> =
+            (0..N).filter(|&i| executed[i].load(Ordering::Relaxed)).collect();
+        // at most one claimed unit per worker, and claims are handed out
+        // in ascending order, so only the first WORKERS indices can run
+        assert!(ran.len() <= WORKERS, "each worker runs at most one unit, ran {ran:?}");
+        assert!(ran.contains(&0), "the failing unit itself must have run");
+        assert!(
+            ran.iter().all(|&i| i < WORKERS),
+            "claims are ascending: executed set must be within the first batch, ran {ran:?}"
+        );
     }
 
     #[test]
@@ -398,6 +606,119 @@ mod tests {
             });
             assert_eq!(r.unwrap_err().to_string(), "boom 5", "threads={threads}");
         }
+    }
+
+    #[test]
+    fn pool_reuse_is_bit_identical_to_fresh_pools() {
+        let work = |i: usize| -> Result<f64> {
+            let mut acc = 0.0f64;
+            for k in 1..100 {
+                acc += ((i * k) as f64).cos() / k as f64;
+            }
+            Ok(acc)
+        };
+        let pool = ClientPool::new(4);
+        let first = pool.run(48, work).unwrap();
+        for call in 0..3 {
+            // reused persistent pool vs a fresh transient pool per call
+            assert_eq!(pool.run(48, work).unwrap(), first, "reuse call {call}");
+            assert_eq!(par_indexed(4, 48, work).unwrap(), first, "fresh call {call}");
+        }
+    }
+
+    #[test]
+    fn pool_spawns_no_threads_after_warmup() {
+        let pool = ClientPool::new(4);
+        assert_eq!(pool.spawned_workers(), 0, "workers are spawned lazily");
+        pool.run(32, |i| Ok(i)).unwrap();
+        let after_warmup = pool.spawned_workers();
+        assert_eq!(after_warmup, 3, "threads - 1 workers; the caller is the last worker");
+        for _ in 0..5 {
+            pool.run(32, |i| Ok(i)).unwrap();
+            pool.run_mut(&mut [0u8; 32], |_, x| {
+                *x += 1;
+                Ok(())
+            })
+            .unwrap();
+        }
+        assert_eq!(pool.spawned_workers(), after_warmup, "no spawns per call after warm-up");
+    }
+
+    #[test]
+    fn pool_drop_joins_all_workers() {
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let pool = ClientPool::new(4);
+        let counter = Arc::clone(&in_flight);
+        pool.run(64, move |_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            counter.fetch_sub(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        drop(pool); // joins: no worker can still be executing afterwards
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0);
+        assert_eq!(Arc::strong_count(&in_flight), 1, "drop released every worker's capture");
+    }
+
+    #[test]
+    fn pool_serial_path_never_spawns() {
+        let pool = ClientPool::new(1);
+        pool.run(64, |i| Ok(i)).unwrap();
+        assert_eq!(pool.spawned_workers(), 0, "threads=1 stays inline");
+        let many = ClientPool::new(8);
+        many.run(1, |i| Ok(i)).unwrap();
+        assert_eq!(many.spawned_workers(), 0, "singleton input stays inline");
+    }
+
+    #[test]
+    fn tree_reduce_shape_is_input_length_only() {
+        assert_eq!(tree_reduce(Vec::<u32>::new(), |a, b| a + b), None);
+        assert_eq!(tree_reduce(vec![7u32], |a, b| a + b), Some(7));
+        // record the combine order as (left, right) pairs over indices
+        for n in 2..20usize {
+            let mut pairs = Vec::new();
+            let total = tree_reduce(
+                (0..n).map(|i| (i, i)).collect::<Vec<_>>(),
+                |(la, lsum), (ra, rsum)| {
+                    pairs.push((la, ra));
+                    (la, lsum + rsum)
+                },
+            )
+            .unwrap();
+            assert_eq!(total.1, n * (n - 1) / 2, "n={n}");
+            // first-level combines are exactly the adjacent pairs —
+            // shape is fixed by n, never by scheduling
+            for (k, &(l, r)) in pairs.iter().take(n / 2).enumerate() {
+                assert_eq!((l, r), (2 * k, 2 * k + 1), "n={n} level-0 pair {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_assignment_is_stable_and_roughly_balanced() {
+        const SHARDS: usize = 16;
+        let mut counts = [0usize; SHARDS];
+        for id in 0..100_000usize {
+            let s = stable_shard(id, SHARDS);
+            assert!(s < SHARDS);
+            // pure function of the id: a second lookup never disagrees
+            assert_eq!(s, stable_shard(id, SHARDS));
+            counts[s] += 1;
+        }
+        // a bit-mix over sequential ids should land well within 2x of the
+        // uniform share per bucket — catches degenerate hashes like id % n
+        // collapsing when ids share low bits
+        let expect = 100_000 / SHARDS;
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(
+                c > expect / 2 && c < expect * 2,
+                "shard {s} holds {c} of 100000 ids (uniform share {expect})"
+            );
+        }
+        // pinned values: the assignment is part of the on-disk/spill layout,
+        // so a silent hash change must fail loudly
+        let pinned: Vec<usize> = (0..8).map(|id| stable_shard(id, SHARDS)).collect();
+        assert_eq!(pinned, vec![15, 1, 14, 13, 10, 10, 0, 7]);
     }
 
     #[test]

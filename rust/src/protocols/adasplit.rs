@@ -28,13 +28,13 @@
 //! sampling only the participant set takes local steps and the UCB picks
 //! among them.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::data::Batch;
 use crate::driver::{ClientCtx, ClientState, ClientStateStore, ClientUpdate, Protocol, RoundReport};
-use crate::engine::par_indexed;
 use crate::orchestrator::UcbOrchestrator;
 use crate::protocols::common::{eval_split, eval_split_streamed, Env};
 use crate::runtime::{Artifact, Tensor, TensorStore};
@@ -67,8 +67,10 @@ pub struct AdaSplitProtocol {
     server_step_flops: f64,
     act_bytes: usize,
     // -- per-round scratch --
-    /// per-client training batches for the round (empty for non-participants)
-    batches: Vec<Vec<Batch>>,
+    /// the round's training batches, keyed by participant id — sized by
+    /// the sample, not the fleet (lookups only; never iterated, so the
+    /// map's order cannot leak into results)
+    batches: HashMap<usize, Vec<Batch>>,
     t_max: usize,
     loss_sum: f64,
     loss_count: f64,
@@ -100,7 +102,7 @@ impl AdaSplitProtocol {
             client_step_flops: env.spec.client_step_flops(k),
             server_step_flops: env.spec.server_step_flops(k, true),
             act_bytes: env.spec.act_batch_bytes(k),
-            batches: vec![Vec::new(); cfg.clients],
+            batches: HashMap::new(),
             t_max: 0,
             loss_sum: 0.0,
             loss_count: 0.0,
@@ -149,21 +151,20 @@ impl Protocol for AdaSplitProtocol {
 
     fn begin_round(&mut self, env: &mut Env, round: usize, participants: &[usize]) -> Result<()> {
         // per-client batches draw from per-client derived RNG streams, so
-        // materializing them concurrently is order-independent
+        // materializing them concurrently is order-independent; the fan-out
+        // reuses the run's persistent worker pool
+        let pool = env.pool();
         let env_ref: &Env = env;
-        let lists: Vec<Vec<Batch>> =
-            par_indexed(env_ref.cfg.effective_threads(), participants.len(), |j| {
-                Ok(env_ref.train_batches(participants[j], round))
-            })?;
-        for b in self.batches.iter_mut() {
-            b.clear();
-        }
+        let lists: Vec<Vec<Batch>> = pool.run(participants.len(), |j| {
+            Ok(env_ref.train_batches(participants[j], round))
+        })?;
+        self.batches.clear();
         for (j, list) in lists.into_iter().enumerate() {
-            self.batches[participants[j]] = list;
+            self.batches.insert(participants[j], list);
         }
         self.t_max = participants
             .iter()
-            .map(|&i| self.batches[i].len())
+            .map(|&i| self.batches[&i].len())
             .max()
             .unwrap_or(0);
         self.loss_sum = 0.0;
@@ -180,7 +181,7 @@ impl Protocol for AdaSplitProtocol {
         state: &mut ClientState,
     ) -> Result<ClientUpdate<Self::Update>> {
         let i = ctx.client;
-        let Some(b) = self.batches[i].get(ctx.step) else {
+        let Some(b) = self.batches.get(&i).and_then(|list| list.get(ctx.step)) else {
             // this client's shard ran out of batches before t_max
             return Ok(ClientUpdate::new(None));
         };
@@ -219,13 +220,15 @@ impl Protocol for AdaSplitProtocol {
         updates: Vec<(usize, Self::Update)>,
     ) -> Result<()> {
         // -- fold client losses/activations in client-id order ------------
-        let mut acts: Vec<Option<Tensor>> = vec![None; env.cfg.clients];
+        // keyed scratch sized by this step's active set, not the fleet
+        // (lookups only — map order never observed)
+        let mut acts: HashMap<usize, Tensor> = HashMap::with_capacity(updates.len());
         let mut active: Vec<usize> = Vec::new();
         for (i, inner) in updates {
             if let Some((loss, a)) = inner {
                 self.loss_sum += loss;
                 self.loss_count += 1.0;
-                acts[i] = Some(a);
+                acts.insert(i, a);
                 active.push(i);
             }
         }
@@ -236,8 +239,8 @@ impl Protocol for AdaSplitProtocol {
             let selected = self.ucb.select_among(&active, self.n_select);
             let mut observed = Vec::with_capacity(selected.len());
             for &i in &selected {
-                let a = acts[i].as_ref().expect("active client has acts");
-                let y = &self.batches[i][step].y;
+                let a = acts.get(&i).expect("active client has acts");
+                let y = &self.batches[&i][step].y;
                 let mask_state = store.get_mut(i)?.get_mut("mask")?;
                 let mut out = self.server_step.call(
                     &[&self.server_shared, &*mask_state],

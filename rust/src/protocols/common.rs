@@ -28,6 +28,10 @@ pub struct Env<'a> {
     pub meter: CostMeter,
     pub recorder: Recorder,
     pub rng: Rng,
+    /// the run's persistent worker pool: spawned lazily on the first
+    /// parallel fan-out, then reused by every per-round / per-step
+    /// fan-out (no spawn/join per call)
+    pool: Arc<ClientPool>,
 }
 
 impl<'a> Env<'a> {
@@ -41,6 +45,7 @@ impl<'a> Env<'a> {
             meter: CostMeter::new(),
             recorder: Recorder::new(cfg.trace),
             rng: Rng::new(cfg.seed),
+            pool: Arc::new(ClientPool::new(cfg.effective_threads())),
         }
     }
 
@@ -54,9 +59,12 @@ impl<'a> Env<'a> {
         self.rt.artifact(&format!("{}_{suffix}", self.cfg.dataset.tag()))
     }
 
-    /// Worker pool sized by the experiment config (`--threads`).
-    pub fn pool(&self) -> ClientPool {
-        ClientPool::new(self.cfg.threads)
+    /// The run's persistent worker pool, sized by the experiment config
+    /// (`--threads`). The `Arc` handle lets the driver hold the pool
+    /// across rounds while `&mut self` borrows of the env come and go;
+    /// every handle shares the same warmed workers.
+    pub fn pool(&self) -> Arc<ClientPool> {
+        Arc::clone(&self.pool)
     }
 
     /// Run an `init_*` artifact and return the fresh state store
@@ -112,6 +120,10 @@ impl ParallelEnv for Env<'_> {
 
     fn threads(&self) -> usize {
         self.cfg.effective_threads()
+    }
+
+    fn shared_pool(&self) -> Option<&ClientPool> {
+        Some(&self.pool)
     }
 }
 

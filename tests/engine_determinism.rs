@@ -9,10 +9,10 @@
 use adasplit::config::{ExperimentConfig, ProtocolKind};
 use adasplit::data::Rng;
 use adasplit::driver::{
-    resolve_versions, AsyncBounded, BoundController, ClientSpeeds, SampledSync, Scheduler,
-    SnapshotRing, SpeedPreset, SyncAll, WindowDelta,
+    resolve_versions, AsyncBounded, BoundController, ClientSpeeds, ClientState, ClientStateStore,
+    SampledSync, Scheduler, SnapshotRing, SpeedPreset, SyncAll, WindowDelta,
 };
-use adasplit::engine::{par_indexed, par_slice_mut, ClientPool};
+use adasplit::engine::{par_indexed, par_slice_mut, tree_reduce, ClientPool};
 use adasplit::metrics::{AccuracyAccum, Budgets, CostMeter};
 use adasplit::protocols::{run_protocol, RunResult};
 use adasplit::runtime::{Runtime, Tensor, TensorStore};
@@ -130,6 +130,134 @@ fn pool_is_usable_concurrently_with_shared_state() {
         .run(10, |i| Ok(data.iter().skip(i).step_by(10).sum::<u64>()))
         .unwrap();
     assert_eq!(sums.iter().sum::<u64>(), 1000 * 999 / 2);
+}
+
+// ---- persistent pool & sharded state (no artifacts required) --------------
+
+#[test]
+fn pool_reuse_is_bit_identical_and_spawn_free_after_warmup() {
+    let work = |i: usize| -> anyhow::Result<f64> {
+        let mut acc = 0.0f64;
+        for k in 1..300 {
+            acc += ((i as f64 + 2.0) * k as f64).cos() / k as f64;
+        }
+        Ok(acc)
+    };
+    for threads in [1usize, 4] {
+        let pool = ClientPool::new(threads);
+        let first = pool.run(40, work).unwrap();
+        let spawned = pool.spawned_workers();
+        assert!(spawned <= threads.saturating_sub(1), "threads={threads}");
+        for call in 0..3 {
+            // reused persistent pool vs a fresh transient pool per call
+            assert_eq!(pool.run(40, work).unwrap(), first, "threads={threads} call={call}");
+            assert_eq!(par_indexed(threads, 40, work).unwrap(), first, "fresh, call={call}");
+            assert_eq!(pool.spawned_workers(), spawned, "no spawns after warm-up");
+        }
+        // run_mut through the same warm pool matches a fresh pool too
+        let step = |i: usize, s: &mut f64| -> anyhow::Result<()> {
+            *s = (*s * 1.5 + i as f64).sin();
+            Ok(())
+        };
+        let mut reused: Vec<f64> = (0..40).map(|i| i as f64).collect();
+        pool.run_mut(&mut reused, step).unwrap();
+        let mut fresh: Vec<f64> = (0..40).map(|i| i as f64).collect();
+        par_slice_mut(threads, &mut fresh, step).unwrap();
+        assert_eq!(reused, fresh, "threads={threads}");
+        assert_eq!(pool.spawned_workers(), spawned, "run_mut reuses the same workers");
+    }
+}
+
+#[test]
+fn pool_fail_fast_surfaces_lowest_index_error_and_survives_reuse() {
+    for threads in [1usize, 4] {
+        let pool = ClientPool::new(threads);
+        // warm the pool with a clean run; later failures must not poison
+        // the parked workers
+        assert!(pool.run(8, Ok).is_ok());
+        for call in 0..2 {
+            let err = pool
+                .run(64, |i| {
+                    if i % 7 == 5 {
+                        Err(anyhow::anyhow!("client {i} failed"))
+                    } else {
+                        Ok(i)
+                    }
+                })
+                .unwrap_err();
+            assert!(
+                err.to_string().contains("client 5"),
+                "threads={threads} call={call}: expected lowest-index error, got {err}"
+            );
+        }
+        assert_eq!(pool.run(4, |i| Ok(i * 2)).unwrap(), vec![0, 2, 4, 6], "pool survives");
+    }
+}
+
+#[test]
+fn pool_meter_fan_in_tree_matches_exact_sums() {
+    // the driver's tree fan-in in miniature: with dyadic per-client
+    // values every f64 add is exact, so the balanced tree must reproduce
+    // the plain totals for any participant count (the tree's shape is a
+    // function of the count alone — that is the thread-parity argument)
+    for n in [1usize, 2, 5, 16, 33] {
+        let deltas: Vec<CostMeter> = (0..n)
+            .map(|i| {
+                let mut d = CostMeter::new();
+                d.add_client_flops((i + 1) as f64 * 0.5);
+                d.add_up(i + 1);
+                d
+            })
+            .collect();
+        let total = tree_reduce(deltas, |mut a, b| {
+            a.merge(&b);
+            a
+        })
+        .unwrap();
+        let expect_flops: f64 = (0..n).map(|i| (i + 1) as f64 * 0.5).sum();
+        assert_eq!(total.client_flops, expect_flops, "n={n}");
+        assert_eq!(total.up_bytes, (n * (n + 1) / 2) as f64, "n={n}");
+    }
+}
+
+#[test]
+fn shard_fleet_scale_round_state_is_o_sample() {
+    // the acceptance-criterion scale point, artifact-free: 100000 clients
+    // at p = 0.005 — sampling, speed lookups, and client-state residency
+    // must all track the ~500-client sample, never the fleet
+    const FLEET: usize = 100_000;
+    let sampler = SampledSync::new(FLEET, 0.005, 77);
+    let speeds = ClientSpeeds::new(FLEET, SpeedPreset::Lognormal { sigma: 0.5 }, 0.0, 77);
+    let dir = std::env::temp_dir().join(format!("adasplit-shard-it-{}", std::process::id()));
+    let mut store = ClientStateStore::with_spill(FLEET, dir).unwrap();
+    let tiny = |i: usize| -> anyhow::Result<ClientState> {
+        let mut model = TensorStore::new();
+        model.insert("state.t", Tensor::scalar(i as f32));
+        let mut s = ClientState::new();
+        s.insert("model", model);
+        Ok(s)
+    };
+    let mut last_sample: Vec<usize> = Vec::new();
+    for round in 0..3usize {
+        let sample = sampler.participants(round);
+        assert_eq!(sample.len(), 500, "round {round}: ceil(0.005 * 100000)");
+        assert!(sample.windows(2).all(|w| w[0] < w[1]), "ascending unique ids");
+        store.spill_except(&sample).unwrap();
+        store.ensure_loaded(&sample, tiny).unwrap();
+        assert_eq!(store.loaded_ids(), sample, "round {round}: residency == sample");
+        // per-round speed lookups are pure functions of the id — no
+        // fleet-sized table behind them
+        for &i in sample.iter().take(16) {
+            let (compute, network) = speeds.rates(i);
+            assert!(compute > 0.0 && network > 0.0);
+            assert_eq!(speeds.rates(i), (compute, network), "lookup is pure");
+        }
+        last_sample = sample;
+    }
+    // states keep their values across spill round trips
+    let probe = last_sample[0];
+    let t = store.get(probe).unwrap().get("model").unwrap().get("state.t").unwrap().item();
+    assert_eq!(t, probe as f32);
 }
 
 // ---- scheduler determinism (no artifacts required) ------------------------
