@@ -11,8 +11,10 @@
 //! throughput — the delayed-gradient snapshot-ring axis, the
 //! adaptive-bound controller axis (`bound_controller_steps_per_s`), the
 //! persistent worker-pool axis (`pool_jobs_per_s`: warm-pool dispatch,
-//! zero per-run spawns), and the sharded client-state axis
-//! (`shard_store_ops_per_s`: 500-of-100000 residency bookkeeping): all
+//! zero per-run spawns), the sharded client-state axis
+//! (`shard_store_ops_per_s`: 500-of-100000 residency bookkeeping), and
+//! the event-engine dispatch axis (`event_heap_events_per_s`: heap
+//! push+pop floor of the discrete-event driver): all
 //! pure Rust, so they measure and check even on artifact-less runners).
 //! Default mode rewrites the file; `--check` compares against it
 //! instead — trajectories must match exactly (they are deterministic),
@@ -32,6 +34,7 @@ use adasplit::engine::ClientPool;
 use adasplit::orchestrator::UcbOrchestrator;
 use adasplit::protocols::{run_protocol_recorded, Env};
 use adasplit::runtime::{Runtime, Tensor, TensorStore};
+use adasplit::sim::{Event, EventHeap, EventKind};
 use adasplit::util::bench::{bench, quick_mode, BenchStats};
 use adasplit::util::Json;
 
@@ -142,6 +145,39 @@ fn shard_store_bench(iters: usize) -> BenchStats {
 /// Per-iteration op count of [`shard_store_bench`].
 const SHARD_OPS_PER_ITER: f64 = 4.0 * 500.0;
 
+/// Event-heap dispatch throughput (events/s): push then fully drain 4096
+/// timestamped events with xorshift-scrambled pseudo-times and a rotating
+/// kind mix — the discrete-event driver's per-event scheduling floor on
+/// the driver thread. Deterministic (no ambient randomness) and pure
+/// Rust, so it measures and checks even on artifact-less runners.
+fn event_heap_bench(iters: usize) -> BenchStats {
+    bench("coord: event heap push+pop x4096", 1, iters, || {
+        let mut h = EventHeap::new();
+        let mut x = 0x9e37_79b9_7f4a_7c15u64;
+        for i in 0..EVENT_HEAP_EVENTS_PER_ITER as usize {
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            // non-negative finite times in [0, 64), with deliberate
+            // collisions (quantized grid) to exercise the tie-break path
+            let t = ((x >> 11) % 4096) as f64 / 64.0;
+            let kind = match i % 4 {
+                0 => EventKind::ClientFinish { client: i },
+                1 => EventKind::ServerMerge { merge: i },
+                2 => EventKind::Eval { merge: i },
+                _ => EventKind::ControllerSwitch { merge: i },
+            };
+            h.push(Event::new(t, kind));
+        }
+        while let Some(e) = h.pop() {
+            std::hint::black_box(e);
+        }
+    })
+}
+
+/// Per-iteration event count of [`event_heap_bench`].
+const EVENT_HEAP_EVENTS_PER_ITER: f64 = 4096.0;
+
 fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
     let md = tracked
         .opt("async_sim_time")
@@ -172,6 +208,11 @@ fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
         tracked.opt("shard_store_ops_per_s").is_some(),
         "tracked {TRACK_FILE} is missing `shard_store_ops_per_s` \
          (sharded client-state axis); re-record with the bench"
+    );
+    anyhow::ensure!(
+        tracked.opt("event_heap_events_per_s").is_some(),
+        "tracked {TRACK_FILE} is missing `event_heap_events_per_s` \
+         (event-engine dispatch axis); re-record with the bench"
     );
     let old: Vec<f64> = md
         .as_arr()?
@@ -208,6 +249,7 @@ fn results_json(
     bound_ctrl: &BenchStats,
     pool_jobs: &BenchStats,
     shard_store: &BenchStats,
+    event_heap: &BenchStats,
     n_par: usize,
     quick: bool,
 ) -> Json {
@@ -248,6 +290,10 @@ fn results_json(
     m.insert(
         "shard_store_ops_per_s".into(),
         Json::Num(SHARD_OPS_PER_ITER / shard_store.mean_s),
+    );
+    m.insert(
+        "event_heap_events_per_s".into(),
+        Json::Num(EVENT_HEAP_EVENTS_PER_ITER / event_heap.mean_s),
     );
     Json::Obj(m)
 }
@@ -362,6 +408,8 @@ fn main() -> anyhow::Result<()> {
     stats.push(pool_jobs.clone());
     let shard_store = shard_store_bench(iters);
     stats.push(shard_store.clone());
+    let event_heap = event_heap_bench(iters);
+    stats.push(event_heap.clone());
     stats.push(bench("coord: UCB select+update x1000", 1, iters, || {
         let mut ucb = UcbOrchestrator::new(5, 0.87);
         for t in 0..1000u64 {
@@ -526,6 +574,7 @@ fn main() -> anyhow::Result<()> {
             &bound_ctrl,
             &pool_jobs,
             &shard_store,
+            &event_heap,
             n_par,
             quick_mode(),
         );

@@ -13,7 +13,12 @@
 //! DESIGN.md §8) on FedAvg, where the distinction bites — and overlays
 //! the adaptive-bound controller (`--adaptive-bound`, DESIGN.md §9),
 //! which walks the same frontier online instead of by grid search
-//! (`results/fig1_adaptive_bound.csv`).
+//! (`results/fig1_adaptive_bound.csv`). A final sweep drops the round
+//! barrier entirely: the discrete-event engine (`--engine events`,
+//! DESIGN.md §11) runs AdaSplit under continuous merge policies
+//! (merge-on-arrival, batch-of-k, time-window) with the same adaptive
+//! bound controller, tracing where barrier-free merging lands on the
+//! accuracy/sim-time frontier (`results/fig1_event_merge_policies.csv`).
 //!
 //! ```bash
 //! cargo run --release --example sweep_tradeoffs -- --rounds 10 --samples 256
@@ -26,6 +31,7 @@ use adasplit::protocols::{run_protocol, run_protocol_recorded};
 use adasplit::report::series::ascii_chart;
 use adasplit::report::Series;
 use adasplit::runtime::Runtime;
+use adasplit::sim::{EngineKind, MergePolicyKind};
 
 fn arg_usize(name: &str, default: usize) -> usize {
     let argv: Vec<String> = std::env::args().collect();
@@ -143,6 +149,41 @@ fn main() -> anyhow::Result<()> {
         ar.final_bound, ar.bound_switches, ar.c3_score, worst_fixed_c3
     );
 
+    // event-engine merge-policy sweep (DESIGN.md §11): the discrete-event
+    // driver drops the round barrier and lets the server merge on its own
+    // trigger — on every arrival, once K updates are pending, or on a
+    // fixed sim-time cadence. Each policy runs under the same adaptive
+    // bound controller and speed model as the adaptive curve above, so
+    // the frontier points are directly comparable: barrier-free merging
+    // vs barrier-driven merging, both steering the same staleness knob.
+    let mut e_curve = Series::new("AdaSplit events (merge-policy sweep)", "sim_time");
+    println!("\nevent-engine merge-policy sweep (adaptive bound, stragglers speeds):");
+    println!(
+        "{:<12} {:>8} {:>10} {:>7} {:>8}",
+        "policy", "acc%", "simT", "bound", "events"
+    );
+    for policy in [
+        MergePolicyKind::Arrival,
+        MergePolicyKind::Batch(2),
+        MergePolicyKind::Batch(4),
+        MergePolicyKind::Window(2.0),
+    ] {
+        let cfg = adaptive_cfg
+            .clone()
+            .with_engine(EngineKind::Events)
+            .with_merge_policy(policy);
+        let r = run_protocol(&rt, &cfg)?;
+        println!(
+            "{:<12} {:>8.2} {:>10.2} {:>7} {:>8}",
+            policy.id(),
+            r.best_accuracy,
+            r.sim_time,
+            r.final_bound,
+            r.events_processed
+        );
+        e_curve.push(r.sim_time, r.best_accuracy);
+    }
+
     // cadence-only vs true delayed gradients (--delayed-gradients):
     // per-client model versioning hands a client merging s rounds stale
     // the global snapshot it actually pulled s rounds ago. FedAvg is the
@@ -191,6 +232,8 @@ fn main() -> anyhow::Result<()> {
     print!("{}", ascii_chart(&[p_curve.clone()], 60, 14));
     println!("\n=== accuracy vs simulated wall-clock (staleness sweep) ===");
     print!("{}", ascii_chart(&[s_curve.clone(), a_curve.clone()], 60, 14));
+    println!("\n=== accuracy vs simulated wall-clock (event-engine merge policies) ===");
+    print!("{}", ascii_chart(&[a_curve.clone(), e_curve.clone()], 60, 14));
     println!("\n=== FedAvg staleness: cadence-only vs true delayed gradients ===");
     print!("{}", ascii_chart(&[fd_cadence.clone(), fd_delay.clone()], 60, 14));
 
@@ -200,6 +243,7 @@ fn main() -> anyhow::Result<()> {
     std::fs::write("results/fig1_participation_curve.csv", p_curve.to_csv())?;
     std::fs::write("results/fig1_staleness_curve.csv", s_curve.to_csv())?;
     std::fs::write("results/fig1_adaptive_bound.csv", a_curve.to_csv())?;
+    std::fs::write("results/fig1_event_merge_policies.csv", e_curve.to_csv())?;
     std::fs::write("results/fig1_staleness_cadence_fl.csv", fd_cadence.to_csv())?;
     std::fs::write("results/fig1_staleness_true_delay_fl.csv", fd_delay.to_csv())?;
     std::fs::write("results/fig1_baseline_bw.csv", base_bw.to_csv())?;

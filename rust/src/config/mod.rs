@@ -12,6 +12,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::data::DatasetKind;
 use crate::driver::SpeedPreset;
 use crate::metrics::Budgets;
+use crate::sim::{EngineKind, MergePolicyKind};
 use crate::util::kvconf::KvConf;
 
 /// Which training protocol to run.
@@ -185,6 +186,18 @@ pub struct ExperimentConfig {
     /// `eval_every = 1` — otherwise the adaptive run records extra,
     /// value-neutral eval points at the boundaries).
     pub adapt_arms: Option<Vec<usize>>,
+    /// which driver executes the run (`--engine`): `rounds` (default)
+    /// is the per-round barrier loop; `events` is the discrete-event
+    /// driver (`sim::run_events`, DESIGN.md §11). With the default
+    /// `round` merge policy the events engine replays the configured
+    /// round scheduler bit-for-bit, so switching engines alone never
+    /// changes results — only a continuous merge policy does.
+    pub engine: EngineKind,
+    /// when the server merges under the events engine
+    /// (`--merge-policy`): `round` (default, the degenerate
+    /// scheduler-replay policy) | `arrival` | `batch:K` | `window:DT`.
+    /// Continuous policies require `engine = events`.
+    pub merge_policy: MergePolicyKind,
     /// true delayed-gradient staleness (`--delayed-gradients`): the
     /// driver keeps a ring of round-start model snapshots and a client
     /// merging `s` rounds stale trains against the snapshot from `s`
@@ -229,6 +242,8 @@ impl Default for ExperimentConfig {
             adaptive_bound: false,
             adapt_window: 5,
             adapt_arms: None,
+            engine: EngineKind::Rounds,
+            merge_policy: MergePolicyKind::Round,
             delayed_gradients: false,
         }
     }
@@ -265,7 +280,7 @@ impl ExperimentConfig {
             "local_epochs", "eval_every", "sparse_eps", "trace",
             "artifacts_dir", "threads", "participation", "staleness_bound",
             "client_speeds", "straggler_frac", "stale_decay", "delayed_gradients",
-            "adaptive_bound", "adapt_window", "adapt_arms",
+            "adaptive_bound", "adapt_window", "adapt_arms", "engine", "merge_policy",
             "budgets.bandwidth_gb", "budgets.client_tflops", "budgets.temp",
         ];
         for k in kv.keys() {
@@ -317,6 +332,10 @@ impl ExperimentConfig {
             adaptive_bound: kv.get_bool("adaptive_bound", false)?,
             adapt_window: kv.get_usize("adapt_window", d.adapt_window)?,
             adapt_arms: kv.raw("adapt_arms").map(parse_arm_list).transpose()?,
+            engine: kv.get_str("engine", EngineKind::Rounds.id()).parse()?,
+            merge_policy: kv
+                .get_str("merge_policy", &MergePolicyKind::Round.id())
+                .parse()?,
             delayed_gradients: kv.get_bool("delayed_gradients", false)?,
         };
         cfg.validate()?;
@@ -397,6 +416,20 @@ impl ExperimentConfig {
             ensure!(
                 !arms.is_empty(),
                 "adapt_arms must list at least one candidate bound"
+            );
+        }
+        ensure!(
+            self.merge_policy == MergePolicyKind::Round || self.engine == EngineKind::Events,
+            "merge_policy `{}` requires the events engine (the rounds driver \
+             only knows the barrier'd `round` policy; pass --engine events)",
+            self.merge_policy.id()
+        );
+        if let MergePolicyKind::Batch(k) = self.merge_policy {
+            ensure!(
+                k <= self.clients,
+                "merge_policy batch size must not exceed clients ({k} > {}): \
+                 the pending set can never reach the trigger",
+                self.clients
             );
         }
         ensure!(
@@ -499,6 +532,20 @@ impl ExperimentConfig {
     /// default {0, 1, 2, 4, 8} set).
     pub fn with_adapt_arms(mut self, arms: Option<Vec<usize>>) -> Self {
         self.adapt_arms = arms;
+        self
+    }
+
+    /// Select the executing driver (`EngineKind::Events` for the
+    /// discrete-event engine).
+    pub fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Select the server merge policy (continuous policies require the
+    /// events engine).
+    pub fn with_merge_policy(mut self, policy: MergePolicyKind) -> Self {
+        self.merge_policy = policy;
         self
     }
 
@@ -753,6 +800,16 @@ mod tests {
                     .with_adapt_arms(Some(vec![])),
                 "adapt_arms must list at least one candidate bound",
             ),
+            (
+                ExperimentConfig::default().with_merge_policy(MergePolicyKind::Arrival),
+                "requires the events engine",
+            ),
+            (
+                ExperimentConfig::default()
+                    .with_engine(EngineKind::Events)
+                    .with_merge_policy(MergePolicyKind::Batch(99)),
+                "batch size must not exceed clients",
+            ),
         ];
         for (cfg, fragment) in &matrix {
             let err = cfg.validate().expect_err(fragment).to_string();
@@ -764,7 +821,7 @@ mod tests {
         // distinctness: each failure mode names its own knob
         let fragments: std::collections::BTreeSet<&str> =
             matrix.iter().map(|(_, f)| *f).collect();
-        assert_eq!(fragments.len(), 5, "five distinct messages across the matrix");
+        assert_eq!(fragments.len(), 7, "seven distinct messages across the matrix");
 
         // the same combinations are rejected on the text-config path too
         assert!(ExperimentConfig::from_kv_text("adaptive_bound = true\n").is_err());
@@ -774,6 +831,40 @@ mod tests {
         .is_err());
         assert!(ExperimentConfig::from_kv_text("delayed_gradients = true\n").is_err());
         assert!(ExperimentConfig::from_kv_text("stale_decay = 0.0\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("merge_policy = \"arrival\"\n").is_err());
+        assert!(ExperimentConfig::from_kv_text(
+            "engine = \"events\"\nmerge_policy = \"batch:99\"\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn engine_and_merge_policy_keys_parse_and_validate() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.engine, EngineKind::Rounds, "default is the round loop");
+        assert_eq!(d.merge_policy, MergePolicyKind::Round);
+
+        let c = ExperimentConfig::from_kv_text(
+            "engine = \"events\"\nmerge_policy = \"batch:3\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.engine, EngineKind::Events);
+        assert_eq!(c.merge_policy, MergePolicyKind::Batch(3));
+
+        // the events engine with the default degenerate policy is legal
+        // (that is the bit-parity configuration)
+        let c = ExperimentConfig::from_kv_text("engine = \"events\"\n").unwrap();
+        assert_eq!(c.merge_policy, MergePolicyKind::Round);
+
+        assert!(ExperimentConfig::from_kv_text("engine = \"barrier\"\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("merge_policy = \"batch:0\"\n").is_err());
+        assert!(ExperimentConfig::from_kv_text("merge_policy = \"window:-1\"\n").is_err());
+
+        let c = ExperimentConfig::default()
+            .with_engine(EngineKind::Events)
+            .with_merge_policy(MergePolicyKind::Window(0.5));
+        c.validate().unwrap();
+        assert!(c.with_engine(EngineKind::Rounds).validate().is_err());
     }
 
     #[test]

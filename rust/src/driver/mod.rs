@@ -272,17 +272,129 @@ pub trait Protocol: Sync {
 }
 
 /// Metric snapshot at the last adaptation-window boundary: the window
-/// reward is shaped from "end minus mark" deltas.
+/// reward is shaped from "end minus mark" deltas. Shared with the event
+/// driver, whose `ControllerSwitch` events carry the same bookkeeping.
 #[derive(Clone, Copy, Default)]
-struct WindowMark {
-    accuracy: f64,
-    sim_time: f64,
-    bandwidth_gb: f64,
-    client_tflops: f64,
+pub(crate) struct WindowMark {
+    pub(crate) accuracy: f64,
+    pub(crate) sim_time: f64,
+    pub(crate) bandwidth_gb: f64,
+    pub(crate) client_tflops: f64,
+}
+
+/// Execute one merge's worth of protocol work for the given participant
+/// set: residency management, version resolution, decay scope, the
+/// fan-out/fan-in step loop, and the server merge.
+///
+/// This is the shared round body of *both* drivers — the round loop in
+/// [`run`] and the event loop in [`crate::sim::run_events`] call it with
+/// the plans their schedulers/policies produce, so degenerate-policy
+/// bit-parity (DESIGN.md §11) is structural: identical plans feed the
+/// identical code path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn exec_round<P: Protocol>(
+    env: &mut Env,
+    protocol: &mut P,
+    store: &mut ClientStateStore,
+    ring: &mut Option<SnapshotRing>,
+    speeds: &ClientSpeeds,
+    pool: &std::sync::Arc<crate::engine::ClientPool>,
+    round: usize,
+    participants: &[usize],
+    staleness: &[usize],
+) -> Result<RoundReport> {
+    // evict last round's inactive clients first, then materialize the
+    // round's sample: peak residency ~ |old ∪ new|, not total clients
+    store.spill_except(participants)?;
+    store.ensure_loaded(participants, |i| protocol.init_client(env, i))?;
+    if store.spilling() {
+        // dataset shards follow the same residency discipline as
+        // client state: cache only the round's sample, regenerate
+        // others on demand (they are pure functions of (seed, client))
+        env.clients.retain(participants);
+    }
+
+    protocol.begin_round(env, round, participants)?;
+    // version ring: capture this round's broadcast state, then hand
+    // each stale participant the snapshot it actually pulled (round
+    // `round - s_i`); fresh participants read the live state
+    let versions: Option<Vec<Option<ModelVersion>>> = match ring.as_mut() {
+        Some(ring) => {
+            if let Some(broadcast) = protocol.broadcast_state() {
+                ring.push(round, broadcast)?;
+            }
+            Some(resolve_versions(ring, round, staleness)?)
+        }
+        None => None,
+    };
+    // stale contributions are down-weighted in the round's merges
+    // (round_weights, DESIGN.md §7); fully-fresh rounds skip the scope
+    // so the verbatim-weights path stays bit-identical
+    let decay_scope = staleness.iter().any(|&s| s > 0).then(|| {
+        DecayScope::publish(participants, staleness, env.cfg.stale_decay as f32)
+    });
+    let steps = protocol.steps(round);
+    for step in 0..steps {
+        let updates: Vec<(usize, P::Update)> = if protocol.fan_out() {
+            let raw = {
+                let p: &P = protocol;
+                let env_ref: &Env = env;
+                let versions_ref = &versions;
+                let mut states = store.loaded_mut(participants)?;
+                pool.run_mut(&mut states, |j, state| {
+                    let ctx = ClientCtx {
+                        env: env_ref,
+                        round,
+                        step,
+                        client: participants[j],
+                        version: versions_ref.as_ref().and_then(|v| v[j].clone()),
+                    };
+                    p.client_round(&ctx, state)
+                })?
+            };
+            // fan-in on the driver thread: per-client deltas (scaled
+            // against the budgets under heterogeneous speeds) combine
+            // through a balanced tree whose shape is a pure function
+            // of the id-ordered participant list, then fold into the
+            // run meter once — the reduce order depends on client ids
+            // only, never the thread schedule, so threads N ≡ 1 holds
+            // at any fan-out width (DESIGN.md §10)
+            let mut merged = Vec::with_capacity(raw.len());
+            let mut deltas = Vec::with_capacity(raw.len());
+            for (j, u) in raw.into_iter().enumerate() {
+                let i = participants[j];
+                let delta = if speeds.is_uniform() {
+                    u.meter
+                } else {
+                    let mut d = CostMeter::new();
+                    d.merge_scaled(&u.meter, speeds.compute_scale(i), speeds.net_scale(i));
+                    d
+                };
+                deltas.push(delta);
+                merged.push((i, u.inner));
+            }
+            let combined = crate::engine::tree_reduce(deltas, |mut a, b| {
+                a.merge(&b);
+                a
+            });
+            if let Some(round_delta) = combined {
+                env.meter.merge(&round_delta);
+            }
+            merged
+        } else {
+            Vec::new()
+        };
+        protocol.merge_round(env, store, round, step, participants, updates)?;
+    }
+    let report = protocol.end_round(env, store, round, participants)?;
+    drop(decay_scope);
+    Ok(report)
 }
 
 /// Run `protocol` end to end under the configured scheduler and return
-/// its result. This is the only round loop in the codebase.
+/// its result. This is the round-barrier driver; `--engine events`
+/// selects [`crate::sim::run_events`] instead, which shares
+/// [`exec_round`] so the two agree bit-for-bit on identical plans.
 pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
     protocol.init_state(env)?;
 
@@ -343,91 +455,17 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
         // trajectory is visible on the CSV/JSON axes
         let bound = scheduler.current_bound();
         let RoundPlan { participants, staleness, sim_time } = scheduler.plan(round);
-        // evict last round's inactive clients first, then materialize the
-        // round's sample: peak residency ~ |old ∪ new|, not total clients
-        store.spill_except(&participants)?;
-        store.ensure_loaded(&participants, |i| protocol.init_client(env, i))?;
-        if store.spilling() {
-            // dataset shards follow the same residency discipline as
-            // client state: cache only the round's sample, regenerate
-            // others on demand (they are pure functions of (seed, client))
-            env.clients.retain(&participants);
-        }
-
-        protocol.begin_round(env, round, &participants)?;
-        // version ring: capture this round's broadcast state, then hand
-        // each stale participant the snapshot it actually pulled (round
-        // `round - s_i`); fresh participants read the live state
-        let versions: Option<Vec<Option<ModelVersion>>> = match ring.as_mut() {
-            Some(ring) => {
-                if let Some(broadcast) = protocol.broadcast_state() {
-                    ring.push(round, broadcast)?;
-                }
-                Some(resolve_versions(ring, round, &staleness)?)
-            }
-            None => None,
-        };
-        // stale contributions are down-weighted in the round's merges
-        // (round_weights, DESIGN.md §7); fully-fresh rounds skip the scope
-        // so the verbatim-weights path stays bit-identical
-        let decay_scope = staleness.iter().any(|&s| s > 0).then(|| {
-            DecayScope::publish(&participants, &staleness, env.cfg.stale_decay as f32)
-        });
-        let steps = protocol.steps(round);
-        for step in 0..steps {
-            let updates: Vec<(usize, P::Update)> = if protocol.fan_out() {
-                let raw = {
-                    let p: &P = protocol;
-                    let env_ref: &Env = env;
-                    let versions_ref = &versions;
-                    let mut states = store.loaded_mut(&participants)?;
-                    pool.run_mut(&mut states, |j, state| {
-                        let ctx = ClientCtx {
-                            env: env_ref,
-                            round,
-                            step,
-                            client: participants[j],
-                            version: versions_ref.as_ref().and_then(|v| v[j].clone()),
-                        };
-                        p.client_round(&ctx, state)
-                    })?
-                };
-                // fan-in on the driver thread: per-client deltas (scaled
-                // against the budgets under heterogeneous speeds) combine
-                // through a balanced tree whose shape is a pure function
-                // of the id-ordered participant list, then fold into the
-                // run meter once — the reduce order depends on client ids
-                // only, never the thread schedule, so threads N ≡ 1 holds
-                // at any fan-out width (DESIGN.md §10)
-                let mut merged = Vec::with_capacity(raw.len());
-                let mut deltas = Vec::with_capacity(raw.len());
-                for (j, u) in raw.into_iter().enumerate() {
-                    let i = participants[j];
-                    let delta = if speeds.is_uniform() {
-                        u.meter
-                    } else {
-                        let mut d = CostMeter::new();
-                        d.merge_scaled(&u.meter, speeds.compute_scale(i), speeds.net_scale(i));
-                        d
-                    };
-                    deltas.push(delta);
-                    merged.push((i, u.inner));
-                }
-                let combined = crate::engine::tree_reduce(deltas, |mut a, b| {
-                    a.merge(&b);
-                    a
-                });
-                if let Some(round_delta) = combined {
-                    env.meter.merge(&round_delta);
-                }
-                merged
-            } else {
-                Vec::new()
-            };
-            protocol.merge_round(env, &mut store, round, step, &participants, updates)?;
-        }
-        let report = protocol.end_round(env, &mut store, round, &participants)?;
-        drop(decay_scope);
+        let report = exec_round(
+            env,
+            protocol,
+            &mut store,
+            &mut ring,
+            &speeds,
+            &pool,
+            round,
+            &participants,
+            &staleness,
+        )?;
 
         // the controller needs a fresh accuracy reading at every window
         // boundary (its Δaccuracy signal), so adaptivity widens the eval
@@ -457,6 +495,9 @@ pub fn run<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
             bound,
             selected: report.selected,
             participants,
+            // the barrier loop pops no events; the event driver records
+            // its heap's cumulative pop count here
+            events: 0,
         });
 
         // window boundary: credit the finished window to the current arm

@@ -25,7 +25,12 @@
 //! C3-shaped reward (`--adaptive-bound`, DESIGN.md §9), and the
 //! [`engine`] fan-out (`--threads N`, default = host parallelism).
 //! Results are merged in client-id order so parallel runs are
-//! bit-identical to serial ones (DESIGN.md §5–§7).
+//! bit-identical to serial ones (DESIGN.md §5–§7). `--engine events`
+//! swaps the round barrier for the [`sim`] module's discrete-event
+//! driver — a seeded event heap with pluggable server merge policies
+//! (`--merge-policy arrival | batch:K | window:DT`, DESIGN.md §11) —
+//! while the default `round` policy replays the round schedulers
+//! bit-for-bit as degenerate event streams.
 //!
 //! ## Quickstart
 //!
@@ -51,6 +56,7 @@ pub mod orchestrator;
 pub mod protocols;
 pub mod report;
 pub mod runtime;
+pub mod sim;
 
 pub use config::ExperimentConfig;
 pub use protocols::{run_protocol, RunResult};

@@ -20,6 +20,7 @@ use adasplit::engine::par_indexed;
 use adasplit::protocols::{run_protocol_recorded, run_seeds};
 use adasplit::report::ResultTable;
 use adasplit::runtime::Runtime;
+use adasplit::sim::{EngineKind, MergePolicyKind};
 
 const USAGE: &str = "\
 adasplit — AdaSplit distributed-training coordinator
@@ -81,6 +82,13 @@ RUN OPTIONS:
   --adapt-arms LIST      comma-separated candidate bounds, clipped to
                          --staleness-bound (a singleton list reproduces
                          the fixed-bound run bit-for-bit) [0,1,2,4,8]
+  --engine E             driver engine: rounds (barrier loop) | events
+                         (discrete-event heap over per-client virtual
+                         clocks, DESIGN.md §11)               [rounds]
+  --merge-policy P       events-engine server merge policy: round
+                         (degenerate — replays the configured scheduler
+                         bit-for-bit) | arrival | batch:K | window:DT
+                         (needs --engine events)              [round]
   --threads N            engine worker threads (0 = host parallelism) [0]
   --curve-out PATH       write the per-round curve CSV
   --trace                print per-iteration orchestrator traces
@@ -96,6 +104,8 @@ COMPARE OPTIONS:
   --adaptive-bound       UCB-adaptive staleness bound (see RUN)
   --adapt-window W       rounds per adaptation window          [5]
   --adapt-arms LIST      candidate bounds for the controller (see RUN)
+  --engine E             rounds | events driver engine (see RUN) [rounds]
+  --merge-policy P       events-engine merge policy (see RUN)    [round]
   --threads N            worker threads per run; protocols also run
                          concurrently across the pool      [0 = auto]
 ";
@@ -252,6 +262,12 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
     if let Some(v) = args.parsed("threads")? {
         cfg.threads = v;
     }
+    if let Some(v) = args.parsed("engine")? {
+        cfg.engine = v;
+    }
+    if let Some(v) = args.parsed("merge-policy")? {
+        cfg.merge_policy = v;
+    }
     cfg.adaptive_bound |= args.has("adaptive-bound");
     cfg.delayed_gradients |= args.has("delayed-gradients");
     cfg.server_grad_to_client |= args.has("server-grad");
@@ -322,6 +338,13 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
             cfg.adapt_window, result.final_bound, result.bound_switches
         );
     }
+    if cfg.engine == EngineKind::Events {
+        println!(
+            "event engine: {} events processed, merge policy `{}` \
+             (per-row event traffic in the curve CSV `events` column)",
+            result.events_processed, result.merge_policy
+        );
+    }
     if let Some(path) = args.get("curve-out") {
         recorder.write_csv(path)?;
         println!("curve written to {path}");
@@ -350,6 +373,8 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
         .get("adapt-arms")
         .map(adasplit::config::parse_arm_list)
         .transpose()?;
+    let engine: EngineKind = args.parsed("engine")?.unwrap_or_default();
+    let merge_policy: MergePolicyKind = args.parsed("merge-policy")?.unwrap_or_default();
     let seed_list: Vec<u64> = (0..n_seeds as u64).collect();
 
     let budget = adasplit::engine::ClientPool::new(threads).threads();
@@ -369,6 +394,8 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
                 .with_adaptive_bound(adaptive_bound)
                 .with_adapt_window(adapt_window)
                 .with_adapt_arms(adapt_arms.clone())
+                .with_engine(engine)
+                .with_merge_policy(merge_policy)
                 .with_threads(per_protocol)
         })
         .collect();

@@ -40,6 +40,11 @@ pub struct RoundStat {
     /// clients sampled into the round by the scheduler (all clients under
     /// `SyncAll`; the per-round subsample under `SampledSync`)
     pub participants: Vec<usize>,
+    /// cumulative events processed by the event driver when this row was
+    /// recorded (0 under the rounds engine — the barrier loop pops no
+    /// events). Under `--engine events` the row's "round" is its merge
+    /// index, and this column traces event traffic along the run.
+    pub events: usize,
 }
 
 /// Collects `RoundStat`s plus free-form trace lines.
@@ -85,12 +90,12 @@ impl Recorder {
         let mut f = std::fs::File::create(path).context("creating csv")?;
         writeln!(
             f,
-            "round,phase,train_loss,accuracy_pct,bandwidth_gb,client_tflops,total_tflops,mask_density,sim_time,max_staleness,bound,n_selected,n_participants"
+            "round,phase,train_loss,accuracy_pct,bandwidth_gb,client_tflops,total_tflops,mask_density,sim_time,max_staleness,bound,n_selected,n_participants,events"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{},{:.6},{:.3},{:.6},{:.6},{:.6},{:.4},{:.4},{},{},{},{}",
+                "{},{},{:.6},{:.3},{:.6},{:.6},{:.6},{:.4},{:.4},{},{},{},{},{}",
                 r.round,
                 r.phase,
                 r.train_loss,
@@ -103,7 +108,8 @@ impl Recorder {
                 r.max_staleness,
                 r.bound,
                 r.selected.len(),
-                r.participants.len()
+                r.participants.len(),
+                r.events
             )?;
         }
         Ok(())
@@ -136,6 +142,7 @@ impl Recorder {
                             r.participants.iter().map(|&s| Json::Num(s as f64)).collect(),
                         ),
                     );
+                    m.insert("events".into(), Json::Num(r.events as f64));
                     Json::Obj(m)
                 })
                 .collect(),
@@ -171,6 +178,7 @@ mod tests {
             bound: 2,
             selected: vec![0, 1],
             participants: vec![0, 1, 2],
+            events: round * 7,
         }
     }
 
@@ -214,6 +222,7 @@ mod tests {
         let json = r.to_json();
         let rows = json.as_arr().unwrap();
         assert_eq!(rows[0].get("bound").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(rows[0].get("events").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]
@@ -233,10 +242,14 @@ mod tests {
         let mut lines = text.lines();
         let header = lines.next().expect("header line");
         let columns = header.split(',').count();
-        assert!(columns >= 13, "expected the full RoundStat column set");
+        assert!(columns >= 14, "expected the full RoundStat column set");
         assert!(
             header.split(',').any(|c| c == "bound"),
             "adaptive bound trajectory column missing from the header"
+        );
+        assert!(
+            header.split(',').any(|c| c == "events"),
+            "event-engine traffic column missing from the header"
         );
         let mut rows = 0;
         for (i, line) in lines.enumerate() {

@@ -6,60 +6,179 @@
 //! (selection indicators). Unselected clients impute their loss as the
 //! mean of their two most recent values (paper §3.2), and losses are
 //! initialized to 100 for t = 0, 1 so every client is explored early.
+//!
+//! ## Sparse representation
+//!
+//! The state is kept only for clients that have ever been *observed*
+//! (handed a real loss in [`UcbOrchestrator::update`]). Two facts make
+//! this exact, not approximate:
+//!
+//! * a never-observed ("virgin") client only ever imputes, and its
+//!   imputed loss is `(INIT_LOSS + INIT_LOSS) / 2 = INIT_LOSS` exactly —
+//!   so all virgin clients share one bitwise-identical trajectory,
+//!   advanced in O(1) per update (`virgin`);
+//! * an observed client that misses later updates evolves by imputation
+//!   from its own `last` pair — a pure function of its stored state — so
+//!   its missed steps replay lazily on read (`Arm::catch_up`), and the
+//!   replayed sequence is the exact f64 op sequence the dense version
+//!   would have executed.
+//!
+//! Per-update cost is therefore O(observed) and selection is
+//! O(materialized + k): under AdaSplit's `eta`-sampling that is
+//! O(sample), closing the last O(fleet)-per-round structure (ROADMAP).
+//! Bit-parity against the dense recurrence is pinned by
+//! `sparse_matches_dense_bit_for_bit` below.
 
-/// Discounted-UCB client selector.
+use std::collections::BTreeMap;
+
+pub const INIT_LOSS: f64 = 100.0;
+
+/// One client's discounted-UCB state, plus how many orchestrator updates
+/// it has folded in (so lagging arms can replay their imputation gap).
+#[derive(Clone, Copy, Debug)]
+struct Arm {
+    /// discounted loss sum l_i
+    l: f64,
+    /// discounted selection count s_i
+    s: f64,
+    /// last two observed/imputed losses
+    last: [f64; 2],
+    /// orchestrator updates already folded into this arm
+    steps: u64,
+}
+
+impl Arm {
+    /// One update step — the exact op sequence of the dense recurrence:
+    /// impute-or-observe, discount-and-add, shift the loss history.
+    fn step(&mut self, gamma: f64, observed: Option<f64>, sel: f64) {
+        let li = observed.unwrap_or((self.last[0] + self.last[1]) / 2.0);
+        self.l = gamma * self.l + li;
+        self.s = gamma * self.s + sel;
+        self.last = [li, self.last[0]];
+        self.steps += 1;
+    }
+
+    /// Replay the imputation-only steps this arm missed while unobserved.
+    fn catch_up(&mut self, gamma: f64, target: u64) {
+        while self.steps < target {
+            self.step(gamma, None, 0.0);
+        }
+    }
+}
+
+/// Discounted-UCB client selector, sparse over observed clients.
 #[derive(Clone, Debug)]
 pub struct UcbOrchestrator {
     gamma: f64,
-    /// discounted loss sum per client (l_i)
-    l: Vec<f64>,
-    /// discounted selection count per client (s_i)
-    s: Vec<f64>,
-    /// last two observed/imputed losses per client
-    last: Vec<[f64; 2]>,
-    /// total iterations elapsed (the T of eq. 6)
-    t: u64,
+    n: usize,
+    /// clients observed at least once, keyed by id
+    arms: BTreeMap<usize, Arm>,
+    /// the shared trajectory of every never-observed client (kept
+    /// current: `virgin.steps` == updates elapsed)
+    virgin: Arm,
 }
-
-pub const INIT_LOSS: f64 = 100.0;
 
 impl UcbOrchestrator {
     pub fn new(n_clients: usize, gamma: f64) -> Self {
         Self {
             gamma,
+            n: n_clients,
+            arms: BTreeMap::new(),
             // seed with the t=0,1 initial losses so s_i > 0 from the start
-            l: vec![INIT_LOSS * 2.0; n_clients],
-            s: vec![2.0; n_clients],
-            last: vec![[INIT_LOSS; 2]; n_clients],
-            t: 2,
+            virgin: Arm {
+                l: INIT_LOSS * 2.0,
+                s: 2.0,
+                last: [INIT_LOSS; 2],
+                steps: 0,
+            },
         }
     }
 
     pub fn n_clients(&self) -> usize {
-        self.l.len()
+        self.n
+    }
+
+    /// Updates elapsed so far.
+    fn updates(&self) -> u64 {
+        self.virgin.steps
+    }
+
+    /// The T of eq. 6 (starts at 2: the two seeded pseudo-iterations).
+    fn t(&self) -> u64 {
+        2 + self.updates()
+    }
+
+    fn advantage_of(arm: &Arm, t: u64) -> f64 {
+        if arm.s <= 0.0 {
+            return f64::INFINITY;
+        }
+        let exploit = arm.l / arm.s;
+        let explore = (2.0 * (t.max(2) as f64).ln() / arm.s).sqrt();
+        exploit + explore
+    }
+
+    /// Client `i`'s state brought current (a lagging arm replays its
+    /// imputation gap on a copy; the stored state is untouched).
+    fn current_arm(&self, i: usize) -> Arm {
+        match self.arms.get(&i) {
+            Some(a) => {
+                let mut c = *a;
+                c.catch_up(self.gamma, self.updates());
+                c
+            }
+            None => self.virgin,
+        }
     }
 
     /// Advantage A_i (eq. 6). Never-selected clients get +inf.
     pub fn advantage(&self, i: usize) -> f64 {
-        if self.s[i] <= 0.0 {
-            return f64::INFINITY;
-        }
-        let exploit = self.l[i] / self.s[i];
-        let explore = (2.0 * (self.t.max(2) as f64).ln() / self.s[i]).sqrt();
-        exploit + explore
+        Self::advantage_of(&self.current_arm(i), self.t())
+    }
+
+    /// The dense selector's comparator: advantage descending, index
+    /// ascending among ties (including the all-virgin +inf/equal ties).
+    fn rank(a: &(usize, f64), b: &(usize, f64)) -> std::cmp::Ordering {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
     }
 
     /// Pick the `k` clients with the highest advantage (deterministic
     /// tie-break by index).
     pub fn select(&self, k: usize) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..self.l.len()).collect();
-        idx.sort_by(|&a, &b| {
-            self.advantage(b)
-                .partial_cmp(&self.advantage(a))
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
-        });
-        idx.truncate(k.min(self.l.len()));
+        let k = k.min(self.n);
+        let t = self.t();
+        let mut cand: Vec<(usize, f64)> = self
+            .arms
+            .iter()
+            .map(|(&i, _)| (i, Self::advantage_of(&self.current_arm(i), t)))
+            .collect();
+        // virgin clients all score the same bitwise-identical advantage,
+        // and ties break by ascending index — so only the k lowest-index
+        // virgins can ever make the cut. Walk the gaps between observed
+        // ids to find them: O(observed + k), never O(fleet).
+        let virgin_adv = Self::advantage_of(&self.virgin, t);
+        let mut picked = 0;
+        let mut next = 0usize;
+        for &key in self.arms.keys() {
+            while next < key.min(self.n) && picked < k {
+                cand.push((next, virgin_adv));
+                picked += 1;
+                next += 1;
+            }
+            next = next.max(key + 1);
+            if picked == k {
+                break;
+            }
+        }
+        while picked < k && next < self.n {
+            cand.push((next, virgin_adv));
+            picked += 1;
+            next += 1;
+        }
+        cand.sort_by(Self::rank);
+        cand.truncate(k);
+        let mut idx: Vec<usize> = cand.into_iter().map(|(i, _)| i).collect();
         idx.sort_unstable();
         idx
     }
@@ -67,14 +186,14 @@ impl UcbOrchestrator {
     /// Top-`k` selection restricted to `candidates` (clients that actually
     /// have a batch this iteration).
     pub fn select_among(&self, candidates: &[usize], k: usize) -> Vec<usize> {
-        let mut idx: Vec<usize> = candidates.to_vec();
-        idx.sort_by(|&a, &b| {
-            self.advantage(b)
-                .partial_cmp(&self.advantage(a))
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
-        });
-        idx.truncate(k.min(candidates.len()));
+        let t = self.t();
+        let mut cand: Vec<(usize, f64)> = candidates
+            .iter()
+            .map(|&i| (i, Self::advantage_of(&self.current_arm(i), t)))
+            .collect();
+        cand.sort_by(Self::rank);
+        cand.truncate(k.min(candidates.len()));
+        let mut idx: Vec<usize> = cand.into_iter().map(|(i, _)| i).collect();
         idx.sort_unstable();
         idx
     }
@@ -82,26 +201,190 @@ impl UcbOrchestrator {
     /// Advance one iteration: `observed` carries (client, server_loss) for
     /// selected clients; everyone else imputes the mean of their last two.
     pub fn update(&mut self, observed: &[(usize, f64)]) {
-        let n = self.l.len();
-        let mut loss = vec![None; n];
-        let mut sel = vec![0.0; n];
+        // last write wins for a repeated client, like the dense version's
+        // overwrite into its per-client loss slot
+        let mut seen: BTreeMap<usize, f64> = BTreeMap::new();
         for &(i, li) in observed {
-            loss[i] = Some(li);
-            sel[i] = 1.0;
+            debug_assert!(i < self.n, "client {i} out of range (n = {})", self.n);
+            seen.insert(i, li);
         }
-        for i in 0..n {
-            let li = loss[i].unwrap_or((self.last[i][0] + self.last[i][1]) / 2.0);
-            self.l[i] = self.gamma * self.l[i] + li;
-            self.s[i] = self.gamma * self.s[i] + sel[i];
-            self.last[i] = [li, self.last[i][0]];
+        let target = self.updates();
+        for (i, li) in seen {
+            let arm = self.arms.entry(i).or_insert(self.virgin);
+            arm.catch_up(self.gamma, target);
+            arm.step(self.gamma, Some(li), 1.0);
         }
-        self.t += 1;
+        // every still-virgin client advances through the one shared
+        // trajectory (its imputed loss is exactly INIT_LOSS forever)
+        self.virgin.step(self.gamma, None, 0.0);
+    }
+
+    /// Clients materialized out of the virgin pool (observed >= once).
+    #[cfg(test)]
+    fn materialized(&self) -> usize {
+        self.arms.len()
+    }
+
+    /// Test-only view of a client's brought-current (l, s, last) state.
+    #[cfg(test)]
+    fn state_of(&self, i: usize) -> (f64, f64, [f64; 2]) {
+        let a = self.current_arm(i);
+        (a.l, a.s, a.last)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The pre-sparse dense implementation, kept verbatim as the
+    /// bit-parity reference.
+    #[derive(Clone, Debug)]
+    struct DenseUcb {
+        gamma: f64,
+        l: Vec<f64>,
+        s: Vec<f64>,
+        last: Vec<[f64; 2]>,
+        t: u64,
+    }
+
+    impl DenseUcb {
+        fn new(n_clients: usize, gamma: f64) -> Self {
+            Self {
+                gamma,
+                l: vec![INIT_LOSS * 2.0; n_clients],
+                s: vec![2.0; n_clients],
+                last: vec![[INIT_LOSS; 2]; n_clients],
+                t: 2,
+            }
+        }
+
+        fn advantage(&self, i: usize) -> f64 {
+            if self.s[i] <= 0.0 {
+                return f64::INFINITY;
+            }
+            let exploit = self.l[i] / self.s[i];
+            let explore = (2.0 * (self.t.max(2) as f64).ln() / self.s[i]).sqrt();
+            exploit + explore
+        }
+
+        fn select(&self, k: usize) -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..self.l.len()).collect();
+            idx.sort_by(|&a, &b| {
+                self.advantage(b)
+                    .partial_cmp(&self.advantage(a))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            idx.truncate(k.min(self.l.len()));
+            idx.sort_unstable();
+            idx
+        }
+
+        fn select_among(&self, candidates: &[usize], k: usize) -> Vec<usize> {
+            let mut idx: Vec<usize> = candidates.to_vec();
+            idx.sort_by(|&a, &b| {
+                self.advantage(b)
+                    .partial_cmp(&self.advantage(a))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            idx.truncate(k.min(candidates.len()));
+            idx.sort_unstable();
+            idx
+        }
+
+        fn update(&mut self, observed: &[(usize, f64)]) {
+            let n = self.l.len();
+            let mut loss = vec![None; n];
+            let mut sel = vec![0.0; n];
+            for &(i, li) in observed {
+                loss[i] = Some(li);
+                sel[i] = 1.0;
+            }
+            for i in 0..n {
+                let li = loss[i].unwrap_or((self.last[i][0] + self.last[i][1]) / 2.0);
+                self.l[i] = self.gamma * self.l[i] + li;
+                self.s[i] = self.gamma * self.s[i] + sel[i];
+                self.last[i] = [li, self.last[i][0]];
+            }
+            self.t += 1;
+        }
+    }
+
+    /// SplitMix64: deterministic pseudo-randomness for the parity drive.
+    fn mix(x: &mut u64) -> u64 {
+        *x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = *x;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    #[test]
+    fn sparse_matches_dense_bit_for_bit() {
+        for gamma in [0.87, 1.0, 0.5] {
+            let n = 13;
+            let mut sparse = UcbOrchestrator::new(n, gamma);
+            let mut dense = DenseUcb::new(n, gamma);
+            let mut seed = 0x5eed_0000 + (gamma * 1e6) as u64;
+            for round in 0..80 {
+                // a pseudo-random observation set, sometimes empty,
+                // sometimes with a repeated client (last write must win)
+                let bits = mix(&mut seed);
+                let mut obs: Vec<(usize, f64)> = (0..n)
+                    .filter(|i| bits & (1 << i) != 0)
+                    .map(|i| (i, ((mix(&mut seed) % 1000) as f64) / 100.0))
+                    .collect();
+                if round % 7 == 3 {
+                    if let Some(&(i, _)) = obs.first() {
+                        obs.push((i, ((mix(&mut seed) % 1000) as f64) / 100.0));
+                    }
+                }
+                sparse.update(&obs);
+                dense.update(&obs);
+                for i in 0..n {
+                    let (a, b) = (sparse.advantage(i), dense.advantage(i));
+                    assert!(
+                        a.to_bits() == b.to_bits(),
+                        "gamma {gamma} round {round} client {i}: sparse {a} != dense {b}"
+                    );
+                }
+                for k in [0, 1, 3, n, n + 2] {
+                    assert_eq!(
+                        sparse.select(k),
+                        dense.select(k),
+                        "gamma {gamma} round {round} select({k})"
+                    );
+                }
+                let among: Vec<usize> = (0..n).filter(|i| i % 3 != 1).collect();
+                assert_eq!(
+                    sparse.select_among(&among, 4),
+                    dense.select_among(&among, 4),
+                    "gamma {gamma} round {round} select_among"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn state_stays_sparse_in_the_observed_set() {
+        let mut o = UcbOrchestrator::new(100_000, 0.87);
+        for round in 0..50 {
+            o.update(&[(round, 1.0), (round + 7, 2.0)]);
+        }
+        assert!(
+            o.materialized() <= 100,
+            "per-arm state must track the observed set, not the fleet: {}",
+            o.materialized()
+        );
+        // fleet-sized reads still work — any virgin client shares the
+        // one imputation trajectory
+        assert_eq!(
+            o.advantage(99_999).to_bits(),
+            o.advantage(50_000).to_bits()
+        );
+    }
 
     #[test]
     fn initial_selection_is_uniformly_scored() {
@@ -157,9 +440,12 @@ mod tests {
         let mut o = UcbOrchestrator::new(2, 1.0);
         o.update(&[(0, 10.0)]); // client 1 imputes (100+100)/2 = 100
         // l_1 = 200 + 100; l_0 = 200 + 10
-        assert!(o.l[1] > o.l[0]);
+        let (l0, _, _) = o.state_of(0);
+        let (l1, _, _) = o.state_of(1);
+        assert!(l1 > l0);
         o.update(&[(0, 10.0), (1, 0.5)]);
         // client 1's imputed history now includes the real 0.5
-        assert_eq!(o.last[1][0], 0.5);
+        let (_, _, last1) = o.state_of(1);
+        assert_eq!(last1[0], 0.5);
     }
 }

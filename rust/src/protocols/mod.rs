@@ -32,6 +32,7 @@ use crate::driver;
 use crate::engine::par_indexed;
 use crate::metrics::{c3_score, CostMeter, Recorder};
 use crate::runtime::Runtime;
+use crate::sim::{self, EngineKind};
 use crate::util::Json;
 
 pub use common::{
@@ -84,6 +85,15 @@ pub struct RunResult {
     /// every fixed-bound run, and for an adaptive run whose controller
     /// kept one arm throughout (e.g. a singleton candidate set)
     pub bound_switches: usize,
+    /// which driver executed the run (`rounds` | `events`)
+    pub engine: String,
+    /// server merge policy (`round` for both the rounds driver and the
+    /// degenerate event policy; `arrival` / `batch:K` / `window:DT` for
+    /// continuous event-driven merging)
+    pub merge_policy: String,
+    /// events popped off the heap by the event driver (0 under the
+    /// rounds engine — the barrier loop processes no events)
+    pub events_processed: usize,
 }
 
 impl RunResult {
@@ -112,6 +122,12 @@ impl RunResult {
         m.insert("adaptive".into(), Json::Bool(self.adaptive));
         m.insert("final_bound".into(), Json::Num(self.final_bound as f64));
         m.insert("bound_switches".into(), Json::Num(self.bound_switches as f64));
+        m.insert("engine".into(), Json::Str(self.engine.clone()));
+        m.insert("merge_policy".into(), Json::Str(self.merge_policy.clone()));
+        m.insert(
+            "events_processed".into(),
+            Json::Num(self.events_processed as f64),
+        );
         Json::Obj(m)
     }
 
@@ -158,6 +174,10 @@ impl RunResult {
                 .windows(2)
                 .filter(|w| w[1].bound != w[0].bound)
                 .count(),
+            engine: env.cfg.engine.id().to_string(),
+            merge_policy: env.cfg.merge_policy.id(),
+            // the event driver overwrites this with its heap's pop count
+            events_processed: 0,
         }
     }
 }
@@ -183,36 +203,43 @@ pub fn run_protocol_recorded(
         cfg.seed,
     )?;
     let mut env = Env::new(rt, cfg, clients);
-    // every protocol runs through the one generic round driver; the match
-    // only picks the Protocol-trait implementation
+    // every protocol runs through one generic driver — the round loop or
+    // the event loop per `--engine` (`dispatch`); the match only picks
+    // the Protocol-trait implementation
+    fn dispatch<P: driver::Protocol>(env: &mut Env, p: &mut P) -> Result<RunResult> {
+        match env.cfg.engine {
+            EngineKind::Rounds => driver::run(env, p),
+            EngineKind::Events => sim::run_events(env, p),
+        }
+    }
     let result = match cfg.protocol {
         ProtocolKind::AdaSplit => {
             let mut p = adasplit::AdaSplitProtocol::new(&env)?;
-            driver::run(&mut env, &mut p)?
+            dispatch(&mut env, &mut p)?
         }
         ProtocolKind::SlBasic => {
             let mut p = sl_basic::SlBasicProtocol::new(&env)?;
-            driver::run(&mut env, &mut p)?
+            dispatch(&mut env, &mut p)?
         }
         ProtocolKind::SplitFed => {
             let mut p = splitfed::SplitFedProtocol::new(&env)?;
-            driver::run(&mut env, &mut p)?
+            dispatch(&mut env, &mut p)?
         }
         ProtocolKind::FedAvg => {
             let mut p = fedavg::protocol(&env)?;
-            driver::run(&mut env, &mut p)?
+            dispatch(&mut env, &mut p)?
         }
         ProtocolKind::FedProx => {
             let mut p = fedprox::protocol(&env)?;
-            driver::run(&mut env, &mut p)?
+            dispatch(&mut env, &mut p)?
         }
         ProtocolKind::Scaffold => {
             let mut p = scaffold::protocol(&env)?;
-            driver::run(&mut env, &mut p)?
+            dispatch(&mut env, &mut p)?
         }
         ProtocolKind::FedNova => {
             let mut p = fednova::protocol(&env)?;
-            driver::run(&mut env, &mut p)?
+            dispatch(&mut env, &mut p)?
         }
     };
     Ok((result, env.recorder))
@@ -254,11 +281,14 @@ pub fn run_seeds(
 ///   controller's trajectory is seed-dependent, so the aggregate reports
 ///   the upper envelope (the loosest endpoint and the most switching any
 ///   seed saw) rather than an average that describes no run;
-/// * **invariants** — `scheduler`, `delayed_gradients`, and `adaptive`
-///   are functions of the config, not the seed: all runs must agree, and
-///   the aggregate carries the shared value (checked, so a future
-///   seed-dependent scheduler choice fails loudly instead of reporting
-///   seed 0's).
+///   `events_processed` joins this class — event counts vary with the
+///   seed's merge timing, and the envelope is the honest "how much event
+///   traffic did this config generate" number;
+/// * **invariants** — `scheduler`, `delayed_gradients`, `adaptive`,
+///   `engine`, and `merge_policy` are functions of the config, not the
+///   seed: all runs must agree, and the aggregate carries the shared
+///   value (checked, so a future seed-dependent scheduler choice fails
+///   loudly instead of reporting seed 0's).
 pub fn aggregate_seed_results(
     results: &[RunResult],
     budgets: &crate::metrics::Budgets,
@@ -279,6 +309,18 @@ pub fn aggregate_seed_results(
             r.adaptive == results[0].adaptive,
             "seed runs disagree on the adaptive-bound mode"
         );
+        ensure!(
+            r.engine == results[0].engine,
+            "seed runs disagree on engine mode: `{}` vs `{}`",
+            results[0].engine,
+            r.engine
+        );
+        ensure!(
+            r.merge_policy == results[0].merge_policy,
+            "seed runs disagree on merge policy: `{}` vs `{}`",
+            results[0].merge_policy,
+            r.merge_policy
+        );
     }
     let accs: Vec<f64> = results.iter().map(|r| r.best_accuracy).collect();
     let (mean, std) = crate::metrics::mean_std(&accs);
@@ -297,6 +339,7 @@ pub fn aggregate_seed_results(
     agg.max_staleness = results.iter().map(|r| r.max_staleness).max().unwrap_or(0);
     agg.final_bound = results.iter().map(|r| r.final_bound).max().unwrap_or(0);
     agg.bound_switches = results.iter().map(|r| r.bound_switches).max().unwrap_or(0);
+    agg.events_processed = results.iter().map(|r| r.events_processed).max().unwrap_or(0);
     agg.c3_score = c3_score(mean, agg.bandwidth_gb, agg.client_tflops, budgets);
     Ok((agg, std))
 }
@@ -327,6 +370,9 @@ mod tests {
             adaptive: false,
             final_bound: 0,
             bound_switches: 0,
+            engine: "rounds".into(),
+            merge_policy: "round".into(),
+            events_processed: 0,
         }
     }
 
@@ -379,6 +425,62 @@ mod tests {
         let mut fixed = b;
         fixed.adaptive = false;
         assert!(aggregate_seed_results(&[a, fixed], &budgets).is_err());
+    }
+
+    #[test]
+    fn seed_aggregation_checks_engine_agreement_and_envelopes_event_counts() {
+        let budgets = Budgets::paper_mixed_cifar();
+        let mut a = result(60.0, 8.0, 1, "event-driven", false);
+        a.engine = "events".into();
+        a.merge_policy = "batch:3".into();
+        a.events_processed = 120;
+        let mut b = result(70.0, 12.0, 3, "event-driven", false);
+        b.engine = "events".into();
+        b.merge_policy = "batch:3".into();
+        b.events_processed = 95;
+        let (agg, _) = aggregate_seed_results(&[a.clone(), b.clone()], &budgets).unwrap();
+        assert_eq!(agg.engine, "events");
+        assert_eq!(agg.merge_policy, "batch:3");
+        assert_eq!(
+            agg.events_processed, 120,
+            "event traffic reports the upper envelope across seeds"
+        );
+
+        // engine and merge policy are config-derived: seeds must agree
+        let mut rounds_run = b.clone();
+        rounds_run.engine = "rounds".into();
+        rounds_run.merge_policy = "round".into();
+        let err = aggregate_seed_results(&[a.clone(), rounds_run], &budgets)
+            .expect_err("mixed engines must be rejected")
+            .to_string();
+        assert!(err.contains("engine mode"), "names the disagreeing axis: {err}");
+        let mut other_policy = b;
+        other_policy.merge_policy = "arrival".into();
+        assert!(aggregate_seed_results(&[a, other_policy], &budgets).is_err());
+    }
+
+    #[test]
+    fn run_result_json_round_trips_the_event_engine_axis() {
+        let mut r = result(70.0, 9.0, 2, "event-driven", false);
+        r.engine = "events".into();
+        r.merge_policy = "window:1.5".into();
+        r.events_processed = 240;
+        let parsed = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("engine").unwrap().as_str().unwrap(), "events");
+        assert_eq!(
+            parsed.get("merge_policy").unwrap().as_str().unwrap(),
+            "window:1.5"
+        );
+        assert_eq!(
+            parsed.get("events_processed").unwrap().as_usize().unwrap(),
+            240
+        );
+
+        let fixed = result(50.0, 4.0, 0, "sync-all", false);
+        let parsed = Json::parse(&fixed.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("engine").unwrap().as_str().unwrap(), "rounds");
+        assert_eq!(parsed.get("merge_policy").unwrap().as_str().unwrap(), "round");
+        assert_eq!(parsed.get("events_processed").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

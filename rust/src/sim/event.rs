@@ -1,0 +1,281 @@
+//! Timestamped simulation events and the seeded min-heap that orders them.
+//!
+//! The event engine (DESIGN.md §11) replaces the round barrier with a
+//! discrete-event loop: everything that happens — a client's work unit
+//! completing, a server merge, an eval point, an adaptation-window
+//! boundary — is an [`Event`] popped off one [`EventHeap`]. Determinism
+//! across thread counts and repeat invocations reduces to one property:
+//! the heap's drain order is a **total** order, a pure function of the
+//! event set. Two events never compare "equal enough to race":
+//!
+//! * primary key — virtual time, compared as IEEE bits. Event times are
+//!   non-negative finite (asserted on push), and for non-negative finite
+//!   doubles the bit pattern orders exactly like the float, so the
+//!   comparison is both correct and bit-stable;
+//! * secondary key — the event-kind rank: at one instant, client
+//!   arrivals land first ([`EventKind::ClientFinish`], rank 0), then the
+//!   merge that consumes them ([`EventKind::ServerMerge`], rank 1), then
+//!   the eval that observes the merged state ([`EventKind::Eval`],
+//!   rank 2), then the controller switch that may re-aim the *next*
+//!   window ([`EventKind::ControllerSwitch`], rank 3) — the causal order
+//!   of the round loop, made explicit;
+//! * tertiary key — the client id (arrivals) or merge index (server
+//!   events), so same-kind same-time events drain in id order, matching
+//!   the ascending-client-id merge convention everywhere else
+//!   (DESIGN.md §5).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// What a popped event means to the driver.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Client `client`'s in-flight work unit completes (its update is
+    /// now pending at the server).
+    ClientFinish { client: usize },
+    /// Server merge number `merge` fires: fold pending updates in.
+    ServerMerge { merge: usize },
+    /// Observe the state after merge `merge`: eval cadence + recording.
+    Eval { merge: usize },
+    /// Adaptation-window boundary after merge `merge`: the bound
+    /// controller credits the window and may switch arms.
+    ControllerSwitch { merge: usize },
+}
+
+impl EventKind {
+    /// Same-instant drain rank: arrivals < merge < eval < switch.
+    pub fn rank(&self) -> u8 {
+        match self {
+            EventKind::ClientFinish { .. } => 0,
+            EventKind::ServerMerge { .. } => 1,
+            EventKind::Eval { .. } => 2,
+            EventKind::ControllerSwitch { .. } => 3,
+        }
+    }
+
+    /// Same-kind same-instant tie-break: client id for arrivals, merge
+    /// index for server-side events.
+    fn index(&self) -> usize {
+        match *self {
+            EventKind::ClientFinish { client } => client,
+            EventKind::ServerMerge { merge }
+            | EventKind::Eval { merge }
+            | EventKind::ControllerSwitch { merge } => merge,
+        }
+    }
+}
+
+/// One timestamped simulation event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Event {
+    /// Virtual time, in baseline-round units. Non-negative finite — the
+    /// heap asserts this, because the bit-pattern comparison below is
+    /// only order-preserving on that domain.
+    pub time: f64,
+    pub kind: EventKind,
+}
+
+impl Event {
+    pub fn new(time: f64, kind: EventKind) -> Self {
+        Self { time, kind }
+    }
+
+    /// The (time-bits, kind-rank, id) total-order key (DESIGN.md §11).
+    pub fn key(&self) -> (u64, u8, usize) {
+        (self.time.to_bits(), self.kind.rank(), self.kind.index())
+    }
+}
+
+/// Keyed wrapper so the `BinaryHeap` orders by the deterministic key
+/// alone. `Ord` and `Eq` both look only at the key, and the key
+/// determines the event in every driver schedule (two distinct pending
+/// events never share (time, rank, id)), so the ordering is consistent.
+#[derive(Clone, Copy, Debug)]
+struct Keyed(Event);
+
+impl PartialEq for Keyed {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.key() == other.0.key()
+    }
+}
+
+impl Eq for Keyed {}
+
+impl PartialOrd for Keyed {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Keyed {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.key().cmp(&other.0.key())
+    }
+}
+
+/// Min-heap of pending events with deterministic total-order drain.
+///
+/// Insertion order is irrelevant by construction: `pop` always returns
+/// the minimum (time, rank, id) key, so any permutation of the same
+/// pushes drains identically (pinned by the `event_heap_*` suite).
+#[derive(Debug, Default)]
+pub struct EventHeap {
+    heap: BinaryHeap<Reverse<Keyed>>,
+    popped: usize,
+}
+
+impl EventHeap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Events popped so far (the run's `events_processed` counter).
+    pub fn popped(&self) -> usize {
+        self.popped
+    }
+
+    pub fn push(&mut self, event: Event) {
+        assert!(
+            event.time.is_finite() && event.time >= 0.0,
+            "event time must be non-negative finite, got {} for {:?} \
+             (bit-pattern ordering is only valid on that domain)",
+            event.time,
+            event.kind
+        );
+        self.heap.push(Reverse(Keyed(event)));
+    }
+
+    /// The earliest pending event under the total order.
+    pub fn pop(&mut self) -> Option<Event> {
+        let e = self.heap.pop().map(|Reverse(Keyed(e))| e);
+        if e.is_some() {
+            self.popped += 1;
+        }
+        e
+    }
+
+    /// Peek the next event without removing it.
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek().map(|Reverse(Keyed(e))| e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finish(time: f64, client: usize) -> Event {
+        Event::new(time, EventKind::ClientFinish { client })
+    }
+
+    fn merge(time: f64, m: usize) -> Event {
+        Event::new(time, EventKind::ServerMerge { merge: m })
+    }
+
+    #[test]
+    fn event_heap_pops_in_time_order() {
+        let mut h = EventHeap::new();
+        h.push(finish(3.0, 0));
+        h.push(finish(1.0, 1));
+        h.push(finish(2.0, 2));
+        let order: Vec<f64> = std::iter::from_fn(|| h.pop()).map(|e| e.time).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+        assert_eq!(h.popped(), 3);
+    }
+
+    #[test]
+    fn event_heap_simultaneous_events_drain_in_kind_then_id_order() {
+        // at one instant: every arrival, then the merge, then eval, then
+        // the controller — and arrivals in ascending client id
+        let t = 4.25;
+        let simultaneous = vec![
+            Event::new(t, EventKind::ControllerSwitch { merge: 7 }),
+            finish(t, 9),
+            Event::new(t, EventKind::Eval { merge: 7 }),
+            finish(t, 2),
+            merge(t, 7),
+            finish(t, 5),
+        ];
+        let expect: Vec<EventKind> = vec![
+            EventKind::ClientFinish { client: 2 },
+            EventKind::ClientFinish { client: 5 },
+            EventKind::ClientFinish { client: 9 },
+            EventKind::ServerMerge { merge: 7 },
+            EventKind::Eval { merge: 7 },
+            EventKind::ControllerSwitch { merge: 7 },
+        ];
+        // any insertion order drains the same way: try rotations and the
+        // reversal (deterministic permutations, no ambient randomness)
+        for shift in 0..simultaneous.len() {
+            let mut h = EventHeap::new();
+            for i in 0..simultaneous.len() {
+                h.push(simultaneous[(i + shift) % simultaneous.len()]);
+            }
+            let got: Vec<EventKind> =
+                std::iter::from_fn(|| h.pop()).map(|e| e.kind).collect();
+            assert_eq!(got, expect, "rotation {shift}");
+        }
+        let mut h = EventHeap::new();
+        for e in simultaneous.iter().rev() {
+            h.push(*e);
+        }
+        let got: Vec<EventKind> = std::iter::from_fn(|| h.pop()).map(|e| e.kind).collect();
+        assert_eq!(got, expect, "reversed insertion");
+    }
+
+    #[test]
+    fn event_heap_time_dominates_kind_rank() {
+        // a later arrival never jumps an earlier merge, rank notwithstanding
+        let mut h = EventHeap::new();
+        h.push(finish(2.0, 0));
+        h.push(merge(1.0, 0));
+        assert_eq!(h.pop().unwrap().kind, EventKind::ServerMerge { merge: 0 });
+        assert_eq!(h.pop().unwrap().kind, EventKind::ClientFinish { client: 0 });
+    }
+
+    #[test]
+    fn event_heap_orders_denormal_and_close_times_like_the_floats() {
+        // bit-pattern ordering must agree with float ordering across the
+        // tricky non-negative cases: 0.0, denormals, and 1-ulp neighbors
+        let times = [0.0, f64::MIN_POSITIVE / 2.0, 1.0, 1.0 + f64::EPSILON, 1e300];
+        let mut h = EventHeap::new();
+        for (i, &t) in times.iter().rev().enumerate() {
+            h.push(finish(t, i));
+        }
+        let drained: Vec<f64> = std::iter::from_fn(|| h.pop()).map(|e| e.time).collect();
+        let mut sorted = times.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(drained, sorted);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative finite")]
+    fn event_heap_rejects_nan_times() {
+        EventHeap::new().push(finish(f64::NAN, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative finite")]
+    fn event_heap_rejects_negative_times() {
+        EventHeap::new().push(finish(-1.0, 0));
+    }
+
+    #[test]
+    fn event_heap_peek_does_not_advance() {
+        let mut h = EventHeap::new();
+        h.push(finish(1.0, 3));
+        assert_eq!(h.peek().unwrap().kind, EventKind::ClientFinish { client: 3 });
+        assert_eq!(h.len(), 1);
+        assert_eq!(h.popped(), 0);
+        assert!(h.pop().is_some());
+        assert!(h.is_empty());
+    }
+}

@@ -1,0 +1,388 @@
+//! The discrete-event driver: the round barrier, dropped.
+//!
+//! `--engine events` replaces the per-round loop of [`crate::driver::run`]
+//! with one seeded min-heap of timestamped events ([`EventHeap`],
+//! DESIGN.md §11). Client work units complete ([`EventKind::ClientFinish`])
+//! on per-client virtual clocks (the same [`ClientSpeeds`] model the
+//! round schedulers use), the server folds pending updates in whenever
+//! the configured [`MergePolicyKind`] says so
+//! ([`EventKind::ServerMerge`]), evaluation observes the post-merge state
+//! ([`EventKind::Eval`]), and the adaptive [`BoundController`] switches
+//! arms at window boundaries ([`EventKind::ControllerSwitch`]).
+//!
+//! ## Two families of policy
+//!
+//! * **Degenerate** (`--merge-policy round`, the default): the event
+//!   driver wraps the configured round [`Scheduler`] and replays its plan
+//!   stream as events. Each merge is *armed* in two phases: popping the
+//!   unarmed `ServerMerge{m}` asks the scheduler for the plan (reading
+//!   `current_bound()` first, exactly like the round loop), schedules the
+//!   participants' arrivals at the barrier instant, and re-pushes the
+//!   merge at that instant; popping the armed merge executes the shared
+//!   round body. Because the plan stream, the executed body
+//!   ([`crate::driver::exec_round`]), and the recording cadence are the
+//!   round driver's own, parity is structural — pinned bit-for-bit for
+//!   all seven protocols in `tests/engine_determinism.rs`.
+//! * **Continuous** (`arrival` / `batch:K` / `window:DT`): merges fire on
+//!   arrivals, pending-count, or a sim-time cadence, under the bounded-
+//!   staleness contract of [`ContinuousPolicy`]. This is the regime the
+//!   round loop cannot express: a merge consumes whatever landed, clients
+//!   restart immediately, and the "round" axis becomes the merge index.
+//!
+//! Determinism: the heap's (time-bits, kind-rank, id) total order makes
+//! the pop sequence a pure function of the event set; every decision
+//! (plans, merge sets, controller switches) happens on the driver thread;
+//! client work still fans out through the persistent pool whose fan-in is
+//! thread-count invariant (DESIGN.md §10). Hence replays are bit-stable
+//! across `--threads` and repeat invocations.
+
+pub mod event;
+pub mod policy;
+
+pub use event::{Event, EventHeap, EventKind};
+pub use policy::{EngineKind, MergePolicyKind};
+
+use anyhow::{bail, Result};
+
+use crate::driver::{
+    exec_round, scheduler_for, BoundController, ClientStateStore, Protocol, RoundPlan,
+    RoundReport, SnapshotRing, WindowDelta, WindowMark,
+};
+use crate::driver::scratch_dir;
+use crate::metrics::RoundStat;
+use crate::protocols::{Env, RunResult};
+use policy::{ContinuousPolicy, MergeDecision};
+
+/// Scheduler name reported by the continuous policies (the degenerate
+/// policy passes through the wrapped round scheduler's own name).
+pub const EVENT_SCHEDULER_NAME: &str = "event-driven";
+
+/// Everything the `Eval` event needs to observe a merge that already
+/// executed: its plan, the bound in effect when it was planned, and the
+/// protocol's round report.
+struct MergeOutcome {
+    plan: RoundPlan,
+    bound: usize,
+    report: RoundReport,
+}
+
+/// Run `protocol` end to end on the event driver and return its result.
+/// The run processes exactly `cfg.rounds` server merges; events still in
+/// flight when the final merge's bookkeeping completes are discarded.
+pub fn run_events<P: Protocol>(env: &mut Env, protocol: &mut P) -> Result<RunResult> {
+    protocol.init_state(env)?;
+
+    let (mut scheduler, speeds) = scheduler_for(env.cfg);
+    let continuous = env.cfg.merge_policy != MergePolicyKind::Round;
+    let mut policy = continuous.then(|| ContinuousPolicy::new(env.cfg, &speeds));
+
+    // --adaptive-bound: same controller, same seeding, same window
+    // semantics as the round driver — only the actuator differs (the
+    // wrapped scheduler for the degenerate policy, the continuous
+    // policy's own bound for the rest)
+    let mut controller = if env.cfg.adaptive_bound {
+        let c = BoundController::from_cfg(env.cfg);
+        match policy.as_mut() {
+            Some(p) => p.set_bound(c.current_bound(), 0),
+            None => {
+                scheduler.set_bound(c.current_bound(), 0);
+            }
+        }
+        Some(c)
+    } else {
+        None
+    };
+    let mut window_mark = WindowMark::default();
+
+    let mut store = if env.cfg.participation < 1.0 {
+        ClientStateStore::with_spill(env.cfg.clients, scratch_dir(env.cfg.seed))?
+    } else {
+        ClientStateStore::new(env.cfg.clients)
+    };
+    let pool = env.pool();
+    let mut ring: Option<SnapshotRing> = if env.cfg.delayed_gradients {
+        let window = env.cfg.staleness_bound.unwrap_or(0) + 1;
+        Some(if env.cfg.participation < 1.0 {
+            SnapshotRing::with_spill(window, scratch_dir(env.cfg.seed))?
+        } else {
+            SnapshotRing::new(window)
+        })
+    } else {
+        None
+    };
+    // pre-training baseline for the first window's Δaccuracy — identical
+    // rationale and identical call to the round driver's
+    if controller.is_some() {
+        window_mark.accuracy = protocol.eval(env, &mut store)?;
+    }
+
+    let rounds = env.cfg.rounds;
+    let mut heap = EventHeap::new();
+    // degenerate: the plan cached between the arming pop and the
+    // executing pop of one ServerMerge event
+    let mut armed: Option<(usize, RoundPlan)> = None;
+    // the merge awaiting its Eval event (at most one: Eval fires at the
+    // merge instant, before any later merge can)
+    let mut outcome: Option<MergeOutcome> = None;
+    // continuous bookkeeping: the next merge index, and whether its
+    // ServerMerge event is already on the heap
+    let mut next_merge = 0usize;
+    let mut merge_scheduled = false;
+    // virtual instant of the last recorded merge (the window-end clock
+    // reading the controller's Δsim_time is measured against)
+    let mut last_sim_time = 0.0f64;
+
+    // seed the heap
+    match policy.as_mut() {
+        None => {
+            // degenerate: merge 0, unarmed, at the epoch
+            heap.push(Event::new(0.0, EventKind::ServerMerge { merge: 0 }));
+            merge_scheduled = true;
+        }
+        Some(p) => {
+            // every client starts its first work unit at t = 0
+            for i in 0..p.n_clients() {
+                heap.push(Event::new(p.duration(i), EventKind::ClientFinish { client: i }));
+            }
+            if let MergePolicyKind::Window(dt) = p.mode() {
+                heap.push(Event::new(dt, EventKind::ServerMerge { merge: 0 }));
+                merge_scheduled = true;
+            }
+        }
+    }
+
+    if rounds == 0 {
+        let mut result = RunResult::from_env(env, &env.recorder, &env.meter, scheduler.name());
+        result.events_processed = heap.popped();
+        return Ok(result);
+    }
+
+    loop {
+        let Some(ev) = heap.pop() else {
+            bail!(
+                "event heap drained with merge {next_merge}/{rounds} outstanding — \
+                 a policy failed to schedule its next trigger"
+            );
+        };
+        match ev.kind {
+            EventKind::ClientFinish { client } => match policy.as_mut() {
+                // degenerate arrivals are decorative: the armed merge at
+                // the same instant consumes them wholesale
+                None => {}
+                Some(p) => {
+                    let trigger = p.on_finish(client, ev.time);
+                    if trigger && !merge_scheduled && next_merge < rounds {
+                        heap.push(Event::new(ev.time, EventKind::ServerMerge { merge: next_merge }));
+                        merge_scheduled = true;
+                    }
+                }
+            },
+            EventKind::ServerMerge { merge } => {
+                debug_assert_eq!(merge, next_merge, "merges fire in index order");
+                match policy.as_mut() {
+                    None => match armed.take() {
+                        // phase 1 — arm: ask the wrapped scheduler for the
+                        // plan (bound first, exactly like the round loop),
+                        // schedule the barrier's arrivals, re-push the
+                        // merge at the barrier instant
+                        None => {
+                            let bound = scheduler.current_bound();
+                            let plan = scheduler.plan(merge);
+                            for &i in &plan.participants {
+                                heap.push(Event::new(
+                                    plan.sim_time,
+                                    EventKind::ClientFinish { client: i },
+                                ));
+                            }
+                            heap.push(Event::new(plan.sim_time, EventKind::ServerMerge { merge }));
+                            armed = Some((bound, plan));
+                        }
+                        // phase 2 — execute the shared round body
+                        Some((bound, plan)) => {
+                            let report = exec_round(
+                                env,
+                                protocol,
+                                &mut store,
+                                &mut ring,
+                                &speeds,
+                                &pool,
+                                merge,
+                                &plan.participants,
+                                &plan.staleness,
+                            )?;
+                            heap.push(Event::new(plan.sim_time, EventKind::Eval { merge }));
+                            outcome = Some(MergeOutcome { plan, bound, report });
+                            next_merge = merge + 1;
+                            merge_scheduled = false;
+                        }
+                    },
+                    Some(p) => match p.decide(merge, ev.time) {
+                        MergeDecision::Wait(t) => {
+                            if t <= ev.time {
+                                bail!(
+                                    "merge policy wait time {t} does not advance past {} — \
+                                     the event loop would livelock",
+                                    ev.time
+                                );
+                            }
+                            heap.push(Event::new(t, EventKind::ServerMerge { merge }));
+                        }
+                        MergeDecision::Fire(plan) => {
+                            let bound = p.current_bound();
+                            let report = exec_round(
+                                env,
+                                protocol,
+                                &mut store,
+                                &mut ring,
+                                &speeds,
+                                &pool,
+                                merge,
+                                &plan.participants,
+                                &plan.staleness,
+                            )?;
+                            for (i, t) in p.commit(merge, &plan) {
+                                heap.push(Event::new(t, EventKind::ClientFinish { client: i }));
+                            }
+                            heap.push(Event::new(plan.sim_time, EventKind::Eval { merge }));
+                            outcome = Some(MergeOutcome { plan, bound, report });
+                            next_merge = merge + 1;
+                            merge_scheduled = false;
+                        }
+                    },
+                }
+            }
+            EventKind::Eval { merge } => {
+                let MergeOutcome { plan, bound, report } = outcome
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("eval event {merge} without a merge outcome"))?;
+                let window_end = controller
+                    .as_ref()
+                    .is_some_and(|c| (merge + 1) % c.window() == 0);
+                let eval_now =
+                    merge % env.cfg.eval_every == 0 || merge + 1 == rounds || window_end;
+                let accuracy = if eval_now {
+                    protocol.eval(env, &mut store)?
+                } else {
+                    env.recorder.last_accuracy()
+                };
+                last_sim_time = plan.sim_time;
+                env.recorder.push(RoundStat {
+                    round: merge,
+                    phase: report.phase,
+                    train_loss: report.train_loss,
+                    accuracy_pct: accuracy,
+                    bandwidth_gb: env.meter.bandwidth_gb(),
+                    client_tflops: env.meter.client_tflops(),
+                    total_tflops: env.meter.total_tflops(),
+                    mask_density: report.mask_density,
+                    sim_time: plan.sim_time,
+                    max_staleness: plan.staleness.iter().copied().max().unwrap_or(0),
+                    bound,
+                    selected: report.selected,
+                    participants: plan.participants,
+                    events: heap.popped(),
+                });
+                if window_end {
+                    // the switch is its own event at the same instant —
+                    // it handles both the controller step and scheduling
+                    // the next merge, so bound switches land before the
+                    // next plan exactly as in the round loop
+                    heap.push(Event::new(ev.time, EventKind::ControllerSwitch { merge }));
+                } else if merge + 1 == rounds {
+                    break;
+                } else {
+                    schedule_next_merge(
+                        &mut heap,
+                        policy.as_ref(),
+                        next_merge,
+                        ev.time,
+                        &mut merge_scheduled,
+                    );
+                }
+            }
+            EventKind::ControllerSwitch { merge } => {
+                let ctrl = controller
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("controller event without a controller"))?;
+                let accuracy = env.recorder.last_accuracy();
+                // the window ends at the merge instant just recorded
+                let sim_now = last_sim_time;
+                let delta = WindowDelta {
+                    d_accuracy_pct: accuracy - window_mark.accuracy,
+                    d_sim_time: sim_now - window_mark.sim_time,
+                    d_bandwidth_gb: env.meter.bandwidth_gb() - window_mark.bandwidth_gb,
+                    d_client_tflops: env.meter.client_tflops() - window_mark.client_tflops,
+                };
+                window_mark = WindowMark {
+                    accuracy,
+                    sim_time: sim_now,
+                    bandwidth_gb: env.meter.bandwidth_gb(),
+                    client_tflops: env.meter.client_tflops(),
+                };
+                if merge + 1 < rounds {
+                    let (next, reward) = ctrl.observe_window(&delta);
+                    match policy.as_mut() {
+                        Some(p) => p.set_bound(next, merge + 1),
+                        None => {
+                            scheduler.set_bound(next, merge + 1);
+                        }
+                    }
+                    if env.recorder.trace_enabled {
+                        env.recorder.trace(format!(
+                            "adaptive: window ending round {merge} reward {reward:.4} -> bound {next}"
+                        ));
+                    }
+                }
+                if merge + 1 == rounds {
+                    break;
+                }
+                schedule_next_merge(
+                    &mut heap,
+                    policy.as_ref(),
+                    next_merge,
+                    ev.time,
+                    &mut merge_scheduled,
+                );
+            }
+        }
+    }
+
+    let name = if continuous { EVENT_SCHEDULER_NAME } else { scheduler.name() };
+    let mut result = RunResult::from_env(env, &env.recorder, &env.meter, name);
+    result.events_processed = heap.popped();
+    Ok(result)
+}
+
+/// After merge `m - 1`'s bookkeeping, put merge `m`'s trigger on the
+/// heap: unconditionally for the degenerate policy (the scheduler always
+/// has a next plan), at `now + DT` for the time-window cadence (DT is
+/// the *minimum* inter-merge gap — a merge deferred by a required
+/// in-flight client pushes the whole cadence back), and only if the
+/// pending set already satisfies the trigger for arrival/batch (a later
+/// `ClientFinish` schedules it otherwise).
+fn schedule_next_merge(
+    heap: &mut EventHeap,
+    policy: Option<&ContinuousPolicy>,
+    next_merge: usize,
+    now: f64,
+    merge_scheduled: &mut bool,
+) {
+    match policy {
+        None => {
+            heap.push(Event::new(now, EventKind::ServerMerge { merge: next_merge }));
+            *merge_scheduled = true;
+        }
+        Some(p) => match p.mode() {
+            MergePolicyKind::Window(dt) => {
+                heap.push(Event::new(now + dt, EventKind::ServerMerge { merge: next_merge }));
+                *merge_scheduled = true;
+            }
+            _ => {
+                if p.wants_merge() {
+                    heap.push(Event::new(now, EventKind::ServerMerge { merge: next_merge }));
+                    *merge_scheduled = true;
+                }
+            }
+        },
+    }
+}

@@ -16,6 +16,7 @@ use adasplit::engine::{par_indexed, par_slice_mut, tree_reduce, ClientPool};
 use adasplit::metrics::{AccuracyAccum, Budgets, CostMeter};
 use adasplit::protocols::{run_protocol, RunResult};
 use adasplit::runtime::{Runtime, Tensor, TensorStore};
+use adasplit::sim::{EngineKind, Event, EventHeap, EventKind, MergePolicyKind};
 
 fn assert_results_identical(a: &RunResult, b: &RunResult, what: &str) {
     assert_eq!(a.accuracy, b.accuracy, "{what} accuracy");
@@ -912,6 +913,217 @@ fn adaptive_runs_are_repeat_invocation_deterministic() {
     // every recorded bound is one of the clipped default arms {0,1,2}
     for b in bounds(&rec_a) {
         assert!(b <= 2, "recorded bound {b} above the configured ceiling");
+    }
+}
+
+// ---- event engine: heap total order (no artifacts required) ---------------
+
+#[test]
+fn event_heap_total_order_is_insertion_order_invariant() {
+    // the determinism keystone (DESIGN.md §11): simultaneous events drain
+    // in (kind-rank, id) order no matter how they were pushed — arrivals
+    // (ascending client id), then the merge, then eval, then the switch —
+    // and earlier times always win over rank
+    let t = 2.5;
+    let batch = [
+        Event::new(t, EventKind::Eval { merge: 3 }),
+        Event::new(t, EventKind::ClientFinish { client: 7 }),
+        Event::new(t, EventKind::ControllerSwitch { merge: 3 }),
+        Event::new(t, EventKind::ClientFinish { client: 1 }),
+        Event::new(t, EventKind::ServerMerge { merge: 3 }),
+        Event::new(t, EventKind::ClientFinish { client: 4 }),
+        Event::new(t + 1.0, EventKind::ClientFinish { client: 0 }),
+        Event::new(t - 1.0, EventKind::ControllerSwitch { merge: 2 }),
+    ];
+    let expect = vec![
+        EventKind::ControllerSwitch { merge: 2 },
+        EventKind::ClientFinish { client: 1 },
+        EventKind::ClientFinish { client: 4 },
+        EventKind::ClientFinish { client: 7 },
+        EventKind::ServerMerge { merge: 3 },
+        EventKind::Eval { merge: 3 },
+        EventKind::ControllerSwitch { merge: 3 },
+        EventKind::ClientFinish { client: 0 },
+    ];
+    // deterministic permutations: every rotation, the reversal, and a
+    // stride-3 interleave of the same event set
+    let n = batch.len();
+    let mut insertion_orders: Vec<Vec<Event>> = (0..n)
+        .map(|shift| (0..n).map(|i| batch[(i + shift) % n]).collect())
+        .collect();
+    insertion_orders.push(batch.iter().rev().copied().collect());
+    insertion_orders.push((0..n).map(|i| batch[(i * 3) % n]).collect());
+    for (which, order) in insertion_orders.iter().enumerate() {
+        let mut h = EventHeap::new();
+        for &e in order {
+            h.push(e);
+        }
+        let drained: Vec<EventKind> = std::iter::from_fn(|| h.pop()).map(|e| e.kind).collect();
+        assert_eq!(drained, expect, "insertion order {which}");
+        assert_eq!(h.popped(), n, "insertion order {which}: popped counter");
+    }
+}
+
+// ---- event engine: degenerate-policy parity (requires `make artifacts`) ---
+
+fn assert_trajectories_identical(
+    a: &adasplit::metrics::Recorder,
+    b: &adasplit::metrics::Recorder,
+    what: &str,
+) {
+    // every recorded column must agree except `events`, which counts heap
+    // traffic and is definitionally 0 under the rounds engine
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what} row count");
+    for (i, (x, y)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        assert_eq!(x.round, y.round, "{what} row {i} round");
+        assert_eq!(x.phase, y.phase, "{what} row {i} phase");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{what} row {i} loss");
+        assert_eq!(x.accuracy_pct, y.accuracy_pct, "{what} row {i} accuracy");
+        assert_eq!(x.bandwidth_gb, y.bandwidth_gb, "{what} row {i} bandwidth");
+        assert_eq!(x.client_tflops, y.client_tflops, "{what} row {i} client_tflops");
+        assert_eq!(x.total_tflops, y.total_tflops, "{what} row {i} total_tflops");
+        assert_eq!(x.mask_density, y.mask_density, "{what} row {i} mask_density");
+        assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits(), "{what} row {i} sim_time");
+        assert_eq!(x.max_staleness, y.max_staleness, "{what} row {i} max_staleness");
+        assert_eq!(x.bound, y.bound, "{what} row {i} bound");
+        assert_eq!(x.selected, y.selected, "{what} row {i} selected");
+        assert_eq!(x.participants, y.participants, "{what} row {i} participants");
+    }
+}
+
+#[test]
+fn event_degenerate_policy_is_bit_identical_to_round_driver_for_every_protocol() {
+    // the acceptance criterion: `--engine events --merge-policy round`
+    // replays the configured scheduler as events and must reproduce the
+    // barrier loop bit-for-bit — result metrics AND the full per-round
+    // trajectory — for all seven protocols under each scheduler shape
+    // (synchronous, sampled, async-bounded)
+    let Some(rt) = runtime() else { return };
+    let shapes: [(&str, fn(&mut ExperimentConfig)); 3] = [
+        ("sync", |_| {}),
+        ("sampled", |c| {
+            c.clients = 8;
+            c.participation = 0.5;
+        }),
+        ("async", |c| {
+            c.clients = 8;
+            c.staleness_bound = Some(2);
+            c.client_speeds = SpeedPreset::Stragglers;
+            c.straggler_frac = 0.25;
+        }),
+    ];
+    for p in ProtocolKind::ALL {
+        for (shape, tweak) in shapes {
+            let mut rounds_cfg = quick(p, 2);
+            tweak(&mut rounds_cfg);
+            let mut events_cfg = rounds_cfg.clone();
+            events_cfg.engine = EngineKind::Events;
+            let what = format!("{} [{shape}]", p.name());
+            let (a, rec_a) =
+                adasplit::protocols::run_protocol_recorded(&rt, &rounds_cfg).unwrap();
+            let (b, rec_b) =
+                adasplit::protocols::run_protocol_recorded(&rt, &events_cfg).unwrap();
+            assert_results_identical(&a, &b, &what);
+            assert_trajectories_identical(&rec_a, &rec_b, &what);
+            assert_eq!(a.scheduler, b.scheduler, "{what}: degenerate keeps the scheduler");
+            assert_eq!(a.engine, "rounds", "{what}");
+            assert_eq!(b.engine, "events", "{what}");
+            assert_eq!(a.events_processed, 0, "{what}: barrier loop pops no events");
+            assert!(b.events_processed > 0, "{what}: event loop must count its pops");
+        }
+    }
+}
+
+// ---- event engine: continuous policies (requires `make artifacts`) --------
+
+fn event_quick(
+    protocol: ProtocolKind,
+    threads: usize,
+    policy: MergePolicyKind,
+) -> ExperimentConfig {
+    let mut cfg = quick(protocol, threads);
+    cfg.clients = 8;
+    cfg.staleness_bound = Some(2);
+    cfg.client_speeds = SpeedPreset::Stragglers;
+    cfg.straggler_frac = 0.25;
+    cfg.engine = EngineKind::Events;
+    cfg.merge_policy = policy;
+    cfg
+}
+
+#[test]
+fn event_driver_is_thread_count_invariant_for_every_protocol() {
+    // scheduling decisions (heap drain, policy triggers) run on the
+    // driver thread; client work fans out through the same pool + ordered
+    // fan-in as the round loop — so the continuous engine must be
+    // bit-identical across worker counts for all seven protocols
+    let Some(rt) = runtime() else { return };
+    for p in ProtocolKind::ALL {
+        let serial = run_protocol(&rt, &event_quick(p, 1, MergePolicyKind::Arrival)).unwrap();
+        let par = run_protocol(&rt, &event_quick(p, 4, MergePolicyKind::Arrival)).unwrap();
+        assert_results_identical(&serial, &par, p.name());
+        assert_eq!(
+            serial.events_processed, par.events_processed,
+            "{} event count",
+            p.name()
+        );
+    }
+}
+
+#[test]
+fn event_driver_replay_is_bit_stable_and_seed_sensitive() {
+    // seeded replay: the same config drains the same event stream — full
+    // trajectory and event count included — while a different seed draws
+    // different speeds and must diverge
+    let Some(rt) = runtime() else { return };
+    let cfg = event_quick(ProtocolKind::FedAvg, 2, MergePolicyKind::Batch(2));
+    let (a, rec_a) = adasplit::protocols::run_protocol_recorded(&rt, &cfg).unwrap();
+    let (b, rec_b) = adasplit::protocols::run_protocol_recorded(&rt, &cfg).unwrap();
+    assert_results_identical(&a, &b, "replay");
+    assert_trajectories_identical(&rec_a, &rec_b, "replay");
+    assert_eq!(a.events_processed, b.events_processed, "replayed event count");
+    assert_eq!(a.scheduler, "event-driven");
+    assert_eq!(a.merge_policy, "batch:2");
+    let mut other_seed = cfg.clone();
+    other_seed.seed = 9;
+    let c = run_protocol(&rt, &other_seed).unwrap();
+    assert!(
+        a.sim_time != c.sim_time || a.accuracy != c.accuracy,
+        "different seed should draw different speeds/schedules"
+    );
+}
+
+#[test]
+fn event_merge_policies_run_end_to_end_with_the_adaptive_controller() {
+    // the acceptance criterion: a non-degenerate merge policy (batch and
+    // arrival) runs every merge through the adaptive bound controller —
+    // staleness stays under the *current* bound, the virtual clock is
+    // monotone, and the bound column traces real controller arms
+    let Some(rt) = runtime() else { return };
+    for policy in [MergePolicyKind::Batch(2), MergePolicyKind::Arrival] {
+        let mut cfg = event_quick(ProtocolKind::FedAvg, 2, policy);
+        cfg.adaptive_bound = true;
+        cfg.adapt_window = 1;
+        let (r, rec) = adasplit::protocols::run_protocol_recorded(&rt, &cfg).unwrap();
+        let what = cfg.merge_policy.id();
+        assert!(r.adaptive, "{what}: adaptive mode recorded");
+        assert!(r.events_processed > 0, "{what}: events counted");
+        assert_eq!(r.engine, "events", "{what}");
+        let mut prev = 0.0f64;
+        for (i, row) in rec.rounds.iter().enumerate() {
+            assert!(!row.participants.is_empty(), "{what} row {i}: empty merge set");
+            assert!(
+                row.max_staleness <= row.bound.max(2),
+                "{what} row {i}: staleness {} above bound {}",
+                row.max_staleness,
+                row.bound
+            );
+            assert!(row.sim_time >= prev, "{what} row {i}: clock regressed");
+            prev = row.sim_time;
+            assert!(row.bound <= 2, "{what} row {i}: arm above the configured ceiling");
+            assert!(row.events > 0, "{what} row {i}: event column populated");
+        }
+        assert_eq!(r.final_bound, rec.rounds.last().unwrap().bound, "{what}");
     }
 }
 
