@@ -14,7 +14,9 @@
 //! zero per-run spawns), the sharded client-state axis
 //! (`shard_store_ops_per_s`: 500-of-100000 residency bookkeeping), and
 //! the event-engine dispatch axis (`event_heap_events_per_s`: heap
-//! push+pop floor of the discrete-event driver): all
+//! push+pop floor of the discrete-event driver), and the open-world
+//! scenario axis (`scenario_events_per_s`: seeded churn + rate-episode
+//! synthesis and drain, DESIGN.md §12): all
 //! pure Rust, so they measure and check even on artifact-less runners).
 //! Default mode rewrites the file; `--check` compares against it
 //! instead — trajectories must match exactly (they are deterministic),
@@ -34,7 +36,7 @@ use adasplit::engine::ClientPool;
 use adasplit::orchestrator::UcbOrchestrator;
 use adasplit::protocols::{run_protocol_recorded, Env};
 use adasplit::runtime::{Runtime, Tensor, TensorStore};
-use adasplit::sim::{Event, EventHeap, EventKind};
+use adasplit::sim::{ChurnSpec, Event, EventHeap, EventKind, RateScheduleSpec, Scenario};
 use adasplit::util::bench::{bench, quick_mode, BenchStats};
 use adasplit::util::Json;
 
@@ -178,6 +180,40 @@ fn event_heap_bench(iters: usize) -> BenchStats {
 /// Per-iteration event count of [`event_heap_bench`].
 const EVENT_HEAP_EVENTS_PER_ITER: f64 = 4096.0;
 
+/// Scenario-stream throughput (events/s): synthesize and drain 1024
+/// open-world events — seeded Poisson churn plus diurnal + flaky rate
+/// episodes over a 64-client fleet, each pop pushing its successor —
+/// the per-event cost of the scenario layer on the driver thread.
+/// Deterministic (derived rng streams, fixed seed) and pure Rust, so it
+/// measures and checks even on artifact-less runners.
+fn scenario_events_bench(iters: usize) -> BenchStats {
+    let churn: ChurnSpec = "join:0.6,leave:0.6".parse().unwrap();
+    let rates: RateScheduleSpec = "diurnal:8:0.4+flaky:0.5:4:1.0".parse().unwrap();
+    bench("coord: scenario synth+drain x1024 (64 clients)", 1, iters, || {
+        let mut sc = Scenario::synth(64, Some(churn), rates, 11);
+        let mut heap = EventHeap::new();
+        sc.prime(&mut heap);
+        for _ in 0..SCENARIO_EVENTS_PER_ITER as usize {
+            let ev = heap.pop().expect("self-perpetuating processes never drain dry");
+            match ev.kind {
+                EventKind::ClientJoin { client } => {
+                    std::hint::black_box(sc.on_join(client, ev.time, &mut heap));
+                }
+                EventKind::ClientLeave { client } => {
+                    std::hint::black_box(sc.on_leave(client, ev.time, &mut heap));
+                }
+                EventKind::RateChange { client } => {
+                    std::hint::black_box(sc.on_rate(client, ev.time, &mut heap));
+                }
+                _ => unreachable!("the scenario layer only schedules scenario kinds"),
+            }
+        }
+    })
+}
+
+/// Per-iteration event count of [`scenario_events_bench`].
+const SCENARIO_EVENTS_PER_ITER: f64 = 1024.0;
+
 fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
     let md = tracked
         .opt("async_sim_time")
@@ -213,6 +249,11 @@ fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
         tracked.opt("event_heap_events_per_s").is_some(),
         "tracked {TRACK_FILE} is missing `event_heap_events_per_s` \
          (event-engine dispatch axis); re-record with the bench"
+    );
+    anyhow::ensure!(
+        tracked.opt("scenario_events_per_s").is_some(),
+        "tracked {TRACK_FILE} is missing `scenario_events_per_s` \
+         (open-world scenario axis); re-record with the bench"
     );
     let old: Vec<f64> = md
         .as_arr()?
@@ -250,6 +291,7 @@ fn results_json(
     pool_jobs: &BenchStats,
     shard_store: &BenchStats,
     event_heap: &BenchStats,
+    scenario: &BenchStats,
     n_par: usize,
     quick: bool,
 ) -> Json {
@@ -294,6 +336,10 @@ fn results_json(
     m.insert(
         "event_heap_events_per_s".into(),
         Json::Num(EVENT_HEAP_EVENTS_PER_ITER / event_heap.mean_s),
+    );
+    m.insert(
+        "scenario_events_per_s".into(),
+        Json::Num(SCENARIO_EVENTS_PER_ITER / scenario.mean_s),
     );
     Json::Obj(m)
 }
@@ -410,6 +456,8 @@ fn main() -> anyhow::Result<()> {
     stats.push(shard_store.clone());
     let event_heap = event_heap_bench(iters);
     stats.push(event_heap.clone());
+    let scenario = scenario_events_bench(iters);
+    stats.push(scenario.clone());
     stats.push(bench("coord: UCB select+update x1000", 1, iters, || {
         let mut ucb = UcbOrchestrator::new(5, 0.87);
         for t in 0..1000u64 {
@@ -575,6 +623,7 @@ fn main() -> anyhow::Result<()> {
             &pool_jobs,
             &shard_store,
             &event_heap,
+            &scenario,
             n_par,
             quick_mode(),
         );

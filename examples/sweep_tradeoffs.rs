@@ -19,6 +19,11 @@
 //! (merge-on-arrival, batch-of-k, time-window) with the same adaptive
 //! bound controller, tracing where barrier-free merging lands on the
 //! accuracy/sim-time frontier (`results/fig1_event_merge_policies.csv`).
+//! The scenario sweep then opens the world (DESIGN.md §12): seeded churn
+//! at increasing intensity plus a diurnal+flaky rate schedule on the
+//! merge-on-arrival engine, tracing how much accuracy an open fleet
+//! gives up at a given virtual wall-clock
+//! (`results/fig1_scenario_churn.csv`).
 //!
 //! ```bash
 //! cargo run --release --example sweep_tradeoffs -- --rounds 10 --samples 256
@@ -184,6 +189,47 @@ fn main() -> anyhow::Result<()> {
         e_curve.push(r.sim_time, r.best_accuracy);
     }
 
+    // scenario sweep (DESIGN.md §12): open the world on the arrival-merge
+    // event engine — seeded Poisson churn at increasing intensity, then a
+    // combined diurnal + flaky-link rate schedule on top of the strongest
+    // churn point. Adaptive control stays off so every point shares one
+    // fixed bound and the accuracy deltas are attributable to the
+    // scenario alone.
+    let scenario_base = async_base
+        .clone()
+        .with_staleness_bound(Some(bound_ceiling))
+        .with_engine(EngineKind::Events)
+        .with_merge_policy(MergePolicyKind::Arrival);
+    let mut sc_curve = Series::new("AdaSplit events (scenario sweep)", "sim_time");
+    println!("\nscenario sweep (arrival merges, fixed bound, open world):");
+    println!(
+        "{:<26} {:>8} {:>10} {:>7} {:>6}",
+        "scenario", "acc%", "simT", "churn", "rate"
+    );
+    let churn_grid = ["join:0.05,leave:0.05", "join:0.15,leave:0.15", "join:0.3,leave:0.3"];
+    for (label, churn, rates) in [
+        ("closed world", None, None),
+        ("churn 0.05", Some(churn_grid[0]), None),
+        ("churn 0.15", Some(churn_grid[1]), None),
+        ("churn 0.30", Some(churn_grid[2]), None),
+        (
+            "churn 0.30 + rates",
+            Some(churn_grid[2]),
+            Some("diurnal:8:0.4+flaky:0.1:4:1.5"),
+        ),
+    ] {
+        let cfg = scenario_base
+            .clone()
+            .with_churn(churn.map(|s| s.parse()).transpose()?)
+            .with_rate_schedule(rates.map(|s| s.parse()).transpose()?);
+        let r = run_protocol(&rt, &cfg)?;
+        println!(
+            "{label:<26} {:>8.2} {:>10.2} {:>7} {:>6}",
+            r.best_accuracy, r.sim_time, r.churn_events, r.rate_events
+        );
+        sc_curve.push(r.sim_time, r.best_accuracy);
+    }
+
     // cadence-only vs true delayed gradients (--delayed-gradients):
     // per-client model versioning hands a client merging s rounds stale
     // the global snapshot it actually pulled s rounds ago. FedAvg is the
@@ -234,6 +280,8 @@ fn main() -> anyhow::Result<()> {
     print!("{}", ascii_chart(&[s_curve.clone(), a_curve.clone()], 60, 14));
     println!("\n=== accuracy vs simulated wall-clock (event-engine merge policies) ===");
     print!("{}", ascii_chart(&[a_curve.clone(), e_curve.clone()], 60, 14));
+    println!("\n=== accuracy vs simulated wall-clock (open-world scenarios) ===");
+    print!("{}", ascii_chart(&[sc_curve.clone()], 60, 14));
     println!("\n=== FedAvg staleness: cadence-only vs true delayed gradients ===");
     print!("{}", ascii_chart(&[fd_cadence.clone(), fd_delay.clone()], 60, 14));
 
@@ -244,6 +292,7 @@ fn main() -> anyhow::Result<()> {
     std::fs::write("results/fig1_staleness_curve.csv", s_curve.to_csv())?;
     std::fs::write("results/fig1_adaptive_bound.csv", a_curve.to_csv())?;
     std::fs::write("results/fig1_event_merge_policies.csv", e_curve.to_csv())?;
+    std::fs::write("results/fig1_scenario_churn.csv", sc_curve.to_csv())?;
     std::fs::write("results/fig1_staleness_cadence_fl.csv", fd_cadence.to_csv())?;
     std::fs::write("results/fig1_staleness_true_delay_fl.csv", fd_delay.to_csv())?;
     std::fs::write("results/fig1_baseline_bw.csv", base_bw.to_csv())?;

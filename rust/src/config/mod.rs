@@ -12,7 +12,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::data::DatasetKind;
 use crate::driver::SpeedPreset;
 use crate::metrics::Budgets;
-use crate::sim::{EngineKind, MergePolicyKind};
+use crate::sim::{ChurnSpec, EngineKind, MergePolicyKind, RateScheduleSpec};
 use crate::util::kvconf::KvConf;
 
 /// Which training protocol to run.
@@ -206,6 +206,21 @@ pub struct ExperimentConfig {
     /// (the snapshot window is the bound). `false` (the default) keeps
     /// PR 3's cadence-only staleness; `s = 0` is bit-identical either way.
     pub delayed_gradients: bool,
+    /// seeded fleet churn (`--churn join:λ,leave:μ`): Poisson client
+    /// arrival/departure processes on the event core (DESIGN.md §12).
+    /// Requires a continuous merge policy.
+    pub churn: Option<ChurnSpec>,
+    /// time-varying client rates (`--rate-schedule
+    /// diurnal:P:A+flaky:R:S:L`): a diurnal speed curve and/or seeded
+    /// flaky-link episodes. Requires a continuous merge policy.
+    pub rate_schedule: Option<RateScheduleSpec>,
+    /// record the run's effective scenario event stream to this JSONL
+    /// path (`--trace-out`). Requires a continuous merge policy.
+    pub trace_out: Option<String>,
+    /// replay a recorded scenario stream verbatim from this JSONL path
+    /// (`--trace-in`). Excludes `churn`/`rate_schedule` — the trace *is*
+    /// the scenario. Requires a continuous merge policy.
+    pub trace_in: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -245,6 +260,10 @@ impl Default for ExperimentConfig {
             engine: EngineKind::Rounds,
             merge_policy: MergePolicyKind::Round,
             delayed_gradients: false,
+            churn: None,
+            rate_schedule: None,
+            trace_out: None,
+            trace_in: None,
         }
     }
 }
@@ -281,6 +300,7 @@ impl ExperimentConfig {
             "artifacts_dir", "threads", "participation", "staleness_bound",
             "client_speeds", "straggler_frac", "stale_decay", "delayed_gradients",
             "adaptive_bound", "adapt_window", "adapt_arms", "engine", "merge_policy",
+            "churn", "rate_schedule", "trace_out", "trace_in",
             "budgets.bandwidth_gb", "budgets.client_tflops", "budgets.temp",
         ];
         for k in kv.keys() {
@@ -337,6 +357,13 @@ impl ExperimentConfig {
                 .get_str("merge_policy", &MergePolicyKind::Round.id())
                 .parse()?,
             delayed_gradients: kv.get_bool("delayed_gradients", false)?,
+            churn: kv.raw("churn").map(|v| v.parse::<ChurnSpec>()).transpose()?,
+            rate_schedule: kv
+                .raw("rate_schedule")
+                .map(|v| v.parse::<RateScheduleSpec>())
+                .transpose()?,
+            trace_out: kv.raw("trace_out").map(str::to_string),
+            trace_in: kv.raw("trace_in").map(str::to_string),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -432,6 +459,33 @@ impl ExperimentConfig {
                 self.clients
             );
         }
+        let continuous = self.merge_policy != MergePolicyKind::Round;
+        ensure!(
+            self.churn.is_none() || continuous,
+            "churn requires a continuous merge policy (the degenerate `round` \
+             policy replays a closed-world scheduler; pass e.g. \
+             --merge-policy arrival)"
+        );
+        ensure!(
+            self.rate_schedule.is_none() || continuous,
+            "rate_schedule requires a continuous merge policy (re-timing a \
+             pending finish only exists on the event core's continuous path)"
+        );
+        ensure!(
+            self.trace_out.is_none() || continuous,
+            "trace_out requires a continuous merge policy (the scenario \
+             stream is recorded by the event core's continuous path)"
+        );
+        ensure!(
+            self.trace_in.is_none() || continuous,
+            "trace_in requires a continuous merge policy (the replayed \
+             stream drives the event core's continuous path)"
+        );
+        ensure!(
+            self.trace_in.is_none() || (self.churn.is_none() && self.rate_schedule.is_none()),
+            "trace_in replays a recorded scenario stream verbatim and \
+             excludes churn/rate_schedule (the trace is the scenario)"
+        );
         ensure!(
             (0.05..=0.95).contains(&self.mu),
             "mu must map to a lowered split (0.2/0.4/0.6/0.8)"
@@ -553,6 +607,33 @@ impl ExperimentConfig {
     /// against the snapshot they actually pulled (DESIGN.md §8).
     pub fn with_delayed_gradients(mut self, delayed: bool) -> Self {
         self.delayed_gradients = delayed;
+        self
+    }
+
+    /// Seeded fleet churn on the event core (`None` restores the fixed
+    /// fleet). Requires a continuous merge policy.
+    pub fn with_churn(mut self, churn: Option<ChurnSpec>) -> Self {
+        self.churn = churn;
+        self
+    }
+
+    /// Time-varying client rates (`None` restores static rates).
+    /// Requires a continuous merge policy.
+    pub fn with_rate_schedule(mut self, schedule: Option<RateScheduleSpec>) -> Self {
+        self.rate_schedule = schedule;
+        self
+    }
+
+    /// Record the effective scenario stream to this JSONL path.
+    pub fn with_trace_out(mut self, path: Option<String>) -> Self {
+        self.trace_out = path;
+        self
+    }
+
+    /// Replay a recorded scenario stream from this JSONL path (excludes
+    /// churn/rate_schedule).
+    pub fn with_trace_in(mut self, path: Option<String>) -> Self {
+        self.trace_in = path;
         self
     }
 
@@ -810,6 +891,32 @@ mod tests {
                     .with_merge_policy(MergePolicyKind::Batch(99)),
                 "batch size must not exceed clients",
             ),
+            (
+                ExperimentConfig::default()
+                    .with_churn(Some(ChurnSpec { join: 0.5, leave: 0.3 })),
+                "churn requires a continuous merge policy",
+            ),
+            (
+                ExperimentConfig::default()
+                    .with_rate_schedule(Some(RateScheduleSpec::default())),
+                "rate_schedule requires a continuous merge policy",
+            ),
+            (
+                ExperimentConfig::default().with_trace_out(Some("t.jsonl".into())),
+                "trace_out requires a continuous merge policy",
+            ),
+            (
+                ExperimentConfig::default().with_trace_in(Some("t.jsonl".into())),
+                "trace_in requires a continuous merge policy",
+            ),
+            (
+                ExperimentConfig::default()
+                    .with_engine(EngineKind::Events)
+                    .with_merge_policy(MergePolicyKind::Arrival)
+                    .with_trace_in(Some("t.jsonl".into()))
+                    .with_churn(Some(ChurnSpec { join: 0.5, leave: 0.3 })),
+                "excludes churn/rate_schedule",
+            ),
         ];
         for (cfg, fragment) in &matrix {
             let err = cfg.validate().expect_err(fragment).to_string();
@@ -821,9 +928,15 @@ mod tests {
         // distinctness: each failure mode names its own knob
         let fragments: std::collections::BTreeSet<&str> =
             matrix.iter().map(|(_, f)| *f).collect();
-        assert_eq!(fragments.len(), 7, "seven distinct messages across the matrix");
+        assert_eq!(fragments.len(), 12, "twelve distinct messages across the matrix");
 
         // the same combinations are rejected on the text-config path too
+        assert!(ExperimentConfig::from_kv_text("churn = \"join:0.5\"\n").is_err());
+        assert!(ExperimentConfig::from_kv_text(
+            "engine = \"events\"\nmerge_policy = \"arrival\"\n\
+             trace_in = \"t.jsonl\"\nchurn = \"join:0.5\"\n"
+        )
+        .is_err());
         assert!(ExperimentConfig::from_kv_text("adaptive_bound = true\n").is_err());
         assert!(ExperimentConfig::from_kv_text(
             "staleness_bound = 2\nadaptive_bound = true\nadapt_window = 0\n"
@@ -865,6 +978,53 @@ mod tests {
             .with_merge_policy(MergePolicyKind::Window(0.5));
         c.validate().unwrap();
         assert!(c.with_engine(EngineKind::Rounds).validate().is_err());
+    }
+
+    #[test]
+    fn scenario_keys_parse_and_validate() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.churn, None, "default is a closed world");
+        assert_eq!(d.rate_schedule, None);
+        assert_eq!(d.trace_out, None);
+        assert_eq!(d.trace_in, None);
+
+        let c = ExperimentConfig::from_kv_text(
+            "engine = \"events\"\nmerge_policy = \"arrival\"\n\
+             churn = \"join:0.5,leave:0.3\"\n\
+             rate_schedule = \"diurnal:8:0.5+flaky:0.2:10:1.5\"\n\
+             trace_out = \"run.jsonl\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.churn, Some(ChurnSpec { join: 0.5, leave: 0.3 }));
+        let rs = c.rate_schedule.unwrap();
+        assert!(rs.diurnal.is_some() && rs.flaky.is_some());
+        assert_eq!(c.trace_out.as_deref(), Some("run.jsonl"));
+
+        // replay excludes synthesis knobs but stands alone fine
+        let c = ExperimentConfig::from_kv_text(
+            "engine = \"events\"\nmerge_policy = \"batch:2\"\ntrace_in = \"run.jsonl\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.trace_in.as_deref(), Some("run.jsonl"));
+
+        assert!(ExperimentConfig::from_kv_text(
+            "engine = \"events\"\nmerge_policy = \"arrival\"\nchurn = \"join:-1\"\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_kv_text(
+            "engine = \"events\"\nmerge_policy = \"arrival\"\nrate_schedule = \"tide:1\"\n"
+        )
+        .is_err());
+
+        let c = ExperimentConfig::default()
+            .with_engine(EngineKind::Events)
+            .with_merge_policy(MergePolicyKind::Arrival)
+            .with_churn(Some(ChurnSpec { join: 1.0, leave: 0.5 }))
+            .with_rate_schedule(Some("diurnal:4:0.25".parse().unwrap()))
+            .with_trace_out(Some("out.jsonl".into()));
+        c.validate().unwrap();
+        assert!(c.clone().with_merge_policy(MergePolicyKind::Round).validate().is_err());
+        assert!(c.with_trace_in(Some("in.jsonl".into())).validate().is_err());
     }
 
     #[test]

@@ -45,7 +45,7 @@ mod versioning;
 
 pub use adaptive::{BoundController, WindowDelta, DEFAULT_BOUND_ARMS};
 pub use scheduler::{scheduler_for, AsyncBounded, RoundPlan, SampledSync, Scheduler, SyncAll};
-pub use speed::{ClientSpeeds, SpeedPreset, STRAGGLER_SLOWDOWN};
+pub use speed::{diurnal_multiplier, ClientSpeeds, SpeedPreset, STRAGGLER_SLOWDOWN};
 pub use store::{scratch_dir, ClientState, ClientStateStore};
 pub use versioning::{resolve_versions, ModelVersion, SnapshotRing};
 

@@ -33,6 +33,17 @@ pub const STRAGGLER_SLOWDOWN: f64 = 10.0;
 /// Default lognormal sigma when `lognormal` is given without a value.
 pub const DEFAULT_LOGNORMAL_SIGMA: f64 = 0.5;
 
+/// Diurnal fleet-speed multiplier at virtual time `t`:
+/// `1 + amplitude * sin(2πt / period)` — the scenario engine's
+/// time-varying load curve (DESIGN.md §12), layered multiplicatively
+/// over the per-client [`ClientSpeeds`] rates. A work unit samples the
+/// curve once, at its start instant. Pure, stateless, and exactly `1.0`
+/// at `t = 0` (`sin(0)` is exact), so opening a run with a diurnal
+/// schedule never perturbs the initial seeding arithmetic.
+pub fn diurnal_multiplier(t: f64, period: f64, amplitude: f64) -> f64 {
+    1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period).sin()
+}
+
 /// How per-client rates are drawn (`--client-speeds` / `client_speeds`).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub enum SpeedPreset {
@@ -298,6 +309,20 @@ mod tests {
             distinct.insert(compute.to_bits());
         }
         assert!(distinct.len() > 100, "rates should be spread, not collapsed");
+    }
+
+    #[test]
+    fn scenario_diurnal_multiplier_is_exact_at_zero_and_bounded() {
+        assert_eq!(diurnal_multiplier(0.0, 8.0, 0.5).to_bits(), 1.0f64.to_bits());
+        // peak at a quarter period, trough at three quarters
+        assert!((diurnal_multiplier(2.0, 8.0, 0.5) - 1.5).abs() < 1e-12);
+        assert!((diurnal_multiplier(6.0, 8.0, 0.5) - 0.5).abs() < 1e-12);
+        // amplitude < 1 keeps the multiplier strictly positive everywhere
+        for k in 0..64 {
+            let t = k as f64 * 0.37;
+            let m = diurnal_multiplier(t, 5.0, 0.99);
+            assert!(m > 0.0 && m < 2.0, "t={t}: {m}");
+        }
     }
 
     #[test]

@@ -20,7 +20,7 @@ use adasplit::engine::par_indexed;
 use adasplit::protocols::{run_protocol_recorded, run_seeds};
 use adasplit::report::ResultTable;
 use adasplit::runtime::Runtime;
-use adasplit::sim::{EngineKind, MergePolicyKind};
+use adasplit::sim::{ChurnSpec, EngineKind, MergePolicyKind, RateScheduleSpec};
 
 const USAGE: &str = "\
 adasplit — AdaSplit distributed-training coordinator
@@ -89,6 +89,16 @@ RUN OPTIONS:
                          (degenerate — replays the configured scheduler
                          bit-for-bit) | arrival | batch:K | window:DT
                          (needs --engine events)              [round]
+  --churn SPEC           seeded open-world churn on the events engine:
+                         `join:X,leave:Y` Poisson rates per sim-time unit
+                         (either side omittable; needs a continuous
+                         --merge-policy, DESIGN.md §12)
+  --rate-schedule SPEC   time-varying client speeds on the events engine:
+                         `diurnal:PERIOD:AMP` and/or `flaky:RATE:SLOW:LEN`
+                         joined with `+` (needs a continuous merge policy)
+  --trace-out PATH       record the applied scenario stream as JSONL
+  --trace-in PATH        replay a recorded scenario trace bit-identically
+                         (excludes --churn / --rate-schedule)
   --threads N            engine worker threads (0 = host parallelism) [0]
   --curve-out PATH       write the per-round curve CSV
   --trace                print per-iteration orchestrator traces
@@ -106,6 +116,11 @@ COMPARE OPTIONS:
   --adapt-arms LIST      candidate bounds for the controller (see RUN)
   --engine E             rounds | events driver engine (see RUN) [rounds]
   --merge-policy P       events-engine merge policy (see RUN)    [round]
+  --churn SPEC           seeded open-world churn (see RUN)
+  --rate-schedule SPEC   time-varying client speeds (see RUN)
+  --trace-in PATH        replay a recorded scenario trace (see RUN);
+                         no --trace-out here — seven protocols would
+                         race on one output file
   --threads N            worker threads per run; protocols also run
                          concurrently across the pool      [0 = auto]
 ";
@@ -268,6 +283,18 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
     if let Some(v) = args.parsed("merge-policy")? {
         cfg.merge_policy = v;
     }
+    if let Some(v) = args.parsed("churn")? {
+        cfg.churn = Some(v);
+    }
+    if let Some(v) = args.parsed("rate-schedule")? {
+        cfg.rate_schedule = Some(v);
+    }
+    if let Some(v) = args.get("trace-out") {
+        cfg.trace_out = Some(v.to_string());
+    }
+    if let Some(v) = args.get("trace-in") {
+        cfg.trace_in = Some(v.to_string());
+    }
     cfg.adaptive_bound |= args.has("adaptive-bound");
     cfg.delayed_gradients |= args.has("delayed-gradients");
     cfg.server_grad_to_client |= args.has("server-grad");
@@ -345,6 +372,15 @@ fn cmd_run(rt: &Runtime, argv: &[String], artifacts: &str) -> Result<()> {
             result.events_processed, result.merge_policy
         );
     }
+    if result.scenario != "none" {
+        println!(
+            "scenario [{}]: {} churn event(s) (joins+leaves), {} rate change(s) applied",
+            result.scenario, result.churn_events, result.rate_events
+        );
+        if let Some(path) = &cfg.trace_out {
+            println!("scenario trace written to {path}");
+        }
+    }
     if let Some(path) = args.get("curve-out") {
         recorder.write_csv(path)?;
         println!("curve written to {path}");
@@ -375,6 +411,9 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
         .transpose()?;
     let engine: EngineKind = args.parsed("engine")?.unwrap_or_default();
     let merge_policy: MergePolicyKind = args.parsed("merge-policy")?.unwrap_or_default();
+    let churn: Option<ChurnSpec> = args.parsed("churn")?;
+    let rate_schedule: Option<RateScheduleSpec> = args.parsed("rate-schedule")?;
+    let trace_in = args.get("trace-in").map(str::to_string);
     let seed_list: Vec<u64> = (0..n_seeds as u64).collect();
 
     let budget = adasplit::engine::ClientPool::new(threads).threads();
@@ -396,6 +435,9 @@ fn cmd_compare(rt: &Runtime, argv: &[String]) -> Result<()> {
                 .with_adapt_arms(adapt_arms.clone())
                 .with_engine(engine)
                 .with_merge_policy(merge_policy)
+                .with_churn(churn)
+                .with_rate_schedule(rate_schedule)
+                .with_trace_in(trace_in.clone())
                 .with_threads(per_protocol)
         })
         .collect();

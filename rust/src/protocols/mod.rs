@@ -94,6 +94,14 @@ pub struct RunResult {
     /// events popped off the heap by the event driver (0 under the
     /// rounds engine — the barrier loop processes no events)
     pub events_processed: usize,
+    /// effective churn events (joins + leaves) the scenario applied —
+    /// 0 for closed-world runs (DESIGN.md §12)
+    pub churn_events: usize,
+    /// effective rate-change events the scenario applied (flaky-link
+    /// episode boundaries, or replayed rate lines)
+    pub rate_events: usize,
+    /// scenario source: `none` (closed world) | `synthetic` | `replay`
+    pub scenario: String,
 }
 
 impl RunResult {
@@ -128,6 +136,9 @@ impl RunResult {
             "events_processed".into(),
             Json::Num(self.events_processed as f64),
         );
+        m.insert("churn_events".into(), Json::Num(self.churn_events as f64));
+        m.insert("rate_events".into(), Json::Num(self.rate_events as f64));
+        m.insert("scenario".into(), Json::Str(self.scenario.clone()));
         Json::Obj(m)
     }
 
@@ -176,8 +187,12 @@ impl RunResult {
                 .count(),
             engine: env.cfg.engine.id().to_string(),
             merge_policy: env.cfg.merge_policy.id(),
-            // the event driver overwrites this with its heap's pop count
+            // the event driver overwrites these with its heap's pop
+            // count and the scenario's effective-event bookkeeping
             events_processed: 0,
+            churn_events: 0,
+            rate_events: 0,
+            scenario: "none".to_string(),
         }
     }
 }
@@ -194,6 +209,18 @@ pub fn run_protocol_recorded(
     cfg: &ExperimentConfig,
 ) -> Result<(RunResult, Recorder)> {
     cfg.validate()?;
+    run_protocol_recorded_unvalidated(rt, cfg)
+}
+
+/// Test-support entry: [`run_protocol_recorded`] minus the
+/// [`ExperimentConfig::validate`] gate, so regression suites can drive
+/// edge configs the CLI refuses (e.g. zero-round smoke runs pinning the
+/// two engines' exit-path parity). Not part of the public surface.
+#[doc(hidden)]
+pub fn run_protocol_recorded_unvalidated(
+    rt: &Runtime,
+    cfg: &ExperimentConfig,
+) -> Result<(RunResult, Recorder)> {
     let clients = build_partition(
         cfg.dataset,
         cfg.clients,
@@ -283,12 +310,13 @@ pub fn run_seeds(
 ///   seed saw) rather than an average that describes no run;
 ///   `events_processed` joins this class — event counts vary with the
 ///   seed's merge timing, and the envelope is the honest "how much event
-///   traffic did this config generate" number;
+///   traffic did this config generate" number; `churn_events` and
+///   `rate_events` likewise (the scenario stream is seed-dependent);
 /// * **invariants** — `scheduler`, `delayed_gradients`, `adaptive`,
-///   `engine`, and `merge_policy` are functions of the config, not the
-///   seed: all runs must agree, and the aggregate carries the shared
-///   value (checked, so a future seed-dependent scheduler choice fails
-///   loudly instead of reporting seed 0's).
+///   `engine`, `merge_policy`, and `scenario` are functions of the
+///   config, not the seed: all runs must agree, and the aggregate
+///   carries the shared value (checked, so a future seed-dependent
+///   scheduler choice fails loudly instead of reporting seed 0's).
 pub fn aggregate_seed_results(
     results: &[RunResult],
     budgets: &crate::metrics::Budgets,
@@ -321,6 +349,12 @@ pub fn aggregate_seed_results(
             results[0].merge_policy,
             r.merge_policy
         );
+        ensure!(
+            r.scenario == results[0].scenario,
+            "seed runs disagree on scenario source: `{}` vs `{}`",
+            results[0].scenario,
+            r.scenario
+        );
     }
     let accs: Vec<f64> = results.iter().map(|r| r.best_accuracy).collect();
     let (mean, std) = crate::metrics::mean_std(&accs);
@@ -340,6 +374,8 @@ pub fn aggregate_seed_results(
     agg.final_bound = results.iter().map(|r| r.final_bound).max().unwrap_or(0);
     agg.bound_switches = results.iter().map(|r| r.bound_switches).max().unwrap_or(0);
     agg.events_processed = results.iter().map(|r| r.events_processed).max().unwrap_or(0);
+    agg.churn_events = results.iter().map(|r| r.churn_events).max().unwrap_or(0);
+    agg.rate_events = results.iter().map(|r| r.rate_events).max().unwrap_or(0);
     agg.c3_score = c3_score(mean, agg.bandwidth_gb, agg.client_tflops, budgets);
     Ok((agg, std))
 }
@@ -373,6 +409,9 @@ mod tests {
             engine: "rounds".into(),
             merge_policy: "round".into(),
             events_processed: 0,
+            churn_events: 0,
+            rate_events: 0,
+            scenario: "none".into(),
         }
     }
 
@@ -460,6 +499,35 @@ mod tests {
     }
 
     #[test]
+    fn seed_aggregation_checks_scenario_agreement_and_envelopes_its_counts() {
+        let budgets = Budgets::paper_mixed_cifar();
+        let mut a = result(60.0, 8.0, 1, "event-driven", false);
+        a.engine = "events".into();
+        a.merge_policy = "arrival".into();
+        a.scenario = "synthetic".into();
+        a.churn_events = 7;
+        a.rate_events = 2;
+        let mut b = result(70.0, 12.0, 3, "event-driven", false);
+        b.engine = "events".into();
+        b.merge_policy = "arrival".into();
+        b.scenario = "synthetic".into();
+        b.churn_events = 4;
+        b.rate_events = 9;
+        let (agg, _) = aggregate_seed_results(&[a.clone(), b.clone()], &budgets).unwrap();
+        assert_eq!(agg.scenario, "synthetic");
+        assert_eq!(agg.churn_events, 7, "churn traffic is the upper envelope");
+        assert_eq!(agg.rate_events, 9, "rate traffic is the upper envelope");
+
+        // scenario source is config-derived: seeds must agree
+        let mut closed = b;
+        closed.scenario = "none".into();
+        let err = aggregate_seed_results(&[a, closed], &budgets)
+            .expect_err("mixed scenario sources must be rejected")
+            .to_string();
+        assert!(err.contains("scenario"), "names the disagreeing axis: {err}");
+    }
+
+    #[test]
     fn run_result_json_round_trips_the_event_engine_axis() {
         let mut r = result(70.0, 9.0, 2, "event-driven", false);
         r.engine = "events".into();
@@ -481,6 +549,25 @@ mod tests {
         assert_eq!(parsed.get("engine").unwrap().as_str().unwrap(), "rounds");
         assert_eq!(parsed.get("merge_policy").unwrap().as_str().unwrap(), "round");
         assert_eq!(parsed.get("events_processed").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn run_result_json_round_trips_the_scenario_axis() {
+        let mut r = result(70.0, 9.0, 2, "event-driven", false);
+        r.engine = "events".into();
+        r.scenario = "replay".into();
+        r.churn_events = 11;
+        r.rate_events = 5;
+        let parsed = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("scenario").unwrap().as_str().unwrap(), "replay");
+        assert_eq!(parsed.get("churn_events").unwrap().as_usize().unwrap(), 11);
+        assert_eq!(parsed.get("rate_events").unwrap().as_usize().unwrap(), 5);
+
+        let closed = result(50.0, 4.0, 0, "sync-all", false);
+        let parsed = Json::parse(&closed.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("scenario").unwrap().as_str().unwrap(), "none");
+        assert_eq!(parsed.get("churn_events").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(parsed.get("rate_events").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

@@ -12,17 +12,24 @@
 //!   non-negative finite (asserted on push), and for non-negative finite
 //!   doubles the bit pattern orders exactly like the float, so the
 //!   comparison is both correct and bit-stable;
-//! * secondary key — the event-kind rank: at one instant, client
-//!   arrivals land first ([`EventKind::ClientFinish`], rank 0), then the
-//!   merge that consumes them ([`EventKind::ServerMerge`], rank 1), then
-//!   the eval that observes the merged state ([`EventKind::Eval`],
-//!   rank 2), then the controller switch that may re-aim the *next*
-//!   window ([`EventKind::ControllerSwitch`], rank 3) — the causal order
-//!   of the round loop, made explicit;
-//! * tertiary key — the client id (arrivals) or merge index (server
-//!   events), so same-kind same-time events drain in id order, matching
-//!   the ascending-client-id merge convention everywhere else
-//!   (DESIGN.md §5).
+//! * secondary key — the event-kind rank: at one instant, the *scenario*
+//!   events that reshape the world land first — a fleet join
+//!   ([`EventKind::ClientJoin`], rank 0), a departure
+//!   ([`EventKind::ClientLeave`], rank 1), a rate episode boundary
+//!   ([`EventKind::RateChange`], rank 2) — then the engine acts in the
+//!   reshaped world: client arrivals ([`EventKind::ClientFinish`],
+//!   rank 3), the merge that consumes them ([`EventKind::ServerMerge`],
+//!   rank 4), the eval that observes the merged state
+//!   ([`EventKind::Eval`], rank 5), and the controller switch that may
+//!   re-aim the *next* window ([`EventKind::ControllerSwitch`], rank 6)
+//!   — the causal order of the round loop, made explicit. Scenario
+//!   ranks sit *below* `ClientFinish` so that a departure at instant t
+//!   cancels a finish at t (the finish drains after the leave and is
+//!   discarded as stale), never the other way around (DESIGN.md §12);
+//! * tertiary key — the client id (scenario events and arrivals) or
+//!   merge index (server events), so same-kind same-time events drain
+//!   in id order, matching the ascending-client-id merge convention
+//!   everywhere else (DESIGN.md §5).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -30,6 +37,16 @@ use std::collections::BinaryHeap;
 /// What a popped event means to the driver.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EventKind {
+    /// Scenario: client `client` (re-)enters the fleet and starts a
+    /// fresh work unit at the event instant (DESIGN.md §12).
+    ClientJoin { client: usize },
+    /// Scenario: client `client` departs; its in-flight work unit and
+    /// any pending (finished, unmerged) update are discarded.
+    ClientLeave { client: usize },
+    /// Scenario: client `client`'s effective rate changes (flaky-link
+    /// episode boundary, or a replayed trace line); its pending
+    /// `ClientFinish` is re-timed.
+    RateChange { client: usize },
     /// Client `client`'s in-flight work unit completes (its update is
     /// now pending at the server).
     ClientFinish { client: usize },
@@ -43,21 +60,28 @@ pub enum EventKind {
 }
 
 impl EventKind {
-    /// Same-instant drain rank: arrivals < merge < eval < switch.
+    /// Same-instant drain rank: scenario (join < leave < rate) <
+    /// arrivals < merge < eval < switch.
     pub fn rank(&self) -> u8 {
         match self {
-            EventKind::ClientFinish { .. } => 0,
-            EventKind::ServerMerge { .. } => 1,
-            EventKind::Eval { .. } => 2,
-            EventKind::ControllerSwitch { .. } => 3,
+            EventKind::ClientJoin { .. } => 0,
+            EventKind::ClientLeave { .. } => 1,
+            EventKind::RateChange { .. } => 2,
+            EventKind::ClientFinish { .. } => 3,
+            EventKind::ServerMerge { .. } => 4,
+            EventKind::Eval { .. } => 5,
+            EventKind::ControllerSwitch { .. } => 6,
         }
     }
 
-    /// Same-kind same-instant tie-break: client id for arrivals, merge
-    /// index for server-side events.
+    /// Same-kind same-instant tie-break: client id for scenario events
+    /// and arrivals, merge index for server-side events.
     fn index(&self) -> usize {
         match *self {
-            EventKind::ClientFinish { client } => client,
+            EventKind::ClientJoin { client }
+            | EventKind::ClientLeave { client }
+            | EventKind::RateChange { client }
+            | EventKind::ClientFinish { client } => client,
             EventKind::ServerMerge { merge }
             | EventKind::Eval { merge }
             | EventKind::ControllerSwitch { merge } => merge,
@@ -229,6 +253,58 @@ mod tests {
         }
         let got: Vec<EventKind> = std::iter::from_fn(|| h.pop()).map(|e| e.kind).collect();
         assert_eq!(got, expect, "reversed insertion");
+    }
+
+    #[test]
+    fn event_heap_scenario_events_drain_before_engine_events_at_one_instant() {
+        // DESIGN.md §12: at one instant the scenario reshapes the world
+        // first (join < leave < rate), then the engine acts in it — so a
+        // same-instant departure cancels the client's finish, never the
+        // other way around
+        let t = 2.5;
+        let simultaneous = vec![
+            Event::new(t, EventKind::ServerMerge { merge: 3 }),
+            Event::new(t, EventKind::RateChange { client: 4 }),
+            finish(t, 1),
+            Event::new(t, EventKind::ClientLeave { client: 1 }),
+            Event::new(t, EventKind::ClientJoin { client: 6 }),
+            Event::new(t, EventKind::RateChange { client: 0 }),
+        ];
+        let expect = vec![
+            EventKind::ClientJoin { client: 6 },
+            EventKind::ClientLeave { client: 1 },
+            EventKind::RateChange { client: 0 },
+            EventKind::RateChange { client: 4 },
+            EventKind::ClientFinish { client: 1 },
+            EventKind::ServerMerge { merge: 3 },
+        ];
+        for shift in 0..simultaneous.len() {
+            let mut h = EventHeap::new();
+            for i in 0..simultaneous.len() {
+                h.push(simultaneous[(i + shift) % simultaneous.len()]);
+            }
+            let got: Vec<EventKind> =
+                std::iter::from_fn(|| h.pop()).map(|e| e.kind).collect();
+            assert_eq!(got, expect, "rotation {shift}");
+        }
+    }
+
+    #[test]
+    fn event_heap_scenario_ranks_preserve_the_engine_relative_order() {
+        // inserting the scenario ranks must not perturb the pinned
+        // relative order of the four engine kinds
+        let kinds = [
+            EventKind::ClientJoin { client: 0 },
+            EventKind::ClientLeave { client: 0 },
+            EventKind::RateChange { client: 0 },
+            EventKind::ClientFinish { client: 0 },
+            EventKind::ServerMerge { merge: 0 },
+            EventKind::Eval { merge: 0 },
+            EventKind::ControllerSwitch { merge: 0 },
+        ];
+        for w in kinds.windows(2) {
+            assert!(w[0].rank() < w[1].rank(), "{:?} < {:?}", w[0], w[1]);
+        }
     }
 
     #[test]

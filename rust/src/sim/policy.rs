@@ -23,6 +23,14 @@
 //! (the bound always wins). Staleness is the number of server merges a
 //! contribution straddled, so the adaptive `BoundController` drives the
 //! same knob on either engine.
+//!
+//! Under a scenario (DESIGN.md §12) the policy also tracks fleet
+//! membership and per-client rate multipliers: departures drop a client
+//! from the pending/required sets, joins rebase its staleness, and rate
+//! changes re-time its in-flight work — all without touching the
+//! contracts above. Without a scenario every multiplier is exactly
+//! `1.0` and every client active, so the closed-world arithmetic is
+//! bit-identical.
 
 use std::collections::BTreeMap;
 
@@ -150,6 +158,12 @@ pub(crate) struct ContinuousPolicy {
     pending: BTreeMap<usize, f64>,
     /// last merge index each client's update folded into (-1 = never)
     last_merge: Vec<i64>,
+    /// per-client scenario speed multiplier (flaky links); a work unit's
+    /// duration divides by it — all `1.0` without a scenario
+    mul: Vec<f64>,
+    /// fleet membership under churn: inactive clients are excluded from
+    /// required sets, fallbacks, and merges — all `true` without one
+    active: Vec<bool>,
     clock: f64,
 }
 
@@ -169,6 +183,8 @@ impl ContinuousPolicy {
             durations,
             pending: BTreeMap::new(),
             last_merge: vec![-1; n],
+            mul: vec![1.0; n],
+            active: vec![true; n],
             clock: 0.0,
         }
     }
@@ -184,6 +200,14 @@ impl ContinuousPolicy {
     /// Virtual duration of one work unit for client `i`.
     pub(crate) fn duration(&self, i: usize) -> f64 {
         self.durations[i]
+    }
+
+    /// Duration of client `i`'s next work unit under the live scenario
+    /// factors: base duration over (link multiplier × diurnal `scale`).
+    /// With no scenario both factors are exactly `1.0`, so this equals
+    /// `duration(i)` bit for bit (IEEE-754: `x / 1.0 == x`).
+    pub(crate) fn unit_duration(&self, i: usize, scale: f64) -> f64 {
+        self.durations[i] / (self.mul[i] * scale)
     }
 
     /// The staleness bound currently in effect (0 when unbounded, for
@@ -205,7 +229,13 @@ impl ContinuousPolicy {
     pub(crate) fn wants_merge(&self) -> bool {
         match self.mode {
             MergePolicyKind::Arrival => !self.pending.is_empty(),
-            MergePolicyKind::Batch(k) => self.pending.len() >= k,
+            // effective batch = min(K, active fleet): a fleet shrunk
+            // below K by churn (or an oversized K) must still merge —
+            // pending ⊆ active, so a literal K could never be reached
+            MergePolicyKind::Batch(k) => {
+                let active = self.active.iter().filter(|&&a| a).count();
+                self.pending.len() >= k.min(active.max(1))
+            }
             // time-window merges fire on their own clock, not on arrivals
             MergePolicyKind::Window(_) => false,
             MergePolicyKind::Round => unreachable!("degenerate policy has no pending set"),
@@ -220,7 +250,7 @@ impl ContinuousPolicy {
         // AsyncBounded, restated over merge indices
         let required: Vec<usize> = match self.bound {
             Some(b) => (0..self.n)
-                .filter(|&i| mi - self.last_merge[i] > b as i64)
+                .filter(|&i| self.active[i] && mi - self.last_merge[i] > b as i64)
                 .collect(),
             None => Vec::new(),
         };
@@ -235,9 +265,13 @@ impl ContinuousPolicy {
         }
         if self.pending.is_empty() {
             // never-empty merge contract: with nothing pending, wait for
-            // the fastest in-flight client (every client is in flight
-            // here, and the fleet is non-empty by config invariant)
-            let earliest = self.ready.iter().copied().fold(f64::INFINITY, f64::min);
+            // the fastest in-flight *active* client (every active client
+            // is in flight here, and the scenario's last-leaver guard
+            // keeps the active fleet non-empty)
+            let earliest = (0..self.n)
+                .filter(|&i| self.active[i])
+                .map(|i| self.ready[i])
+                .fold(f64::INFINITY, f64::min);
             return MergeDecision::Wait(earliest.max(now));
         }
         // merge set: required clients plus the earliest pending arrivals
@@ -274,17 +308,18 @@ impl ContinuousPolicy {
     }
 
     /// Apply a fired merge: advance the server clock, restart every
-    /// participant's next work unit at the merge instant, and return the
-    /// (client, completion-time) pairs the driver schedules as
-    /// `ClientFinish` events.
-    pub(crate) fn commit(&mut self, m: usize, plan: &RoundPlan) -> Vec<(usize, f64)> {
+    /// participant's next work unit at the merge instant (under the
+    /// diurnal `scale` and live link multipliers — both exactly `1.0`
+    /// without a scenario), and return the (client, completion-time)
+    /// pairs the driver schedules as `ClientFinish` events.
+    pub(crate) fn commit(&mut self, m: usize, plan: &RoundPlan, scale: f64) -> Vec<(usize, f64)> {
         self.clock = self.clock.max(plan.sim_time);
         plan.participants
             .iter()
             .map(|&i| {
                 self.last_merge[i] = m as i64;
                 self.pending.remove(&i);
-                self.ready[i] = self.clock + self.durations[i];
+                self.ready[i] = self.clock + self.durations[i] / (self.mul[i] * scale);
                 (i, self.ready[i])
             })
             .collect()
@@ -303,6 +338,62 @@ impl ContinuousPolicy {
                 *lm = floor;
             }
         }
+    }
+
+    /// Client `c` leaves the fleet: discard its pending update (delayed-
+    /// gradient versioning already defines what its in-flight work meant
+    /// — once it is gone, nothing; DESIGN.md §8/§12) and exclude it from
+    /// required sets and fallbacks until it rejoins. The scenario's
+    /// last-leaver guard keeps the active fleet non-empty.
+    pub(crate) fn deactivate(&mut self, c: usize) {
+        self.active[c] = false;
+        self.pending.remove(&c);
+    }
+
+    /// Client `c` (re-)joins at `now`, before merge `next_merge`: it
+    /// starts a fresh work unit at the join instant, and its staleness
+    /// base rebases so it owes nothing for its absence — staleness 0 if
+    /// it lands in the very next merge, preserving staleness ≤ bound.
+    /// Returns the completion time to schedule as its `ClientFinish`.
+    pub(crate) fn activate(&mut self, c: usize, now: f64, next_merge: usize, scale: f64) -> f64 {
+        self.active[c] = true;
+        self.last_merge[c] = next_merge as i64 - 1;
+        self.ready[c] = now + self.durations[c] / (self.mul[c] * scale);
+        self.ready[c]
+    }
+
+    /// Scenario rate change for client `c` at `now`: store the new
+    /// multiplier and, when `c` is active and mid-flight, re-time its
+    /// current unit — the remaining stretch scales by old/new speed.
+    /// Returns the new completion time to schedule as a replacement
+    /// `ClientFinish` (the superseded event is discarded by
+    /// [`Self::expects_finish`] when it pops — the heap has no delete);
+    /// `None` when nothing is in flight to re-time.
+    pub(crate) fn set_rate(&mut self, c: usize, new_mul: f64, now: f64) -> Option<f64> {
+        let old = self.mul[c];
+        self.mul[c] = new_mul;
+        if old.to_bits() == new_mul.to_bits() || !self.active[c] || self.pending.contains_key(&c)
+        {
+            return None;
+        }
+        let remaining = self.ready[c] - now;
+        if !(remaining > 0.0) {
+            // the unit completes at this very instant: let it land
+            return None;
+        }
+        self.ready[c] = now + remaining * (old / new_mul);
+        Some(self.ready[c])
+    }
+
+    /// Lazy cancellation check: does a popped `ClientFinish { client }`
+    /// at `t` correspond to the client's *current* work unit? False for
+    /// events orphaned by a departure or a rate re-time.
+    pub(crate) fn expects_finish(&self, c: usize, t: f64) -> bool {
+        self.active[c] && !self.pending.contains_key(&c) && self.ready[c].to_bits() == t.to_bits()
+    }
+
+    pub(crate) fn is_active(&self, c: usize) -> bool {
+        self.active[c]
     }
 }
 
@@ -358,7 +449,7 @@ mod tests {
                 match p.decide(m, now) {
                     MergeDecision::Wait(_) => break,
                     MergeDecision::Fire(plan) => {
-                        for (i, t) in p.commit(m, &plan) {
+                        for (i, t) in p.commit(m, &plan, 1.0) {
                             finishes.push((t, i));
                         }
                         plans.push(plan);
@@ -537,7 +628,7 @@ mod tests {
         }
         for m in 0..4 {
             if let MergeDecision::Fire(plan) = p.decide(m, 25.0) {
-                p.commit(m, &plan);
+                p.commit(m, &plan, 1.0);
             }
         }
         p.set_bound(1, 4);
@@ -545,5 +636,131 @@ mod tests {
         for lm in &p.last_merge {
             assert!(*lm >= 4 - 1 - 1, "tighten must clamp the staleness base");
         }
+    }
+
+    #[test]
+    fn policy_set_bound_tighten_at_merge_zero_keeps_the_floor_sane() {
+        let c = cfg(6, MergePolicyKind::Arrival, Some(4), 1.0);
+        let mut p = ContinuousPolicy::new(&c, &speeds_for(&c));
+        p.set_bound(0, 0);
+        assert_eq!(p.current_bound(), 0);
+        // floor = 0 - 1 - 0 = -1: the fresh "never merged" base survives
+        assert!(p.last_merge.iter().all(|&lm| lm == -1));
+        // and under bound 0 every client is required in merge 0, so the
+        // decision waits (strictly later) for the in-flight fleet
+        match p.decide(0, 0.0) {
+            MergeDecision::Wait(t) => assert!(t > 0.0, "wait must strictly advance"),
+            MergeDecision::Fire(_) => panic!("no one is pending yet"),
+        }
+    }
+
+    #[test]
+    fn policy_decide_with_every_client_required_fires_the_whole_fleet() {
+        let c = cfg(8, MergePolicyKind::Arrival, Some(0), 0.125); // cap = 1
+        let mut p = ContinuousPolicy::new(&c, &speeds_for(&c));
+        for i in 0..8 {
+            p.on_finish(i, 2.0 + i as f64 * 0.001);
+        }
+        match p.decide(0, 3.0) {
+            MergeDecision::Fire(plan) => {
+                // the required set overrides the participation cap
+                assert_eq!(plan.participants, (0..8).collect::<Vec<_>>());
+                assert!(plan.staleness.iter().all(|&s| s == 0));
+            }
+            MergeDecision::Wait(_) => panic!("everyone is pending — nothing to wait for"),
+        }
+    }
+
+    #[test]
+    fn policy_wait_times_strictly_advance_under_exact_duration_ties() {
+        let c = cfg(5, MergePolicyKind::Window(0.25), Some(0), 1.0);
+        let mut p = ContinuousPolicy::new(&c, &speeds_for(&c));
+        // force every duration to collide in to_bits — the adversarial
+        // tie case the event heap breaks by (rank, id)
+        p.durations = vec![1.0; 5];
+        p.ready = vec![1.0; 5];
+        // window tick before anyone finishes: wait, strictly later
+        match p.decide(0, 0.25) {
+            MergeDecision::Wait(w) => {
+                assert!(w > 0.25);
+                assert_eq!(w.to_bits(), 1.0f64.to_bits());
+            }
+            MergeDecision::Fire(_) => panic!("nothing is pending"),
+        }
+        // all five finishes land at exactly t = 1.0 (identical bits)
+        for i in 0..5 {
+            p.on_finish(i, 1.0);
+        }
+        let plan = match p.decide(0, 1.0) {
+            MergeDecision::Fire(plan) => plan,
+            MergeDecision::Wait(_) => panic!("everyone pending and required — must fire"),
+        };
+        assert_eq!(plan.participants.len(), 5);
+        for (i, t) in p.commit(0, &plan, 1.0) {
+            assert!(t > 1.0, "client {i}: next finish must be strictly later");
+            assert_eq!(t.to_bits(), 2.0f64.to_bits());
+        }
+        // and the next decision waits strictly past the merge instant
+        match p.decide(1, 1.0) {
+            MergeDecision::Wait(w) => {
+                assert!(w > 1.0);
+                assert_eq!(w.to_bits(), 2.0f64.to_bits());
+            }
+            MergeDecision::Fire(_) => panic!("nothing is pending after the commit"),
+        }
+    }
+
+    #[test]
+    fn policy_churn_departure_drops_pending_and_required_membership() {
+        let c = cfg(6, MergePolicyKind::Arrival, Some(0), 1.0);
+        let mut p = ContinuousPolicy::new(&c, &speeds_for(&c));
+        p.durations = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        p.ready = p.durations.clone();
+        p.on_finish(2, 3.0);
+        p.deactivate(2);
+        assert!(!p.is_active(2));
+        // bound 0 requires every *active* client; 2 is gone with its
+        // pending update, so the decision waits on the remaining fleet
+        match p.decide(0, 3.0) {
+            MergeDecision::Wait(t) => assert_eq!(t.to_bits(), 6.0f64.to_bits()),
+            MergeDecision::Fire(_) => panic!("required clients are still in flight"),
+        }
+        // a departed client's orphaned finish is discarded, not merged
+        assert!(!p.expects_finish(2, 3.0));
+        // rejoin: fresh staleness base, new unit from the join instant
+        let ready = p.activate(2, 3.5, 7, 1.0);
+        assert!(p.is_active(2));
+        assert_eq!(ready.to_bits(), (3.5 + 3.0).to_bits());
+        assert_eq!(p.last_merge[2], 6, "rebased: staleness 0 at merge 7");
+        assert!(p.expects_finish(2, ready));
+    }
+
+    #[test]
+    fn policy_set_rate_retimes_in_flight_work_and_spares_pending() {
+        let c = cfg(3, MergePolicyKind::Arrival, None, 1.0);
+        let mut p = ContinuousPolicy::new(&c, &speeds_for(&c));
+        p.durations = vec![4.0; 3];
+        p.ready = vec![4.0; 3];
+        // halfway through client 0's unit a 4x slowdown lands: the
+        // remaining half stretches 4x
+        let new = p.set_rate(0, 0.25, 2.0).expect("in flight: must re-time");
+        assert_eq!(new.to_bits(), (2.0 + 2.0 * 4.0).to_bits());
+        assert!(p.expects_finish(0, new));
+        assert!(!p.expects_finish(0, 4.0), "superseded finish is orphaned");
+        // a pending client's already-arrived update is not re-timed
+        p.on_finish(1, 4.0);
+        assert!(p.set_rate(1, 0.25, 4.5).is_none());
+        // restoring the rate mid-flight shrinks the remainder back
+        let back = p.set_rate(0, 1.0, 6.0).expect("still in flight");
+        assert_eq!(back.to_bits(), 7.0f64.to_bits());
+        // the next unit after a merge divides by the live multiplier
+        p.on_finish(0, back);
+        let plan = RoundPlan {
+            participants: vec![0, 1],
+            staleness: vec![0, 0],
+            sim_time: back,
+        };
+        let next = p.commit(0, &plan, 1.0);
+        assert_eq!(next[0].1.to_bits(), (back + 4.0).to_bits());
     }
 }

@@ -1,0 +1,864 @@
+//! The scenario engine: seeded churn, time-varying rates, and the
+//! deterministic JSONL trace format (DESIGN.md §12).
+//!
+//! Every run used to be closed-world — a fixed fleet, a static speed
+//! distribution. This module opens it up on the event core: fleet
+//! membership and per-client rates become *scenario events*
+//! ([`EventKind::ClientJoin`] / [`EventKind::ClientLeave`] /
+//! [`EventKind::RateChange`]) with their own ranks in the §11 total
+//! order, so an open-world run is exactly as deterministic as a closed
+//! one. Three sources of dynamics:
+//!
+//! * **Churn** (`--churn join:λ,leave:μ`): Poisson join/leave processes
+//!   with exponential gaps. A departure discards the client's in-flight
+//!   work and pending update (delayed-gradient versioning, DESIGN.md §8,
+//!   already defines what that work meant); a join restarts the client
+//!   fresh — its shard materializes through `Partition`'s lazy
+//!   first-touch path, and its staleness base rebases so it can never
+//!   owe merges from its absence.
+//! * **Time-varying rates** (`--rate-schedule diurnal:P:A+flaky:R:S:L`):
+//!   a diurnal speed curve sampled at work-unit start, plus seeded
+//!   flaky-link episodes that slow one client sharply and *re-time its
+//!   pending `ClientFinish`* through [`EventKind::RateChange`].
+//! * **Trace replay** (`--trace-in`): a recorded (or hand-synthesized)
+//!   JSONL stream of effective scenario events, replayed verbatim.
+//!
+//! ## Determinism
+//!
+//! The synthesized stream is a pure function of `(seed, spec, n)` and
+//! nothing else: process gaps and victims come from derived [`Rng`]
+//! streams, guards (never-empty fleet, join-targets-absent,
+//! one-episode-per-client) read only scenario-internal state, and the
+//! protocol/merge policy never feed back into the stream. Hence the
+//! same config records the same `--trace-out` bytes under any protocol
+//! or merge policy, and a replayed trace drives any run bit-identically
+//! across thread counts and repeat invocations.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::event::{Event, EventHeap, EventKind};
+use crate::config::ExperimentConfig;
+use crate::data::Rng;
+use crate::driver::diurnal_multiplier;
+use crate::util::Json;
+
+/// Trace header `format` field — refuses to replay foreign JSONL.
+pub const TRACE_FORMAT: &str = "adasplit-scenario";
+/// Trace header `version` field — bump on any line-format change.
+pub const TRACE_VERSION: usize = 1;
+
+/// Seeded fleet churn (`--churn join:λ,leave:μ`): Poisson join and
+/// leave processes, rates in events per unit of virtual time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnSpec {
+    pub join: f64,
+    pub leave: f64,
+}
+
+impl ChurnSpec {
+    /// CLI/config id (`join:0.5,leave:0.3`), parse-roundtrip stable.
+    pub fn id(&self) -> String {
+        format!("join:{},leave:{}", self.join, self.leave)
+    }
+}
+
+impl FromStr for ChurnSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut join = 0.0f64;
+        let mut leave = 0.0f64;
+        let mut seen = false;
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow!("churn part `{part}` (expected join:RATE or leave:RATE)"))?;
+            let rate: f64 = val
+                .parse()
+                .map_err(|e| anyhow!("churn rate `{val}`: {e}"))?;
+            ensure!(
+                rate.is_finite() && rate >= 0.0,
+                "churn rate must be non-negative finite, got {rate}"
+            );
+            match key {
+                "join" => join = rate,
+                "leave" => leave = rate,
+                other => bail!("unknown churn key `{other}` (expected join | leave)"),
+            }
+            seen = true;
+        }
+        ensure!(
+            seen && join + leave > 0.0,
+            "churn spec `{s}` names no positive rate (expected e.g. join:0.5,leave:0.3)"
+        );
+        Ok(Self { join, leave })
+    }
+}
+
+/// Diurnal speed curve: multiplier `1 + A*sin(2πt/P)` applied to work
+/// units at start time (see [`diurnal_multiplier`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DiurnalSpec {
+    pub period: f64,
+    pub amplitude: f64,
+}
+
+/// Seeded flaky-link episodes: a Poisson process (rate `R`) picks a
+/// victim, slows it by `S`x for an exponential episode (mean `L`), and
+/// re-times its pending finish at both episode boundaries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlakySpec {
+    pub rate: f64,
+    pub slowdown: f64,
+    pub mean_len: f64,
+}
+
+/// `--rate-schedule diurnal:P:A`, `flaky:R:S:L`, or both joined by `+`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RateScheduleSpec {
+    pub diurnal: Option<DiurnalSpec>,
+    pub flaky: Option<FlakySpec>,
+}
+
+impl RateScheduleSpec {
+    /// CLI/config id, parse-roundtrip stable.
+    pub fn id(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(d) = self.diurnal {
+            parts.push(format!("diurnal:{}:{}", d.period, d.amplitude));
+        }
+        if let Some(f) = self.flaky {
+            parts.push(format!("flaky:{}:{}:{}", f.rate, f.slowdown, f.mean_len));
+        }
+        parts.join("+")
+    }
+}
+
+impl FromStr for RateScheduleSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut spec = RateScheduleSpec::default();
+        for part in s.split('+') {
+            let part = part.trim();
+            if let Some(rest) = part.strip_prefix("diurnal:") {
+                ensure!(spec.diurnal.is_none(), "duplicate diurnal part in `{s}`");
+                let (p, a) = rest
+                    .split_once(':')
+                    .ok_or_else(|| anyhow!("diurnal spec `{part}` (expected diurnal:PERIOD:AMPLITUDE)"))?;
+                let period: f64 = p.parse().map_err(|e| anyhow!("diurnal period `{p}`: {e}"))?;
+                let amplitude: f64 =
+                    a.parse().map_err(|e| anyhow!("diurnal amplitude `{a}`: {e}"))?;
+                ensure!(
+                    period.is_finite() && period > 0.0,
+                    "diurnal period must be positive finite, got {period}"
+                );
+                ensure!(
+                    amplitude > 0.0 && amplitude < 1.0,
+                    "diurnal amplitude must be in (0, 1), got {amplitude}"
+                );
+                spec.diurnal = Some(DiurnalSpec { period, amplitude });
+            } else if let Some(rest) = part.strip_prefix("flaky:") {
+                ensure!(spec.flaky.is_none(), "duplicate flaky part in `{s}`");
+                let fields: Vec<&str> = rest.split(':').collect();
+                ensure!(
+                    fields.len() == 3,
+                    "flaky spec `{part}` (expected flaky:RATE:SLOWDOWN:MEAN_LEN)"
+                );
+                let rate: f64 = fields[0]
+                    .parse()
+                    .map_err(|e| anyhow!("flaky rate `{}`: {e}", fields[0]))?;
+                let slowdown: f64 = fields[1]
+                    .parse()
+                    .map_err(|e| anyhow!("flaky slowdown `{}`: {e}", fields[1]))?;
+                let mean_len: f64 = fields[2]
+                    .parse()
+                    .map_err(|e| anyhow!("flaky mean length `{}`: {e}", fields[2]))?;
+                ensure!(
+                    rate.is_finite() && rate > 0.0,
+                    "flaky rate must be positive finite, got {rate}"
+                );
+                ensure!(
+                    slowdown.is_finite() && slowdown > 1.0,
+                    "flaky slowdown must be > 1 (it slows the link), got {slowdown}"
+                );
+                ensure!(
+                    mean_len.is_finite() && mean_len > 0.0,
+                    "flaky mean length must be positive finite, got {mean_len}"
+                );
+                spec.flaky = Some(FlakySpec { rate, slowdown, mean_len });
+            } else {
+                bail!(
+                    "unknown rate-schedule part `{part}` \
+                     (expected diurnal:P:A | flaky:R:S:L, joined by `+`)"
+                );
+            }
+        }
+        ensure!(
+            spec.diurnal.is_some() || spec.flaky.is_some(),
+            "rate schedule `{s}` is empty"
+        );
+        Ok(spec)
+    }
+}
+
+/// One effective scenario event — the unit of the JSONL trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub time: f64,
+    pub kind: TraceKind,
+    pub client: usize,
+}
+
+/// What an effective scenario event did.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceKind {
+    Join,
+    Leave,
+    /// The client's new speed multiplier (work-unit durations divide by
+    /// it; `1.0` restores the base rate).
+    Rate { mul: f64 },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Source {
+    Synthetic,
+    Replay,
+}
+
+/// One self-perpetuating Poisson process: its derived rng stream and
+/// rate. Each popped process event draws the gap and victim of the next.
+struct Proc {
+    rng: Rng,
+    rate: f64,
+}
+
+/// Exponential inter-event gap via inverse CDF, floored so two events
+/// of one process can never collide at the same instant (`u = 0` would
+/// otherwise yield a zero gap).
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    (-(1.0 - rng.next_f64()).ln() / rate).max(1e-9)
+}
+
+/// The scenario state machine the event driver consults: it resolves
+/// popped scenario events into effects (guarded by scenario-internal
+/// state only), schedules each process's successor event, and records
+/// the effective stream for `--trace-out`.
+pub struct Scenario {
+    n: usize,
+    source: Source,
+    /// Scenario-side fleet membership. The [`ContinuousPolicy`] keeps
+    /// its own mirror for merge bookkeeping; the driver applies every
+    /// effective event to both, so they never diverge.
+    ///
+    /// [`ContinuousPolicy`]: super::policy::ContinuousPolicy
+    active: Vec<bool>,
+    /// Flaky-episode state: `Some(end-time bits)` while degraded. The
+    /// end-time bits disambiguate a popped `RateChange` (episode end vs
+    /// a new episode-start tick) without any payload in the event.
+    restore_at: Vec<Option<u64>>,
+    /// The one outstanding episode-start tick `(time bits, victim)` —
+    /// used to keep a scheduled episode *end* from colliding with it.
+    next_start: Option<(u64, usize)>,
+    diurnal: Option<DiurnalSpec>,
+    flaky: Option<FlakySpec>,
+    join: Option<Proc>,
+    leave: Option<Proc>,
+    flaky_proc: Option<Proc>,
+    replay: Vec<TraceEvent>,
+    replay_next: usize,
+    /// Effective events in drain order — the `--trace-out` payload.
+    applied: Vec<TraceEvent>,
+    joins: usize,
+    leaves: usize,
+    rates: usize,
+}
+
+impl Scenario {
+    /// Build the run's scenario from its config: a trace replay when
+    /// `--trace-in` is set, a seeded synthesis when churn or a rate
+    /// schedule is, an inert recorder when only `--trace-out` is, and
+    /// `None` for the (default) closed-world run.
+    pub fn from_cfg(cfg: &ExperimentConfig) -> Result<Option<Scenario>> {
+        let wants = cfg.churn.is_some()
+            || cfg.rate_schedule.is_some()
+            || cfg.trace_in.is_some()
+            || cfg.trace_out.is_some();
+        if !wants {
+            return Ok(None);
+        }
+        if let Some(path) = &cfg.trace_in {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading scenario trace {path}"))?;
+            return Ok(Some(Self::replay(cfg.clients, &text)?));
+        }
+        Ok(Some(Self::synth(
+            cfg.clients,
+            cfg.churn,
+            cfg.rate_schedule.unwrap_or_default(),
+            cfg.seed,
+        )))
+    }
+
+    /// Seeded synthesis. The whole fleet starts active; each configured
+    /// process gets its own derived rng stream.
+    pub fn synth(
+        n: usize,
+        churn: Option<ChurnSpec>,
+        rates: RateScheduleSpec,
+        seed: u64,
+    ) -> Scenario {
+        let root = Rng::new(seed);
+        let proc_for = |tag: &str, rate: f64| {
+            (rate > 0.0).then(|| Proc { rng: root.derive(tag, 0), rate })
+        };
+        Scenario {
+            n,
+            source: Source::Synthetic,
+            active: vec![true; n],
+            restore_at: vec![None; n],
+            next_start: None,
+            diurnal: rates.diurnal,
+            flaky: rates.flaky,
+            join: churn.and_then(|c| proc_for("scenario-join", c.join)),
+            leave: churn.and_then(|c| proc_for("scenario-leave", c.leave)),
+            flaky_proc: rates.flaky.and_then(|f| proc_for("scenario-flaky", f.rate)),
+            replay: Vec::new(),
+            replay_next: 0,
+            applied: Vec::new(),
+            joins: 0,
+            leaves: 0,
+            rates: 0,
+        }
+    }
+
+    /// Parse a recorded JSONL trace for replay. Validates the header,
+    /// every line's fields, and non-decreasing times.
+    pub fn replay(n: usize, text: &str) -> Result<Scenario> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header_line = lines
+            .next()
+            .ok_or_else(|| anyhow!("scenario trace is empty (missing header line)"))?;
+        let header =
+            Json::parse(header_line).context("scenario trace header is not valid JSON")?;
+        ensure!(
+            header.get("format")?.as_str()? == TRACE_FORMAT,
+            "scenario trace header: format must be `{TRACE_FORMAT}`"
+        );
+        ensure!(
+            header.get("version")?.as_usize()? == TRACE_VERSION,
+            "scenario trace header: unsupported version (expected {TRACE_VERSION})"
+        );
+        let mut replay = Vec::new();
+        let mut last_bits = 0u64;
+        for (i, line) in lines.enumerate() {
+            let lineno = i + 2;
+            let j = Json::parse(line)
+                .with_context(|| format!("scenario trace line {lineno}"))?;
+            let time = j.get("t")?.as_f64()?;
+            ensure!(
+                time.is_finite() && time >= 0.0,
+                "scenario trace line {lineno}: time must be non-negative finite, got {time}"
+            );
+            ensure!(
+                time.to_bits() >= last_bits,
+                "scenario trace line {lineno}: time regressed"
+            );
+            last_bits = time.to_bits();
+            let client = j.get("client")?.as_usize()?;
+            ensure!(
+                client < n,
+                "scenario trace line {lineno}: client {client} out of range (fleet size {n})"
+            );
+            let kind = match j.get("ev")?.as_str()? {
+                "join" => TraceKind::Join,
+                "leave" => TraceKind::Leave,
+                "rate" => {
+                    let mul = j.get("mul")?.as_f64()?;
+                    ensure!(
+                        mul.is_finite() && mul > 0.0,
+                        "scenario trace line {lineno}: rate mul must be positive finite, got {mul}"
+                    );
+                    TraceKind::Rate { mul }
+                }
+                other => bail!("scenario trace line {lineno}: unknown ev `{other}`"),
+            };
+            replay.push(TraceEvent { time, kind, client });
+        }
+        Ok(Scenario {
+            n,
+            source: Source::Replay,
+            active: vec![true; n],
+            restore_at: vec![None; n],
+            next_start: None,
+            diurnal: None,
+            flaky: None,
+            join: None,
+            leave: None,
+            flaky_proc: None,
+            replay,
+            replay_next: 0,
+            applied: Vec::new(),
+            joins: 0,
+            leaves: 0,
+            rates: 0,
+        })
+    }
+
+    /// Push the stream's head onto the heap: the first event of each
+    /// synthesis process, or the first recorded trace line. Replay
+    /// events enter one at a time (each pop pushes its successor), so
+    /// the recorded drain order is preserved verbatim.
+    pub fn prime(&mut self, heap: &mut EventHeap) {
+        match self.source {
+            Source::Replay => self.push_replay_head(heap),
+            Source::Synthetic => {
+                if let Some(p) = self.join.as_mut() {
+                    let gap = exp_gap(&mut p.rng, p.rate);
+                    let victim = p.rng.below(self.n);
+                    heap.push(Event::new(gap, EventKind::ClientJoin { client: victim }));
+                }
+                if let Some(p) = self.leave.as_mut() {
+                    let gap = exp_gap(&mut p.rng, p.rate);
+                    let victim = p.rng.below(self.n);
+                    heap.push(Event::new(gap, EventKind::ClientLeave { client: victim }));
+                }
+                if let Some(p) = self.flaky_proc.as_mut() {
+                    let gap = exp_gap(&mut p.rng, p.rate);
+                    let victim = p.rng.below(self.n);
+                    self.next_start = Some((gap.to_bits(), victim));
+                    heap.push(Event::new(gap, EventKind::RateChange { client: victim }));
+                }
+            }
+        }
+    }
+
+    fn push_replay_head(&mut self, heap: &mut EventHeap) {
+        if let Some(ev) = self.replay.get(self.replay_next) {
+            let kind = match ev.kind {
+                TraceKind::Join => EventKind::ClientJoin { client: ev.client },
+                TraceKind::Leave => EventKind::ClientLeave { client: ev.client },
+                TraceKind::Rate { .. } => EventKind::RateChange { client: ev.client },
+            };
+            heap.push(Event::new(ev.time, kind));
+        }
+    }
+
+    /// Consume the replay cursor's event (the one that just popped) and
+    /// push its successor.
+    fn advance_replay(&mut self, heap: &mut EventHeap) -> TraceEvent {
+        let ev = self.replay[self.replay_next];
+        self.replay_next += 1;
+        self.push_replay_head(heap);
+        ev
+    }
+
+    /// A popped `ClientJoin { client }` at `t`: schedule the process's
+    /// next event, then apply — only an absent client can (re-)join.
+    /// Returns whether the join took effect.
+    pub fn on_join(&mut self, client: usize, t: f64, heap: &mut EventHeap) -> bool {
+        if self.source == Source::Replay {
+            let ev = self.advance_replay(heap);
+            debug_assert_eq!((ev.client, ev.time.to_bits()), (client, t.to_bits()));
+        } else if let Some(p) = self.join.as_mut() {
+            let gap = exp_gap(&mut p.rng, p.rate);
+            let victim = p.rng.below(self.n);
+            heap.push(Event::new(t + gap, EventKind::ClientJoin { client: victim }));
+        }
+        if self.active[client] {
+            return false;
+        }
+        self.active[client] = true;
+        self.record(TraceEvent { time: t, kind: TraceKind::Join, client });
+        true
+    }
+
+    /// A popped `ClientLeave { client }` at `t`: schedule the process's
+    /// next event, then apply — the last active client can never leave
+    /// (the never-empty-merge contract needs someone in flight). Returns
+    /// whether the departure took effect.
+    pub fn on_leave(&mut self, client: usize, t: f64, heap: &mut EventHeap) -> bool {
+        if self.source == Source::Replay {
+            let ev = self.advance_replay(heap);
+            debug_assert_eq!((ev.client, ev.time.to_bits()), (client, t.to_bits()));
+        } else if let Some(p) = self.leave.as_mut() {
+            let gap = exp_gap(&mut p.rng, p.rate);
+            let victim = p.rng.below(self.n);
+            heap.push(Event::new(t + gap, EventKind::ClientLeave { client: victim }));
+        }
+        let active_count = self.active.iter().filter(|&&a| a).count();
+        if !self.active[client] || active_count <= 1 {
+            return false;
+        }
+        self.active[client] = false;
+        self.record(TraceEvent { time: t, kind: TraceKind::Leave, client });
+        true
+    }
+
+    /// A popped `RateChange { client }` at `t`. In synthesis this is
+    /// either the end of `client`'s degraded episode (matched by the
+    /// stored end-time bits) or an episode-start tick of the flaky
+    /// process; in replay it is the recorded multiplier verbatim.
+    /// Returns the client's new speed multiplier when one applies.
+    pub fn on_rate(&mut self, client: usize, t: f64, heap: &mut EventHeap) -> Option<f64> {
+        if self.source == Source::Replay {
+            let ev = self.advance_replay(heap);
+            debug_assert_eq!((ev.client, ev.time.to_bits()), (client, t.to_bits()));
+            let TraceKind::Rate { mul } = ev.kind else {
+                debug_assert!(false, "replay cursor kind mismatch");
+                return None;
+            };
+            self.record(TraceEvent { time: t, kind: TraceKind::Rate { mul }, client });
+            return Some(mul);
+        }
+        let flaky = self.flaky?;
+        if self.restore_at[client] == Some(t.to_bits()) {
+            // episode end: restore the base rate
+            self.restore_at[client] = None;
+            self.record(TraceEvent { time: t, kind: TraceKind::Rate { mul: 1.0 }, client });
+            return Some(1.0);
+        }
+        // episode-start tick. Draw this episode's length and the tick's
+        // successor from the process stream unconditionally, so the
+        // stream stays a pure function of the seed even when the tick
+        // fizzles (victim already degraded).
+        let (len, next) = match self.flaky_proc.as_mut() {
+            Some(p) => {
+                let len = exp_gap(&mut p.rng, 1.0 / flaky.mean_len);
+                let gap = exp_gap(&mut p.rng, p.rate);
+                let victim = p.rng.below(self.n);
+                (len, Some((t + gap, victim)))
+            }
+            None => (flaky.mean_len, None),
+        };
+        if let Some((mut start, victim)) = next {
+            // a start landing exactly on the victim's scheduled episode
+            // end would share its (time, rank, id) key and be misread as
+            // the end — bump one ulp (measure-zero with continuous
+            // draws; the guard makes it impossible)
+            if self.restore_at[victim] == Some(start.to_bits()) {
+                start = f64::from_bits(start.to_bits() + 1);
+            }
+            self.next_start = Some((start.to_bits(), victim));
+            heap.push(Event::new(start, EventKind::RateChange { client: victim }));
+        }
+        if self.restore_at[client].is_some() {
+            return None;
+        }
+        let mut end = t + len;
+        // symmetric key guard: the end must not collide with the one
+        // outstanding start tick either
+        if self.next_start == Some((end.to_bits(), client)) {
+            end = f64::from_bits(end.to_bits() + 1);
+        }
+        self.restore_at[client] = Some(end.to_bits());
+        heap.push(Event::new(end, EventKind::RateChange { client }));
+        let mul = 1.0 / flaky.slowdown;
+        self.record(TraceEvent { time: t, kind: TraceKind::Rate { mul }, client });
+        Some(mul)
+    }
+
+    /// The diurnal speed multiplier at virtual time `t`, applied to
+    /// work units at start time. Exactly `1.0` with no diurnal schedule
+    /// (and at `t = 0`), so static runs stay bit-identical.
+    pub fn diurnal_scale(&self, t: f64) -> f64 {
+        match self.diurnal {
+            Some(d) => diurnal_multiplier(t, d.period, d.amplitude),
+            None => 1.0,
+        }
+    }
+
+    /// `synthetic` or `replay` — the `RunResult::scenario` label.
+    pub fn source_id(&self) -> &'static str {
+        match self.source {
+            Source::Synthetic => "synthetic",
+            Source::Replay => "replay",
+        }
+    }
+
+    /// Effective (joins, leaves, rate changes) applied so far.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        (self.joins, self.leaves, self.rates)
+    }
+
+    /// The effective event stream, in drain order.
+    pub fn applied(&self) -> &[TraceEvent] {
+        &self.applied
+    }
+
+    /// Scenario-side membership view (the policy mirrors it).
+    pub fn is_active(&self, client: usize) -> bool {
+        self.active[client]
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    fn record(&mut self, ev: TraceEvent) {
+        match ev.kind {
+            TraceKind::Join => self.joins += 1,
+            TraceKind::Leave => self.leaves += 1,
+            TraceKind::Rate { .. } => self.rates += 1,
+        }
+        self.applied.push(ev);
+    }
+
+    /// Serialize the effective stream as JSONL: one header line, then
+    /// one compact object per event. `f64` times and multipliers
+    /// round-trip exactly through the shortest-representation number
+    /// writer, so parsing this text back replays bit-identically.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let mut header = BTreeMap::new();
+        header.insert("clients".to_string(), Json::Num(self.n as f64));
+        header.insert("format".to_string(), Json::Str(TRACE_FORMAT.to_string()));
+        header.insert("version".to_string(), Json::Num(TRACE_VERSION as f64));
+        out.push_str(&Json::Obj(header).to_string_compact());
+        out.push('\n');
+        for ev in &self.applied {
+            let mut o = BTreeMap::new();
+            o.insert("client".to_string(), Json::Num(ev.client as f64));
+            o.insert("t".to_string(), Json::Num(ev.time));
+            match ev.kind {
+                TraceKind::Join => {
+                    o.insert("ev".to_string(), Json::Str("join".to_string()));
+                }
+                TraceKind::Leave => {
+                    o.insert("ev".to_string(), Json::Str("leave".to_string()));
+                }
+                TraceKind::Rate { mul } => {
+                    o.insert("ev".to_string(), Json::Str("rate".to_string()));
+                    o.insert("mul".to_string(), Json::Num(mul));
+                }
+            }
+            out.push_str(&Json::Obj(o).to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the effective stream to `path` (`--trace-out`).
+    pub fn write_trace(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_jsonl())
+            .with_context(|| format!("writing scenario trace {path}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive a scenario standalone (no protocols, no merges): prime,
+    /// then pop and resolve scenario events until the cap.
+    fn drive(sc: &mut Scenario, max_pops: usize) -> Vec<TraceEvent> {
+        let mut heap = EventHeap::new();
+        sc.prime(&mut heap);
+        for _ in 0..max_pops {
+            let Some(ev) = heap.pop() else { break };
+            match ev.kind {
+                EventKind::ClientJoin { client } => {
+                    sc.on_join(client, ev.time, &mut heap);
+                }
+                EventKind::ClientLeave { client } => {
+                    sc.on_leave(client, ev.time, &mut heap);
+                }
+                EventKind::RateChange { client } => {
+                    sc.on_rate(client, ev.time, &mut heap);
+                }
+                other => panic!("engine event {other:?} in a scenario-only drive"),
+            }
+        }
+        sc.applied().to_vec()
+    }
+
+    fn churn() -> ChurnSpec {
+        "join:0.8,leave:0.6".parse().unwrap()
+    }
+
+    fn flaky_sched() -> RateScheduleSpec {
+        "flaky:0.4:10:1.5".parse().unwrap()
+    }
+
+    #[test]
+    fn scenario_churn_spec_parse_roundtrip_and_rejects_nonsense() {
+        let c: ChurnSpec = "join:0.5,leave:0.3".parse().unwrap();
+        assert_eq!(c, ChurnSpec { join: 0.5, leave: 0.3 });
+        assert_eq!(c.id().parse::<ChurnSpec>().unwrap(), c);
+        // one-sided specs are legal
+        assert_eq!(
+            "leave:0.25".parse::<ChurnSpec>().unwrap(),
+            ChurnSpec { join: 0.0, leave: 0.25 }
+        );
+        for bad in ["", "join:0,leave:0", "join:-1", "join:inf", "churn:0.5", "join=0.5"] {
+            assert!(bad.parse::<ChurnSpec>().is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn scenario_rate_schedule_parse_roundtrip_and_rejects_nonsense() {
+        let r: RateScheduleSpec = "diurnal:8:0.5+flaky:0.2:10:1.5".parse().unwrap();
+        assert_eq!(r.diurnal, Some(DiurnalSpec { period: 8.0, amplitude: 0.5 }));
+        assert_eq!(
+            r.flaky,
+            Some(FlakySpec { rate: 0.2, slowdown: 10.0, mean_len: 1.5 })
+        );
+        assert_eq!(r.id().parse::<RateScheduleSpec>().unwrap(), r);
+        let d: RateScheduleSpec = "diurnal:4:0.25".parse().unwrap();
+        assert!(d.flaky.is_none());
+        assert_eq!(d.id().parse::<RateScheduleSpec>().unwrap(), d);
+        for bad in [
+            "",
+            "diurnal:0:0.5",
+            "diurnal:8:1.0",
+            "diurnal:8:0",
+            "flaky:0:10:1",
+            "flaky:0.2:1:1",
+            "flaky:0.2:10:0",
+            "flaky:0.2:10",
+            "tide:1:2",
+            "diurnal:8:0.5+diurnal:4:0.2",
+        ] {
+            assert!(bad.parse::<RateScheduleSpec>().is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn scenario_stream_is_a_pure_function_of_the_seed() {
+        let run = |seed: u64| {
+            let mut sc = Scenario::synth(6, Some(churn()), flaky_sched(), seed);
+            drive(&mut sc, 400)
+        };
+        assert_eq!(run(7), run(7), "same seed, same effective stream");
+        assert_ne!(run(7), run(8), "seed must matter");
+    }
+
+    #[test]
+    fn scenario_guards_keep_the_fleet_nonempty_and_joins_target_absent_clients() {
+        let mut sc = Scenario::synth(5, Some(churn()), RateScheduleSpec::default(), 3);
+        let applied = drive(&mut sc, 600);
+        assert!(!applied.is_empty(), "churn at these rates must produce events");
+        let mut active = vec![true; 5];
+        let mut last_bits = 0u64;
+        for ev in &applied {
+            assert!(ev.time.to_bits() >= last_bits, "stream time regressed");
+            last_bits = ev.time.to_bits();
+            match ev.kind {
+                TraceKind::Join => {
+                    assert!(!active[ev.client], "join targeted an active client");
+                    active[ev.client] = true;
+                }
+                TraceKind::Leave => {
+                    assert!(active[ev.client], "leave targeted an absent client");
+                    assert!(
+                        active.iter().filter(|&&a| a).count() > 1,
+                        "last active client left"
+                    );
+                    active[ev.client] = false;
+                }
+                TraceKind::Rate { .. } => unreachable!("no rate schedule configured"),
+            }
+        }
+        assert!(active.iter().any(|&a| a), "fleet emptied");
+        assert_eq!(
+            sc.active_count(),
+            active.iter().filter(|&&a| a).count(),
+            "scenario membership mirrors the applied stream"
+        );
+    }
+
+    #[test]
+    fn scenario_flaky_episodes_degrade_then_restore_per_client() {
+        let mut sc = Scenario::synth(4, None, flaky_sched(), 11);
+        let applied = drive(&mut sc, 400);
+        assert!(!applied.is_empty());
+        let mut degraded = vec![false; 4];
+        for ev in &applied {
+            let TraceKind::Rate { mul } = ev.kind else {
+                unreachable!("no churn configured")
+            };
+            if mul < 1.0 {
+                assert!((mul - 0.1).abs() < 1e-12, "slowdown 10 => mul 0.1");
+                assert!(!degraded[ev.client], "episode started while degraded");
+                degraded[ev.client] = true;
+            } else {
+                assert_eq!(mul, 1.0);
+                assert!(degraded[ev.client], "restore without an episode");
+                degraded[ev.client] = false;
+            }
+        }
+    }
+
+    #[test]
+    fn trace_jsonl_roundtrip_replays_the_identical_stream() {
+        let mut sc = Scenario::synth(6, Some(churn()), flaky_sched(), 42);
+        let applied = drive(&mut sc, 500);
+        let text = sc.to_jsonl();
+        let mut replayed = Scenario::replay(6, &text).unwrap();
+        // replay applies every recorded line verbatim
+        let got = drive(&mut replayed, applied.len() + 10);
+        assert_eq!(got, applied, "replayed stream differs from the recorded one");
+        assert_eq!(replayed.source_id(), "replay");
+        // and re-serializing the replay reproduces the bytes
+        assert_eq!(replayed.to_jsonl(), text, "trace is not a serialization fixpoint");
+        assert_eq!(replayed.counts(), sc.counts());
+    }
+
+    #[test]
+    fn trace_replay_rejects_malformed_input() {
+        let header = format!(
+            "{{\"clients\":4,\"format\":\"{TRACE_FORMAT}\",\"version\":{TRACE_VERSION}}}"
+        );
+        for (bad, why) in [
+            ("".to_string(), "empty"),
+            ("{\"format\":\"other\",\"version\":1}".to_string(), "foreign format"),
+            (
+                format!("{{\"clients\":4,\"format\":\"{TRACE_FORMAT}\",\"version\":99}}"),
+                "future version",
+            ),
+            (
+                format!("{header}\n{{\"client\":9,\"ev\":\"join\",\"t\":1.0}}"),
+                "client out of range",
+            ),
+            (
+                format!(
+                    "{header}\n{{\"client\":1,\"ev\":\"leave\",\"t\":2.0}}\n\
+                     {{\"client\":2,\"ev\":\"leave\",\"t\":1.0}}"
+                ),
+                "time regression",
+            ),
+            (
+                format!("{header}\n{{\"client\":1,\"ev\":\"rate\",\"mul\":0,\"t\":1.0}}"),
+                "non-positive mul",
+            ),
+            (
+                format!("{header}\n{{\"client\":1,\"ev\":\"vanish\",\"t\":1.0}}"),
+                "unknown ev",
+            ),
+            (
+                format!("{header}\n{{\"client\":1,\"ev\":\"leave\",\"t\":-1.0}}"),
+                "negative time",
+            ),
+        ] {
+            assert!(Scenario::replay(4, &bad).is_err(), "{why}");
+        }
+    }
+
+    #[test]
+    fn scenario_diurnal_scale_is_unity_without_a_schedule_and_at_t_zero() {
+        let sc = Scenario::synth(4, Some(churn()), RateScheduleSpec::default(), 1);
+        assert_eq!(sc.diurnal_scale(0.0).to_bits(), 1.0f64.to_bits());
+        assert_eq!(sc.diurnal_scale(123.4).to_bits(), 1.0f64.to_bits());
+        let sd = Scenario::synth(4, None, "diurnal:8:0.5".parse().unwrap(), 1);
+        assert_eq!(sd.diurnal_scale(0.0).to_bits(), 1.0f64.to_bits(), "sin(0) = 0 exactly");
+        assert!((sd.diurnal_scale(2.0) - 1.5).abs() < 1e-12, "peak at quarter period");
+        assert!(sd.diurnal_scale(6.0) < 1.0, "trough at three quarters");
+    }
+}
