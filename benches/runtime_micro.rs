@@ -16,7 +16,9 @@
 //! the event-engine dispatch axis (`event_heap_events_per_s`: heap
 //! push+pop floor of the discrete-event driver), and the open-world
 //! scenario axis (`scenario_events_per_s`: seeded churn + rate-episode
-//! synthesis and drain, DESIGN.md §12): all
+//! synthesis and drain, DESIGN.md §12), and the static-analysis axis
+//! (`detlint_files_per_s`: the D01–D05 rule catalogue over the whole
+//! rust/src tree, DESIGN.md §13): all
 //! pure Rust, so they measure and check even on artifact-less runners).
 //! Default mode rewrites the file; `--check` compares against it
 //! instead — trajectories must match exactly (they are deterministic),
@@ -214,6 +216,36 @@ fn scenario_events_bench(iters: usize) -> BenchStats {
 /// Per-iteration event count of [`scenario_events_bench`].
 const SCENARIO_EVENTS_PER_ITER: f64 = 1024.0;
 
+/// Static-analysis throughput (files/s): run the detlint rule catalogue
+/// (D01–D05, DESIGN.md §13) over every file under rust/src. Sources are
+/// pre-read, so the number is pure lexer+rules cost, not IO. Tracked so
+/// the tier-1 lint pass stays effectively free as the tree grows —
+/// detlint runs inside every `cargo test -q`. Returns the stats plus the
+/// file count (the per-iteration unit, dynamic unlike the const axes).
+fn detlint_files_bench(iters: usize) -> (BenchStats, f64) {
+    let root = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src"));
+    let sources: Vec<(String, String)> = adasplit::detlint::source_files(root)
+        .expect("detlint walks rust/src")
+        .into_iter()
+        .map(|f| {
+            let src = std::fs::read_to_string(&f).expect("detlint reads rust/src");
+            (f.display().to_string(), src)
+        })
+        .collect();
+    let n = sources.len() as f64;
+    let stats = bench(
+        &format!("lint: detlint full tree ({} files)", sources.len()),
+        1,
+        iters,
+        || {
+            for (path, src) in &sources {
+                std::hint::black_box(adasplit::detlint::lint_source(path, src));
+            }
+        },
+    );
+    (stats, n)
+}
+
 fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
     let md = tracked
         .opt("async_sim_time")
@@ -255,6 +287,11 @@ fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
         "tracked {TRACK_FILE} is missing `scenario_events_per_s` \
          (open-world scenario axis); re-record with the bench"
     );
+    anyhow::ensure!(
+        tracked.opt("detlint_files_per_s").is_some(),
+        "tracked {TRACK_FILE} is missing `detlint_files_per_s` \
+         (static-analysis axis); re-record with the bench"
+    );
     let old: Vec<f64> = md
         .as_arr()?
         .iter()
@@ -292,6 +329,7 @@ fn results_json(
     shard_store: &BenchStats,
     event_heap: &BenchStats,
     scenario: &BenchStats,
+    detlint: (&BenchStats, f64),
     n_par: usize,
     quick: bool,
 ) -> Json {
@@ -341,6 +379,7 @@ fn results_json(
         "scenario_events_per_s".into(),
         Json::Num(SCENARIO_EVENTS_PER_ITER / scenario.mean_s),
     );
+    m.insert("detlint_files_per_s".into(), Json::Num(detlint.1 / detlint.0.mean_s));
     Json::Obj(m)
 }
 
@@ -458,6 +497,8 @@ fn main() -> anyhow::Result<()> {
     stats.push(event_heap.clone());
     let scenario = scenario_events_bench(iters);
     stats.push(scenario.clone());
+    let (detlint, detlint_files) = detlint_files_bench(iters);
+    stats.push(detlint.clone());
     stats.push(bench("coord: UCB select+update x1000", 1, iters, || {
         let mut ucb = UcbOrchestrator::new(5, 0.87);
         for t in 0..1000u64 {
@@ -624,6 +665,7 @@ fn main() -> anyhow::Result<()> {
             &shard_store,
             &event_heap,
             &scenario,
+            (&detlint, detlint_files),
             n_par,
             quick_mode(),
         );

@@ -262,6 +262,7 @@ impl Partition {
             shard
                 .get_mut()
                 .expect("partition lock")
+                // detlint: allow(D01, per-id membership predicate: visit order cannot affect which entries survive)
                 .retain(|id, _| keep.binary_search(id).is_ok());
         }
         self.keep = Some(keep.to_vec());
@@ -276,6 +277,7 @@ impl Partition {
             .flat_map(|s| {
                 s.read()
                     .expect("partition lock")
+                    // detlint: allow(D01, ids are collected then sort_unstable'd below before anyone sees them)
                     .keys()
                     .copied()
                     .collect::<Vec<_>>()

@@ -1,0 +1,465 @@
+//! Line-preserving source masking for the determinism linter.
+//!
+//! `detlint` (DESIGN.md §13) is a lexical pass, not a full parser: every
+//! rule operates on a *masked* view of the source in which comment text,
+//! string contents, and char-literal contents are blanked out (replaced
+//! by spaces) while all code tokens and the line structure survive
+//! byte-for-byte. That single transformation is what makes naive token
+//! search sound: a rule pattern such as a wall-clock call or a map
+//! iteration method can no longer match inside a doc comment, an error
+//! message, or a test-name string. Comment text is captured separately,
+//! per line, because two rules read it on purpose (`SAFETY:` comments
+//! for D04, and the allow-directive escape hatch).
+//!
+//! The scanner understands the full Rust literal surface that appears in
+//! this repo: line comments, nested block comments, plain and raw
+//! strings (`r#"…"#`), byte strings, char and byte-char literals with
+//! escapes, and the `'a`-vs-`'x'` lifetime/char ambiguity.
+
+/// A masked view of one source file.
+pub struct Masked {
+    /// Source with comment text and literal contents blanked to spaces.
+    /// Same length and identical newline positions as the input, so any
+    /// byte offset maps to the same line in both views.
+    pub code: String,
+    /// Comment text captured per 0-based line (line + block comments on
+    /// that line, concatenated). Empty string = no comment on the line.
+    pub comments: Vec<String>,
+}
+
+struct Scanner {
+    code: String,
+    comments: Vec<String>,
+    line: usize,
+}
+
+impl Scanner {
+    fn new(cap: usize) -> Self {
+        Self { code: String::with_capacity(cap), comments: vec![String::new()], line: 0 }
+    }
+
+    /// Emit a code character verbatim (tracks line structure).
+    fn code_ch(&mut self, c: char) {
+        self.code.push(c);
+        if c == '\n' {
+            self.newline();
+        }
+    }
+
+    /// Emit a blanked (masked) character: newlines survive, everything
+    /// else becomes a space of the same char count.
+    fn blank_ch(&mut self, c: char) {
+        if c == '\n' {
+            self.code.push('\n');
+            self.newline();
+        } else {
+            self.code.push(' ');
+        }
+    }
+
+    /// Record a character of comment text on the current line (and blank
+    /// it in the code view).
+    fn comment_ch(&mut self, c: char) {
+        if c == '\n' {
+            self.code.push('\n');
+            self.newline();
+        } else {
+            self.code.push(' ');
+            self.comments[self.line].push(c);
+        }
+    }
+
+    fn newline(&mut self) {
+        self.line += 1;
+        self.comments.push(String::new());
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Mask one source file. See the module docs for the contract.
+pub fn mask(src: &str) -> Masked {
+    let chars: Vec<char> = src.chars().collect();
+    let mut s = Scanner::new(src.len());
+    // whether the previous *code* char continues an identifier — used to
+    // tell the raw-string prefix `r"` from an identifier ending in `r`
+    let mut prev_ident = false;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        match c {
+            '/' if next == Some('/') => {
+                s.blank_ch('/');
+                s.blank_ch('/');
+                i += 2;
+                while i < chars.len() && chars[i] != '\n' {
+                    s.comment_ch(chars[i]);
+                    i += 1;
+                }
+                prev_ident = false;
+            }
+            '/' if next == Some('*') => {
+                s.blank_ch('/');
+                s.blank_ch('*');
+                i += 2;
+                let mut depth = 1usize;
+                while i < chars.len() && depth > 0 {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        s.comment_ch('/');
+                        s.comment_ch('*');
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        s.blank_ch('*');
+                        s.blank_ch('/');
+                        i += 2;
+                    } else {
+                        s.comment_ch(chars[i]);
+                        i += 1;
+                    }
+                }
+                prev_ident = false;
+            }
+            '"' => {
+                i = scan_string(&chars, i, &mut s);
+                prev_ident = false;
+            }
+            'r' if !prev_ident && raw_string_hashes(&chars, i + 1).is_some() => {
+                let hashes = raw_string_hashes(&chars, i + 1).unwrap_or(0);
+                s.code_ch('r');
+                i = scan_raw_string(&chars, i + 1, hashes, &mut s);
+                prev_ident = false;
+            }
+            'b' if !prev_ident && next == Some('"') => {
+                s.code_ch('b');
+                i = scan_string(&chars, i + 1, &mut s);
+                prev_ident = false;
+            }
+            'b' if !prev_ident && next == Some('\'') => {
+                s.code_ch('b');
+                i = scan_char_literal(&chars, i + 1, &mut s);
+                prev_ident = false;
+            }
+            'b' if !prev_ident
+                && next == Some('r')
+                && raw_string_hashes(&chars, i + 2).is_some() =>
+            {
+                let hashes = raw_string_hashes(&chars, i + 2).unwrap_or(0);
+                s.code_ch('b');
+                s.code_ch('r');
+                i = scan_raw_string(&chars, i + 2, hashes, &mut s);
+                prev_ident = false;
+            }
+            '\'' => {
+                // lifetime (`'a`, `'static`) vs char literal (`'x'`,
+                // `'\n'`): a backslash or a close-quote two chars ahead
+                // means char literal; an identifier char NOT followed by
+                // a close quote means lifetime.
+                let is_char_lit = match next {
+                    Some('\\') => true,
+                    Some(n) if is_ident(n) => chars.get(i + 2) == Some(&'\''),
+                    Some(_) => true,
+                    None => false,
+                };
+                if is_char_lit {
+                    i = scan_char_literal(&chars, i, &mut s);
+                } else {
+                    s.code_ch('\'');
+                    i += 1;
+                }
+                prev_ident = false;
+            }
+            _ => {
+                s.code_ch(c);
+                prev_ident = is_ident(c);
+                i += 1;
+            }
+        }
+    }
+    Masked { code: s.code, comments: s.comments }
+}
+
+/// If `chars[from..]` starts `#*"` (zero or more hashes then a quote),
+/// return the hash count — i.e. `from` sits right after a raw-string
+/// `r` / `br` prefix.
+fn raw_string_hashes(chars: &[char], from: usize) -> Option<usize> {
+    let mut n = 0;
+    let mut j = from;
+    while chars.get(j) == Some(&'#') {
+        n += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(n)
+    } else {
+        None
+    }
+}
+
+/// Scan a plain string starting at the opening quote; returns the index
+/// just past the closing quote. Contents are blanked; delimiters kept.
+fn scan_string(chars: &[char], open: usize, s: &mut Scanner) -> usize {
+    s.code_ch('"');
+    let mut i = open + 1;
+    while i < chars.len() {
+        match chars[i] {
+            '\\' => {
+                s.blank_ch('\\');
+                i += 1;
+                if i < chars.len() {
+                    s.blank_ch(chars[i]);
+                    i += 1;
+                }
+            }
+            '"' => {
+                s.code_ch('"');
+                return i + 1;
+            }
+            c => {
+                s.blank_ch(c);
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+/// Scan a raw string whose hashes start at `from` (right after the `r`);
+/// returns the index just past the closing delimiter.
+fn scan_raw_string(chars: &[char], from: usize, hashes: usize, s: &mut Scanner) -> usize {
+    let mut i = from;
+    for _ in 0..hashes {
+        s.code_ch('#');
+        i += 1;
+    }
+    s.code_ch('"');
+    i += 1;
+    while i < chars.len() {
+        if chars[i] == '"' && (0..hashes).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+            s.code_ch('"');
+            i += 1;
+            for _ in 0..hashes {
+                s.code_ch('#');
+                i += 1;
+            }
+            return i;
+        }
+        s.blank_ch(chars[i]);
+        i += 1;
+    }
+    i
+}
+
+/// Scan a char (or byte-char) literal starting at the opening quote;
+/// returns the index just past the closing quote.
+fn scan_char_literal(chars: &[char], open: usize, s: &mut Scanner) -> usize {
+    s.code_ch('\'');
+    let mut i = open + 1;
+    if chars.get(i) == Some(&'\\') {
+        s.blank_ch('\\');
+        i += 1;
+        if i < chars.len() {
+            s.blank_ch(chars[i]);
+            i += 1;
+        }
+    } else if i < chars.len() {
+        s.blank_ch(chars[i]);
+        i += 1;
+    }
+    if chars.get(i) == Some(&'\'') {
+        s.code_ch('\'');
+        i += 1;
+    }
+    i
+}
+
+// ---- line & region helpers -------------------------------------------------
+
+/// Byte offsets where each line starts (line 0 starts at 0).
+pub fn line_starts(code: &str) -> Vec<usize> {
+    let mut starts = vec![0usize];
+    for (i, b) in code.bytes().enumerate() {
+        if b == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+/// 0-based line containing byte offset `pos`.
+pub fn line_of(starts: &[usize], pos: usize) -> usize {
+    match starts.binary_search(&pos) {
+        Ok(l) => l,
+        Err(l) => l - 1,
+    }
+}
+
+/// Per-line flag: is this line inside a `#[cfg(test)]` item? Detected by
+/// brace-matching forward from each `#[cfg(test)]` attribute in the
+/// *masked* code (so the attribute text can't match inside a string). An
+/// item that ends in `;` before any `{` (e.g. a cfg'd `use`) covers just
+/// the statement's lines.
+pub fn test_line_mask(code: &str) -> Vec<bool> {
+    let starts = line_starts(code);
+    let n_lines = starts.len();
+    let mut mask = vec![false; n_lines];
+    let bytes = code.as_bytes();
+    for (pos, _) in code.match_indices("#[cfg(test)]") {
+        let attr_line = line_of(&starts, pos);
+        let mut j = pos + "#[cfg(test)]".len();
+        // scan forward to the item's opening `{` (or terminating `;`)
+        let mut open = None;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => {
+                    open = Some(j);
+                    break;
+                }
+                b';' => break,
+                _ => j += 1,
+            }
+        }
+        let end = match open {
+            Some(open_pos) => {
+                let mut depth = 0usize;
+                let mut k = open_pos;
+                loop {
+                    if k >= bytes.len() {
+                        break bytes.len().saturating_sub(1);
+                    }
+                    match bytes[k] {
+                        b'{' => depth += 1,
+                        b'}' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break k;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+            }
+            None => j.min(bytes.len().saturating_sub(1)),
+        };
+        let end_line = line_of(&starts, end);
+        for flag in mask.iter_mut().take(end_line + 1).skip(attr_line) {
+            *flag = true;
+        }
+    }
+    mask
+}
+
+/// 0-based (start, end) line spans of the bodies of functions named
+/// `name` in the masked code (used for the D05 `tree_reduce` exemption).
+pub fn fn_body_lines(code: &str, name: &str) -> Vec<(usize, usize)> {
+    let starts = line_starts(code);
+    let bytes = code.as_bytes();
+    let needle = format!("fn {name}");
+    let mut spans = Vec::new();
+    for (pos, _) in code.match_indices(&needle) {
+        // token check: `fn` must not continue an identifier, and the name
+        // must end at a non-identifier char
+        if pos > 0 && is_ident(code[..pos].chars().next_back().unwrap_or(' ')) {
+            continue;
+        }
+        let after = pos + needle.len();
+        if code[after..].chars().next().is_some_and(is_ident) {
+            continue;
+        }
+        let mut j = after;
+        while j < bytes.len() && bytes[j] != b'{' && bytes[j] != b';' {
+            j += 1;
+        }
+        if j >= bytes.len() || bytes[j] == b';' {
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut k = j;
+        let close = loop {
+            if k >= bytes.len() {
+                break bytes.len().saturating_sub(1);
+            }
+            match bytes[k] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break k;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        };
+        spans.push((line_of(&starts, pos), line_of(&starts, close)));
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_comments_and_strings_preserving_lines() {
+        let src = "let a = \"HashMap text\"; // trailing HashMap\nlet b = 2;\n";
+        let m = mask(src);
+        assert_eq!(m.code.lines().count(), src.lines().count());
+        assert!(!m.code.contains("HashMap"), "masked: {:?}", m.code);
+        assert!(m.comments[0].contains("trailing HashMap"));
+        assert_eq!(m.comments[1], "");
+        // delimiters survive so token boundaries stay visible
+        assert!(m.code.contains("let a = \"            \";"));
+    }
+
+    #[test]
+    fn masks_nested_block_comments_and_raw_strings() {
+        let src = "/* outer /* inner thread_rng */ still */ let x = r#\"SystemTime::now\"#;\n";
+        let m = mask(src);
+        assert!(!m.code.contains("thread_rng"));
+        assert!(!m.code.contains("SystemTime"));
+        assert!(m.comments[0].contains("inner thread_rng"));
+        assert!(m.code.contains("let x = r#\""));
+    }
+
+    #[test]
+    fn distinguishes_lifetimes_from_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = 'x'; let n = '\\n'; c }\n";
+        let m = mask(src);
+        assert!(m.code.contains("&'a str"), "lifetime must survive: {:?}", m.code);
+        assert!(!m.code.contains("'x'"), "char contents blanked: {:?}", m.code);
+        assert!(m.code.contains("let c = ' '"));
+    }
+
+    #[test]
+    fn byte_literals_and_ident_suffix_r() {
+        let src = "let tr = b\"bytes\"; let c = b' '; let var = tr;\n";
+        let m = mask(src);
+        assert!(!m.code.contains("bytes"));
+        assert!(m.code.contains("let var = tr;"), "ident ending in r untouched");
+    }
+
+    #[test]
+    fn cfg_test_region_spans_the_braced_item() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let m = mask(src);
+        let t = test_line_mask(&m.code);
+        assert_eq!(t, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn fn_body_lines_finds_braced_bodies() {
+        let src = "fn other() {}\nfn tree_reduce(x: u8) -> u8 {\n    x\n}\nfn next() {}\n";
+        let m = mask(src);
+        let spans = fn_body_lines(&m.code, "tree_reduce");
+        assert_eq!(spans, vec![(1, 3)]);
+        // `tree_reduce2` must not match `tree_reduce`
+        let spans2 = fn_body_lines("fn tree_reduce2() {}\n", "tree_reduce");
+        assert!(spans2.is_empty());
+    }
+}

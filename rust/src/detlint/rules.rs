@@ -1,0 +1,622 @@
+//! The determinism rule catalogue (D01–D05) and the allow-directive
+//! escape hatch, evaluated over a [`lexer::Masked`] view of one file.
+//!
+//! Every pass works on masked code (comments and literal contents
+//! blanked), so patterns never match inside strings or docs. Rules that
+//! read comment *text* on purpose — `SAFETY:` for D04, allow directives
+//! for suppression — use the per-line comment capture.
+//!
+//! The catalogue (DESIGN.md §13):
+//! * **D01** — no iteration over `HashMap`/`HashSet` outside
+//!   `#[cfg(test)]`: map order is nondeterministic, and every merge /
+//!   report path must be a pure function of the seeded config.
+//! * **D02** — no `Instant::now` / `SystemTime::now` under `sim/`,
+//!   `driver/`, `engine/`: wall clock must never reach results.
+//! * **D03** — no `thread_rng` / `from_entropy` / `rand::random` /
+//!   `OsRng` anywhere (tests included): all RNG derives from seeds.
+//! * **D04** — every `unsafe` block and `unsafe impl` carries a
+//!   `// SAFETY:` comment (the static half of the soundness story; CI
+//!   also denies `clippy::undocumented_unsafe_blocks`).
+//! * **D05** — no unordered float reduction (`.sum()` / `.fold(`) in
+//!   engine/driver merge paths outside `tree_reduce`; min/max folds and
+//!   integer-annotated sums are order-insensitive and exempt.
+//!
+//! Suppression: `// detlint: allow(D05, <reason>)` on the flagged line
+//! or the line directly above. A directive with an unknown rule id or an
+//! empty reason is itself a finding (**D00**) — the escape hatch cannot
+//! be used without a justification.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{self, Masked};
+use super::{Finding, Rule};
+
+/// Lint one file's source text under its (possibly virtual) repo path.
+/// Returns findings with 1-based lines, sorted by (line, rule).
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let masked = lexer::mask(src);
+    let test_lines = lexer::test_line_mask(&masked.code);
+    let (allows, mut findings) = parse_allow_directives(path, &masked.comments);
+
+    // keyed on (line, rule) so the D01 sub-checks can't double-report
+    // one site they both catch
+    let mut raw: BTreeMap<(usize, Rule), String> = BTreeMap::new();
+    check_d01_map_iteration(&masked, &test_lines, &mut raw);
+    check_d02_wall_clock(path, &masked, &test_lines, &mut raw);
+    check_d03_ambient_entropy(&masked, &mut raw);
+    check_d04_undocumented_unsafe(&masked, &test_lines, &mut raw);
+    check_d05_float_reduction(path, &masked, &test_lines, &mut raw);
+
+    for ((line, rule), msg) in raw {
+        let suppressed = allows
+            .get(&line)
+            .or_else(|| line.checked_sub(1).and_then(|l| allows.get(&l)))
+            .is_some_and(|set| set.contains(&rule));
+        if !suppressed {
+            findings.push(Finding { rule, path: path.to_string(), line: line + 1, msg });
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+// ---- allow directives ------------------------------------------------------
+
+/// Parse allow directives (shaped `detlint: allow(D05, <reason>)`) out
+/// of per-line comment text. Valid directives populate the allow map
+/// (0-based line → allowed rules); malformed ones become D00 findings
+/// immediately.
+fn parse_allow_directives(
+    path: &str,
+    comments: &[String],
+) -> (BTreeMap<usize, BTreeSet<Rule>>, Vec<Finding>) {
+    let mut allows: BTreeMap<usize, BTreeSet<Rule>> = BTreeMap::new();
+    let mut findings = Vec::new();
+    for (line, comment) in comments.iter().enumerate() {
+        let Some(at) = comment.find("detlint:") else { continue };
+        let rest = comment[at + "detlint:".len()..].trim_start();
+        let bad = |why: &str| Finding {
+            rule: Rule::D00,
+            path: path.to_string(),
+            line: line + 1,
+            msg: format!("malformed detlint directive ({why}): `{}`", comment.trim()),
+        };
+        let Some(args) = rest.strip_prefix("allow(") else {
+            findings.push(bad("expected `allow(<rule>, <reason>)`"));
+            continue;
+        };
+        let Some(close) = args.find(')') else {
+            findings.push(bad("unterminated allow(...)"));
+            continue;
+        };
+        let inner = &args[..close];
+        let (rule_txt, reason) = match inner.split_once(',') {
+            Some((r, why)) => (r.trim(), why.trim()),
+            None => (inner.trim(), ""),
+        };
+        let rule = Rule::parse(rule_txt);
+        match rule {
+            Some(rule) if rule != Rule::D00 && !reason.is_empty() => {
+                allows.entry(line).or_default().insert(rule);
+            }
+            Some(Rule::D00) => findings.push(bad("D00 itself cannot be allowed")),
+            Some(_) => findings.push(bad("missing justification string")),
+            None => findings.push(bad("unknown rule id")),
+        }
+    }
+    (allows, findings)
+}
+
+// ---- shared scanning helpers -----------------------------------------------
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Occurrences of `pat` in `code` at identifier boundaries: the char
+/// before the match and the char after it must not extend an identifier.
+/// (A `:` before the match is fine — `std::time::Instant::now` must
+/// still match the `Instant::now` pattern.)
+fn token_positions(code: &str, pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (pos, _) in code.match_indices(pat) {
+        let before_ok = pos == 0 || !is_ident(code[..pos].chars().next_back().unwrap_or(' '));
+        let after_ok = !code[pos + pat.len()..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            out.push(pos);
+        }
+    }
+    out
+}
+
+fn in_dirs(path: &str, dirs: &[&str]) -> bool {
+    let p = path.replace('\\', "/");
+    dirs.iter().any(|d| p.contains(&format!("/{d}/")) || p.starts_with(&format!("{d}/")))
+}
+
+/// The identifier ending at byte `end` (exclusive), if any.
+fn ident_before(code: &str, end: usize) -> Option<&str> {
+    let mut start = end;
+    for (i, c) in code[..end].char_indices().rev() {
+        if is_ident(c) {
+            start = i;
+        } else {
+            break;
+        }
+    }
+    (start < end).then(|| &code[start..end])
+}
+
+/// Skip whitespace backward from byte `end` (exclusive); returns the new
+/// exclusive end.
+fn skip_ws_back(code: &str, end: usize) -> usize {
+    let mut e = end;
+    for (i, c) in code[..end].char_indices().rev() {
+        if c.is_whitespace() {
+            e = i;
+        } else {
+            break;
+        }
+    }
+    e
+}
+
+// ---- D01: HashMap/HashSet iteration ----------------------------------------
+
+/// Wrapper types that are transparent for "what is the outermost
+/// collection here" purposes: `cache: Mutex<HashMap<..>>` declares a
+/// hash-map-shaped `cache`, but `shards: Vec<RwLock<HashMap<..>>>` is a
+/// Vec (iterating *it* is ordered and fine).
+const TYPE_WRAPPERS: [&str; 7] = ["Mutex", "RwLock", "Arc", "Box", "Option", "Rc", "RefCell"];
+
+/// Methods that iterate a map/set in storage order.
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// Iteration methods searched chain-wide (sub-check b): these only ever
+/// exist on map/set-like receivers, so they are suspicious in any file
+/// that mentions `HashMap`/`HashSet`, even when the receiver reached
+/// them through an untyped closure or lock-guard binding.
+const CHAIN_METHODS: [&str; 7] =
+    ["keys", "values", "values_mut", "into_keys", "into_values", "drain", "retain"];
+
+/// Names declared with the given collections as their outermost type
+/// (after stripping [`TYPE_WRAPPERS`], `&`, `mut`, lifetimes), via
+/// either a type annotation (`name: Mutex<HashMap<..>>`) or a direct
+/// constructor binding (`let name = HashMap::new()`).
+fn declared_names(code: &str, collections: [&str; 2]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for coll in collections {
+        for pos in token_positions(code, coll) {
+            // constructor binding: `name = HashMap::new()` (etc.)
+            if code[pos + coll.len()..].starts_with("::") {
+                let e = skip_ws_back(code, pos);
+                if code[..e].ends_with('=') {
+                    let e = skip_ws_back(code, e - 1);
+                    if let Some(name) = ident_before(code, e) {
+                        names.insert(name.to_string());
+                    }
+                }
+                continue;
+            }
+            // type annotation: walk back over wrapper generics to the `:`
+            if let Some(name) = annotated_name(code, pos) {
+                names.insert(name);
+            }
+        }
+    }
+    names
+}
+
+/// If the collection token at `pos` is the outermost type of a
+/// `name: <wrappers...><Collection>` annotation, return the name.
+fn annotated_name(code: &str, pos: usize) -> Option<String> {
+    let mut e = skip_ws_back(code, pos);
+    loop {
+        let before = &code[..e];
+        if before.ends_with('<') {
+            // a wrapper's generic bracket: the path segment before it
+            // must be a transparent wrapper
+            let seg_end = skip_ws_back(code, e - 1);
+            let seg = ident_before(code, seg_end)?;
+            if !TYPE_WRAPPERS.contains(&seg) {
+                return None;
+            }
+            let mut s = seg_end - seg.len();
+            // strip a leading path qualifier (`std::sync::Mutex<`)
+            while code[..s].ends_with("::") {
+                s = skip_ws_back(code, s - 2);
+                let q = ident_before(code, s)?;
+                s -= q.len();
+            }
+            e = skip_ws_back(code, s);
+        } else if before.ends_with('&') {
+            e = skip_ws_back(code, e - 1);
+        } else if (before.ends_with("mut") || before.ends_with("dyn"))
+            && !code[..e - 3].chars().next_back().is_some_and(is_ident)
+        {
+            e = skip_ws_back(code, e - 3);
+        } else if before.ends_with("::") {
+            // path qualifier on the collection itself
+            e = skip_ws_back(code, e - 2);
+            let q = ident_before(code, e)?;
+            e = skip_ws_back(code, e - q.len());
+        } else if before.ends_with(':') {
+            // the annotation colon — the name sits just before it
+            let ne = skip_ws_back(code, e - 1);
+            return ident_before(code, ne).map(str::to_string);
+        } else {
+            return None;
+        }
+    }
+}
+
+fn check_d01_map_iteration(
+    masked: &Masked,
+    test_lines: &[bool],
+    out: &mut BTreeMap<(usize, Rule), String>,
+) {
+    let code = &masked.code;
+    let mentions_hash =
+        !token_positions(code, "HashMap").is_empty() || !token_positions(code, "HashSet").is_empty();
+    if !mentions_hash {
+        return;
+    }
+    let starts = lexer::line_starts(code);
+    let hash_names = declared_names(code, ["HashMap", "HashSet"]);
+    let btree_names = declared_names(code, ["BTreeMap", "BTreeSet"]);
+    let mut flag = |pos: usize, what: &str| {
+        let line = lexer::line_of(&starts, pos);
+        if !test_lines.get(line).copied().unwrap_or(false) {
+            out.entry((line, Rule::D01)).or_insert_with(|| {
+                format!("{what} iterates a HashMap/HashSet outside #[cfg(test)] (order-nondeterministic)")
+            });
+        }
+    };
+
+    // (a) declared-name taint: `name.iter()` / `for _ in name`
+    for name in &hash_names {
+        for pos in token_positions(code, name) {
+            let after = &code[pos + name.len()..];
+            if let Some(rest) = after.strip_prefix('.') {
+                if let Some(m) = rest.split(|c: char| !is_ident(c)).next() {
+                    if ITER_METHODS.contains(&m) && rest[m.len()..].starts_with('(') {
+                        flag(pos, &format!("`{name}.{m}()`"));
+                    }
+                }
+            }
+            // `for x in name` / `for x in &name` / `for x in &mut name`
+            let mut e = skip_ws_back(code, pos);
+            while code[..e].ends_with('&') || code[..e].ends_with("mut") {
+                e = if code[..e].ends_with('&') {
+                    skip_ws_back(code, e - 1)
+                } else {
+                    skip_ws_back(code, e - 3)
+                };
+            }
+            if ident_before(code, e) == Some("in") {
+                flag(pos, &format!("`for _ in {name}`"));
+            }
+        }
+    }
+
+    // (b) chain methods that only exist on map/set receivers, reached
+    // through untyped bindings (lock guards, closure params): flag
+    // unless the receiver chain names a BTree-declared binding
+    for m in CHAIN_METHODS {
+        let pat = format!(".{m}(");
+        for (pos, _) in code.match_indices(&pat) {
+            let chain_start = chain_start(code, pos);
+            let chain = &code[chain_start..pos];
+            let exempt = chain
+                .split(|c: char| !is_ident(c))
+                .any(|id| !id.is_empty() && btree_names.contains(id));
+            if !exempt {
+                flag(pos, &format!("`.{m}()`"));
+            }
+        }
+    }
+}
+
+/// Start of the receiver-chain expression ending at the `.` at `dot`:
+/// scan back over idents, `.`/`(`/`)`/`[`/`]`/`?`/`&`/`*`, masked-string
+/// quotes, and intra-line spaces. Stops at a newline so an unrelated
+/// earlier expression can't leak exempting names into the chain.
+fn chain_start(code: &str, dot: usize) -> usize {
+    let mut start = dot;
+    for (i, c) in code[..dot].char_indices().rev() {
+        let chain_ch = is_ident(c)
+            || matches!(c, '.' | '(' | ')' | '[' | ']' | '?' | '&' | '*' | '"' | ' ' | '\t');
+        if chain_ch {
+            start = i;
+        } else {
+            break;
+        }
+    }
+    start
+}
+
+// ---- D02: wall clock -------------------------------------------------------
+
+fn check_d02_wall_clock(
+    path: &str,
+    masked: &Masked,
+    test_lines: &[bool],
+    out: &mut BTreeMap<(usize, Rule), String>,
+) {
+    if !in_dirs(path, &["sim", "driver", "engine"]) {
+        return;
+    }
+    let starts = lexer::line_starts(&masked.code);
+    for pat in ["Instant::now", "SystemTime::now"] {
+        for pos in token_positions(&masked.code, pat) {
+            let line = lexer::line_of(&starts, pos);
+            if !test_lines.get(line).copied().unwrap_or(false) {
+                out.entry((line, Rule::D02)).or_insert_with(|| {
+                    format!("`{pat}` in a deterministic module: wall clock must never reach results (use the seeded virtual clock)")
+                });
+            }
+        }
+    }
+}
+
+// ---- D03: ambient entropy --------------------------------------------------
+
+fn check_d03_ambient_entropy(masked: &Masked, out: &mut BTreeMap<(usize, Rule), String>) {
+    let starts = lexer::line_starts(&masked.code);
+    for pat in ["thread_rng", "from_entropy", "rand::random", "OsRng"] {
+        for pos in token_positions(&masked.code, pat) {
+            let line = lexer::line_of(&starts, pos);
+            out.entry((line, Rule::D03)).or_insert_with(|| {
+                format!("`{pat}` is an ambient entropy source: all RNG must derive from the run seed (tests included)")
+            });
+        }
+    }
+}
+
+// ---- D04: undocumented unsafe ----------------------------------------------
+
+fn check_d04_undocumented_unsafe(
+    masked: &Masked,
+    test_lines: &[bool],
+    out: &mut BTreeMap<(usize, Rule), String>,
+) {
+    let code = &masked.code;
+    let starts = lexer::line_starts(code);
+    let code_lines: Vec<&str> = code.lines().collect();
+    for pos in token_positions(code, "unsafe") {
+        let line = lexer::line_of(&starts, pos);
+        if test_lines.get(line).copied().unwrap_or(false) {
+            continue;
+        }
+        let after = code[pos + "unsafe".len()..].trim_start();
+        let what = if after.starts_with('{') {
+            "unsafe block"
+        } else if after.starts_with("impl") {
+            "unsafe impl"
+        } else {
+            // `unsafe fn` / `unsafe extern` / `unsafe trait` declarations
+            // mark a contract for *callers*; D04 documents discharge
+            // sites (blocks and impls), matching clippy's lint.
+            continue;
+        };
+        if !has_safety_comment(masked, &code_lines, line) {
+            out.entry((line, Rule::D04)).or_insert_with(|| {
+                format!("{what} without a `// SAFETY:` comment stating the invariant that makes it sound")
+            });
+        }
+    }
+}
+
+/// A `SAFETY:` comment counts if it is on the `unsafe` line itself or in
+/// the contiguous comment/attribute block directly above it.
+fn has_safety_comment(masked: &Masked, code_lines: &[&str], line: usize) -> bool {
+    if masked.comments.get(line).is_some_and(|c| c.contains("SAFETY:")) {
+        return true;
+    }
+    let mut l = line;
+    while l > 0 {
+        l -= 1;
+        let comment = masked.comments.get(l).map(String::as_str).unwrap_or("");
+        if comment.contains("SAFETY:") {
+            return true;
+        }
+        let code_trim = code_lines.get(l).map(|s| s.trim()).unwrap_or("");
+        let continues = !comment.is_empty() || code_trim.is_empty() || code_trim.starts_with("#[");
+        if !continues {
+            return false;
+        }
+    }
+    false
+}
+
+// ---- D05: unordered float reduction ----------------------------------------
+
+fn check_d05_float_reduction(
+    path: &str,
+    masked: &Masked,
+    test_lines: &[bool],
+    out: &mut BTreeMap<(usize, Rule), String>,
+) {
+    if !in_dirs(path, &["engine", "driver"]) {
+        return;
+    }
+    let code = &masked.code;
+    let starts = lexer::line_starts(code);
+    let tree_reduce_spans = lexer::fn_body_lines(code, "tree_reduce");
+    let exempt_line = |line: usize| {
+        test_lines.get(line).copied().unwrap_or(false)
+            || tree_reduce_spans.iter().any(|&(a, b)| line >= a && line <= b)
+    };
+    let mut flag = |pos: usize, msg: String| {
+        let line = lexer::line_of(&starts, pos);
+        if !exempt_line(line) {
+            out.entry((line, Rule::D05)).or_insert(msg);
+        }
+    };
+
+    for (pos, _) in code.match_indices(".sum") {
+        let after = &code[pos + ".sum".len()..];
+        if let Some(ty) = after.strip_prefix("::<").and_then(|t| t.split('>').next()) {
+            if ty.contains("f32") || ty.contains("f64") {
+                flag(pos, format!("`.sum::<{ty}>()` is an unordered float reduction in a merge path: use tree_reduce (or annotate an integer sum type)"));
+            }
+            // integer turbofish documents an order-insensitive sum
+        } else if after.starts_with("()") {
+            flag(
+                pos,
+                "`.sum()` in a merge path: float sums are order-sensitive — use tree_reduce, or make order-insensitivity explicit (`.sum::<usize>()` / allow)".to_string(),
+            );
+        }
+    }
+
+    for (pos, _) in code.match_indices(".fold(") {
+        let args_from = pos + ".fold(".len();
+        let args = balanced_paren_span(code, args_from - 1);
+        // min/max combiners are order-insensitive (NaN-seeded reductions
+        // like `.fold(f64::NAN, f64::max)` are the repo's eval idiom)
+        if args.contains("::max") || args.contains("::min") || args.contains(".max(") || args.contains(".min(") {
+            continue;
+        }
+        flag(
+            pos,
+            "`.fold(...)` in a merge path: sequential float folds are order-sensitive — use tree_reduce (min/max combiners are exempt)".to_string(),
+        );
+    }
+}
+
+/// The text inside the paren opening at `open` (balanced; clipped at EOF).
+fn balanced_paren_span(code: &str, open: usize) -> &str {
+    let bytes = code.as_bytes();
+    let mut depth = 0usize;
+    for (k, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return &code[open + 1..k];
+                }
+            }
+            _ => {}
+        }
+    }
+    &code[open + 1..]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(path: &str, src: &str) -> Vec<(Rule, usize)> {
+        lint_source(path, src).into_iter().map(|f| (f.rule, f.line)).collect()
+    }
+
+    #[test]
+    fn d01_flags_tainted_iteration_and_chain_methods() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u32>) -> u32 {\n\
+                   \x20   m.iter().map(|(_, v)| v).sum()\n\
+                   }\n";
+        assert_eq!(rules_of("rust/src/metrics/x.rs", src), vec![(Rule::D01, 3)]);
+
+        // chain method through an untyped lock-guard binding
+        let src = "use std::collections::HashMap;\n\
+                   fn g(shard: &mut Shard) {\n\
+                   \x20   shard.get_mut().expect(\"lock\").retain(|_, _| true);\n\
+                   }\n";
+        assert_eq!(rules_of("rust/src/metrics/x.rs", src), vec![(Rule::D01, 3)]);
+    }
+
+    #[test]
+    fn d01_exempts_btree_vec_and_tests() {
+        // BTreeMap chains, Vec-outermost declarations, and test regions
+        let src = "use std::collections::{BTreeMap, HashMap};\n\
+                   struct S { parts: BTreeMap<u32, u32>, shards: Vec<HashMap<u32, u32>> }\n\
+                   impl S {\n\
+                   \x20   fn ok(&self) -> usize { self.parts.keys().count() }\n\
+                   \x20   fn also_ok(&self) -> usize { self.shards.len() }\n\
+                   }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   fn t(m: &HashMap<u32, u32>) { for _ in m.iter() {} }\n\
+                   }\n";
+        assert_eq!(rules_of("rust/src/metrics/x.rs", src), vec![]);
+    }
+
+    #[test]
+    fn d01_allow_directive_suppresses_with_reason() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u32>) -> usize {\n\
+                   \x20   // detlint: allow(D01, order-independent count)\n\
+                   \x20   m.values().count()\n\
+                   }\n";
+        assert_eq!(rules_of("rust/src/metrics/x.rs", src), vec![]);
+        // ...but a reason-less directive is a D00 and suppresses nothing
+        let bad = src.replace(", order-independent count", "");
+        let got = rules_of("rust/src/metrics/x.rs", &bad);
+        assert_eq!(got, vec![(Rule::D00, 3), (Rule::D01, 4)]);
+    }
+
+    #[test]
+    fn d02_scoped_to_deterministic_dirs() {
+        let src = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+        assert_eq!(rules_of("rust/src/driver/x.rs", src), vec![(Rule::D02, 1)]);
+        assert_eq!(rules_of("rust/src/util/bench.rs", src), vec![]);
+    }
+
+    #[test]
+    fn d03_fires_everywhere_even_tests() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let _ = rand::thread_rng(); }\n}\n";
+        assert_eq!(rules_of("rust/src/util/x.rs", src), vec![(Rule::D03, 3)]);
+    }
+
+    #[test]
+    fn d04_requires_safety_on_blocks_and_impls() {
+        let src = "unsafe impl Send for X {}\n";
+        assert_eq!(rules_of("rust/src/runtime/x.rs", src), vec![(Rule::D04, 1)]);
+        let ok = "// SAFETY: X owns no thread-affine state.\nunsafe impl Send for X {}\n";
+        assert_eq!(rules_of("rust/src/runtime/x.rs", ok), vec![]);
+        // multi-line comment block + attribute between comment and item
+        let ok2 = "// SAFETY: disjoint indices —\n// no two workers alias.\n#[allow(dead_code)]\nunsafe impl Send for X {}\n";
+        assert_eq!(rules_of("rust/src/runtime/x.rs", ok2), vec![]);
+        // the second impl of a pair needs its own comment
+        let pair = "// SAFETY: covers only the next line.\nunsafe impl Sync for X {}\nunsafe impl Send for X {}\n";
+        assert_eq!(rules_of("rust/src/runtime/x.rs", pair), vec![(Rule::D04, 3)]);
+    }
+
+    #[test]
+    fn d05_flags_sums_exempts_minmax_and_tree_reduce() {
+        let src = "fn merge(xs: &[f32]) -> f32 { xs.iter().sum() }\n";
+        assert_eq!(rules_of("rust/src/driver/x.rs", src), vec![(Rule::D05, 1)]);
+        // out of scope dir
+        assert_eq!(rules_of("rust/src/metrics/x.rs", src), vec![]);
+        // min/max folds and integer turbofish are order-insensitive
+        let ok = "fn m(xs: &[f64]) -> f64 { xs.iter().copied().fold(f64::NAN, f64::max) }\n\
+                  fn b(xs: &[usize]) -> usize { xs.iter().sum::<usize>() }\n";
+        assert_eq!(rules_of("rust/src/driver/x.rs", ok), vec![]);
+        // tree_reduce's own body is the sanctioned reduction site
+        let tr = "pub fn tree_reduce(items: Vec<f32>) -> f32 {\n    items.into_iter().fold(0.0, |a, b| a + b)\n}\n";
+        assert_eq!(rules_of("rust/src/engine/x.rs", tr), vec![]);
+    }
+
+    #[test]
+    fn patterns_inside_strings_and_comments_never_match() {
+        let src = "fn f() {\n\
+                   \x20   // mentions thread_rng and Instant::now in prose\n\
+                   \x20   let msg = \"HashMap iter via thread_rng at Instant::now\";\n\
+                   \x20   let _ = msg;\n\
+                   }\n";
+        assert_eq!(rules_of("rust/src/driver/x.rs", src), vec![]);
+    }
+}

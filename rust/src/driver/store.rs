@@ -117,7 +117,7 @@ impl ClientState {
 
     /// Resident payload in bytes (f32 tensors only; keys ignored).
     pub fn byte_size(&self) -> usize {
-        self.parts.values().map(|s| s.byte_size()).sum()
+        self.parts.values().map(|s| s.byte_size()).sum::<usize>()
     }
 }
 
@@ -198,7 +198,7 @@ impl ClientStateStore {
                 Some(Slot::Loaded(c)) => c.byte_size(),
                 _ => unreachable!("resident index out of sync for client {id}"),
             })
-            .sum()
+            .sum::<usize>()
     }
 
     /// Make every id in `ids` resident, initializing first-timers via

@@ -26,17 +26,26 @@
 //! order, so every index below the lowest-failing one was claimed before
 //! it and completes — the lowest-index error still wins, deterministically.
 
+pub mod sync;
+
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-/// Worker threads available on this host (>= 1).
+use self::sync::{mpsc, thread, Arc, AtomicBool, AtomicUsize, Mutex, Ordering};
+
+/// Worker threads available on this host (>= 1). Under `--cfg loom` the
+/// host has no meaning (the model explores schedules, not CPUs), so this
+/// reports a fixed small width to keep the state space bounded.
 pub fn available_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+    #[cfg(loom)]
+    {
+        2
+    }
+    #[cfg(not(loom))]
+    {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
 }
 
 /// Divide a thread budget across a nesting level with `n` independent
@@ -129,7 +138,7 @@ impl Drop for DoneGuard {
 /// Long-lived worker threads + the sending half of their job channel.
 struct PoolCore {
     job_tx: mpsc::Sender<Job>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<thread::JoinHandle<()>>,
 }
 
 /// A sized, persistent worker pool for round-level fan-out/fan-in.
@@ -273,7 +282,7 @@ impl ClientPool {
             let mut handles = Vec::with_capacity(workers);
             for _ in 0..workers {
                 let rx = Arc::clone(&job_rx);
-                handles.push(std::thread::spawn(move || loop {
+                handles.push(thread::spawn(move || loop {
                     let job = {
                         let rx = rx.lock().unwrap_or_else(|e| e.into_inner());
                         match rx.recv() {
@@ -286,7 +295,12 @@ impl ClientPool {
                     // jobs would queue forever); containment here turns
                     // it into an empty slot, reported by the fan-in as a
                     // deterministic error. `job.done` signals on drop.
+                    // (loom has no unwind modeling; model tasks are
+                    // panic-free, so containment compiles out there.)
+                    #[cfg(not(loom))]
                     let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job.task));
+                    #[cfg(loom)]
+                    (job.task)();
                 }));
             }
             self.spawned.fetch_add(workers, Ordering::Relaxed);
@@ -298,7 +312,9 @@ impl ClientPool {
 
 impl Drop for ClientPool {
     fn drop(&mut self) {
-        let core = self.core.get_mut().unwrap_or_else(|e| e.into_inner()).take();
+        // `lock()` rather than `get_mut()`: we hold `&mut self` so the
+        // lock is uncontended, and loom's Mutex models no `get_mut`
+        let core = self.core.lock().unwrap_or_else(|e| e.into_inner()).take();
         if let Some(core) = core {
             // closing the channel wakes every parked worker with RecvError
             drop(core.job_tx);
@@ -331,6 +347,10 @@ struct SlicePtr<S>(*mut S);
 // indices (each index is claimed exactly once from the atomic counter),
 // so concurrent `&mut` borrows never alias.
 unsafe impl<S: Send> Sync for SlicePtr<S> {}
+// SAFETY: same disjointness argument as `Sync` above; moving the copied
+// pointer to a worker transfers access to the claimed slots it will
+// reach, never duplicates a live `&mut`, and `S: Send` keeps the
+// elements themselves sound to touch from that thread.
 unsafe impl<S: Send> Send for SlicePtr<S> {}
 
 /// Execute `f(i, &mut states[i])` for every slot on up to `threads`
@@ -351,8 +371,12 @@ where
 /// the scan always reaches that error before any unclaimed `None` slot.
 fn collect_slots<T>(slots: Vec<Mutex<Option<Result<T>>>>) -> Result<Vec<T>> {
     let mut out = Vec::with_capacity(slots.len());
-    for (i, slot) in slots.into_iter().enumerate() {
-        match slot.into_inner().unwrap_or_else(|e| e.into_inner()) {
+    for (i, slot) in slots.iter().enumerate() {
+        // `lock()` + `take()` rather than `into_inner()`: the fan-in only
+        // runs after every worker finished (so the lock is uncontended),
+        // and loom's Mutex models no `into_inner`
+        let taken = slot.lock().unwrap_or_else(|e| e.into_inner()).take();
+        match taken {
             Some(r) => out.push(r?),
             None => return Err(anyhow!("engine: slot {i} produced no result")),
         }

@@ -1,0 +1,37 @@
+//! Synchronization facade for the engine: `std` primitives normally,
+//! [loom](https://docs.rs/loom)'s model-checked doubles under
+//! `--cfg loom` (DESIGN.md §13).
+//!
+//! The pool's concurrency core — the job channel, the shared-receiver
+//! mutex, the atomic claim index, the `DoneGuard` send-on-drop — is
+//! exactly the kind of code loom exists for: its correctness argument is
+//! about *orderings*, which unit tests can only sample. Routing every
+//! primitive through this one module lets `tests/loom_pool.rs` explore
+//! all interleavings of the dispatch protocol without the production
+//! build carrying any extra dependency: `loom` is not in Cargo.toml at
+//! all (offline builds never resolve it); the CI loom job adds it as a
+//! `[target.'cfg(loom)']` dependency before building with
+//! `RUSTFLAGS="--cfg loom"`, which is the only configuration in which
+//! the `loom::` paths below are ever compiled.
+//!
+//! Loom API deltas the engine accommodates (see `engine/mod.rs`):
+//! * no `Mutex::get_mut` / `Mutex::into_inner` — the pool uses `lock()`
+//!   even where `&mut self` would allow the faster accessors;
+//! * no `available_parallelism` — `available_threads()` reports a fixed
+//!   2 under loom;
+//! * no unwind modeling — the worker's `catch_unwind` containment is
+//!   compiled out under loom (models run panic-free tasks).
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{mpsc, Arc, Mutex};
+#[cfg(loom)]
+pub use loom::thread;
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{mpsc, Arc, Mutex};
+#[cfg(not(loom))]
+pub use std::thread;

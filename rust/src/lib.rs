@@ -47,6 +47,7 @@
 
 pub mod config;
 pub mod data;
+pub mod detlint;
 pub mod driver;
 pub mod engine;
 pub mod util;

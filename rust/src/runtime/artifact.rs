@@ -41,6 +41,10 @@ pub struct Artifact {
 // drop the lock and overlap executions; everything outside those
 // windows is unconditionally safe to run concurrently.
 unsafe impl Send for Artifact {}
+// SAFETY: same argument as `Send` above — `&Artifact` calls are
+// read-only over an executable that is immutable after compilation,
+// with the non-atomic handle-refcount windows serialized by
+// `xla_exec_guard` unless the patched `parallel-xla` build opts out.
 unsafe impl Sync for Artifact {}
 
 // Compile-time tie between the feature and the patched vendor: the
@@ -143,6 +147,11 @@ impl CallOutput {
 }
 
 fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    // SAFETY: `t.data()` is a live `&[f32]`, so reinterpreting it as
+    // bytes is valid for the full borrow: alignment only loosens
+    // (4 -> 1), the length is exactly `len * 4` bytes of initialized
+    // memory, and the byte view is read-only and ends before the
+    // `&[f32]` borrow does (the literal copies out of it).
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
     };

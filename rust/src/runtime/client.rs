@@ -51,6 +51,9 @@ pub struct Runtime {
 // that exists is the cached one, created under the handle lock and
 // destroyed only when the `Runtime` itself drops.
 unsafe impl Send for Runtime {}
+// SAFETY: same argument as `Send` above — shared `&Runtime` access is
+// serialized by the artifact-cache mutex, the per-name `OnceLock` slots,
+// and the process-wide PJRT handle lock around every compile/execute.
 unsafe impl Sync for Runtime {}
 
 impl Runtime {
@@ -125,6 +128,7 @@ impl Runtime {
         self.cache
             .lock()
             .unwrap_or_else(|e| e.into_inner())
+            // detlint: allow(D01, order-independent count over cache slots)
             .values()
             .filter(|s| s.get().is_some_and(|r| r.is_ok()))
             .count()

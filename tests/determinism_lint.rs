@@ -1,0 +1,156 @@
+//! Tier-1 determinism lint (DESIGN.md §13).
+//!
+//! Two jobs:
+//! 1. `tree_is_clean` runs `detlint` over the real `rust/src/` tree and
+//!    fails with file:line diagnostics if any determinism invariant is
+//!    violated — this is the enforcement point that makes D01–D05 part
+//!    of `cargo test -q`.
+//! 2. The `fixture_*` tests pin the linter itself: one deliberately-bad
+//!    snippet per rule under `tests/detlint_fixtures/` must produce
+//!    exactly the expected (rule, path, line), and the clean fixture —
+//!    which exercises every sanctioned escape hatch — must produce
+//!    nothing. Cargo does not compile files in test *subdirectories*,
+//!    so the fixtures are data, not code.
+
+use std::path::Path;
+
+use adasplit::detlint::{lint_source, lint_tree, report, source_files, Rule};
+
+fn src_root() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src"))
+}
+
+fn fixture(name: &str) -> String {
+    let path = format!(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/tests/detlint_fixtures/{}"),
+        name
+    );
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("fixture {path}: {e}"))
+}
+
+#[test]
+fn tree_is_clean() {
+    let findings = lint_tree(src_root()).expect("lint_tree walks rust/src");
+    assert!(
+        findings.is_empty(),
+        "determinism lint: {} finding(s). Fix the code, or — only with a real \
+         order-independence argument — annotate the line with \
+         `detlint: allow(<rule>, <reason>)`:\n{}",
+        findings.len(),
+        report(&findings)
+    );
+}
+
+#[test]
+fn tree_walk_sees_the_whole_crate() {
+    // Guards against the walker silently skipping directories and the
+    // clean-tree test passing vacuously.
+    let files = source_files(src_root()).expect("walk rust/src");
+    assert!(files.len() >= 40, "expected the full crate, walked only {} files", files.len());
+    for needle in ["engine/mod.rs", "engine/sync.rs", "detlint/rules.rs", "driver/store.rs"] {
+        assert!(
+            files.iter().any(|f| f.to_string_lossy().replace('\\', "/").ends_with(needle)),
+            "tree walk missed {needle}"
+        );
+    }
+}
+
+/// Assert `src` (linted as `path`) yields exactly `expected` as
+/// (rule, line) pairs, every finding carrying `path` back verbatim.
+fn assert_findings(path: &str, src: &str, expected: &[(Rule, usize)]) {
+    let findings = lint_source(path, src);
+    let got: Vec<(Rule, usize)> = findings.iter().map(|f| (f.rule, f.line)).collect();
+    assert_eq!(
+        got,
+        expected,
+        "lint of {path} produced:\n{}",
+        report(&findings)
+    );
+    for f in &findings {
+        assert_eq!(f.path, path);
+        assert!(!f.msg.is_empty(), "finding without a message: {f}");
+    }
+}
+
+#[test]
+fn fixture_d01_hashmap_iteration_trips() {
+    assert_findings(
+        "rust/src/protocols/fixture.rs",
+        &fixture("d01_hashmap_iter.rs"),
+        &[(Rule::D01, 9)],
+    );
+}
+
+#[test]
+fn fixture_d02_wall_clock_trips_in_scoped_dirs_only() {
+    let src = fixture("d02_wall_clock.rs");
+    for scoped in ["rust/src/sim/fixture.rs", "rust/src/driver/fixture.rs", "rust/src/engine/fixture.rs"] {
+        assert_findings(scoped, &src, &[(Rule::D02, 6)]);
+    }
+    // Wall clocks are fine outside the deterministic core (logging etc.).
+    assert_findings("rust/src/util/fixture.rs", &src, &[]);
+}
+
+#[test]
+fn fixture_d03_entropy_trips_everywhere_even_in_tests() {
+    assert_findings("rust/src/util/fixture.rs", &fixture("d03_entropy.rs"), &[(Rule::D03, 8)]);
+}
+
+#[test]
+fn fixture_d04_undocumented_unsafe_trips() {
+    assert_findings(
+        "rust/src/runtime/fixture.rs",
+        &fixture("d04_undocumented_unsafe.rs"),
+        &[(Rule::D04, 5)],
+    );
+}
+
+#[test]
+fn fixture_d05_float_sum_trips_in_merge_paths_only() {
+    let src = fixture("d05_float_sum.rs");
+    assert_findings("rust/src/engine/fixture.rs", &src, &[(Rule::D05, 6)]);
+    assert_findings("rust/src/driver/fixture.rs", &src, &[(Rule::D05, 6)]);
+    // Float sums outside engine/driver merge paths are metrics-grade.
+    assert_findings("rust/src/metrics/fixture.rs", &src, &[]);
+}
+
+#[test]
+fn fixture_d00_bad_allow_is_a_finding_and_suppresses_nothing() {
+    assert_findings(
+        "rust/src/util/fixture.rs",
+        &fixture("d00_bad_allow.rs"),
+        &[(Rule::D00, 6), (Rule::D03, 7)],
+    );
+}
+
+#[test]
+fn fixture_clean_all_escape_hatches_hold() {
+    // Linted under driver/ — the *strictest* scope (D01+D02+D05 armed) —
+    // the clean fixture's BTree iteration, justified allow, SAFETY
+    // comment, min/max fold, integer-annotated sum, and cfg(test)-scoped
+    // wall clock + map iteration must all pass.
+    assert_findings("rust/src/driver/fixture.rs", &fixture("clean.rs"), &[]);
+}
+
+#[test]
+fn every_rule_has_a_tripping_fixture() {
+    // Structural completeness check: extending the Rule enum without a
+    // fixture fails here, not in review.
+    let covered = [
+        (Rule::D00, "d00_bad_allow.rs"),
+        (Rule::D01, "d01_hashmap_iter.rs"),
+        (Rule::D02, "d02_wall_clock.rs"),
+        (Rule::D03, "d03_entropy.rs"),
+        (Rule::D04, "d04_undocumented_unsafe.rs"),
+        (Rule::D05, "d05_float_sum.rs"),
+    ];
+    for (rule, file) in covered {
+        // Scoped path arms every directory-gated rule.
+        let findings = lint_source("rust/src/driver/fixture.rs", &fixture(file));
+        assert!(
+            findings.iter().any(|f| f.rule == rule),
+            "{file} no longer trips {rule}:\n{}",
+            report(&findings)
+        );
+    }
+}

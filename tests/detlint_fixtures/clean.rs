@@ -1,0 +1,44 @@
+// detlint fixture: the clean case. Every rule's sanctioned escape is
+// exercised here — BTree iteration, a justified allow, a SAFETY
+// comment, a min/max fold, an integer-annotated sum, and wall clock /
+// map iteration confined to #[cfg(test)]. Linted under a driver/
+// virtual path, this file must produce zero findings.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub fn ordered_total(m: &BTreeMap<u32, u32>) -> u32 {
+    m.values().sum::<u32>()
+}
+
+pub fn cache_size(c: &HashMap<u32, u32>) -> usize {
+    // detlint: allow(D01, order-independent size count)
+    c.values().count()
+}
+
+pub fn head(p: *const u8) -> u8 {
+    // SAFETY: fixture contract — callers hand in a valid, initialized,
+    // readable pointer (the test passes `&7u8`).
+    unsafe { *p }
+}
+
+pub fn hottest(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NAN, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exemptions_hold() {
+        let _ = std::time::Instant::now();
+        let mut tm = HashMap::new();
+        tm.insert(1u32, 2u32);
+        for (k, v) in tm.iter() {
+            assert_eq!(*v, k + 1);
+        }
+        assert_eq!(cache_size(&tm), 1);
+        assert_eq!(head(&7u8), 7);
+        assert!(hottest(&[1.0, 2.0]) == 2.0);
+    }
+}

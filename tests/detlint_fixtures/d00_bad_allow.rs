@@ -1,0 +1,8 @@
+// detlint fixture: a reason-less allow directive is itself a finding
+// (D00) and suppresses nothing — the D03 below must also fire. Pinned
+// by tests/determinism_lint.rs.
+
+pub fn roll() -> u64 {
+    // detlint: allow(D03)
+    rand::thread_rng().gen()
+}

@@ -1,0 +1,13 @@
+// detlint fixture: D01 must fire on the map iteration below — and
+// nowhere else. The expected (rule, line) pair is pinned by
+// tests/determinism_lint.rs.
+
+use std::collections::HashMap;
+
+pub fn total(map: &HashMap<u32, u32>) -> u32 {
+    let mut t = 0;
+    for (_, v) in map.iter() {
+        t += v;
+    }
+    t
+}

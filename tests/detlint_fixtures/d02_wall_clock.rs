@@ -1,0 +1,7 @@
+// detlint fixture: D02 must fire on the wall-clock read below when the
+// file is linted under a sim/, driver/ or engine/ virtual path — and
+// stay silent elsewhere. Pinned by tests/determinism_lint.rs.
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,10 @@
+// detlint fixture: D03 must fire on the ambient-entropy call below, in
+// any directory, even inside #[cfg(test)] — pinned by
+// tests/determinism_lint.rs.
+
+#[cfg(test)]
+mod tests {
+    pub fn roll() -> u64 {
+        rand::thread_rng().gen()
+    }
+}

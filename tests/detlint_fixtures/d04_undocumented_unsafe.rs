@@ -1,0 +1,6 @@
+// detlint fixture: D04 must fire on the undocumented unsafe block
+// below — pinned by tests/determinism_lint.rs.
+
+pub fn first(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,7 @@
+// detlint fixture: D05 must fire on the unordered float sum below when
+// linted under an engine/ or driver/ virtual path — and stay silent
+// elsewhere. Pinned by tests/determinism_lint.rs.
+
+pub fn merge(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}
