@@ -1,33 +1,27 @@
-//! Runtime micro-benchmarks — the perf-pass instrument (EXPERIMENTS.md
-//! §Perf). Times each hot-path artifact execution (client step, server
-//! step, FL step, evals), host<->literal marshalling, data synthesis, and
-//! the pure-Rust coordinator machinery (UCB, aggregation), so coordinator
-//! overhead can be read off directly against the XLA step time.
+//! Runtime micro-benchmarks on the matrix harness (DESIGN.md §14).
 //!
-//! Results are tracked across PRs in `BENCH_results.json` (engine round
-//! throughput over the threads axis, the deterministic mask-density
-//! trajectory of a tiny AdaSplit run, the async-scheduler axis — the
-//! deterministic `AsyncBounded` sim-time trajectory plus its planning
-//! throughput — the delayed-gradient snapshot-ring axis, the
-//! adaptive-bound controller axis (`bound_controller_steps_per_s`), the
-//! persistent worker-pool axis (`pool_jobs_per_s`: warm-pool dispatch,
-//! zero per-run spawns), the sharded client-state axis
-//! (`shard_store_ops_per_s`: 500-of-100000 residency bookkeeping), and
-//! the event-engine dispatch axis (`event_heap_events_per_s`: heap
-//! push+pop floor of the discrete-event driver), and the open-world
-//! scenario axis (`scenario_events_per_s`: seeded churn + rate-episode
-//! synthesis and drain, DESIGN.md §12), and the static-analysis axis
-//! (`detlint_files_per_s`: the D01–D05 rule catalogue over the whole
-//! rust/src tree, DESIGN.md §13): all
-//! pure Rust, so they measure and check even on artifact-less runners).
-//! Default mode rewrites the file; `--check` compares against it
-//! instead — trajectories must match exactly (they are deterministic),
-//! throughput may not grossly regress, and the tracked file must carry
-//! the async-scheduler and snapshot-ring keys — and exits 0 with a SKIP
-//! note for the artifact-gated sections when artifacts are absent.
+//! The grid lives in `benches/matrix.toml`; every measurement is a cell
+//! in `adasplit::bench`'s runner, tracked per cell id in
+//! `BENCH_results.json` (schema v3, v2 readable). Pure-Rust axes —
+//! async-scheduler planning, the snapshot ring, the adaptive-bound
+//! controller, the persistent worker pool, the sharded client-state
+//! store, the event heap, the open-world scenario stream, the detlint
+//! catalogue, plus UCB / aggregation / data-synthesis extras — run on
+//! any machine; artifact execution cells (`artifact/*`) and the
+//! engine-round grid (`round/t*/...`) require `make artifacts` and are
+//! skipped loudly when absent.
+//!
+//! Default mode rewrites the tracked file; `--check` gates against it:
+//! deterministic trajectories (`async_sim_time`, `mask_density`) must
+//! match exactly, per-cell throughput must stay inside the tolerance
+//! band declared in the config, placeholder (zero/empty) cells are
+//! reported per key as "not yet recorded", and quick-mode numbers are
+//! never compared against full-mode numbers — the gate SKIPs them with
+//! an explicit note instead.
 
-use std::collections::BTreeMap;
+use std::path::Path;
 
+use adasplit::bench::{check, writer, MatrixConfig, Runner};
 use adasplit::config::ExperimentConfig;
 use adasplit::data::{build_partition, DatasetKind, Rng, SyntheticDataset};
 use adasplit::driver::{
@@ -39,10 +33,10 @@ use adasplit::orchestrator::UcbOrchestrator;
 use adasplit::protocols::{run_protocol_recorded, Env};
 use adasplit::runtime::{Runtime, Tensor, TensorStore};
 use adasplit::sim::{ChurnSpec, Event, EventHeap, EventKind, RateScheduleSpec, Scenario};
-use adasplit::util::bench::{bench, quick_mode, BenchStats};
-use adasplit::util::Json;
+use adasplit::util::bench::quick_mode;
 
 const TRACK_FILE: &str = "BENCH_results.json";
+const MATRIX_FILE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/benches/matrix.toml");
 
 /// Deterministic async-scheduler fingerprint: the `AsyncBounded`
 /// sim-time trajectory for a fixed fleet (64 clients, stragglers 0.2,
@@ -54,26 +48,26 @@ fn async_sim_trajectory() -> Vec<f64> {
     (0..32).map(|r| s.plan(r).sim_time).collect()
 }
 
-/// Async planning throughput (plans/s on a 512-client fleet) — the
-/// coordinator-side cost of the virtual-clock simulation.
-fn async_plan_bench(iters: usize) -> BenchStats {
+/// The pure-Rust cells: coordinator machinery with no artifact
+/// dependency, so they measure (and gate) on any runner. Cell ids here
+/// are the `axes.pure` names in `benches/matrix.toml`.
+fn run_pure_cells(runner: &mut Runner) -> anyhow::Result<()> {
+    // async-scheduler planning (plans/s over a 512-client fleet) + the
+    // deterministic sim-time trajectory on the same cell
     let speeds = ClientSpeeds::new(512, SpeedPreset::Lognormal { sigma: 0.5 }, 0.0, 3);
-    bench("coord: async plan x200 (512 clients)", 1, iters, || {
+    runner.run_cell("async_plan", 200.0, || {
         let mut s = AsyncBounded::new(512, 3, 0.25, &speeds);
         for r in 0..200 {
             std::hint::black_box(s.plan(r));
         }
-    })
-}
+    })?;
+    runner.add_trajectory("async_plan", "async_sim_time", async_sim_trajectory())?;
 
-/// Snapshot-ring throughput (rounds/s): the delayed-gradient hot path on
-/// the driver thread — push one round-start broadcast snapshot (~16 KiB
-/// model) and resolve one stale version per round over a bound-3 ring.
-/// Pure Rust, so it measures and checks even on artifact-less runners.
-fn snapshot_ring_bench(iters: usize) -> BenchStats {
+    // delayed-gradient snapshot ring: push one ~16 KiB round-start
+    // broadcast and resolve one stale version per round, bound-3 ring
     let mut model = TensorStore::new();
     model.insert("pg.w", Tensor::full(&[4096], 1.0));
-    bench("coord: snapshot ring push+get x64 (bound 3)", 1, iters, || {
+    runner.run_cell("snapshot_ring", 64.0, || {
         let mut ring = SnapshotRing::new(4);
         for r in 0..64usize {
             ring.push(r, model.clone()).unwrap();
@@ -81,17 +75,12 @@ fn snapshot_ring_bench(iters: usize) -> BenchStats {
                 std::hint::black_box(ring.get(r - 3).unwrap());
             }
         }
-    })
-}
+    })?;
 
-/// Bound-controller throughput (controller steps/s): one C3-shaped
-/// reward + UCB arm re-selection per step over the default five-arm set
-/// — the adaptive-bound hot path on the driver thread (one step per
-/// adaptation window). Pure Rust, so it measures and checks even on
-/// artifact-less runners.
-fn bound_controller_bench(iters: usize) -> BenchStats {
+    // adaptive-bound controller: one C3-shaped reward + UCB arm
+    // re-selection per step over the default five-arm set
     let budgets = adasplit::metrics::Budgets::paper_mixed_cifar();
-    bench("coord: bound controller observe+select x1000", 1, iters, || {
+    runner.run_cell("bound_controller", 1000.0, || {
         let mut c = BoundController::new(8, 5, 7, budgets);
         for w in 0..1000u64 {
             let d = WindowDelta {
@@ -102,31 +91,20 @@ fn bound_controller_bench(iters: usize) -> BenchStats {
             };
             std::hint::black_box(c.observe_window(&d));
         }
-    })
-}
+    })?;
 
-/// Persistent-pool dispatch throughput (jobs/s through a warm 4-worker
-/// pool; 64 runs x 64 tiny jobs per iteration) — the per-client fan-out
-/// overhead the engine pays once spawn/join is amortized away. The pool
-/// is warmed before timing, so the number is pure dispatch, zero spawns.
-fn pool_jobs_bench(iters: usize) -> BenchStats {
+    // persistent-pool dispatch: 64 runs x 64 tiny jobs through a warm
+    // 4-worker pool — pure dispatch, zero spawns after the warm-up run
     let pool = ClientPool::new(4);
-    pool.run(64, |_| Ok(())).unwrap(); // warm up: workers spawn here, once
-    bench("engine: warm pool dispatch 64 runs x 64 jobs", 1, iters, || {
+    pool.run(64, |_| Ok(()))?; // warm up: workers spawn here, once
+    runner.run_cell("pool", 64.0 * 64.0, || {
         for _ in 0..64 {
             pool.run(64, |i| Ok(std::hint::black_box(i * 2 + 1))).unwrap();
         }
-    })
-}
+    })?;
 
-/// Per-iteration job count of [`pool_jobs_bench`].
-const POOL_JOBS_PER_ITER: f64 = 64.0 * 64.0;
-
-/// Sharded client-state bookkeeping throughput (ensure-loaded ops/s at
-/// the 100000-client / 500-sample scale point): four rounds of
-/// ensure_loaded + the resident-id walk per iteration. The sharded store
-/// keeps this O(resident), so the number is flat in the fleet size.
-fn shard_store_bench(iters: usize) -> BenchStats {
+    // sharded client-state bookkeeping at the 100000-client / 500-sample
+    // scale point: ensure_loaded + the resident-id walk, O(resident)
     let samples: Vec<Vec<usize>> = (0..4usize)
         .map(|r| {
             let mut s: Vec<usize> =
@@ -136,34 +114,24 @@ fn shard_store_bench(iters: usize) -> BenchStats {
             s
         })
         .collect();
-    bench("engine: sharded store 4 rounds x ~500 of 100k", 1, iters, || {
+    runner.run_cell("shard_store", 4.0 * 500.0, || {
         let mut store = ClientStateStore::new(100_000);
         for sample in &samples {
             store.ensure_loaded(sample, |_| Ok(ClientState::new())).unwrap();
             std::hint::black_box(store.loaded_ids());
             std::hint::black_box(store.loaded_count());
         }
-    })
-}
+    })?;
 
-/// Per-iteration op count of [`shard_store_bench`].
-const SHARD_OPS_PER_ITER: f64 = 4.0 * 500.0;
-
-/// Event-heap dispatch throughput (events/s): push then fully drain 4096
-/// timestamped events with xorshift-scrambled pseudo-times and a rotating
-/// kind mix — the discrete-event driver's per-event scheduling floor on
-/// the driver thread. Deterministic (no ambient randomness) and pure
-/// Rust, so it measures and checks even on artifact-less runners.
-fn event_heap_bench(iters: usize) -> BenchStats {
-    bench("coord: event heap push+pop x4096", 1, iters, || {
+    // event-heap dispatch floor: push then fully drain 4096 events with
+    // xorshift-scrambled pseudo-times (quantized to force tie-breaks)
+    runner.run_cell("event_heap", 4096.0, || {
         let mut h = EventHeap::new();
         let mut x = 0x9e37_79b9_7f4a_7c15u64;
-        for i in 0..EVENT_HEAP_EVENTS_PER_ITER as usize {
+        for i in 0..4096usize {
             x ^= x >> 12;
             x ^= x << 25;
             x ^= x >> 27;
-            // non-negative finite times in [0, 64), with deliberate
-            // collisions (quantized grid) to exercise the tie-break path
             let t = ((x >> 11) % 4096) as f64 / 64.0;
             let kind = match i % 4 {
                 0 => EventKind::ClientFinish { client: i },
@@ -176,26 +144,17 @@ fn event_heap_bench(iters: usize) -> BenchStats {
         while let Some(e) = h.pop() {
             std::hint::black_box(e);
         }
-    })
-}
+    })?;
 
-/// Per-iteration event count of [`event_heap_bench`].
-const EVENT_HEAP_EVENTS_PER_ITER: f64 = 4096.0;
-
-/// Scenario-stream throughput (events/s): synthesize and drain 1024
-/// open-world events — seeded Poisson churn plus diurnal + flaky rate
-/// episodes over a 64-client fleet, each pop pushing its successor —
-/// the per-event cost of the scenario layer on the driver thread.
-/// Deterministic (derived rng streams, fixed seed) and pure Rust, so it
-/// measures and checks even on artifact-less runners.
-fn scenario_events_bench(iters: usize) -> BenchStats {
+    // open-world scenario stream: synthesize and drain 1024 seeded
+    // churn + rate-episode events, each pop pushing its successor
     let churn: ChurnSpec = "join:0.6,leave:0.6".parse().unwrap();
     let rates: RateScheduleSpec = "diurnal:8:0.4+flaky:0.5:4:1.0".parse().unwrap();
-    bench("coord: scenario synth+drain x1024 (64 clients)", 1, iters, || {
+    runner.run_cell("scenario", 1024.0, || {
         let mut sc = Scenario::synth(64, Some(churn), rates, 11);
         let mut heap = EventHeap::new();
         sc.prime(&mut heap);
-        for _ in 0..SCENARIO_EVENTS_PER_ITER as usize {
+        for _ in 0..1024usize {
             let ev = heap.pop().expect("self-perpetuating processes never drain dry");
             match ev.kind {
                 EventKind::ClientJoin { client } => {
@@ -210,209 +169,71 @@ fn scenario_events_bench(iters: usize) -> BenchStats {
                 _ => unreachable!("the scenario layer only schedules scenario kinds"),
             }
         }
-    })
-}
+    })?;
 
-/// Per-iteration event count of [`scenario_events_bench`].
-const SCENARIO_EVENTS_PER_ITER: f64 = 1024.0;
-
-/// Static-analysis throughput (files/s): run the detlint rule catalogue
-/// (D01–D05, DESIGN.md §13) over every file under rust/src. Sources are
-/// pre-read, so the number is pure lexer+rules cost, not IO. Tracked so
-/// the tier-1 lint pass stays effectively free as the tree grows —
-/// detlint runs inside every `cargo test -q`. Returns the stats plus the
-/// file count (the per-iteration unit, dynamic unlike the const axes).
-fn detlint_files_bench(iters: usize) -> (BenchStats, f64) {
-    let root = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src"));
-    let sources: Vec<(String, String)> = adasplit::detlint::source_files(root)
-        .expect("detlint walks rust/src")
+    // detlint catalogue (D01–D05) over the whole rust/src tree; sources
+    // pre-read so the cell is pure lexer+rules cost, not IO
+    let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src"));
+    let sources: Vec<(String, String)> = adasplit::detlint::source_files(root)?
         .into_iter()
         .map(|f| {
             let src = std::fs::read_to_string(&f).expect("detlint reads rust/src");
             (f.display().to_string(), src)
         })
         .collect();
-    let n = sources.len() as f64;
-    let stats = bench(
-        &format!("lint: detlint full tree ({} files)", sources.len()),
-        1,
-        iters,
-        || {
-            for (path, src) in &sources {
-                std::hint::black_box(adasplit::detlint::lint_source(path, src));
-            }
-        },
-    );
-    (stats, n)
-}
+    runner.run_cell("detlint", sources.len() as f64, || {
+        for (path, src) in &sources {
+            std::hint::black_box(adasplit::detlint::lint_source(path, src));
+        }
+    })?;
 
-fn check_async_axis(tracked: &Json, sim: &[f64]) -> anyhow::Result<()> {
-    let md = tracked
-        .opt("async_sim_time")
-        .ok_or_else(|| anyhow::anyhow!(
-            "tracked {TRACK_FILE} is missing the async-scheduler axis \
-             (`async_sim_time`); re-record with the bench"
-        ))?;
-    anyhow::ensure!(
-        tracked.opt("async_plan_rounds_per_s").is_some(),
-        "tracked {TRACK_FILE} is missing `async_plan_rounds_per_s`"
-    );
-    anyhow::ensure!(
-        tracked.opt("snapshot_ring_rounds_per_s").is_some(),
-        "tracked {TRACK_FILE} is missing `snapshot_ring_rounds_per_s` \
-         (delayed-gradient snapshot-ring axis); re-record with the bench"
-    );
-    anyhow::ensure!(
-        tracked.opt("bound_controller_steps_per_s").is_some(),
-        "tracked {TRACK_FILE} is missing `bound_controller_steps_per_s` \
-         (adaptive-bound controller axis); re-record with the bench"
-    );
-    anyhow::ensure!(
-        tracked.opt("pool_jobs_per_s").is_some(),
-        "tracked {TRACK_FILE} is missing `pool_jobs_per_s` \
-         (persistent worker-pool axis); re-record with the bench"
-    );
-    anyhow::ensure!(
-        tracked.opt("shard_store_ops_per_s").is_some(),
-        "tracked {TRACK_FILE} is missing `shard_store_ops_per_s` \
-         (sharded client-state axis); re-record with the bench"
-    );
-    anyhow::ensure!(
-        tracked.opt("event_heap_events_per_s").is_some(),
-        "tracked {TRACK_FILE} is missing `event_heap_events_per_s` \
-         (event-engine dispatch axis); re-record with the bench"
-    );
-    anyhow::ensure!(
-        tracked.opt("scenario_events_per_s").is_some(),
-        "tracked {TRACK_FILE} is missing `scenario_events_per_s` \
-         (open-world scenario axis); re-record with the bench"
-    );
-    anyhow::ensure!(
-        tracked.opt("detlint_files_per_s").is_some(),
-        "tracked {TRACK_FILE} is missing `detlint_files_per_s` \
-         (static-analysis axis); re-record with the bench"
-    );
-    let old: Vec<f64> = md
-        .as_arr()?
-        .iter()
-        .map(|j| j.as_f64())
-        .collect::<anyhow::Result<_>>()?;
-    if old.is_empty() {
-        println!("check: tracked async_sim_time empty (placeholder); key present — ok");
-        return Ok(());
-    }
-    anyhow::ensure!(
-        old.len() == sim.len(),
-        "async_sim_time trajectory length changed: {} -> {}",
-        old.len(),
-        sim.len()
-    );
-    for (i, (a, b)) in old.iter().zip(sim).enumerate() {
-        anyhow::ensure!(
-            (a - b).abs() < 1e-9,
-            "async_sim_time[{i}] drifted: {a} -> {b} (scheduling-semantics change?)"
-        );
-    }
-    println!("check: async-scheduler sim-time trajectory matches ({} rounds)", old.len());
+    // coordinator extras: UCB select+update, FedAvg-style aggregation,
+    // and the data-synthesis paths
+    runner.run_cell("ucb", 1000.0, || {
+        let mut ucb = UcbOrchestrator::new(5, 0.87);
+        for t in 0..1000u64 {
+            let sel = ucb.select(3);
+            let obs: Vec<(usize, f64)> =
+                sel.iter().map(|&i| (i, (t % 7) as f64)).collect();
+            ucb.update(&obs);
+        }
+    })?;
+    runner.run_cell("fedavg_agg", 5.0, || {
+        let stores: Vec<_> = (0..5)
+            .map(|i| {
+                let mut s = TensorStore::new();
+                s.insert("state.p.w", Tensor::full(&[160_000], i as f32));
+                s
+            })
+            .collect();
+        let refs: Vec<&TensorStore> = stores.iter().collect();
+        let mut dst = stores[0].clone();
+        dst.set_weighted_sum(&refs, &[0.2; 5], |k| k.starts_with("state.p")).unwrap();
+    })?;
+    runner.run_cell("batch_synthesis", 64.0, || {
+        let ds = SyntheticDataset::new(adasplit::data::Family::Cifar10Like, 10, 7);
+        ds.generate(&[0, 1], 64, 0, 0);
+    })?;
+    runner.run_cell("epoch_batching", 512.0, || {
+        let c = build_partition(DatasetKind::MixedCifar, 1, 512, 32, 1.0, 0).unwrap();
+        let c0 = c.get(0);
+        let mut rng = Rng::new(0);
+        let _: Vec<_> =
+            adasplit::data::BatchIter::train(&c0.train_x, &c0.train_y, 32, &mut rng)
+                .collect();
+    })?;
     Ok(())
 }
 
-fn results_json(
-    stats: &[BenchStats],
-    round_stats: &[(usize, BenchStats)],
-    densities: &[f64],
-    async_sim: &[f64],
-    async_plan: &BenchStats,
-    snap_ring: &BenchStats,
-    bound_ctrl: &BenchStats,
-    pool_jobs: &BenchStats,
-    shard_store: &BenchStats,
-    event_heap: &BenchStats,
-    scenario: &BenchStats,
-    detlint: (&BenchStats, f64),
-    n_par: usize,
-    quick: bool,
-) -> Json {
-    let mut stat_map = BTreeMap::new();
-    for s in stats {
-        stat_map.insert(s.name.clone(), Json::Num(s.mean_s));
-    }
-    let mut thr = BTreeMap::new();
-    for (t, s) in round_stats {
-        thr.insert(t.to_string(), Json::Num(n_par as f64 / s.mean_s));
-    }
-    let mut m = BTreeMap::new();
-    m.insert("schema_version".into(), Json::Num(2.0));
-    m.insert("quick".into(), Json::Num(if quick { 1.0 } else { 0.0 }));
-    m.insert("stats_mean_s".into(), Json::Obj(stat_map));
-    m.insert("engine_round_clients_per_s".into(), Json::Obj(thr));
-    m.insert(
-        "mask_density".into(),
-        Json::Arr(densities.iter().map(|&d| Json::Num(d)).collect()),
-    );
-    m.insert(
-        "async_sim_time".into(),
-        Json::Arr(async_sim.iter().map(|&t| Json::Num(t)).collect()),
-    );
-    m.insert(
-        "async_plan_rounds_per_s".into(),
-        Json::Num(200.0 / async_plan.mean_s),
-    );
-    m.insert(
-        "snapshot_ring_rounds_per_s".into(),
-        Json::Num(64.0 / snap_ring.mean_s),
-    );
-    m.insert(
-        "bound_controller_steps_per_s".into(),
-        Json::Num(1000.0 / bound_ctrl.mean_s),
-    );
-    m.insert("pool_jobs_per_s".into(), Json::Num(POOL_JOBS_PER_ITER / pool_jobs.mean_s));
-    m.insert(
-        "shard_store_ops_per_s".into(),
-        Json::Num(SHARD_OPS_PER_ITER / shard_store.mean_s),
-    );
-    m.insert(
-        "event_heap_events_per_s".into(),
-        Json::Num(EVENT_HEAP_EVENTS_PER_ITER / event_heap.mean_s),
-    );
-    m.insert(
-        "scenario_events_per_s".into(),
-        Json::Num(SCENARIO_EVENTS_PER_ITER / scenario.mean_s),
-    );
-    m.insert("detlint_files_per_s".into(), Json::Num(detlint.1 / detlint.0.mean_s));
-    Json::Obj(m)
-}
-
-fn main() -> anyhow::Result<()> {
-    let check = std::env::args().any(|a| a == "--check");
-    // the async-scheduler axis is pure Rust: it measures and checks even
-    // without artifacts
-    let async_sim = async_sim_trajectory();
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        if check {
-            match std::fs::read_to_string(TRACK_FILE) {
-                Err(_) => println!(
-                    "check: no tracked {TRACK_FILE}; run the bench without --check to create it"
-                ),
-                Ok(text) => check_async_axis(&Json::parse(&text)?, &async_sim)?,
-            }
-            println!(
-                "runtime_micro --check: SKIP artifact-gated measurements (artifacts \
-                 not built); bench compiled, async axis validated — check passes"
-            );
-            return Ok(());
-        }
-        anyhow::bail!("artifacts not built (run `make artifacts`)");
-    }
-    let iters = if quick_mode() || check { 5 } else { 20 };
+/// The artifact-gated cells: hot-path executions (`artifact/*`), the
+/// engine-round grid from the matrix config (`round/t*/...`), and the
+/// deterministic mask-density trajectory of a tiny AdaSplit run.
+fn run_artifact_cells(runner: &mut Runner) -> anyhow::Result<()> {
     let rt = Runtime::load("artifacts")?;
     let cfg = ExperimentConfig::quick_test();
     let clients = build_partition(DatasetKind::MixedCifar, 5, 64, 32, 1.0, 0)?;
     let env = Env::new(&rt, &cfg, clients);
 
-    let mut stats = Vec::new();
-
-    // ---- artifact executions (the intended hot path) ----------------------
     let client_step = env.art_split("client_step")?;
     let server_step = env.art_split("server_step")?;
     let client_fwd = env.art_split("client_fwd")?;
@@ -436,7 +257,9 @@ fn main() -> anyhow::Result<()> {
         )?
         .take("acts")?;
 
-    stats.push(bench("artifact: client_step (B=32)", 2, iters, || {
+    // artifact executions warm twice: the first call may still be
+    // faulting executable pages in
+    runner.run_cell_warmup("artifact/client_step", 1.0, 2, || {
         client_step
             .call(
                 &[&cstate],
@@ -444,155 +267,69 @@ fn main() -> anyhow::Result<()> {
                   ("use_grad", &zero)],
             )
             .unwrap();
-    }));
-    stats.push(bench("artifact: server_step (masked)", 2, iters, || {
+    })?;
+    runner.run_cell_warmup("artifact/server_step", 1.0, 2, || {
         server_step
             .call(&[&sstate], &[("a", &acts), ("y", &b.y), ("lam", &lam)])
             .unwrap();
-    }));
-    stats.push(bench("artifact: fl_step (full model)", 2, iters, || {
-        let mut pg = adasplit::runtime::TensorStore::new();
+    })?;
+    runner.run_cell_warmup("artifact/fl_step", 1.0, 2, || {
+        let mut pg = TensorStore::new();
         adasplit::protocols::copy_prefixed(&fstate, "state.p", &mut pg, "pg");
         let c = adasplit::protocols::zeros_prefixed(&fstate, "state.p", "c");
         let ci = adasplit::protocols::zeros_prefixed(&fstate, "state.p", "ci");
         fl_step
             .call(&[&fstate, &pg, &c, &ci], &[("prox_mu", &zero), ("x", &b.x), ("y", &b.y)])
             .unwrap();
-    }));
+    })?;
     let croot = cstate.sub("state");
-    stats.push(bench("artifact: client_fwd (eval)", 2, iters, || {
+    runner.run_cell_warmup("artifact/client_fwd", 1.0, 2, || {
         client_fwd.call(&[&croot], &[("x", &b.x)]).unwrap();
-    }));
+    })?;
     let sroot = sstate.sub("state");
-    stats.push(bench("artifact: server_eval", 2, iters, || {
+    runner.run_cell_warmup("artifact/server_eval", 1.0, 2, || {
         server_eval
             .call(&[&sroot], &[("a", &acts), ("y", &b.y), ("valid", &b.valid)])
             .unwrap();
-    }));
+    })?;
 
-    // ---- coordinator-side machinery ---------------------------------------
-    stats.push(bench("coord: batch synthesis (64 imgs)", 1, iters, || {
-        let ds = SyntheticDataset::new(adasplit::data::Family::Cifar10Like, 10, 7);
-        ds.generate(&[0, 1], 64, 0, 0);
-    }));
-    stats.push(bench("coord: epoch batching (512)", 1, iters, || {
-        let c = build_partition(DatasetKind::MixedCifar, 1, 512, 32, 1.0, 0).unwrap();
-        let c0 = c.get(0);
-        let mut rng = Rng::new(0);
-        let _: Vec<_> =
-            adasplit::data::BatchIter::train(&c0.train_x, &c0.train_y, 32, &mut rng)
-                .collect();
-    }));
-    let async_plan = async_plan_bench(iters);
-    stats.push(async_plan.clone());
-    let snap_ring = snapshot_ring_bench(iters);
-    stats.push(snap_ring.clone());
-    let bound_ctrl = bound_controller_bench(iters);
-    stats.push(bound_ctrl.clone());
-    let pool_jobs = pool_jobs_bench(iters);
-    stats.push(pool_jobs.clone());
-    let shard_store = shard_store_bench(iters);
-    stats.push(shard_store.clone());
-    let event_heap = event_heap_bench(iters);
-    stats.push(event_heap.clone());
-    let scenario = scenario_events_bench(iters);
-    stats.push(scenario.clone());
-    let (detlint, detlint_files) = detlint_files_bench(iters);
-    stats.push(detlint.clone());
-    stats.push(bench("coord: UCB select+update x1000", 1, iters, || {
-        let mut ucb = UcbOrchestrator::new(5, 0.87);
-        for t in 0..1000u64 {
-            let sel = ucb.select(3);
-            let obs: Vec<(usize, f64)> =
-                sel.iter().map(|&i| (i, (t % 7) as f64)).collect();
-            ucb.update(&obs);
-        }
-    }));
-    stats.push(bench("coord: fedavg aggregation (160k params x5)", 1, iters, || {
-        let stores: Vec<_> = (0..5)
-            .map(|i| {
-                let mut s = adasplit::runtime::TensorStore::new();
-                s.insert("state.p.w", Tensor::full(&[160_000], i as f32));
-                s
-            })
-            .collect();
-        let refs: Vec<&adasplit::runtime::TensorStore> = stores.iter().collect();
-        let mut dst = stores[0].clone();
-        dst.set_weighted_sum(&refs, &[0.2; 5], |k| k.starts_with("state.p")).unwrap();
-    }));
-
-    // ---- engine scaling: one training "round" (client_step fan-out) at
-    //      1/2/4/8 workers, so the speedup lands in the bench trajectory --
-    let n_par = 8usize;
-    let par_states: Vec<TensorStore> = (0..n_par)
-        .map(|i| env.init_state("c10_mu1_init_client", 10.0 + i as f32))
-        .collect::<anyhow::Result<_>>()?;
-    let mut round_stats = Vec::new();
-    for &threads in &[1usize, 2, 4, 8] {
-        let pool = ClientPool::new(threads);
-        let s = bench(
-            &format!("engine: round of {n_par} client_steps @{threads}T"),
-            1,
-            iters,
-            || {
-                pool.run(n_par, |i| {
-                    client_step
-                        .call(
-                            &[&par_states[i]],
-                            &[("x", &b.x), ("y", &b.y), ("beta", &beta),
-                              ("grad_a", &zero_ga), ("use_grad", &zero)],
-                        )
-                        .map(|_| ())
-                })
-                .unwrap();
-            },
+    // engine-round grid: one training "round" (client_step fan-out) per
+    // matrix cell, clients/s over the declared threads axis
+    for spec in runner.cfg.grid_cells() {
+        anyhow::ensure!(
+            spec.scheduler == "sync" && spec.protocol == "ada-split",
+            "matrix cell `{}`: only the sync/ada-split round is wired into \
+             runtime_micro so far — extend run_artifact_cells for new axes",
+            spec.id
         );
-        round_stats.push((threads, s.clone()));
-        stats.push(s);
+        let par_states: Vec<TensorStore> = (0..spec.clients)
+            .map(|i| env.init_state("c10_mu1_init_client", 10.0 + i as f32))
+            .collect::<anyhow::Result<_>>()?;
+        let pool = ClientPool::new(spec.threads);
+        runner.run_cell(&spec.id, spec.clients as f64, || {
+            pool.run(spec.clients, |i| {
+                client_step
+                    .call(
+                        &[&par_states[i]],
+                        &[("x", &b.x), ("y", &b.y), ("beta", &beta),
+                          ("grad_a", &zero_ga), ("use_grad", &zero)],
+                    )
+                    .map(|_| ())
+            })
+            .unwrap();
+        })?;
     }
-
-    println!("\n== runtime_micro ==");
-    for s in &stats {
-        println!("{}", s.report());
-    }
-
-    // round-throughput summary across the threads axis
-    let serial_mean = round_stats[0].1.mean_s;
     if !cfg!(feature = "parallel-xla")
         || std::env::var("ADASPLIT_PARALLEL_XLA").as_deref() != Ok("1")
     {
         println!(
-            "\nnote: PJRT execution is serialized by default; build with \
+            "note: PJRT execution is serialized by default; build with \
              `--features parallel-xla` (requires the Rc->Arc-patched \
              vendored xla-rs, DESIGN.md §5) and set ADASPLIT_PARALLEL_XLA=1 \
              to measure true execution overlap"
         );
     }
-    println!("\nengine round throughput ({n_par} clients/round):");
-    for (threads, s) in &round_stats {
-        println!(
-            "  {threads} worker(s): {:>8.2} clients/s  speedup x{:.2}",
-            n_par as f64 / s.mean_s,
-            serial_mean / s.mean_s
-        );
-    }
 
-    // coordinator overhead summary: pure-Rust work per training iteration
-    // vs the artifact execution it wraps
-    let art = stats[0].mean_s;
-    let coord = stats
-        .iter()
-        .find(|s| s.name.starts_with("coord: UCB"))
-        .expect("UCB bench present")
-        .mean_s
-        / 1000.0; // UCB per iteration
-    println!(
-        "\ncoordinator overhead per iteration (UCB) = {:.2}us = {:.4}% of client_step",
-        coord * 1e6,
-        100.0 * coord / art
-    );
-
-    // ---- tracked results: threads axis + mask-density trajectory ----------
     // tiny deterministic AdaSplit run (1 local + 2 global rounds): the
     // per-round mask densities are a pure function of the seed, so any
     // drift between PRs is a real numerics change, not noise
@@ -601,75 +338,66 @@ fn main() -> anyhow::Result<()> {
     traj_cfg.threads = 1;
     let (_, traj) = run_protocol_recorded(&rt, &traj_cfg)?;
     let densities: Vec<f64> = traj.rounds.iter().map(|r| r.mask_density).collect();
+    runner.add_trajectory("traj/mask_density", "mask_density", densities)?;
+    Ok(())
+}
 
-    if check {
+fn main() -> anyhow::Result<()> {
+    let check_mode = std::env::args().any(|a| a == "--check");
+    let quick = quick_mode();
+    let mcfg = MatrixConfig::load(Path::new(MATRIX_FILE))?;
+    let mut runner = Runner::new(mcfg.clone(), quick);
+    if check_mode && !quick {
+        // checks want fast point estimates, but the run is NOT quick —
+        // workload scale is unchanged, so full-mode comparison is valid
+        runner.set_iters(mcfg.quick_iters)?;
+    }
+
+    run_pure_cells(&mut runner)?;
+
+    let have_artifacts = Path::new("artifacts/manifest.json").exists();
+    if have_artifacts {
+        run_artifact_cells(&mut runner)?;
+    } else {
+        println!(
+            "runtime_micro: SKIP artifact-gated cells (artifact/*, round/t*, \
+             traj/mask_density) — artifacts not built (`make artifacts`); \
+             pure-Rust cells still measured"
+        );
+    }
+
+    let fresh = runner.into_report();
+    println!("\n== runtime_micro (matrix: {}) ==", MATRIX_FILE);
+    for cell in fresh.cells.values() {
+        if let Some(s) = &cell.stats {
+            println!("{}  -> {:>12.2} units/s", s.report(), cell.throughput_per_s);
+        }
+    }
+
+    if check_mode {
         match std::fs::read_to_string(TRACK_FILE) {
             Err(_) => println!(
                 "check: no tracked {TRACK_FILE}; run the bench without --check to create it"
             ),
             Ok(text) => {
-                let tracked = Json::parse(&text)?;
-                if let Some(md) = tracked.opt("mask_density") {
-                    let old: Vec<f64> = md
-                        .as_arr()?
-                        .iter()
-                        .map(|j| j.as_f64())
-                        .collect::<anyhow::Result<_>>()?;
-                    if old.is_empty() {
-                        println!("check: tracked mask_density empty (placeholder); skipping");
-                    } else {
-                        anyhow::ensure!(
-                            old.len() == densities.len(),
-                            "mask_density trajectory length changed: {} -> {}",
-                            old.len(),
-                            densities.len()
-                        );
-                        for (i, (a, b)) in old.iter().zip(&densities).enumerate() {
-                            anyhow::ensure!(
-                                (a - b).abs() < 1e-9,
-                                "mask_density[{i}] drifted: {a} -> {b} (numerics change?)"
-                            );
-                        }
-                        println!("check: mask_density trajectory matches ({} rounds)", old.len());
-                    }
-                }
-                if let Some(thr) = tracked.opt("engine_round_clients_per_s") {
-                    // timing is noisy across machines: only flag gross
-                    // (>60%) regressions
-                    for (t, s) in &round_stats {
-                        if let Some(old) = thr.opt(&t.to_string()) {
-                            let old = old.as_f64()?;
-                            let new = n_par as f64 / s.mean_s;
-                            anyhow::ensure!(
-                                old <= 0.0 || new > old * 0.4,
-                                "engine round throughput @{t}T regressed >60%: \
-                                 {old:.2} -> {new:.2} clients/s"
-                            );
-                        }
-                    }
-                    println!("check: engine throughput within tolerance of tracked results");
-                }
-                check_async_axis(&tracked, &async_sim)?;
+                let tracked = writer::read_tracked(&text)?;
+                let out = check(&mcfg, &tracked, &fresh);
+                println!("\n== regression gate ==\n{}", out.render());
+                anyhow::ensure!(
+                    !out.failed(),
+                    "runtime_micro --check: regression gate failed (see notes above)"
+                );
+                println!("runtime_micro --check: gate passed");
             }
         }
     } else {
-        let json = results_json(
-            &stats,
-            &round_stats,
-            &densities,
-            &async_sim,
-            &async_plan,
-            &snap_ring,
-            &bound_ctrl,
-            &pool_jobs,
-            &shard_store,
-            &event_heap,
-            &scenario,
-            (&detlint, detlint_files),
-            n_par,
-            quick_mode(),
-        );
-        std::fs::write(TRACK_FILE, json.to_string_pretty())?;
+        if !have_artifacts {
+            println!(
+                "note: writing a pure-axes-only tracked file (artifact cells absent); \
+                 --check on this file will SKIP them explicitly"
+            );
+        }
+        writer::write_tracked(Path::new(TRACK_FILE), &fresh)?;
         println!("tracked results -> {TRACK_FILE}");
     }
     Ok(())

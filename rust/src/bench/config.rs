@@ -1,0 +1,307 @@
+//! Declarative bench-matrix configuration (DESIGN.md §14).
+//!
+//! The grid lives in a committed kv file (`benches/matrix.toml`) parsed
+//! by the in-tree TOML subset ([`crate::util::kvconf`]): sections
+//! flatten to dotted keys and list axes are comma-separated strings, so
+//! no new dependency is needed in the offline build environment. The
+//! config declares three things the runner and the gate both read:
+//!
+//! * the engine-round grid (`matrix.threads` × `matrix.clients` ×
+//!   `matrix.schedulers` × `matrix.protocols`), enumerated into cells
+//!   with stable ids by [`MatrixConfig::grid_cells`];
+//! * run shape (`run.warmup`, `run.iters`, `run.quick_iters`);
+//! * gate parameters: the default throughput tolerance band
+//!   (`gate.band`), optional per-cell overrides (`gate.band.<cell>`),
+//!   and the pure-Rust axes the gate must report on even when their
+//!   tracked values are placeholders (`axes.pure`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::kvconf::KvConf;
+
+/// One engine-round grid point: the Cartesian coordinates of a timed
+/// cell plus the stable id it is tracked under in `BENCH_results.json`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CellSpec {
+    pub id: String,
+    pub threads: usize,
+    pub clients: usize,
+    pub scheduler: String,
+    pub protocol: String,
+}
+
+/// Parsed bench matrix + gate parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixConfig {
+    /// `matrix.threads` — engine fan-out widths of the round grid.
+    pub threads: Vec<usize>,
+    /// `matrix.clients` — clients per timed round.
+    pub clients: Vec<usize>,
+    /// `matrix.schedulers` — scheduler / merge-policy axis.
+    pub schedulers: Vec<String>,
+    /// `matrix.protocols` — protocol axis.
+    pub protocols: Vec<String>,
+    /// `run.warmup` — unrecorded runs before timing each cell.
+    pub warmup: usize,
+    /// `run.iters` — timed iterations per cell in full mode.
+    pub iters: usize,
+    /// `run.quick_iters` — timed iterations per cell in quick mode.
+    pub quick_iters: usize,
+    /// `gate.band` — default allowed fractional throughput drop before
+    /// `--check` fails a cell (0.6 ⇒ new ≥ 40% of tracked passes).
+    pub default_band: f64,
+    /// `gate.band.<cell>` — per-cell-id (or id-prefix) band overrides.
+    pub bands: BTreeMap<String, f64>,
+    /// `axes.pure` — pure-Rust cell ids the gate requires a tracked
+    /// measurement for, reporting each placeholder as "not yet
+    /// recorded" instead of passing silently.
+    pub pure_axes: Vec<String>,
+}
+
+fn parse_str_list(raw: &str) -> Vec<String> {
+    raw.split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn parse_usize_list(key: &str, raw: &str) -> Result<Vec<usize>> {
+    parse_str_list(raw)
+        .iter()
+        .map(|s| s.parse::<usize>().with_context(|| format!("`{key}` entry `{s}`: not a usize")))
+        .collect()
+}
+
+fn check_band(key: &str, band: f64) -> Result<()> {
+    ensure!(
+        band > 0.0 && band <= 1.0,
+        "`{key}` = {band}: the tolerance band is a fractional drop and must lie in (0, 1]"
+    );
+    Ok(())
+}
+
+impl MatrixConfig {
+    /// Parse a matrix config from kv text. Absent keys take the
+    /// defaults of the committed `benches/matrix.toml`; degenerate
+    /// values (empty axes, zero iterations, out-of-range bands) are
+    /// rejected here so the runner and gate never see them.
+    pub fn parse(text: &str) -> Result<Self> {
+        let kv = KvConf::parse(text)?;
+        let threads = parse_usize_list("matrix.threads", &kv.get_str("matrix.threads", "1"))?;
+        let clients = parse_usize_list("matrix.clients", &kv.get_str("matrix.clients", "8"))?;
+        let schedulers = parse_str_list(&kv.get_str("matrix.schedulers", "sync"));
+        let protocols = parse_str_list(&kv.get_str("matrix.protocols", "ada-split"));
+        let warmup = kv.get_usize("run.warmup", 1)?;
+        let iters = kv.get_usize("run.iters", 20)?;
+        let quick_iters = kv.get_usize("run.quick_iters", 5)?;
+        let default_band = kv.get_f64("gate.band", 0.6)?;
+        let pure_axes = parse_str_list(&kv.get_str("axes.pure", ""));
+
+        let mut bands = BTreeMap::new();
+        for key in kv.keys() {
+            if let Some(cell) = key.strip_prefix("gate.band.") {
+                let band = kv.get_f64(key, default_band)?;
+                check_band(key, band)?;
+                bands.insert(cell.to_string(), band);
+            }
+        }
+
+        ensure!(!threads.is_empty(), "`matrix.threads` must declare at least one value");
+        ensure!(!clients.is_empty(), "`matrix.clients` must declare at least one value");
+        ensure!(!schedulers.is_empty(), "`matrix.schedulers` must declare at least one value");
+        ensure!(!protocols.is_empty(), "`matrix.protocols` must declare at least one value");
+        ensure!(
+            threads.iter().all(|&t| t >= 1),
+            "`matrix.threads` entries must be >= 1"
+        );
+        ensure!(
+            clients.iter().all(|&c| c >= 1),
+            "`matrix.clients` entries must be >= 1"
+        );
+        ensure!(iters >= 1, "`run.iters` must be >= 1 (a zero-iteration cell has no samples)");
+        ensure!(quick_iters >= 1, "`run.quick_iters` must be >= 1");
+        check_band("gate.band", default_band)?;
+
+        Ok(Self {
+            threads,
+            clients,
+            schedulers,
+            protocols,
+            warmup,
+            iters,
+            quick_iters,
+            default_band,
+            bands,
+            pure_axes,
+        })
+    }
+
+    /// Load and parse `path` (typically `benches/matrix.toml`).
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("bench matrix config: cannot read {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("bench matrix config: {}", path.display()))
+    }
+
+    /// The tolerance band for one cell: the longest `gate.band.*`
+    /// override whose key equals the id or is a `/`-prefix of it, else
+    /// the default band.
+    pub fn band_for(&self, cell_id: &str) -> f64 {
+        self.bands
+            .iter()
+            .filter(|(k, _)| cell_id == k.as_str() || cell_id.starts_with(&format!("{k}/")))
+            .max_by_key(|(k, _)| k.len())
+            .map(|(_, &b)| b)
+            .unwrap_or(self.default_band)
+    }
+
+    /// Enumerate the engine-round grid in a deterministic order —
+    /// threads-major, then clients, scheduler, protocol, each axis in
+    /// its declared list order — so cell ids and the tracked file are
+    /// stable across invocations and machines.
+    pub fn grid_cells(&self) -> Vec<CellSpec> {
+        let mut out = Vec::new();
+        for &threads in &self.threads {
+            for &clients in &self.clients {
+                for scheduler in &self.schedulers {
+                    for protocol in &self.protocols {
+                        out.push(CellSpec {
+                            id: format!("round/t{threads}/c{clients}/{scheduler}/{protocol}"),
+                            threads,
+                            clients,
+                            scheduler: scheduler.clone(),
+                            protocol: protocol.clone(),
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "[matrix]\n\
+                          threads = \"1,2\"\n\
+                          clients = \"8\"\n\
+                          schedulers = \"sync\"\n\
+                          protocols = \"ada-split\"\n\
+                          [run]\n\
+                          warmup = 1\n\
+                          iters = 20\n\
+                          quick_iters = 5\n\
+                          [gate]\n\
+                          band = 0.6\n\
+                          band.detlint = 0.5\n\
+                          [axes]\n\
+                          pure = \"pool,event_heap\"\n";
+
+    #[test]
+    fn parses_grid_gate_and_axes() {
+        let c = MatrixConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.threads, vec![1, 2]);
+        assert_eq!(c.clients, vec![8]);
+        assert_eq!(c.schedulers, vec!["sync"]);
+        assert_eq!(c.protocols, vec!["ada-split"]);
+        assert_eq!((c.warmup, c.iters, c.quick_iters), (1, 20, 5));
+        assert!((c.default_band - 0.6).abs() < 1e-12);
+        assert!((c.band_for("detlint") - 0.5).abs() < 1e-12, "exact override applies");
+        assert!((c.band_for("pool") - 0.6).abs() < 1e-12, "default applies elsewhere");
+        assert_eq!(c.pure_axes, vec!["pool", "event_heap"]);
+    }
+
+    #[test]
+    fn band_overrides_match_by_prefix_longest_wins() {
+        let c = MatrixConfig::parse(
+            "[gate]\nband = 0.6\nband.round = 0.4\nband.round/t8 = 0.2\n",
+        )
+        .unwrap();
+        assert!((c.band_for("round/t1/c8/sync/ada-split") - 0.4).abs() < 1e-12);
+        assert!((c.band_for("round/t8/c8/sync/ada-split") - 0.2).abs() < 1e-12);
+        assert!((c.band_for("roundabout") - 0.6).abs() < 1e-12, "prefix match is /-delimited");
+    }
+
+    #[test]
+    fn cell_enumeration_is_deterministic_and_ordered() {
+        let c = MatrixConfig::parse(SAMPLE).unwrap();
+        let a = c.grid_cells();
+        let b = c.grid_cells();
+        assert_eq!(a, b, "repeat enumeration must be identical");
+        let ids: Vec<&str> = a.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids, vec!["round/t1/c8/sync/ada-split", "round/t2/c8/sync/ada-split"]);
+        assert_eq!(a[1].threads, 2);
+        assert_eq!(a[1].clients, 8);
+    }
+
+    #[test]
+    fn grid_is_a_full_cartesian_product_in_declared_order() {
+        let c = MatrixConfig::parse(
+            "[matrix]\nthreads = \"2,1\"\nclients = \"4,8\"\n\
+             schedulers = \"sync\"\nprotocols = \"a,b\"\n",
+        )
+        .unwrap();
+        let ids: Vec<String> = c.grid_cells().into_iter().map(|s| s.id).collect();
+        assert_eq!(
+            ids,
+            vec![
+                "round/t2/c4/sync/a",
+                "round/t2/c4/sync/b",
+                "round/t2/c8/sync/a",
+                "round/t2/c8/sync/b",
+                "round/t1/c4/sync/a",
+                "round/t1/c4/sync/b",
+                "round/t1/c8/sync/a",
+                "round/t1/c8/sync/b",
+            ],
+            "threads-major, declared list order preserved (not sorted)"
+        );
+    }
+
+    #[test]
+    fn committed_matrix_file_parses_and_covers_the_pure_axes() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/benches/matrix.toml");
+        let c = MatrixConfig::load(Path::new(path)).unwrap();
+        assert!(c.grid_cells().len() >= 4, "committed grid spans the threads axis");
+        for axis in [
+            "async_plan",
+            "snapshot_ring",
+            "bound_controller",
+            "pool",
+            "shard_store",
+            "event_heap",
+            "scenario",
+            "detlint",
+        ] {
+            assert!(
+                c.pure_axes.iter().any(|a| a == axis),
+                "committed matrix.toml must require pure axis `{axis}`"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        assert!(MatrixConfig::parse("[run]\niters = 0\n").is_err(), "zero iters");
+        assert!(MatrixConfig::parse("[run]\nquick_iters = 0\n").is_err(), "zero quick iters");
+        assert!(MatrixConfig::parse("[gate]\nband = 0\n").is_err(), "band must be > 0");
+        assert!(MatrixConfig::parse("[gate]\nband = 1.5\n").is_err(), "band must be <= 1");
+        assert!(MatrixConfig::parse("[gate]\nband.pool = 2\n").is_err(), "override checked too");
+        assert!(MatrixConfig::parse("[matrix]\nthreads = \"\"\n").is_err(), "empty axis");
+        assert!(MatrixConfig::parse("[matrix]\nthreads = \"0\"\n").is_err(), "zero threads");
+        assert!(MatrixConfig::parse("[matrix]\nthreads = \"two\"\n").is_err(), "non-numeric");
+    }
+
+    #[test]
+    fn defaults_cover_an_empty_file() {
+        let c = MatrixConfig::parse("").unwrap();
+        assert_eq!(c.threads, vec![1]);
+        assert_eq!(c.grid_cells().len(), 1);
+        assert!(c.pure_axes.is_empty());
+    }
+}

@@ -1,0 +1,24 @@
+//! Config-matrix bench harness with a regression gate (DESIGN.md §14).
+//!
+//! Four pieces, consumed by `benches/runtime_micro.rs`:
+//!
+//! * [`config`] — the declarative grid (threads × clients × scheduler ×
+//!   protocol), run shape, tolerance bands, and required pure-Rust axes,
+//!   parsed from the committed `benches/matrix.toml` via
+//!   [`crate::util::kvconf`];
+//! * [`runner`] — deterministic cell enumeration and timing through the
+//!   hardened [`crate::util::bench`] harness, plus the [`runner::check`]
+//!   gate (exact trajectories, banded throughput, explicit
+//!   not-yet-recorded reporting, quick/full-mode refusal);
+//! * [`counters`] — best-effort procfs counters bracketing each cell;
+//! * [`writer`] — `BENCH_results.json` schema v3 with a v2-reading
+//!   migration shim.
+
+pub mod config;
+pub mod counters;
+pub mod runner;
+pub mod writer;
+
+pub use config::{CellSpec, MatrixConfig};
+pub use counters::Counters;
+pub use runner::{check, BenchReport, CellRecord, GateOutcome, GateStatus, Runner};

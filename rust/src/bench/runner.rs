@@ -1,0 +1,632 @@
+//! The matrix bench runner and the regression gate (DESIGN.md §14).
+//!
+//! [`Runner`] times cells declared by the [`super::config`] matrix
+//! through the hardened [`crate::util::bench`] harness, bracketing each
+//! timed region with best-effort [`super::counters`] samples, and
+//! accumulates per-cell records into a [`BenchReport`]. Deterministic
+//! trajectories (e.g. the `AsyncBounded` sim-time fingerprint) attach
+//! to cells by name.
+//!
+//! [`check`] is the gate `runtime_micro --check` runs over a tracked
+//! report: deterministic trajectories must match *exactly* (they are
+//! pure functions of the seeded config — drift is a semantics change,
+//! not noise), throughput is compared per cell inside the tolerance
+//! band the config declares, zero/empty tracked cells are reported
+//! per-key as "not yet recorded" instead of passing silently, and
+//! quick-mode numbers are never compared against full-mode numbers —
+//! a mode mismatch SKIPs the throughput comparison with an explicit
+//! note.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::util::bench::{try_bench, BenchStats};
+
+use super::config::MatrixConfig;
+use super::counters::{self, Counters};
+
+/// Exact-match tolerance for deterministic trajectories. This is a
+/// float-print round-trip guard, not a noise band.
+pub const TRAJECTORY_EPS: f64 = 1e-9;
+
+/// One tracked matrix cell: timing stats, derived throughput, attached
+/// deterministic trajectories, and best-effort counters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellRecord {
+    pub id: String,
+    /// Timing summary; `None` for trajectory-only cells and for cells
+    /// migrated from the flat v2 schema (which kept only throughput).
+    pub stats: Option<BenchStats>,
+    /// Work units per timed iteration (jobs, events, files, …); 0 for
+    /// trajectory-only and migrated cells.
+    pub units_per_iter: f64,
+    /// `units_per_iter / mean_s` — the gate-facing number. 0 means
+    /// "not yet recorded": the gate reports it per-key instead of
+    /// treating presence as coverage.
+    pub throughput_per_s: f64,
+    /// Named deterministic trajectories, compared exactly by the gate.
+    pub trajectories: BTreeMap<String, Vec<f64>>,
+    /// Best-effort counters; context only, never gated.
+    pub counters: Option<Counters>,
+    /// Whether this cell was measured under a quick-mode (shrunk)
+    /// workload. The gate refuses cross-mode throughput comparison.
+    pub quick: bool,
+}
+
+impl CellRecord {
+    /// A cell that only carries trajectories (no timed region).
+    pub fn trajectory_only(id: &str, quick: bool) -> Self {
+        CellRecord {
+            id: id.to_string(),
+            stats: None,
+            units_per_iter: 0.0,
+            throughput_per_s: 0.0,
+            trajectories: BTreeMap::new(),
+            counters: None,
+            quick,
+        }
+    }
+
+    /// Whether the cell carries a usable throughput measurement.
+    pub fn recorded(&self) -> bool {
+        self.throughput_per_s > 0.0
+    }
+}
+
+/// Everything one bench invocation measured: the schema-v3 payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    /// Run-level quick flag (workload scale, not iteration count).
+    pub quick: bool,
+    /// Cells keyed by id — BTreeMap so the written file is
+    /// deterministically ordered.
+    pub cells: BTreeMap<String, CellRecord>,
+}
+
+impl BenchReport {
+    pub fn new(quick: bool) -> Self {
+        BenchReport { quick, cells: BTreeMap::new() }
+    }
+}
+
+/// Times matrix cells and accumulates a [`BenchReport`].
+pub struct Runner {
+    pub cfg: MatrixConfig,
+    pub report: BenchReport,
+    iters: usize,
+}
+
+impl Runner {
+    pub fn new(cfg: MatrixConfig, quick: bool) -> Self {
+        let iters = if quick { cfg.quick_iters } else { cfg.iters };
+        Runner { cfg, report: BenchReport::new(quick), iters }
+    }
+
+    /// Timed iterations per cell for this run.
+    pub fn iters(&self) -> usize {
+        self.iters
+    }
+
+    /// Override the iteration count (e.g. `--check` uses the quick
+    /// count for its fresh point estimates without marking the run
+    /// quick — iteration count is sampling, quick is workload scale).
+    pub fn set_iters(&mut self, iters: usize) -> Result<()> {
+        ensure!(iters >= 1, "runner iters must be >= 1 (got {iters})");
+        self.iters = iters;
+        Ok(())
+    }
+
+    /// Time one cell with the config's warmup.
+    pub fn run_cell<F: FnMut()>(&mut self, id: &str, units_per_iter: f64, f: F) -> Result<()> {
+        let warmup = self.cfg.warmup;
+        self.run_cell_warmup(id, units_per_iter, warmup, f)
+    }
+
+    /// Time one cell with an explicit warmup count (artifact cells warm
+    /// twice: the first call may still be faulting executable pages in).
+    pub fn run_cell_warmup<F: FnMut()>(
+        &mut self,
+        id: &str,
+        units_per_iter: f64,
+        warmup: usize,
+        f: F,
+    ) -> Result<()> {
+        ensure!(
+            !self.report.cells.contains_key(id),
+            "duplicate bench cell id `{id}` — cell ids must be unique within a run"
+        );
+        ensure!(units_per_iter > 0.0, "cell `{id}`: units_per_iter must be > 0");
+        let before = counters::sample();
+        let stats = try_bench(id, warmup, self.iters, f)?;
+        let after = counters::sample();
+        let throughput_per_s =
+            if stats.mean_s > 0.0 { units_per_iter / stats.mean_s } else { 0.0 };
+        let rec = CellRecord {
+            id: id.to_string(),
+            stats: Some(stats),
+            units_per_iter,
+            throughput_per_s,
+            trajectories: BTreeMap::new(),
+            counters: Some(counters::delta(&before, &after)),
+            quick: self.report.quick,
+        };
+        self.report.cells.insert(id.to_string(), rec);
+        Ok(())
+    }
+
+    /// Attach a deterministic trajectory to a cell, creating a
+    /// trajectory-only cell if the id is new. Values must be finite
+    /// (NaN would make the exact-match gate vacuously fail forever).
+    pub fn add_trajectory(&mut self, cell_id: &str, name: &str, values: Vec<f64>) -> Result<()> {
+        ensure!(
+            values.iter().all(|v| v.is_finite()),
+            "trajectory `{name}` on cell `{cell_id}` contains a non-finite value"
+        );
+        let quick = self.report.quick;
+        let cell = self
+            .report
+            .cells
+            .entry(cell_id.to_string())
+            .or_insert_with(|| CellRecord::trajectory_only(cell_id, quick));
+        ensure!(
+            !cell.trajectories.contains_key(name),
+            "duplicate trajectory `{name}` on cell `{cell_id}`"
+        );
+        cell.trajectories.insert(name.to_string(), values);
+        Ok(())
+    }
+
+    pub fn into_report(self) -> BenchReport {
+        self.report
+    }
+}
+
+// ---- the regression gate ---------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateStatus {
+    /// Compared and inside the contract.
+    Pass,
+    /// Compared and outside the contract — the gate exits nonzero.
+    Fail,
+    /// Comparison refused (mode mismatch) or impossible on this runner
+    /// (tracked cell not measured here); explicitly noted, not fatal.
+    Skip,
+    /// The tracked side is zero/empty: this axis has never been proven.
+    /// Reported per-key so CI output shows the gap instead of implying
+    /// coverage; not fatal.
+    NotRecorded,
+}
+
+impl GateStatus {
+    pub fn label(self) -> &'static str {
+        match self {
+            GateStatus::Pass => "ok",
+            GateStatus::Fail => "FAIL",
+            GateStatus::Skip => "SKIP",
+            GateStatus::NotRecorded => "NOT-RECORDED",
+        }
+    }
+}
+
+/// One per-key gate verdict.
+#[derive(Clone, Debug)]
+pub struct GateNote {
+    pub key: String,
+    pub status: GateStatus,
+    pub msg: String,
+}
+
+/// Every verdict of one gate evaluation, in emission order (fresh cells
+/// sorted by id, then required-axis and unmeasured-cell sweeps).
+#[derive(Clone, Debug, Default)]
+pub struct GateOutcome {
+    pub notes: Vec<GateNote>,
+}
+
+impl GateOutcome {
+    fn push(&mut self, key: &str, status: GateStatus, msg: String) {
+        self.notes.push(GateNote { key: key.to_string(), status, msg });
+    }
+
+    /// True when any comparison failed — the gate's exit condition.
+    pub fn failed(&self) -> bool {
+        self.notes.iter().any(|n| n.status == GateStatus::Fail)
+    }
+
+    /// (pass, fail, skip, not-recorded) counts.
+    pub fn counts(&self) -> (usize, usize, usize, usize) {
+        let c = |s: GateStatus| self.notes.iter().filter(|n| n.status == s).count();
+        (
+            c(GateStatus::Pass),
+            c(GateStatus::Fail),
+            c(GateStatus::Skip),
+            c(GateStatus::NotRecorded),
+        )
+    }
+
+    /// Render one line per note plus a summary line.
+    pub fn render(&self) -> String {
+        let mut lines: Vec<String> = self
+            .notes
+            .iter()
+            .map(|n| format!("  [{}] {}: {}", n.status.label(), n.key, n.msg))
+            .collect();
+        let (pass, fail, skip, not_recorded) = self.counts();
+        lines.push(format!(
+            "  gate: {pass} pass, {fail} fail, {skip} skip, {not_recorded} not yet recorded"
+        ));
+        lines.join("\n")
+    }
+}
+
+fn mode_name(quick: bool) -> &'static str {
+    if quick {
+        "quick-mode"
+    } else {
+        "full-mode"
+    }
+}
+
+/// Evaluate the regression gate: `fresh` (this run) against `tracked`
+/// (the committed `BENCH_results.json`), under the config's bands and
+/// required pure axes. See the module docs for the semantics.
+pub fn check(cfg: &MatrixConfig, tracked: &BenchReport, fresh: &BenchReport) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    let mode_mismatch = tracked.quick != fresh.quick;
+    if mode_mismatch {
+        out.push(
+            "mode",
+            GateStatus::Skip,
+            format!(
+                "tracked file holds {} numbers but this is a {} run — refusing every \
+                 throughput comparison (shrunk workloads are not comparable); \
+                 deterministic trajectories are mode-independent and still checked",
+                mode_name(tracked.quick),
+                mode_name(fresh.quick)
+            ),
+        );
+    }
+
+    for (id, new) in &fresh.cells {
+        let old = tracked.cells.get(id);
+
+        // Deterministic trajectories: exact match, mode-independent.
+        for (tname, tvals) in &new.trajectories {
+            let key = format!("{id}.{tname}");
+            match old.and_then(|c| c.trajectories.get(tname)) {
+                None => out.push(
+                    &key,
+                    GateStatus::NotRecorded,
+                    "deterministic trajectory not yet recorded — run the bench without \
+                     --check to record it"
+                        .to_string(),
+                ),
+                Some(oldv) if oldv.is_empty() => out.push(
+                    &key,
+                    GateStatus::NotRecorded,
+                    "tracked trajectory is empty (placeholder) — not yet recorded".to_string(),
+                ),
+                Some(oldv) => {
+                    if oldv.len() != tvals.len() {
+                        out.push(
+                            &key,
+                            GateStatus::Fail,
+                            format!("trajectory length changed: {} -> {}", oldv.len(), tvals.len()),
+                        );
+                    } else if let Some((i, (a, b))) = oldv
+                        .iter()
+                        .zip(tvals)
+                        .enumerate()
+                        .find(|(_, (a, b))| (**a - **b).abs() > TRAJECTORY_EPS)
+                    {
+                        out.push(
+                            &key,
+                            GateStatus::Fail,
+                            format!(
+                                "[{i}] drifted: {a} -> {b} — trajectories are deterministic, \
+                                 so this is a semantics change, not noise"
+                            ),
+                        );
+                    } else {
+                        out.push(
+                            &key,
+                            GateStatus::Pass,
+                            format!("exact match ({} points)", tvals.len()),
+                        );
+                    }
+                }
+            }
+        }
+
+        // Throughput: banded comparison, refused across modes.
+        if new.recorded() {
+            match old {
+                None => out.push(
+                    id,
+                    GateStatus::NotRecorded,
+                    "cell not yet recorded in the tracked file".to_string(),
+                ),
+                Some(oldc) if !oldc.recorded() => out.push(
+                    id,
+                    GateStatus::NotRecorded,
+                    "tracked value is zero/empty (placeholder) — this axis is unproven \
+                     until the bench records it"
+                        .to_string(),
+                ),
+                Some(oldc) if mode_mismatch || oldc.quick != new.quick => out.push(
+                    id,
+                    GateStatus::Skip,
+                    format!(
+                        "mode mismatch (tracked {}, fresh {}) — throughput comparison refused",
+                        mode_name(oldc.quick),
+                        mode_name(new.quick)
+                    ),
+                ),
+                Some(oldc) => {
+                    let band = cfg.band_for(id);
+                    let floor = oldc.throughput_per_s * (1.0 - band);
+                    if new.throughput_per_s < floor {
+                        out.push(
+                            id,
+                            GateStatus::Fail,
+                            format!(
+                                "throughput regressed beyond the {:.0}% band: {:.2} -> {:.2} \
+                                 units/s (floor {:.2})",
+                                band * 100.0,
+                                oldc.throughput_per_s,
+                                new.throughput_per_s,
+                                floor
+                            ),
+                        );
+                    } else {
+                        out.push(
+                            id,
+                            GateStatus::Pass,
+                            format!(
+                                "{:.2} units/s vs tracked {:.2} (band {:.0}%)",
+                                new.throughput_per_s,
+                                oldc.throughput_per_s,
+                                band * 100.0
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // Required pure-Rust axes must carry a tracked measurement; each
+    // placeholder is called out by name (once — the per-cell sweep may
+    // already have noted it).
+    for axis in &cfg.pure_axes {
+        let recorded = tracked.cells.get(axis).is_some_and(|c| c.recorded());
+        let already_noted = out
+            .notes
+            .iter()
+            .any(|n| n.key == *axis && n.status == GateStatus::NotRecorded);
+        if !recorded && !already_noted {
+            out.push(
+                axis,
+                GateStatus::NotRecorded,
+                "required pure-Rust axis has no tracked measurement — unproven until the \
+                 bench records it"
+                    .to_string(),
+            );
+        }
+    }
+
+    // Tracked cells this run did not measure: artifact-gated sections
+    // absent on this runner, or a shrunk matrix. Explicit, not silent.
+    for id in tracked.cells.keys() {
+        if !fresh.cells.contains_key(id) {
+            out.push(
+                id,
+                GateStatus::Skip,
+                "tracked cell not measured in this run (artifact-gated section absent on \
+                 this runner, or the matrix no longer declares it)"
+                    .to_string(),
+            );
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MatrixConfig {
+        MatrixConfig::parse("[gate]\nband = 0.6\n[axes]\npure = \"pool\"\n").unwrap()
+    }
+
+    fn cell(id: &str, throughput: f64, quick: bool) -> CellRecord {
+        CellRecord {
+            id: id.to_string(),
+            stats: None,
+            units_per_iter: 1.0,
+            throughput_per_s: throughput,
+            trajectories: BTreeMap::new(),
+            counters: None,
+            quick,
+        }
+    }
+
+    fn report(cells: Vec<CellRecord>, quick: bool) -> BenchReport {
+        BenchReport { quick, cells: cells.into_iter().map(|c| (c.id.clone(), c)).collect() }
+    }
+
+    #[test]
+    fn run_cell_records_stats_counters_and_rejects_duplicates() {
+        let mut r = Runner::new(MatrixConfig::parse("").unwrap(), true);
+        assert_eq!(r.iters(), 5, "quick mode uses run.quick_iters");
+        r.run_cell("unit", 10.0, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        })
+        .unwrap();
+        assert!(r.run_cell("unit", 10.0, || {}).is_err(), "duplicate id must be rejected");
+        assert!(r.run_cell("zero-units", 0.0, || {}).is_err(), "zero units must be rejected");
+        let rec = &r.report.cells["unit"];
+        assert!(rec.quick);
+        assert_eq!(rec.stats.as_ref().unwrap().iters, 5);
+        assert!(rec.counters.is_some(), "counters recorded (possibly unavailable)");
+    }
+
+    #[test]
+    fn trajectories_attach_and_reject_nan_and_duplicates() {
+        let mut r = Runner::new(MatrixConfig::parse("").unwrap(), false);
+        r.add_trajectory("traj/x", "x", vec![1.0, 2.0]).unwrap();
+        assert!(r.add_trajectory("traj/x", "x", vec![1.0]).is_err(), "duplicate name");
+        assert!(r.add_trajectory("traj/y", "y", vec![f64::NAN]).is_err(), "NaN rejected");
+        let rec = &r.report.cells["traj/x"];
+        assert!(!rec.recorded(), "trajectory-only cells carry no throughput");
+        assert_eq!(rec.trajectories["x"], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn in_band_throughput_passes_and_improvement_is_never_flagged() {
+        let tracked = report(vec![cell("pool", 100.0, false)], false);
+        for fresh_thr in [50.0, 100.0, 400.0] {
+            let fresh = report(vec![cell("pool", fresh_thr, false)], false);
+            let out = check(&cfg(), &tracked, &fresh);
+            assert!(!out.failed(), "throughput {fresh_thr} should pass:\n{}", out.render());
+        }
+    }
+
+    #[test]
+    fn out_of_band_throughput_fails() {
+        let tracked = report(vec![cell("pool", 100.0, false)], false);
+        let fresh = report(vec![cell("pool", 30.0, false)], false); // floor = 40
+        let out = check(&cfg(), &tracked, &fresh);
+        assert!(out.failed(), "30 < 100 * (1 - 0.6) must fail:\n{}", out.render());
+        assert!(out.notes.iter().any(|n| n.key == "pool" && n.status == GateStatus::Fail));
+    }
+
+    #[test]
+    fn perturbed_trajectory_fails_and_within_eps_passes() {
+        let mut t = cell("async_plan", 10.0, false);
+        t.trajectories.insert("async_sim_time".to_string(), vec![1.0, 2.0, 3.0]);
+        let mut perturbed = t.clone();
+        perturbed
+            .trajectories
+            .insert("async_sim_time".to_string(), vec![1.0, 2.0, 3.0 + 1e-6]);
+        let tracked = report(vec![t.clone()], false);
+
+        let out = check(&cfg(), &tracked, &report(vec![perturbed], false));
+        assert!(out.failed(), "1e-6 drift must fail:\n{}", out.render());
+
+        let mut jittered = t.clone();
+        jittered
+            .trajectories
+            .insert("async_sim_time".to_string(), vec![1.0, 2.0, 3.0 + 1e-12]);
+        let out = check(&cfg(), &tracked, &report(vec![jittered], false));
+        assert!(!out.failed(), "sub-eps print jitter must pass:\n{}", out.render());
+    }
+
+    #[test]
+    fn trajectory_length_change_fails() {
+        let mut t = cell("async_plan", 10.0, false);
+        t.trajectories.insert("async_sim_time".to_string(), vec![1.0, 2.0]);
+        let mut longer = t.clone();
+        longer.trajectories.insert("async_sim_time".to_string(), vec![1.0, 2.0, 3.0]);
+        let out = check(&cfg(), &report(vec![t], false), &report(vec![longer], false));
+        assert!(out.failed(), "{}", out.render());
+    }
+
+    #[test]
+    fn placeholder_zero_reports_not_recorded_once_and_passes() {
+        let tracked = report(vec![cell("pool", 0.0, false)], false);
+        let fresh = report(vec![cell("pool", 50.0, false)], false);
+        let out = check(&cfg(), &tracked, &fresh);
+        assert!(!out.failed(), "placeholders must not fail the gate:\n{}", out.render());
+        let notes: Vec<_> = out
+            .notes
+            .iter()
+            .filter(|n| n.key == "pool" && n.status == GateStatus::NotRecorded)
+            .collect();
+        assert_eq!(notes.len(), 1, "exactly one not-yet-recorded note per key:\n{}", out.render());
+    }
+
+    #[test]
+    fn empty_tracked_trajectory_reports_not_recorded() {
+        let mut t = cell("async_plan", 10.0, false);
+        t.trajectories.insert("async_sim_time".to_string(), Vec::new());
+        let mut f = cell("async_plan", 10.0, false);
+        f.trajectories.insert("async_sim_time".to_string(), vec![1.0]);
+        let out = check(&cfg(), &report(vec![t], false), &report(vec![f], false));
+        assert!(!out.failed(), "{}", out.render());
+        assert!(out.notes.iter().any(|n| n.key == "async_plan.async_sim_time"
+            && n.status == GateStatus::NotRecorded));
+    }
+
+    #[test]
+    fn quick_vs_full_mode_is_refused_not_compared() {
+        // If the gate compared across modes this would be a gross
+        // "regression"; the mode-mismatch rule must SKIP it instead.
+        let tracked = report(vec![cell("pool", 100.0, false)], false);
+        let fresh = report(vec![cell("pool", 1.0, true)], true);
+        let out = check(&cfg(), &tracked, &fresh);
+        assert!(!out.failed(), "mode mismatch must SKIP, not fail:\n{}", out.render());
+        assert!(out.notes.iter().any(|n| n.key == "pool" && n.status == GateStatus::Skip));
+        assert!(out.notes.iter().any(|n| n.key == "mode" && n.status == GateStatus::Skip));
+    }
+
+    #[test]
+    fn per_cell_mode_mismatch_is_refused_even_when_run_modes_agree() {
+        // A quick-mode record left in a full-mode file (the pre-v3 bug:
+        // quick and full numbers silently mixed) must still be refused.
+        let tracked = report(vec![cell("pool", 1.0, true)], false);
+        let fresh = report(vec![cell("pool", 100.0, false)], false);
+        let out = check(&cfg(), &tracked, &fresh);
+        assert!(!out.failed(), "{}", out.render());
+        assert!(out.notes.iter().any(|n| n.key == "pool" && n.status == GateStatus::Skip));
+    }
+
+    #[test]
+    fn missing_required_axis_is_reported() {
+        let tracked = report(Vec::new(), false);
+        let fresh = report(Vec::new(), false);
+        let out = check(&cfg(), &tracked, &fresh);
+        assert!(!out.failed());
+        assert!(
+            out.notes
+                .iter()
+                .any(|n| n.key == "pool" && n.status == GateStatus::NotRecorded),
+            "required axis `pool` must be called out:\n{}",
+            out.render()
+        );
+    }
+
+    #[test]
+    fn unmeasured_tracked_cells_skip_loudly() {
+        let tracked = report(vec![cell("artifact/client_step", 10.0, false)], false);
+        let fresh = report(Vec::new(), false);
+        let out = check(&cfg(), &tracked, &fresh);
+        assert!(!out.failed());
+        assert!(out
+            .notes
+            .iter()
+            .any(|n| n.key == "artifact/client_step" && n.status == GateStatus::Skip));
+    }
+
+    #[test]
+    fn clean_self_comparison_passes_with_no_gaps() {
+        let mut c = cell("pool", 100.0, false);
+        c.trajectories.insert("x".to_string(), vec![1.0, 2.0]);
+        let tracked = report(vec![c.clone()], false);
+        let fresh = report(vec![c], false);
+        let out = check(&cfg(), &tracked, &fresh);
+        assert!(!out.failed(), "{}", out.render());
+        assert!(
+            out.notes.iter().all(|n| n.status == GateStatus::Pass),
+            "a freshly written file must compare clean:\n{}",
+            out.render()
+        );
+    }
+}

@@ -45,6 +45,7 @@
 //! println!("accuracy={:.2}% c3={:.3}", result.accuracy, result.c3_score);
 //! ```
 
+pub mod bench;
 pub mod config;
 pub mod data;
 pub mod detlint;

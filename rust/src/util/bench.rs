@@ -5,8 +5,10 @@
 
 use std::time::Instant;
 
+use anyhow::{ensure, Result};
+
 /// Timing summary of one benchmark.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BenchStats {
     pub name: String,
     pub iters: usize,
@@ -26,7 +28,18 @@ impl BenchStats {
 }
 
 /// Time `f` for `iters` iterations after `warmup` unrecorded runs.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+/// `iters == 0` is rejected with a clear error (the summary would
+/// otherwise index an empty sample vector / divide by zero).
+pub fn try_bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> Result<BenchStats> {
+    ensure!(
+        iters >= 1,
+        "bench `{name}`: iters must be >= 1 — a zero-iteration run has no samples to summarize"
+    );
     for _ in 0..warmup {
         f();
     }
@@ -39,14 +52,21 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let pick = |q: f64| samples[((samples.len() - 1) as f64 * q).round() as usize];
-    BenchStats {
+    Ok(BenchStats {
         name: name.to_string(),
         iters,
         mean_s: mean,
         p50_s: pick(0.5),
         p95_s: pick(0.95),
         min_s: samples[0],
-    }
+    })
+}
+
+/// Panicking wrapper around [`try_bench`] for bench `main`s where an
+/// invalid iteration count is a programming error. The panic message
+/// carries the same context the `Result` would.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> BenchStats {
+    try_bench(name, warmup, iters, f).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// True when `ADASPLIT_BENCH_QUICK=1` or `--quick` is on the CLI — table
@@ -78,5 +98,21 @@ mod tests {
         });
         assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s);
         assert_eq!(s.iters, 16);
+    }
+
+    #[test]
+    fn zero_iters_is_a_clear_error() {
+        let err = try_bench("empty", 0, 0, || {}).unwrap_err();
+        assert!(
+            err.to_string().contains("iters must be >= 1"),
+            "error must explain the constraint, got: {err}"
+        );
+        assert!(err.to_string().contains("empty"), "error must name the bench");
+    }
+
+    #[test]
+    #[should_panic(expected = "iters must be >= 1")]
+    fn bench_zero_iters_panics_with_context() {
+        bench("empty", 0, 0, || {});
     }
 }

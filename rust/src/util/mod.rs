@@ -2,7 +2,8 @@
 //! offline build environment (see Cargo.toml note): a JSON value type +
 //! recursive-descent parser/writer (for `artifacts/manifest.json` and run
 //! exports), a TOML-subset config parser, and a micro-benchmark harness
-//! used by the `benches/` targets.
+//! underpinning the [`crate::bench`] matrix runner and the `benches/`
+//! targets.
 
 pub mod bench;
 pub mod json;
